@@ -1,0 +1,60 @@
+//! The paper's headline workflow: hyperparameter grid search where the
+//! HSS compression and ULV factorization are computed ONCE per kernel
+//! width h and reused for every penalty C (§3.2: "the approximation K̃
+//! and the factorization ULV of K̃_β are computed just once and then
+//! reused for all the values C in the grid search").
+//!
+//! Run with: cargo run --release --example grid_search
+
+use hss_svm::admm::AdmmParams;
+use hss_svm::coordinator::grid::ascii_heatmap;
+use hss_svm::coordinator::suite::prepare_dataset;
+use hss_svm::coordinator::GridSearch;
+use hss_svm::data::synth;
+use hss_svm::hss::HssParams;
+use hss_svm::util::threadpool;
+use hss_svm::util::timer::Timer;
+
+fn main() -> anyhow::Result<()> {
+    let threads = threadpool::default_threads();
+
+    // ijcnn1-like workload at 2% of the paper's size (≈1000 points)
+    let spec = synth::table1_spec("ijcnn1").unwrap();
+    let (train, test) = prepare_dataset(spec, 0.02, 2021);
+    println!("dataset: {} pts x {} feats (test {})", train.len(), train.dim(), test.len());
+
+    let h_values = vec![0.1, 1.0, 10.0];
+    let c_values = vec![0.1, 1.0, 10.0];
+    let grid = GridSearch {
+        h_values: h_values.clone(),
+        c_values: c_values.clone(),
+        hss: HssParams::low_accuracy(),
+        admm: AdmmParams { beta: 100.0, max_it: 10, relax: 1.0, tol: 0.0 },
+        threads,
+    };
+
+    let t = Timer::start();
+    let res = grid.run(&train, &test)?;
+    let total = t.secs();
+
+    println!("\naccuracy heatmap (Figure-2 style):");
+    println!("{}", ascii_heatmap(&res, &h_values, &c_values));
+
+    println!("cost breakdown over {} grid cells:", res.cells.len());
+    println!("  compression (once per h) : {:.3} s", res.compress_secs);
+    println!("  factorization (once per h): {:.3} s", res.factor_secs);
+    println!("  all ADMM runs combined   : {:.3} s", res.total_admm_secs);
+    println!("  total                    : {total:.3} s");
+    println!(
+        "\nthe paper's claim, visible above: ADMM-per-C ({:.4} s avg) is \
+         negligible next to compression; a finer C grid is almost free.",
+        res.total_admm_secs / res.cells.len() as f64
+    );
+    println!(
+        "best: h = {}, C = {:?} -> {:.2}%",
+        res.best_h,
+        res.best_cs,
+        res.best_accuracy * 100.0
+    );
+    Ok(())
+}

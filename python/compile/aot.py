@@ -1,0 +1,80 @@
+"""AOT lowering: JAX/Pallas → HLO *text* artifacts for the Rust runtime.
+
+HLO text (not ``.serialize()``) is the interchange format: jax ≥ 0.5
+emits HloModuleProto with 64-bit instruction ids which xla_extension
+0.5.1 (the version the published ``xla`` crate binds) rejects; the text
+parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Usage:  python -m compile.aot --out ../artifacts
+Writes  gaussian_tile_f{F}.hlo.txt, decision_tile_f{F}.hlo.txt and a
+manifest.txt the Rust side reads to discover shapes.
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_kernel_tile(f: int) -> str:
+    x = jax.ShapeDtypeStruct((model.TILE_M, f), jnp.float32)
+    y = jax.ShapeDtypeStruct((model.TILE_N, f), jnp.float32)
+    g = jax.ShapeDtypeStruct((), jnp.float32)
+    return to_hlo_text(jax.jit(model.kernel_tile).lower(x, y, g))
+
+
+def lower_decision_tile(f: int) -> str:
+    x = jax.ShapeDtypeStruct((model.TILE_M, f), jnp.float32)
+    sv = jax.ShapeDtypeStruct((model.SV_CHUNK, f), jnp.float32)
+    a = jax.ShapeDtypeStruct((model.SV_CHUNK,), jnp.float32)
+    g = jax.ShapeDtypeStruct((), jnp.float32)
+    return to_hlo_text(jax.jit(model.decision_tile).lower(x, sv, a, g))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = []
+    for f in model.FEATURE_DIMS:
+        name = f"gaussian_tile_f{f}"
+        text = lower_kernel_tile(f)
+        with open(os.path.join(args.out, f"{name}.hlo.txt"), "w") as fh:
+            fh.write(text)
+        manifest.append(
+            f"{name} kind=kernel_tile f={f} m={model.TILE_M} n={model.TILE_N}"
+        )
+        print(f"wrote {name}.hlo.txt ({len(text)} chars)")
+
+        name = f"decision_tile_f{f}"
+        text = lower_decision_tile(f)
+        with open(os.path.join(args.out, f"{name}.hlo.txt"), "w") as fh:
+            fh.write(text)
+        manifest.append(
+            f"{name} kind=decision_tile f={f} t={model.TILE_M} s={model.SV_CHUNK}"
+        )
+        print(f"wrote {name}.hlo.txt ({len(text)} chars)")
+
+    with open(os.path.join(args.out, "manifest.txt"), "w") as fh:
+        fh.write("\n".join(manifest) + "\n")
+    print(f"manifest: {len(manifest)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

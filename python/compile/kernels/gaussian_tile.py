@@ -1,0 +1,116 @@
+"""L1 Pallas kernel: tiled Gaussian kernel block evaluation.
+
+The dense hot-spot of the whole system (HSS compression probes, SMO
+cache rows, test-time prediction) is K(X_I, X_J) for modest tiles. The
+paper computes it with OpenMP loops on a Xeon; the TPU formulation here
+(see DESIGN.md §Hardware-Adaptation):
+
+* grid over (M/bm, N/bn) output tiles; BlockSpec stages an X tile
+  (bm × f), a Y tile (bn × f) and the output (bm × bn) through VMEM;
+* the −2·X·Yᵀ term is a (bm×f)·(f×bn) matmul → MXU systolic array;
+* squared norms + exp are rank-1/elementwise → VPU;
+* gamma = 1/(2h²) rides along as a (1,1) scalar operand so ONE compiled
+  artifact serves every kernel width h in the hyperparameter grid.
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, and interpret-mode lowers to plain HLO that XLA-CPU runs
+at full fusion quality (this is the artifact Rust loads).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gaussian_tile_kernel(x_ref, y_ref, g_ref, o_ref):
+    """One (bm × bn) output tile. All refs live in VMEM."""
+    x = x_ref[...]  # (bm, f)
+    y = y_ref[...]  # (bn, f)
+    gamma = g_ref[0, 0]
+    nx = jnp.sum(x * x, axis=1)[:, None]  # VPU
+    ny = jnp.sum(y * y, axis=1)[None, :]  # VPU
+    xy = jnp.dot(x, y.T, preferred_element_type=jnp.float32)  # MXU
+    d2 = jnp.maximum(nx + ny - 2.0 * xy, 0.0)
+    o_ref[...] = jnp.exp(-gamma * d2)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn"))
+def gaussian_block(x, y, gamma, *, bm=128, bn=128):
+    """K(x, y) via the Pallas tile kernel.
+
+    x: (m, f), y: (n, f) with m % bm == 0 and n % bn == 0,
+    gamma: scalar -> (m, n).
+    """
+    m, f = x.shape
+    n, _ = y.shape
+    assert m % bm == 0 and n % bn == 0, f"shape ({m},{n}) not tiled by ({bm},{bn})"
+    g = jnp.reshape(gamma.astype(jnp.float32) if hasattr(gamma, "astype")
+                    else jnp.float32(gamma), (1, 1))
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        _gaussian_tile_kernel,
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, f), lambda i, j: (i, 0)),  # X row-tile
+            pl.BlockSpec((bn, f), lambda i, j: (j, 0)),  # Y row-tile
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),   # gamma (scalar)
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        interpret=True,
+    )(x.astype(jnp.float32), y.astype(jnp.float32), g)
+
+
+def _decision_tile_kernel(x_ref, sv_ref, a_ref, g_ref, o_ref):
+    """Fused decision-function tile: accumulate K(x, sv_chunk) @ a_chunk.
+
+    Grid dimension walks SV chunks; every program adds its partial
+    matvec into the same output block (sequential grid in interpret
+    mode ⇒ safe accumulation; on real TPU the grid is sequential too).
+    """
+    j = pl.program_id(0)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]       # (t, f)
+    sv = sv_ref[...]     # (bs, f)
+    a = a_ref[...]       # (bs,)
+    gamma = g_ref[0, 0]
+    nx = jnp.sum(x * x, axis=1)[:, None]
+    ns = jnp.sum(sv * sv, axis=1)[None, :]
+    xs = jnp.dot(x, sv.T, preferred_element_type=jnp.float32)  # MXU
+    d2 = jnp.maximum(nx + ns - 2.0 * xs, 0.0)
+    k = jnp.exp(-gamma * d2)  # (t, bs)
+    o_ref[...] += k @ a       # second MXU-friendly contraction
+
+
+@functools.partial(jax.jit, static_argnames=("bs",))
+def decision_tile(x, sv, alpha_y, gamma, *, bs=128):
+    """f = K(x, sv) @ alpha_y for one tile of test points.
+
+    x: (t, f), sv: (s, f) with s % bs == 0, alpha_y: (s,) -> (t,).
+    Zero-padding the SV set with alpha_y = 0 rows is exact.
+    """
+    t, f = x.shape
+    s, _ = sv.shape
+    assert s % bs == 0, f"SV count {s} not a multiple of chunk {bs}"
+    g = jnp.reshape(jnp.asarray(gamma, dtype=jnp.float32), (1, 1))
+    grid = (s // bs,)
+    return pl.pallas_call(
+        _decision_tile_kernel,
+        out_shape=jax.ShapeDtypeStruct((t,), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((t, f), lambda j: (0, 0)),
+            pl.BlockSpec((bs, f), lambda j: (j, 0)),
+            pl.BlockSpec((bs,), lambda j: (j,)),
+            pl.BlockSpec((1, 1), lambda j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((t,), lambda j: (0,)),
+        interpret=True,
+    )(x.astype(jnp.float32), sv.astype(jnp.float32),
+      alpha_y.astype(jnp.float32), g)

@@ -1,0 +1,30 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the ground truth the Pallas implementations are tested against
+(pytest + hypothesis in python/tests/), and the shape/semantics contract
+for the Rust native fallback in rust/src/kernel/block.rs.
+"""
+
+import jax.numpy as jnp
+
+
+def gaussian_block(x, y, gamma):
+    """K(x, y) with K_ij = exp(-gamma * ||x_i - y_j||^2).
+
+    x: (m, f), y: (n, f), gamma: scalar -> (m, n).
+    gamma = 1 / (2 h^2) for the paper's kernel width h.
+    """
+    nx = jnp.sum(x * x, axis=1)[:, None]
+    ny = jnp.sum(y * y, axis=1)[None, :]
+    d2 = jnp.maximum(nx + ny - 2.0 * (x @ y.T), 0.0)
+    return jnp.exp(-gamma * d2)
+
+
+def decision_tile(x, sv, alpha_y, gamma, bias):
+    """SVM decision values for a tile of test points.
+
+    f_j = sum_i alpha_y[i] * K(x_j, sv_i) + bias.
+    x: (t, f), sv: (s, f), alpha_y: (s,) -> (t,).
+    """
+    k = gaussian_block(x, sv, gamma)
+    return k @ alpha_y + bias

@@ -1,0 +1,54 @@
+"""L2 JAX model: the compute graphs Rust executes through PJRT.
+
+Two entry points, both built on the L1 Pallas kernel so everything
+lowers into a single HLO module per artifact:
+
+* ``kernel_tile``   — one 128×128 Gaussian kernel tile (compression
+                      probes, kernel-row services);
+* ``decision_tile`` — fused SVM decision function for a 128-row tile of
+                      test points against a zero-padded SV chunk
+                      (Algorithm 3 lines 18–20, the prediction hot loop).
+
+Rust pads feature dimensions up to the artifact's f (zero features do
+not change Gaussian distances) and pads SV chunks with alpha_y = 0
+(exactly no contribution), so a handful of fixed-shape artifacts serve
+every dataset.
+"""
+
+import jax.numpy as jnp
+
+from compile.kernels import gaussian_tile
+
+#: Tile geometry shared with rust/src/runtime (see manifest).
+TILE_M = 128
+TILE_N = 128
+SV_CHUNK = 1024
+
+#: Feature dims we AOT-compile for; Rust picks the smallest that fits.
+FEATURE_DIMS = (8, 32, 128, 512)
+
+
+def kernel_tile(x, y, gamma):
+    """K(x, y) for one (TILE_M × TILE_N) tile. x,y: (128, f)."""
+    return (gaussian_tile.gaussian_block(x, y, gamma, bm=TILE_M, bn=TILE_N),)
+
+
+def decision_tile(x, sv, alpha_y, gamma):
+    """Decision values (bias added Rust-side) for one test tile.
+
+    x: (TILE_M, f), sv: (SV_CHUNK, f), alpha_y: (SV_CHUNK,) -> (TILE_M,).
+    """
+    return (gaussian_tile.decision_tile(x, sv, alpha_y, gamma, bs=128),)
+
+
+def kernel_tile_ref(x, y, gamma):
+    """jnp reference of kernel_tile (used by shape tests)."""
+    from compile.kernels import ref
+
+    return (ref.gaussian_block(x, y, gamma).astype(jnp.float32),)
+
+
+def decision_tile_ref(x, sv, alpha_y, gamma):
+    from compile.kernels import ref
+
+    return (ref.decision_tile(x, sv, alpha_y, gamma, 0.0).astype(jnp.float32),)

@@ -1,0 +1,119 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps tile shapes, feature dims, dtypes and kernel widths;
+assert_allclose against ref.py is THE correctness signal for everything
+the Rust runtime later executes.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from compile.kernels import gaussian_tile, ref
+
+hypothesis.settings.register_profile(
+    "ci", deadline=None, max_examples=25, derandomize=True
+)
+hypothesis.settings.load_profile("ci")
+
+
+def rand(key, shape, dtype, scale=2.0):
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+@given(
+    mi=st.integers(1, 3),
+    ni=st.integers(1, 3),
+    f=st.integers(1, 40),
+    bm=st.sampled_from([8, 16]),
+    bn=st.sampled_from([8, 16]),
+    h=st.floats(0.2, 5.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gaussian_block_matches_ref(mi, ni, f, bm, bn, h, seed):
+    m, n = mi * bm, ni * bn
+    kx, ky = jax.random.split(jax.random.PRNGKey(seed))
+    x = rand(kx, (m, f), jnp.float32)
+    y = rand(ky, (n, f), jnp.float32)
+    gamma = 1.0 / (2.0 * h * h)
+    got = gaussian_tile.gaussian_block(x, y, gamma, bm=bm, bn=bn)
+    want = ref.gaussian_block(x, y, gamma)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+@given(
+    t=st.sampled_from([8, 16, 32]),
+    si=st.integers(1, 4),
+    f=st.integers(1, 24),
+    h=st.floats(0.3, 3.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_decision_tile_matches_ref(t, si, f, h, seed):
+    bs = 16
+    s = si * bs
+    kx, ks, ka = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = rand(kx, (t, f), jnp.float32)
+    sv = rand(ks, (s, f), jnp.float32)
+    alpha = rand(ka, (s,), jnp.float32, scale=1.0)
+    gamma = 1.0 / (2.0 * h * h)
+    got = gaussian_tile.decision_tile(x, sv, alpha, gamma, bs=bs)
+    want = ref.decision_tile(x, sv, alpha, gamma, 0.0)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-5)
+
+
+def test_gaussian_diag_is_one():
+    x = rand(jax.random.PRNGKey(0), (16, 5), jnp.float32)
+    k = gaussian_tile.gaussian_block(x, x, 0.5, bm=16, bn=16)
+    np.testing.assert_allclose(np.diag(k), np.ones(16), rtol=1e-5, atol=1e-5)
+
+
+def test_gaussian_symmetric():
+    x = rand(jax.random.PRNGKey(1), (32, 7), jnp.float32)
+    k = gaussian_tile.gaussian_block(x, x, 0.3, bm=16, bn=16)
+    np.testing.assert_allclose(k, k.T, rtol=1e-5, atol=1e-7)
+
+
+def test_gamma_is_runtime_operand():
+    """One compiled kernel must serve different h values (the paper's
+    grid-search reuse story depends on this)."""
+    x = rand(jax.random.PRNGKey(2), (8, 4), jnp.float32)
+    y = rand(jax.random.PRNGKey(3), (8, 4), jnp.float32)
+    for h in (0.1, 1.0, 10.0):
+        gamma = 1.0 / (2.0 * h * h)
+        got = gaussian_tile.gaussian_block(x, y, gamma, bm=8, bn=8)
+        want = ref.gaussian_block(x, y, gamma)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_zero_feature_padding_is_exact():
+    """Padding features with zeros must not change kernel values —
+    the property the Rust runtime's shape adapter relies on."""
+    x = rand(jax.random.PRNGKey(4), (8, 5), jnp.float32)
+    y = rand(jax.random.PRNGKey(5), (8, 5), jnp.float32)
+    xp = jnp.pad(x, ((0, 0), (0, 11)))
+    yp = jnp.pad(y, ((0, 0), (0, 11)))
+    a = gaussian_tile.gaussian_block(x, y, 0.7, bm=8, bn=8)
+    b = gaussian_tile.gaussian_block(xp, yp, 0.7, bm=8, bn=8)
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+
+
+def test_zero_alpha_sv_padding_is_exact():
+    """Padding the SV chunk with alpha_y = 0 rows adds exactly nothing."""
+    x = rand(jax.random.PRNGKey(6), (8, 3), jnp.float32)
+    sv = rand(jax.random.PRNGKey(7), (16, 3), jnp.float32)
+    a = rand(jax.random.PRNGKey(8), (16,), jnp.float32)
+    f1 = gaussian_tile.decision_tile(x, sv, a, 0.5, bs=16)
+    svp = jnp.pad(sv, ((0, 16), (0, 0)))
+    ap = jnp.pad(a, (0, 16))
+    f2 = gaussian_tile.decision_tile(x, svp, ap, 0.5, bs=16)
+    np.testing.assert_allclose(f1, f2, rtol=1e-5, atol=1e-6)
+
+
+def test_non_divisible_shapes_rejected():
+    x = rand(jax.random.PRNGKey(9), (9, 4), jnp.float32)
+    with pytest.raises(AssertionError):
+        gaussian_tile.gaussian_block(x, x, 1.0, bm=8, bn=8)

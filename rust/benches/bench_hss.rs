@@ -1,0 +1,97 @@
+//! HSS scaling benchmarks: compression / factorization / solve versus n,
+//! validating the paper's complexity claims (O(r²d) construction, O(rd)
+//! memory, O(rd)-ish solves) plus two ablations the DESIGN.md calls out:
+//! ANN-guided vs pure-random column sampling, and kmeans vs PCA splits.
+
+use hss_svm::admm::{AdmmParams, AdmmSolver};
+use hss_svm::cluster::SplitMethod;
+use hss_svm::data::synth;
+use hss_svm::hss::compress::compress;
+use hss_svm::hss::matvec;
+use hss_svm::hss::ulv::UlvFactor;
+use hss_svm::hss::HssParams;
+use hss_svm::kernel::Kernel;
+use hss_svm::util::bench::Bench;
+use hss_svm::util::prng::Rng;
+use hss_svm::util::threadpool;
+use hss_svm::util::timer::Timer;
+use std::time::Duration;
+
+fn main() {
+    let threads = threadpool::default_threads();
+    let mut rng = Rng::new(7);
+    let mut b = Bench::new(Duration::from_secs(1));
+    println!("[hss] threads = {threads}\n");
+
+    let kernel = Kernel::Gaussian { h: 1.5 };
+
+    // --- scaling in n (near-linear is the paper's claim) ---
+    println!("-- scaling (low-accuracy params, blobs dim 8) --");
+    for &n in &[1000usize, 2000, 4000, 8000] {
+        let ds = synth::blobs(n, 8, 6, 0.3, &mut rng);
+        let p = HssParams::low_accuracy();
+
+        let t = Timer::start();
+        let c = compress(&ds, &kernel, &p, threads);
+        b.record_once(&format!("compress n={n}"), t.elapsed());
+        println!(
+            "    -> memory {:.2} MB ({:.1} KB/point), max rank {}, {:.1}% of K evaluated",
+            c.stats.memory_bytes as f64 / 1e6,
+            c.stats.memory_bytes as f64 / 1e3 / n as f64,
+            c.stats.max_rank,
+            100.0 * c.stats.kernel_evals as f64 / (n as f64 * n as f64),
+        );
+
+        let t = Timer::start();
+        let ulv = UlvFactor::new(&c.hss, 100.0).unwrap();
+        b.record_once(&format!("ulv factor n={n}"), t.elapsed());
+
+        let x: Vec<f64> = (0..n).map(|_| rng.gauss()).collect();
+        b.run(&format!("hss matvec n={n}"), || {
+            std::hint::black_box(matvec::matvec(&c.hss, &x));
+        });
+        b.run(&format!("ulv solve n={n}"), || {
+            std::hint::black_box(ulv.solve(&x));
+        });
+
+        // full ADMM train for one C (the paper's "ADMM Time" column)
+        let admm = AdmmParams { beta: 100.0, max_it: 10, relax: 1.0, tol: 0.0 };
+        let solver = AdmmSolver::new(&ulv, &c.pds.y, admm);
+        b.run(&format!("admm 10 iters n={n}"), || {
+            std::hint::black_box(solver.run(1.0));
+        });
+    }
+
+    // --- ablation: ANN sampling vs pure random ---
+    println!("\n-- ablation: column sampling strategy (n=3000) --");
+    let ds = synth::blobs(3000, 8, 6, 0.25, &mut rng);
+    for (label, ann, oversample) in
+        [("ann-guided (paper)", 64usize, 32usize), ("pure-random", 0, 96)]
+    {
+        let p = HssParams {
+            ann_neighbors: ann,
+            oversample,
+            ..HssParams::low_accuracy()
+        };
+        let t = Timer::start();
+        let c = compress(&ds, &kernel, &p, threads);
+        b.record_once(&format!("compress {label}"), t.elapsed());
+        let mut err_rng = Rng::new(1);
+        let err = matvec::rel_error_probes(&c.hss, &kernel, &c.pds, 3, &mut err_rng);
+        println!("    -> rel matvec error {err:.3e}, max rank {}", c.stats.max_rank);
+    }
+
+    // --- ablation: split method ---
+    println!("\n-- ablation: cluster split method (n=3000) --");
+    for (label, split) in [("kmeans", SplitMethod::TwoMeans), ("pca", SplitMethod::Pca)] {
+        let p = HssParams { split, ..HssParams::low_accuracy() };
+        let t = Timer::start();
+        let c = compress(&ds, &kernel, &p, threads);
+        b.record_once(&format!("compress split={label}"), t.elapsed());
+        println!(
+            "    -> memory {:.2} MB, max rank {}",
+            c.stats.memory_bytes as f64 / 1e6,
+            c.stats.max_rank
+        );
+    }
+}

@@ -1,0 +1,83 @@
+//! Micro-benchmarks of the substrate hot paths: gemm, QR, kernel block
+//! evaluation (native vs PJRT), ADMM vector ops. These are the pieces
+//! the §Perf pass optimizes; EXPERIMENTS.md records before/after.
+
+use hss_svm::kernel::{kernel_block, kernel_block_par, Kernel};
+use hss_svm::linalg::qr::Qr;
+use hss_svm::linalg::{matmul, matmul_par, Mat, Trans};
+use hss_svm::runtime::PjrtRuntime;
+use hss_svm::util::bench::Bench;
+use hss_svm::util::prng::Rng;
+use hss_svm::util::threadpool;
+use std::time::Duration;
+
+fn main() {
+    let mut rng = Rng::new(1);
+    let threads = threadpool::default_threads();
+    let mut b = Bench::new(Duration::from_secs(1));
+    println!("[micro] threads = {threads}\n");
+
+    // --- gemm ---
+    for &n in &[128usize, 512] {
+        let a = Mat::gauss(n, n, &mut rng);
+        let c = Mat::gauss(n, n, &mut rng);
+        let flops = 2.0 * (n as f64).powi(3);
+        let r = b.run(&format!("gemm {n}x{n}x{n}"), || {
+            std::hint::black_box(matmul(&a, Trans::No, &c, Trans::No));
+        });
+        println!(
+            "    -> {:.2} GFLOP/s single-thread",
+            flops / r.median.as_secs_f64() / 1e9
+        );
+    }
+    {
+        let n = 512;
+        let a = Mat::gauss(n, n, &mut rng);
+        let c = Mat::gauss(n, n, &mut rng);
+        b.run(&format!("gemm_par {n}x{n}x{n} ({threads}t)"), || {
+            std::hint::black_box(matmul_par(threads, &a, Trans::No, &c, Trans::No));
+        });
+    }
+
+    // --- QR (ULV building block) ---
+    let a = Mat::gauss(256, 64, &mut rng);
+    b.run("qr 256x64 (factor+thinQ)", || {
+        let qr = Qr::new(&a);
+        std::hint::black_box(qr.thin_q());
+    });
+
+    // --- kernel block: native vs PJRT artifact (L1 Pallas inside) ---
+    let kern = Kernel::Gaussian { h: 1.0 };
+    for &f in &[8usize, 122] {
+        let x = Mat::gauss(128, f, &mut rng);
+        let y = Mat::gauss(128, f, &mut rng);
+        b.run(&format!("kernel_block native 128x128 f={f}"), || {
+            std::hint::black_box(kernel_block(&kern, &x, &y));
+        });
+    }
+    {
+        let x = Mat::gauss(2048, 122, &mut rng);
+        let y = Mat::gauss(2048, 122, &mut rng);
+        b.run(&format!("kernel_block_par 2048x2048 f=122 ({threads}t)"), || {
+            std::hint::black_box(kernel_block_par(threads, &kern, &x, &y));
+        });
+    }
+    match PjrtRuntime::try_default() {
+        Some(rt) => {
+            for &f in &[8usize, 122] {
+                let x = Mat::gauss(128, f, &mut rng);
+                let y = Mat::gauss(128, f, &mut rng);
+                b.run(&format!("kernel_tile PJRT 128x128 f={f}"), || {
+                    std::hint::black_box(rt.kernel_tile(&x, &y, kern.gamma()).unwrap());
+                });
+            }
+            let sv = Mat::gauss(1024, 122, &mut rng);
+            let ay: Vec<f64> = (0..1024).map(|_| rng.gauss()).collect();
+            let x = Mat::gauss(128, 122, &mut rng);
+            b.run("decision_tile PJRT 128t x 1024sv f=122", || {
+                std::hint::black_box(rt.decision_tile(&x, &sv, &ay, kern.gamma()).unwrap());
+            });
+        }
+        None => println!("(PJRT artifacts missing — run `make artifacts` for the PJRT rows)"),
+    }
+}

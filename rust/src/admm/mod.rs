@@ -1,0 +1,16 @@
+//! Closed-form ADMM for the SVM dual (Algorithms 2–3 of the paper).
+//!
+//! Problem (1):  min ½ xᵀYKYx − eᵀx  s.t. yᵀx = 0, 0 ≤ x ≤ C.
+//! The splitting x − z = 0 gives three closed-form steps per iteration:
+//!
+//! * x-update: one solve with K_β = K + βI (the only expensive step —
+//!   served by the cached ULV factorization),
+//! * z-update: box projection Π_{[0,C]},
+//! * multiplier update.
+//!
+//! `w = Y K_β⁻¹ e` and `w₁ = eᵀK_β⁻¹e` are precomputed once per (h, β)
+//! and shared by every C of the grid search.
+
+pub mod solver;
+
+pub use solver::{AdmmOutput, AdmmParams, AdmmSolver, ShiftedSolve};

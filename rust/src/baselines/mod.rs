@@ -1,0 +1,13 @@
+//! Baseline solvers the paper compares against (Tables 2 and 3) plus the
+//! §1.1 alternatives, all built from scratch on the same substrate so the
+//! comparison isolates the algorithms, not the implementations.
+
+pub mod dense_admm;
+pub mod nystrom;
+pub mod racqp;
+pub mod smo;
+
+pub use dense_admm::train_dense_admm;
+pub use nystrom::{train_nystrom, NystromSolver};
+pub use racqp::{train_racqp, RacqpParams, RacqpStats};
+pub use smo::{train_smo, SmoParams, SmoStats};

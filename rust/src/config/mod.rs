@@ -1,0 +1,251 @@
+//! Minimal TOML-subset configuration parser (no serde in the offline
+//! crate set). Supports the subset experiment configs need: `[sections]`,
+//! `key = value` with strings, numbers, booleans, and flat arrays, plus
+//! `#` comments.
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// A parsed configuration value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_f64().filter(|n| *n >= 0.0 && n.fract() == 0.0).map(|n| n as usize)
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64_array(&self) -> Option<Vec<f64>> {
+        match self {
+            Value::Array(xs) => xs.iter().map(|x| x.as_f64()).collect(),
+            _ => None,
+        }
+    }
+
+    pub fn as_str_array(&self) -> Option<Vec<String>> {
+        match self {
+            Value::Array(xs) => {
+                xs.iter().map(|x| x.as_str().map(|s| s.to_string())).collect()
+            }
+            _ => None,
+        }
+    }
+}
+
+/// Parsed config: `section.key` → value (top-level keys use section "").
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    entries: BTreeMap<(String, String), Value>,
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Config> {
+        let mut entries = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') {
+                if !line.ends_with(']') {
+                    bail!("line {}: unterminated section header", lineno + 1);
+                }
+                section = line[1..line.len() - 1].trim().to_string();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .with_context(|| format!("line {}: expected key = value", lineno + 1))?;
+            let value = parse_value(v.trim())
+                .with_context(|| format!("line {}: bad value {v:?}", lineno + 1))?;
+            entries.insert((section.clone(), k.trim().to_string()), value);
+        }
+        Ok(Config { entries })
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Config> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("cannot read {}", path.as_ref().display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.entries.get(&(section.to_string(), key.to_string()))
+    }
+
+    pub fn f64_or(&self, section: &str, key: &str, default: f64) -> f64 {
+        self.get(section, key).and_then(Value::as_f64).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, section: &str, key: &str, default: usize) -> usize {
+        self.get(section, key).and_then(Value::as_usize).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, section: &str, key: &str, default: bool) -> bool {
+        self.get(section, key).and_then(Value::as_bool).unwrap_or(default)
+    }
+
+    pub fn str_or(&self, section: &str, key: &str, default: &str) -> String {
+        self.get(section, key)
+            .and_then(Value::as_str)
+            .map(|s| s.to_string())
+            .unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn sections(&self) -> Vec<String> {
+        let mut s: Vec<String> = self.entries.keys().map(|(sec, _)| sec.clone()).collect();
+        s.dedup();
+        s
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // naive but sufficient: `#` outside quotes starts a comment
+    let mut in_str = false;
+    for (i, ch) in line.char_indices() {
+        match ch {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(v: &str) -> Result<Value> {
+    if v.starts_with('"') && v.ends_with('"') && v.len() >= 2 {
+        return Ok(Value::Str(v[1..v.len() - 1].to_string()));
+    }
+    if v == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if v == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if v.starts_with('[') && v.ends_with(']') {
+        let inner = &v[1..v.len() - 1];
+        let mut items = Vec::new();
+        if !inner.trim().is_empty() {
+            for part in split_top_level(inner) {
+                items.push(parse_value(part.trim())?);
+            }
+        }
+        return Ok(Value::Array(items));
+    }
+    if let Ok(n) = v.parse::<f64>() {
+        return Ok(Value::Num(n));
+    }
+    bail!("cannot parse value: {v}")
+}
+
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut start = 0usize;
+    for (i, ch) in s.char_indices() {
+        match ch {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                out.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    out.push(&s[start..]);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_featured_config() {
+        let text = r#"
+# experiment configuration
+name = "table4"
+scale = 0.02
+
+[hss]
+rel_tol = 1.0
+abs_tol = 0.1          # STRUMPACK hss_abs_tol
+max_rank = 200
+split = "kmeans"
+
+[grid]
+h_values = [0.1, 1, 10]
+c_values = [0.1, 1, 10]
+datasets = ["a8a", "ijcnn1"]
+run_smo = true
+"#;
+        let cfg = Config::parse(text).unwrap();
+        assert_eq!(cfg.str_or("", "name", "?"), "table4");
+        assert_eq!(cfg.f64_or("", "scale", 0.0), 0.02);
+        assert_eq!(cfg.f64_or("hss", "rel_tol", 0.0), 1.0);
+        assert_eq!(cfg.usize_or("hss", "max_rank", 0), 200);
+        assert_eq!(cfg.str_or("hss", "split", "?"), "kmeans");
+        assert_eq!(
+            cfg.get("grid", "h_values").unwrap().as_f64_array().unwrap(),
+            vec![0.1, 1.0, 10.0]
+        );
+        assert_eq!(
+            cfg.get("grid", "datasets").unwrap().as_str_array().unwrap(),
+            vec!["a8a", "ijcnn1"]
+        );
+        assert!(cfg.bool_or("grid", "run_smo", false));
+        assert!(!cfg.bool_or("grid", "run_racqp", false));
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        assert!(Config::parse("[oops").is_err());
+        assert!(Config::parse("key value").is_err());
+        assert!(Config::parse("key = @nope").is_err());
+    }
+
+    #[test]
+    fn comments_inside_strings_are_kept() {
+        let cfg = Config::parse("k = \"a # b\"").unwrap();
+        assert_eq!(cfg.str_or("", "k", ""), "a # b");
+    }
+
+    #[test]
+    fn usize_rejects_negative_and_fractional() {
+        let cfg = Config::parse("a = -3\nb = 1.5\nc = 7").unwrap();
+        assert_eq!(cfg.get("", "a").unwrap().as_usize(), None);
+        assert_eq!(cfg.get("", "b").unwrap().as_usize(), None);
+        assert_eq!(cfg.get("", "c").unwrap().as_usize(), Some(7));
+    }
+}

@@ -1,0 +1,180 @@
+//! The compression/factorization cache (the paper's §3.2 reuse trick:
+//! "for a fixed kernel value h the approximation K̃ and the factorization
+//! ULV of K̃_β are computed just once and then reused for all the values
+//! C in the grid search").
+
+use crate::admm::AdmmParams;
+use crate::data::Dataset;
+use crate::hss::compress::Preprocessed;
+use crate::hss::ulv::UlvFactor;
+use crate::hss::HssParams;
+use crate::kernel::Kernel;
+use crate::svm::HssSvmTrainer;
+use crate::util::timer::Timer;
+use anyhow::Result;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// Cache key: kernel width bits + the HSS fingerprint.
+#[derive(Clone, PartialEq, Eq, Hash, Debug)]
+struct HKey {
+    h_bits: u64,
+    params: ParamsFp,
+}
+
+#[derive(Clone, PartialEq, Eq, Hash, Debug)]
+struct ParamsFp {
+    rel_bits: u64,
+    abs_bits: u64,
+    max_rank: usize,
+    ann: usize,
+    leaf: usize,
+    seed: u64,
+}
+
+fn fp(p: &HssParams) -> ParamsFp {
+    ParamsFp {
+        rel_bits: p.rel_tol.to_bits(),
+        abs_bits: p.abs_tol.to_bits(),
+        max_rank: p.max_rank,
+        ann: p.ann_neighbors,
+        leaf: p.leaf_size,
+        seed: p.seed,
+    }
+}
+
+/// Timing observed while filling the cache (per entry).
+#[derive(Clone, Debug, Default)]
+pub struct CacheTimings {
+    pub compress_secs: f64,
+    pub factor_secs: f64,
+    pub compress_count: usize,
+    pub factor_count: usize,
+}
+
+/// Per-dataset cache of h-independent preprocessing (cluster tree +
+/// ANN), trainers (per h) and ULV factors (per h, β).
+pub struct KernelCache {
+    pre: HashMap<ParamsFp, Arc<Preprocessed>>,
+    trainers: HashMap<HKey, Arc<HssSvmTrainer>>,
+    factors: HashMap<(HKey, u64), Arc<UlvFactor>>,
+    pub timings: CacheTimings,
+    threads: usize,
+}
+
+impl KernelCache {
+    pub fn new(threads: usize) -> Self {
+        KernelCache {
+            pre: HashMap::new(),
+            trainers: HashMap::new(),
+            factors: HashMap::new(),
+            timings: CacheTimings::default(),
+            threads,
+        }
+    }
+
+    /// Stage-1 (compress) — computed at most once per (h, params).
+    pub fn trainer(
+        &mut self,
+        ds: &Dataset,
+        h: f64,
+        params: &HssParams,
+    ) -> Arc<HssSvmTrainer> {
+        let key = HKey { h_bits: h.to_bits(), params: fp(params) };
+        if let Some(t) = self.trainers.get(&key) {
+            return Arc::clone(t);
+        }
+        let t = Timer::start();
+        // h-independent preprocessing (cluster tree + ANN) shared by all
+        // h values of the grid (§Perf: removes redundant ANN passes)
+        let pre = match self.pre.get(&key.params) {
+            Some(p) => Arc::clone(p),
+            None => {
+                let p = Arc::new(crate::hss::compress::preprocess(ds, params, self.threads));
+                self.pre.insert(key.params.clone(), Arc::clone(&p));
+                p
+            }
+        };
+        let trainer = Arc::new(HssSvmTrainer::compress_preprocessed(
+            &pre,
+            Kernel::Gaussian { h },
+            params,
+            self.threads,
+        ));
+        self.timings.compress_secs += t.secs();
+        self.timings.compress_count += 1;
+        self.trainers.insert(key, Arc::clone(&trainer));
+        trainer
+    }
+
+    /// Stage-2 (ULV factor) — once per (h, params, β).
+    pub fn factor(
+        &mut self,
+        ds: &Dataset,
+        h: f64,
+        params: &HssParams,
+        admm: &AdmmParams,
+    ) -> Result<(Arc<HssSvmTrainer>, Arc<UlvFactor>)> {
+        let key = HKey { h_bits: h.to_bits(), params: fp(params) };
+        let trainer = self.trainer(ds, h, params);
+        let fkey = (key, admm.beta.to_bits());
+        if let Some(f) = self.factors.get(&fkey) {
+            return Ok((trainer, Arc::clone(f)));
+        }
+        let t = Timer::start();
+        let factor = Arc::new(trainer.factor(admm.beta)?);
+        self.timings.factor_secs += t.secs();
+        self.timings.factor_count += 1;
+        self.factors.insert(fkey, Arc::clone(&factor));
+        Ok((trainer, factor))
+    }
+
+    /// Number of cached compressions / factorizations.
+    pub fn sizes(&self) -> (usize, usize) {
+        (self.trainers.len(), self.factors.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn compression_computed_once_per_h() {
+        let mut rng = Rng::new(301);
+        let ds = synth::blobs(200, 3, 3, 0.3, &mut rng);
+        let mut cache = KernelCache::new(1);
+        let p = HssParams::near_exact();
+        let admm = AdmmParams { beta: 10.0, max_it: 10, relax: 1.0, tol: 0.0 };
+
+        let t1 = cache.trainer(&ds, 1.0, &p);
+        let t2 = cache.trainer(&ds, 1.0, &p);
+        assert!(Arc::ptr_eq(&t1, &t2), "same h must hit the cache");
+        assert_eq!(cache.timings.compress_count, 1);
+
+        let _t3 = cache.trainer(&ds, 2.0, &p);
+        assert_eq!(cache.timings.compress_count, 2);
+
+        let (_, f1) = cache.factor(&ds, 1.0, &p, &admm).unwrap();
+        let (_, f2) = cache.factor(&ds, 1.0, &p, &admm).unwrap();
+        assert!(Arc::ptr_eq(&f1, &f2));
+        assert_eq!(cache.timings.factor_count, 1);
+
+        let admm2 = AdmmParams { beta: 100.0, max_it: 10, relax: 1.0, tol: 0.0 };
+        let (_, _f3) = cache.factor(&ds, 1.0, &p, &admm2).unwrap();
+        assert_eq!(cache.timings.factor_count, 2);
+        assert_eq!(cache.sizes(), (2, 2));
+    }
+
+    #[test]
+    fn different_hss_params_do_not_collide() {
+        let mut rng = Rng::new(302);
+        let ds = synth::blobs(150, 2, 3, 0.3, &mut rng);
+        let mut cache = KernelCache::new(1);
+        let _a = cache.trainer(&ds, 1.0, &HssParams::low_accuracy());
+        let _b = cache.trainer(&ds, 1.0, &HssParams::high_accuracy());
+        assert_eq!(cache.timings.compress_count, 2);
+    }
+}

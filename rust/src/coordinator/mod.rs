@@ -1,0 +1,23 @@
+//! L3 coordinator: the paper's *systems* contribution.
+//!
+//! The method's efficiency comes from a reuse hierarchy —
+//!
+//! ```text
+//!   dataset ──► (per h)  HSS compression          expensive, cached
+//!                  └──► (per β)  ULV factorization  cheap-ish, cached
+//!                          └──► (per C)  10 ADMM iterations  negligible
+//! ```
+//!
+//! [`cache::KernelCache`] owns that hierarchy; [`grid::GridSearch`]
+//! drives the (h, C) hyperparameter sweep over it, reproducing the
+//! paper's claim that the *total* grid time ≈ one compression per h plus
+//! `#C × ADMM-time`; [`suite`] orchestrates whole-paper experiment runs
+//! (Tables 2–5) across datasets and solvers.
+
+pub mod cache;
+pub mod grid;
+pub mod suite;
+
+pub use cache::KernelCache;
+pub use grid::{GridResult, GridSearch};
+pub use suite::{run_suite, SuiteConfig, SuiteRow};

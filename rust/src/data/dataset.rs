@@ -1,0 +1,137 @@
+//! Core dataset representation: dense feature rows + ±1 labels.
+//!
+//! The paper's datasets (Table 1) range from 3 to 47k features; the HSS
+//! pipeline operates on dense points (STRUMPACK densifies too), so the
+//! canonical storage is a row-major [`Mat`] with one point per row.
+
+use crate::linalg::Mat;
+
+/// A labelled binary-classification dataset.
+#[derive(Clone)]
+pub struct Dataset {
+    /// d × r matrix: one feature row per point.
+    pub x: Mat,
+    /// Labels in {-1, +1}, length d.
+    pub y: Vec<f64>,
+    /// Human-readable name (dataset table key).
+    pub name: String,
+}
+
+impl Dataset {
+    pub fn new(name: impl Into<String>, x: Mat, y: Vec<f64>) -> Self {
+        assert_eq!(x.rows(), y.len(), "points/labels length mismatch");
+        assert!(
+            y.iter().all(|&v| v == 1.0 || v == -1.0),
+            "labels must be in {{-1, +1}}"
+        );
+        Dataset { x, y, name: name.into() }
+    }
+
+    /// Number of points.
+    pub fn len(&self) -> usize {
+        self.x.rows()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Feature dimension.
+    pub fn dim(&self) -> usize {
+        self.x.cols()
+    }
+
+    /// Number of positive labels (the |Train₊| column of Table 1).
+    pub fn positives(&self) -> usize {
+        self.y.iter().filter(|&&v| v > 0.0).count()
+    }
+
+    /// Feature row of point i.
+    pub fn point(&self, i: usize) -> &[f64] {
+        self.x.row(i)
+    }
+
+    /// Subset by index list (in that order).
+    pub fn select(&self, idx: &[usize]) -> Dataset {
+        Dataset {
+            x: self.x.select_rows(idx),
+            y: idx.iter().map(|&i| self.y[i]).collect(),
+            name: self.name.clone(),
+        }
+    }
+
+    /// Apply a permutation: point `perm[i]` of `self` becomes point `i`.
+    pub fn permute(&self, perm: &[usize]) -> Dataset {
+        assert_eq!(perm.len(), self.len());
+        self.select(perm)
+    }
+
+    /// Split into (train, test) at `train_len` (no shuffling — callers
+    /// shuffle explicitly for determinism).
+    pub fn split_at(&self, train_len: usize) -> (Dataset, Dataset) {
+        assert!(train_len <= self.len());
+        let train_idx: Vec<usize> = (0..train_len).collect();
+        let test_idx: Vec<usize> = (train_len..self.len()).collect();
+        (self.select(&train_idx), self.select(&test_idx))
+    }
+}
+
+impl std::fmt::Debug for Dataset {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "Dataset({}: {} pts × {} feats, {} positive)",
+            self.name,
+            self.len(),
+            self.dim(),
+            self.positives()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Dataset {
+        let x = Mat::from_fn(4, 2, |i, j| (i * 2 + j) as f64);
+        Dataset::new("tiny", x, vec![1.0, -1.0, 1.0, -1.0])
+    }
+
+    #[test]
+    fn accessors() {
+        let d = tiny();
+        assert_eq!(d.len(), 4);
+        assert_eq!(d.dim(), 2);
+        assert_eq!(d.positives(), 2);
+        assert_eq!(d.point(2), &[4.0, 5.0]);
+    }
+
+    #[test]
+    fn select_and_permute() {
+        let d = tiny();
+        let s = d.select(&[3, 1]);
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.y, vec![-1.0, -1.0]);
+        assert_eq!(s.point(0), &[6.0, 7.0]);
+
+        let p = d.permute(&[1, 0, 3, 2]);
+        assert_eq!(p.point(0), &[2.0, 3.0]);
+        assert_eq!(p.y[0], -1.0);
+    }
+
+    #[test]
+    fn split() {
+        let d = tiny();
+        let (tr, te) = d.split_at(3);
+        assert_eq!(tr.len(), 3);
+        assert_eq!(te.len(), 1);
+        assert_eq!(te.point(0), &[6.0, 7.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "labels must be")]
+    fn rejects_bad_labels() {
+        Dataset::new("bad", Mat::zeros(1, 1), vec![0.5]);
+    }
+}

@@ -1,0 +1,169 @@
+//! LIBSVM sparse text format reader/writer.
+//!
+//! Format: one point per line, `<label> <index>:<value> ...` with 1-based
+//! ascending indices. All of the paper's datasets ship in this format, so
+//! a user with the real a8a/w7a/... files can run the exact experiments;
+//! our synthetic generators write the same format for parity.
+
+use crate::data::dataset::Dataset;
+use crate::linalg::Mat;
+use anyhow::{bail, Context, Result};
+use std::io::{BufRead, BufWriter, Write};
+use std::path::Path;
+
+/// Parse LIBSVM text from a reader. `dim` forces the feature dimension
+/// (use `None` to infer from the max index seen).
+pub fn read(r: impl BufRead, dim: Option<usize>) -> Result<Dataset> {
+    let mut labels: Vec<f64> = Vec::new();
+    let mut rows: Vec<Vec<(usize, f64)>> = Vec::new();
+    let mut max_idx = 0usize;
+
+    for (lineno, line) in r.lines().enumerate() {
+        let line = line.context("I/O error reading libsvm data")?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut parts = line.split_ascii_whitespace();
+        let lab_tok = parts.next().unwrap();
+        let label: f64 = lab_tok
+            .parse()
+            .with_context(|| format!("line {}: bad label {lab_tok:?}", lineno + 1))?;
+        // normalize common encodings: {0,1} → {-1,+1}, {1,2} → {-1,+1}
+        let mut feats = Vec::new();
+        for tok in parts {
+            let (i_str, v_str) = tok
+                .split_once(':')
+                .with_context(|| format!("line {}: bad pair {tok:?}", lineno + 1))?;
+            let idx: usize = i_str
+                .parse()
+                .with_context(|| format!("line {}: bad index {i_str:?}", lineno + 1))?;
+            if idx == 0 {
+                bail!("line {}: libsvm indices are 1-based, got 0", lineno + 1);
+            }
+            let val: f64 = v_str
+                .parse()
+                .with_context(|| format!("line {}: bad value {v_str:?}", lineno + 1))?;
+            max_idx = max_idx.max(idx);
+            feats.push((idx - 1, val));
+        }
+        labels.push(label);
+        rows.push(feats);
+    }
+
+    let dim = match dim {
+        Some(d) => {
+            if max_idx > d {
+                bail!("feature index {max_idx} exceeds forced dimension {d}");
+            }
+            d
+        }
+        None => max_idx,
+    };
+
+    // map labels to ±1
+    let distinct: std::collections::BTreeSet<i64> =
+        labels.iter().map(|&l| l.round() as i64).collect();
+    let to_pm1: Box<dyn Fn(f64) -> f64> = if distinct == [(-1), 1].into_iter().collect() {
+        Box::new(|l| l)
+    } else if distinct == [0, 1].into_iter().collect() {
+        Box::new(|l| if l > 0.5 { 1.0 } else { -1.0 })
+    } else if distinct == [1, 2].into_iter().collect() {
+        Box::new(|l| if l < 1.5 { 1.0 } else { -1.0 })
+    } else if distinct.len() <= 2 {
+        let lo = *distinct.iter().next().unwrap() as f64;
+        Box::new(move |l| if l > lo { 1.0 } else { -1.0 })
+    } else {
+        bail!("not a binary dataset: labels {distinct:?}");
+    };
+
+    let mut x = Mat::zeros(rows.len(), dim);
+    for (i, feats) in rows.iter().enumerate() {
+        let row = x.row_mut(i);
+        for &(j, v) in feats {
+            row[j] = v;
+        }
+    }
+    let y: Vec<f64> = labels.iter().map(|&l| to_pm1(l)).collect();
+    Ok(Dataset::new("libsvm", x, y))
+}
+
+/// Read a dataset from a file path.
+pub fn read_file(path: impl AsRef<Path>, dim: Option<usize>) -> Result<Dataset> {
+    let f = std::fs::File::open(path.as_ref())
+        .with_context(|| format!("cannot open {}", path.as_ref().display()))?;
+    let mut ds = read(std::io::BufReader::new(f), dim)?;
+    if let Some(stem) = path.as_ref().file_stem().and_then(|s| s.to_str()) {
+        ds.name = stem.to_string();
+    }
+    Ok(ds)
+}
+
+/// Write a dataset in LIBSVM format (zeros skipped).
+pub fn write_file(ds: &Dataset, path: impl AsRef<Path>) -> Result<()> {
+    let f = std::fs::File::create(path.as_ref())
+        .with_context(|| format!("cannot create {}", path.as_ref().display()))?;
+    let mut w = BufWriter::new(f);
+    for i in 0..ds.len() {
+        write!(w, "{}", if ds.y[i] > 0.0 { "+1" } else { "-1" })?;
+        for (j, &v) in ds.point(i).iter().enumerate() {
+            if v != 0.0 {
+                write!(w, " {}:{}", j + 1, v)?;
+            }
+        }
+        writeln!(w)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn parses_basic_file() {
+        let text = "+1 1:0.5 3:1.5\n-1 2:2.0\n# comment\n\n+1 1:1.0\n";
+        let ds = read(Cursor::new(text), None).unwrap();
+        assert_eq!(ds.len(), 3);
+        assert_eq!(ds.dim(), 3);
+        assert_eq!(ds.point(0), &[0.5, 0.0, 1.5]);
+        assert_eq!(ds.point(1), &[0.0, 2.0, 0.0]);
+        assert_eq!(ds.y, vec![1.0, -1.0, 1.0]);
+    }
+
+    #[test]
+    fn label_mappings() {
+        let ds = read(Cursor::new("0 1:1\n1 1:2\n"), None).unwrap();
+        assert_eq!(ds.y, vec![-1.0, 1.0]);
+        let ds2 = read(Cursor::new("1 1:1\n2 1:2\n"), None).unwrap();
+        assert_eq!(ds2.y, vec![1.0, -1.0]); // 1 → +1, 2 → −1 (cod-rna style)
+    }
+
+    #[test]
+    fn forced_dim_and_errors() {
+        let ds = read(Cursor::new("+1 2:1\n"), Some(5)).unwrap();
+        assert_eq!(ds.dim(), 5);
+        assert!(read(Cursor::new("+1 9:1\n"), Some(3)).is_err());
+        assert!(read(Cursor::new("+1 0:1\n"), None).is_err());
+        assert!(read(Cursor::new("x 1:1\n"), None).is_err());
+        assert!(read(Cursor::new("1 1:1\n2 1:1\n3 1:1\n"), None).is_err()); // 3 classes
+    }
+
+    #[test]
+    fn roundtrip_through_file() {
+        let x = Mat::from_fn(3, 4, |i, j| if (i + j) % 2 == 0 { (i + j) as f64 * 0.25 } else { 0.0 });
+        let ds = Dataset::new("rt", x, vec![1.0, -1.0, 1.0]);
+        let dir = std::env::temp_dir().join("hss_svm_test_libsvm");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("rt.libsvm");
+        write_file(&ds, &path).unwrap();
+        let back = read_file(&path, Some(4)).unwrap();
+        assert_eq!(back.len(), 3);
+        assert_eq!(back.y, ds.y);
+        for i in 0..3 {
+            assert_eq!(back.point(i), ds.point(i));
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,9 @@
+//! Dataset substrate: representation, LIBSVM-format I/O, synthetic
+//! Table-1-matched workload generators, and feature scaling.
+
+pub mod dataset;
+pub mod libsvm;
+pub mod scale;
+pub mod synth;
+
+pub use dataset::Dataset;

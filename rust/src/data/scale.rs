@@ -1,0 +1,152 @@
+//! Feature scaling. LIBSVM's `svm-scale` normalizes features to [-1, 1]
+//! or [0, 1]; accuracy and kernel-width grids in the paper assume scaled
+//! inputs, so the same transform is applied to synthetic data before
+//! training (fit on train, apply to test — never the other way).
+
+use crate::data::dataset::Dataset;
+
+/// Per-feature affine transform x ← (x − shift) * factor.
+#[derive(Clone, Debug)]
+pub struct Scaler {
+    shift: Vec<f64>,
+    factor: Vec<f64>,
+}
+
+impl Scaler {
+    /// Fit a min-max scaler mapping each feature to [lo, hi].
+    pub fn fit_minmax(ds: &Dataset, lo: f64, hi: f64) -> Scaler {
+        let dim = ds.dim();
+        let mut min = vec![f64::INFINITY; dim];
+        let mut max = vec![f64::NEG_INFINITY; dim];
+        for i in 0..ds.len() {
+            for (j, &v) in ds.point(i).iter().enumerate() {
+                min[j] = min[j].min(v);
+                max[j] = max[j].max(v);
+            }
+        }
+        let mut shift = vec![0.0; dim];
+        let mut factor = vec![1.0; dim];
+        for j in 0..dim {
+            if max[j] > min[j] {
+                shift[j] = min[j] - lo * (max[j] - min[j]) / (hi - lo);
+                factor[j] = (hi - lo) / (max[j] - min[j]);
+            } else {
+                // constant feature → map to lo
+                shift[j] = min[j] - lo;
+                factor[j] = 1.0;
+            }
+        }
+        Scaler { shift, factor }
+    }
+
+    /// Fit a z-score scaler (mean 0, std 1).
+    pub fn fit_standard(ds: &Dataset) -> Scaler {
+        let dim = ds.dim();
+        let n = ds.len().max(1) as f64;
+        let mut mean = vec![0.0; dim];
+        for i in 0..ds.len() {
+            for (j, &v) in ds.point(i).iter().enumerate() {
+                mean[j] += v;
+            }
+        }
+        for m in &mut mean {
+            *m /= n;
+        }
+        let mut var = vec![0.0; dim];
+        for i in 0..ds.len() {
+            for (j, &v) in ds.point(i).iter().enumerate() {
+                let d = v - mean[j];
+                var[j] += d * d;
+            }
+        }
+        let factor = var
+            .iter()
+            .map(|&v| {
+                let s = (v / n).sqrt();
+                if s > 1e-300 {
+                    1.0 / s
+                } else {
+                    1.0
+                }
+            })
+            .collect();
+        Scaler { shift: mean, factor }
+    }
+
+    /// Apply in place.
+    pub fn apply(&self, ds: &mut Dataset) {
+        assert_eq!(ds.dim(), self.shift.len(), "scaler dimension mismatch");
+        for i in 0..ds.len() {
+            let row = ds.x.row_mut(i);
+            for (j, v) in row.iter_mut().enumerate() {
+                *v = (*v - self.shift[j]) * self.factor[j];
+            }
+        }
+    }
+}
+
+/// Fit min-max [-1,1] on train and apply to both train and test.
+pub fn scale_pair(train: &mut Dataset, test: &mut Dataset) {
+    let sc = Scaler::fit_minmax(train, -1.0, 1.0);
+    sc.apply(train);
+    sc.apply(test);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+
+    fn ds(vals: Vec<f64>, rows: usize, cols: usize) -> Dataset {
+        let y = (0..rows).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect();
+        Dataset::new("t", Mat::from_vec(rows, cols, vals), y)
+    }
+
+    #[test]
+    fn minmax_maps_to_range() {
+        let mut d = ds(vec![0.0, 10.0, 5.0, 20.0, 10.0, 0.0], 3, 2);
+        let sc = Scaler::fit_minmax(&d, -1.0, 1.0);
+        sc.apply(&mut d);
+        for j in 0..2 {
+            let col: Vec<f64> = (0..3).map(|i| d.x[(i, j)]).collect();
+            let mn = col.iter().cloned().fold(f64::INFINITY, f64::min);
+            let mx = col.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            assert!((mn + 1.0).abs() < 1e-12, "min {mn}");
+            assert!((mx - 1.0).abs() < 1e-12, "max {mx}");
+        }
+    }
+
+    #[test]
+    fn constant_feature_is_safe() {
+        let mut d = ds(vec![3.0, 1.0, 3.0, 2.0], 2, 2);
+        let sc = Scaler::fit_minmax(&d, 0.0, 1.0);
+        sc.apply(&mut d);
+        assert!((d.x[(0, 0)] - 0.0).abs() < 1e-12);
+        assert!(d.x.data().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn standard_scaler_zero_mean_unit_var() {
+        let mut rng = crate::util::prng::Rng::new(3);
+        let x = Mat::gauss(500, 4, &mut rng);
+        let mut d = Dataset::new("g", x, vec![1.0; 500].iter().enumerate().map(|(i, _)| if i % 2 == 0 { 1.0 } else { -1.0 }).collect());
+        let sc = Scaler::fit_standard(&d);
+        sc.apply(&mut d);
+        for j in 0..4 {
+            let col: Vec<f64> = (0..500).map(|i| d.x[(i, j)]).collect();
+            let mean: f64 = col.iter().sum::<f64>() / 500.0;
+            let var: f64 = col.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / 500.0;
+            assert!(mean.abs() < 1e-10);
+            assert!((var - 1.0).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn pair_scaling_uses_train_statistics() {
+        let mut tr = ds(vec![0.0, 0.0, 10.0, 10.0], 2, 2);
+        let mut te = ds(vec![20.0, 20.0], 1, 2);
+        scale_pair(&mut tr, &mut te);
+        // test point outside train range maps beyond 1
+        assert!((te.x[(0, 0)] - 3.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,335 @@
+//! Synthetic workload generators.
+//!
+//! The paper evaluates on ten LIBSVM datasets (Table 1). Those files are
+//! not redistributable inside this offline environment, so each dataset is
+//! **simulated**: a seeded class-conditional Gaussian-mixture generator
+//! matched to Table 1 on feature count, train/test sizes and class
+//! balance, with a per-dataset separation parameter calibrated so the
+//! achievable accuracy lands near the paper's reported figures (99%+ for
+//! skin-like, ~72% for susy-like, ...). Mixture data is exactly the
+//! regime HSS-ANN exploits (clusterable geometry ⇒ low-rank off-diagonal
+//! kernel blocks), which is the behaviour the substitution must preserve
+//! — see DESIGN.md §4.
+//!
+//! Toy generators (moons / circles / checkerboard / blobs) back the unit
+//! and integration tests: they have known difficulty and force a genuinely
+//! nonlinear decision boundary.
+
+use crate::data::dataset::Dataset;
+use crate::linalg::Mat;
+use crate::util::prng::Rng;
+
+/// Gaussian blobs: `clusters` centers in [-1,1]^dim, alternating labels.
+pub fn blobs(n: usize, dim: usize, clusters: usize, std: f64, rng: &mut Rng) -> Dataset {
+    assert!(clusters >= 2);
+    let centers: Vec<Vec<f64>> = (0..clusters)
+        .map(|_| (0..dim).map(|_| rng.range(-1.0, 1.0)).collect())
+        .collect();
+    let mut x = Mat::zeros(n, dim);
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        let c = rng.below(clusters);
+        let row = x.row_mut(i);
+        for (j, v) in row.iter_mut().enumerate() {
+            *v = centers[c][j] + rng.gauss() * std;
+        }
+        y[i] = if c % 2 == 0 { 1.0 } else { -1.0 };
+    }
+    Dataset::new("blobs", x, y)
+}
+
+/// The two-moons toy (2-D, intrinsically nonlinear boundary).
+pub fn two_moons(n: usize, noise: f64, rng: &mut Rng) -> Dataset {
+    let mut x = Mat::zeros(n, 2);
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        let upper = i % 2 == 0;
+        let t = rng.f64() * std::f64::consts::PI;
+        let (cx, cy, lab) = if upper {
+            (t.cos(), t.sin(), 1.0)
+        } else {
+            (1.0 - t.cos(), 0.5 - t.sin(), -1.0)
+        };
+        x[(i, 0)] = cx + rng.gauss() * noise;
+        x[(i, 1)] = cy + rng.gauss() * noise;
+        y[i] = lab;
+    }
+    Dataset::new("moons", x, y)
+}
+
+/// Concentric circles (2-D): inner = +1, outer = −1.
+pub fn circles(n: usize, noise: f64, rng: &mut Rng) -> Dataset {
+    let mut x = Mat::zeros(n, 2);
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        let inner = i % 2 == 0;
+        let r = if inner { 0.5 } else { 1.0 };
+        let t = rng.f64() * 2.0 * std::f64::consts::PI;
+        x[(i, 0)] = r * t.cos() + rng.gauss() * noise;
+        x[(i, 1)] = r * t.sin() + rng.gauss() * noise;
+        y[i] = if inner { 1.0 } else { -1.0 };
+    }
+    Dataset::new("circles", x, y)
+}
+
+/// 2-D checkerboard with `cells`×`cells` alternating squares on [0,1]².
+pub fn checkerboard(n: usize, cells: usize, rng: &mut Rng) -> Dataset {
+    let mut x = Mat::zeros(n, 2);
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        let a = rng.f64();
+        let b = rng.f64();
+        x[(i, 0)] = a;
+        x[(i, 1)] = b;
+        let ca = (a * cells as f64) as usize;
+        let cb = (b * cells as f64) as usize;
+        y[i] = if (ca + cb) % 2 == 0 { 1.0 } else { -1.0 };
+    }
+    Dataset::new("checkerboard", x, y)
+}
+
+/// Class-conditional Gaussian mixture with controlled separation.
+///
+/// `sep` ≳ 3 ⇒ nearly separable (99%+ achievable); `sep` ≲ 1 ⇒ heavy
+/// overlap (susy-like ~72%). `label_noise` flips that fraction of labels.
+pub struct GmmSpec {
+    pub dim: usize,
+    /// Dims that actually vary (the rest are exactly 0) — mimics the
+    /// sparse high-dim LIBSVM sets (a8a has ~14 active features per row
+    /// out of 122), keeping ‖x−y‖² at O(active) instead of O(dim) so the
+    /// paper's h ∈ {0.1, 1, 10} grid stays meaningful.
+    pub active_dims: usize,
+    pub clusters_per_class: usize,
+    pub sep: f64,
+    pub cluster_std: f64,
+    pub label_noise: f64,
+}
+
+impl GmmSpec {
+    /// Draw `n` points with exactly `n_pos` positives.
+    pub fn sample(&self, name: &str, n: usize, n_pos: usize, rng: &mut Rng) -> Dataset {
+        assert!(n_pos <= n);
+        let k = self.clusters_per_class.max(1);
+        let active = self.active_dims.clamp(1, self.dim);
+        // Centers: each cluster center i.i.d. N(0, sep² I) on the active
+        // dims per class, with the two classes sharing the sampling
+        // distribution — separation comes from `sep` vs `cluster_std`.
+        let center = |rng: &mut Rng| -> Vec<f64> {
+            (0..active).map(|_| rng.gauss() * self.sep).collect()
+        };
+        let pos_centers: Vec<Vec<f64>> = (0..k).map(|_| center(rng)).collect();
+        let neg_centers: Vec<Vec<f64>> = (0..k).map(|_| center(rng)).collect();
+
+        let mut x = Mat::zeros(n, self.dim);
+        let mut y = vec![0.0; n];
+        // interleave positives/negatives deterministically then shuffle rows
+        let mut labels: Vec<bool> = (0..n).map(|i| i < n_pos).collect();
+        rng.shuffle(&mut labels);
+        for i in 0..n {
+            let pos = labels[i];
+            let centers = if pos { &pos_centers } else { &neg_centers };
+            let c = &centers[rng.below(k)];
+            let row = x.row_mut(i);
+            for (j, v) in row.iter_mut().enumerate().take(active) {
+                *v = c[j] + rng.gauss() * self.cluster_std;
+            }
+            let mut lab = if pos { 1.0 } else { -1.0 };
+            if self.label_noise > 0.0 && rng.chance(self.label_noise) {
+                lab = -lab;
+            }
+            y[i] = lab;
+        }
+        Dataset::new(name, x, y)
+    }
+}
+
+/// One row of the paper's Table 1, plus simulation parameters.
+#[derive(Clone, Copy)]
+pub struct Table1Spec {
+    pub name: &'static str,
+    /// Feature count in the paper.
+    pub features: usize,
+    /// Feature count actually generated (dense simulator cap; only
+    /// rcv1's 47k text features are capped — see DESIGN.md §4).
+    pub gen_features: usize,
+    pub train: usize,
+    pub train_pos: usize,
+    pub test: usize,
+    pub test_pos: usize,
+    /// Mixture separation (calibrated to the paper's accuracy regime).
+    pub sep: f64,
+    /// Label-flip noise.
+    pub noise: f64,
+    /// β chosen per the paper's rule (1e2 / 1e3 / 1e4 by train size).
+    pub beta: f64,
+}
+
+/// The ten Table-1 datasets. `sep`/`noise` calibrated so the best
+/// achievable accuracy is in the neighbourhood of the paper's Tables 2-5.
+pub const TABLE1: &[Table1Spec] = &[
+    Table1Spec { name: "a8a", features: 122, gen_features: 122, train: 22696, train_pos: 5506, test: 9865, test_pos: 2335, sep: 1.8, noise: 0.12, beta: 1e2 },
+    Table1Spec { name: "w7a", features: 300, gen_features: 300, train: 24692, train_pos: 740, test: 25057, test_pos: 739, sep: 2.0, noise: 0.012, beta: 1e2 },
+    Table1Spec { name: "rcv1.binary", features: 47236, gen_features: 512, train: 20242, train_pos: 10491, test: 135480, test_pos: 71326, sep: 1.3, noise: 0.05, beta: 1e2 },
+    Table1Spec { name: "a9a", features: 122, gen_features: 122, train: 32561, train_pos: 7841, test: 16281, test_pos: 3846, sep: 1.8, noise: 0.12, beta: 1e2 },
+    Table1Spec { name: "w8a", features: 300, gen_features: 300, train: 49749, train_pos: 1479, test: 14951, test_pos: 454, sep: 2.0, noise: 0.012, beta: 1e2 },
+    Table1Spec { name: "ijcnn1", features: 22, gen_features: 22, train: 49990, train_pos: 4853, test: 91701, test_pos: 8712, sep: 1.2, noise: 0.05, beta: 1e2 },
+    Table1Spec { name: "cod.rna", features: 8, gen_features: 8, train: 59535, train_pos: 19845, test: 271617, test_pos: 90539, sep: 1.1, noise: 0.08, beta: 1e2 },
+    Table1Spec { name: "skin.nonskin", features: 3, gen_features: 3, train: 171540, train_pos: 135986, test: 73517, test_pos: 58212, sep: 6.0, noise: 0.001, beta: 1e3 },
+    Table1Spec { name: "webspam.uni", features: 254, gen_features: 254, train: 245000, train_pos: 148717, test: 105000, test_pos: 63472, sep: 2.2, noise: 0.03, beta: 1e3 },
+    Table1Spec { name: "susy", features: 18, gen_features: 18, train: 3500000, train_pos: 1601659, test: 1500000, test_pos: 686168, sep: 0.55, noise: 0.18, beta: 1e4 },
+];
+
+/// Look up a Table-1 spec by (case-insensitive) name.
+pub fn table1_spec(name: &str) -> Option<&'static Table1Spec> {
+    TABLE1.iter().find(|s| s.name.eq_ignore_ascii_case(name))
+}
+
+impl Table1Spec {
+    /// β per the paper's staging rule, applied to the *scaled* train size.
+    pub fn beta_for(train: usize) -> f64 {
+        if train >= 1_000_000 {
+            1e4
+        } else if train >= 100_000 {
+            1e3
+        } else {
+            1e2
+        }
+    }
+
+    /// Generate the (train, test) pair at `scale` ∈ (0, 1] of the paper's
+    /// sizes. Deterministic in (spec, scale, seed).
+    pub fn generate(&self, scale: f64, seed: u64) -> (Dataset, Dataset) {
+        assert!(scale > 0.0 && scale <= 1.0);
+        let sc = |v: usize| ((v as f64 * scale).round() as usize).max(2);
+        let train = sc(self.train);
+        let test = sc(self.test);
+        let train_pos = sc(self.train_pos).min(train - 1).max(1);
+        let test_pos = sc(self.test_pos).min(test - 1).max(1);
+        let mut rng = Rng::new(seed ^ fxhash(self.name));
+        let spec = GmmSpec {
+            dim: self.gen_features,
+            active_dims: active_count(self.gen_features),
+            clusters_per_class: cluster_count(self.gen_features),
+            sep: self.sep,
+            cluster_std: 1.0,
+            label_noise: self.noise,
+        };
+        // Sample train and test from the SAME mixture: a single spec
+        // instance reused so centers match.
+        let all = spec.sample(self.name, train + test, train_pos + test_pos, &mut rng);
+        // Re-assort so that train gets exactly train_pos positives.
+        let (mut pos_idx, mut neg_idx): (Vec<usize>, Vec<usize>) =
+            (0..all.len()).partition(|&i| all.y[i] > 0.0);
+        // label noise can shift counts slightly; take what we have
+        let tp = train_pos.min(pos_idx.len());
+        let tn = (train - tp).min(neg_idx.len());
+        let mut train_idx: Vec<usize> = pos_idx.drain(..tp).collect();
+        train_idx.extend(neg_idx.drain(..tn));
+        let mut test_idx: Vec<usize> = pos_idx;
+        test_idx.extend(neg_idx);
+        rng.shuffle(&mut train_idx);
+        rng.shuffle(&mut test_idx);
+        test_idx.truncate(test);
+        (all.select(&train_idx), all.select(&test_idx))
+    }
+}
+
+fn cluster_count(dim: usize) -> usize {
+    (2 + dim / 16).min(12)
+}
+
+/// Effective (varying) dimension: full for low-dim sets, capped for the
+/// sparse high-dim profiles (see GmmSpec::active_dims).
+fn active_count(dim: usize) -> usize {
+    dim.min(14 + dim / 20)
+}
+
+fn fxhash(s: &str) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn toys_have_expected_shapes_and_balance() {
+        let mut rng = Rng::new(1);
+        let m = two_moons(200, 0.05, &mut rng);
+        assert_eq!(m.len(), 200);
+        assert_eq!(m.dim(), 2);
+        assert_eq!(m.positives(), 100);
+
+        let c = circles(100, 0.01, &mut rng);
+        assert_eq!(c.positives(), 50);
+
+        let b = blobs(300, 5, 4, 0.1, &mut rng);
+        assert_eq!(b.dim(), 5);
+        assert!(b.positives() > 75 && b.positives() < 225);
+
+        let ch = checkerboard(400, 4, &mut rng);
+        assert_eq!(ch.len(), 400);
+        let pos = ch.positives();
+        assert!(pos > 120 && pos < 280, "checkerboard balance {pos}");
+    }
+
+    #[test]
+    fn gmm_exact_positive_count_without_noise() {
+        let spec = GmmSpec { dim: 10, active_dims: 10, clusters_per_class: 3, sep: 2.0, cluster_std: 1.0, label_noise: 0.0 };
+        let mut rng = Rng::new(2);
+        let ds = spec.sample("g", 500, 123, &mut rng);
+        assert_eq!(ds.positives(), 123);
+        assert_eq!(ds.dim(), 10);
+    }
+
+    #[test]
+    fn table1_covers_all_ten_datasets() {
+        assert_eq!(TABLE1.len(), 10);
+        assert!(table1_spec("ijcnn1").is_some());
+        assert!(table1_spec("IJCNN1").is_some());
+        assert!(table1_spec("nope").is_none());
+        // spot-check the paper numbers
+        let susy = table1_spec("susy").unwrap();
+        assert_eq!(susy.train, 3_500_000);
+        assert_eq!(susy.features, 18);
+        let rcv = table1_spec("rcv1.binary").unwrap();
+        assert_eq!(rcv.features, 47236);
+        assert!(rcv.gen_features <= 512);
+    }
+
+    #[test]
+    fn generate_scales_sizes_and_balance() {
+        let spec = table1_spec("a8a").unwrap();
+        let (tr, te) = spec.generate(0.01, 7);
+        // 1% of 22696 ≈ 227
+        assert!((tr.len() as i64 - 227).abs() <= 2, "train {}", tr.len());
+        assert!((te.len() as i64 - 99).abs() <= 2, "test {}", te.len());
+        assert_eq!(tr.dim(), 122);
+        // ±1 labels, at least roughly the right balance (noise shifts some)
+        let frac = tr.positives() as f64 / tr.len() as f64;
+        assert!(frac > 0.1 && frac < 0.45, "positive fraction {frac}");
+    }
+
+    #[test]
+    fn generate_is_deterministic() {
+        let spec = table1_spec("ijcnn1").unwrap();
+        let (a, _) = spec.generate(0.005, 42);
+        let (b, _) = spec.generate(0.005, 42);
+        assert_eq!(a.x.data(), b.x.data());
+        assert_eq!(a.y, b.y);
+        let (c, _) = spec.generate(0.005, 43);
+        assert_ne!(a.x.data(), c.x.data());
+    }
+
+    #[test]
+    fn beta_staging_rule() {
+        assert_eq!(Table1Spec::beta_for(50_000), 1e2);
+        assert_eq!(Table1Spec::beta_for(200_000), 1e3);
+        assert_eq!(Table1Spec::beta_for(2_000_000), 1e4);
+    }
+}

@@ -1,0 +1,6 @@
+//! Evaluation harness: regenerates every table and figure of the paper's
+//! experimental section (see DESIGN.md §3 for the experiment index).
+
+pub mod figures;
+pub mod report;
+pub mod tables;

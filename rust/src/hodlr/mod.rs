@@ -1,0 +1,456 @@
+//! HODLR (Hierarchically Off-Diagonal Low-Rank) kernel approximation —
+//! the ablation counterpart to HSS.
+//!
+//! HODLR keeps the same cluster tree but stores every off-diagonal block
+//! as an *independent* low-rank factorization U·Vᵀ (no nested bases).
+//! Construction is simpler; the price is O(r·d·log d) memory instead of
+//! O(r·d) and a recursive-Woodbury solve costing O(r²·d·log²d) instead
+//! of the ULV's O(r²·d). DESIGN.md lists "HSS vs HODLR" as the format
+//! ablation: the bench (`bench_hss`) and the tests here quantify it.
+
+use crate::cluster::{ClusterTree, SplitMethod};
+use crate::data::Dataset;
+use crate::kernel::Kernel;
+use crate::linalg::blas::{self, matmul, Trans};
+use crate::linalg::chol::Chol;
+use crate::linalg::cpqr;
+use crate::linalg::lu::Lu;
+use crate::linalg::Mat;
+use crate::util::prng::Rng;
+use anyhow::{bail, Result};
+
+/// HODLR parameters (subset of the HSS knobs).
+#[derive(Clone, Copy, Debug)]
+pub struct HodlrParams {
+    pub rel_tol: f64,
+    pub abs_tol: f64,
+    pub max_rank: usize,
+    pub leaf_size: usize,
+    /// Random columns sampled per off-diagonal block factorization.
+    pub sample_cols: usize,
+    pub seed: u64,
+}
+
+impl Default for HodlrParams {
+    fn default() -> Self {
+        HodlrParams {
+            rel_tol: 1e-2,
+            abs_tol: 1e-8,
+            max_rank: 200,
+            leaf_size: 128,
+            sample_cols: 96,
+            seed: 0xD01,
+        }
+    }
+}
+
+/// One node: leaves hold dense D; internal nodes hold the two low-rank
+/// off-diagonal factors of this level's 2×2 partition.
+struct Node {
+    begin: usize,
+    end: usize,
+    left: Option<usize>,
+    right: Option<usize>,
+    d: Option<Mat>,
+    /// A(left, right) ≈ u12 · v12ᵀ.
+    u12: Option<Mat>,
+    v12: Option<Mat>,
+}
+
+/// A HODLR-compressed symmetric kernel matrix.
+pub struct Hodlr {
+    nodes: Vec<Node>,
+    pub n: usize,
+    pub perm: Vec<usize>,
+    /// Dataset in tree order.
+    pub params: HodlrParams,
+}
+
+impl Hodlr {
+    /// Compress K(ds, ds) in HODLR form (row-ID on sampled columns per
+    /// off-diagonal block — same partially matrix-free recipe as HSS but
+    /// without nested bases).
+    pub fn compress(ds: &Dataset, kernel: &Kernel, params: &HodlrParams) -> (Hodlr, Dataset) {
+        let mut rng = Rng::new(params.seed);
+        let tree = ClusterTree::build(ds, params.leaf_size, SplitMethod::TwoMeans, &mut rng);
+        let pds = ds.permute(&tree.perm);
+        let n = pds.len();
+
+        let mut nodes: Vec<Node> = Vec::with_capacity(tree.nodes.len());
+        for t in &tree.nodes {
+            let mut node = Node {
+                begin: t.begin,
+                end: t.end,
+                left: t.left,
+                right: t.right,
+                d: None,
+                u12: None,
+                v12: None,
+            };
+            if t.is_leaf() {
+                let rows: Vec<usize> = (t.begin..t.end).collect();
+                let pts = pds.x.select_rows(&rows);
+                node.d = Some(crate::kernel::kernel_block(kernel, &pts, &pts));
+            } else {
+                // low-rank A(left, right): rows = left range, cols sampled
+                // from right range (plus an exact fallback for small blocks)
+                let lt = &tree.nodes[t.left.unwrap()];
+                let rt = &tree.nodes[t.right.unwrap()];
+                let rows: Vec<usize> = (lt.begin..lt.end).collect();
+                let all_cols: Vec<usize> = (rt.begin..rt.end).collect();
+                let cols: Vec<usize> = if all_cols.len() <= params.sample_cols {
+                    all_cols.clone()
+                } else {
+                    rng.sample_indices(all_cols.len(), params.sample_cols)
+                        .into_iter()
+                        .map(|i| all_cols[i])
+                        .collect()
+                };
+                let rpts = pds.x.select_rows(&rows);
+                let cpts = pds.x.select_rows(&cols);
+                let sample = crate::kernel::kernel_block(kernel, &rpts, &cpts);
+                // row ID of the sample picks skeleton rows of the block
+                let (skel, u) =
+                    cpqr::row_id(&sample, params.rel_tol, params.abs_tol, params.max_rank);
+                // V = A(right, skel_rows)ᵀ... i.e. vᵀ = A(skel, right)
+                let spts = pds.x.select_rows(&skel.iter().map(|&j| rows[j]).collect::<Vec<_>>());
+                let apts = pds.x.select_rows(&all_cols);
+                let vt = crate::kernel::kernel_block(kernel, &spts, &apts); // r × nr
+                node.u12 = Some(u);
+                node.v12 = Some(vt.transpose()); // nr × r
+            }
+            nodes.push(node);
+        }
+        (Hodlr { nodes, n, perm: tree.perm, params: *params }, pds)
+    }
+
+    fn root(&self) -> usize {
+        self.nodes.len() - 1
+    }
+
+    /// Memory of the representation in bytes.
+    pub fn memory_bytes(&self) -> usize {
+        self.nodes
+            .iter()
+            .map(|nd| {
+                nd.d.as_ref().map_or(0, Mat::bytes)
+                    + nd.u12.as_ref().map_or(0, Mat::bytes)
+                    + nd.v12.as_ref().map_or(0, Mat::bytes)
+            })
+            .sum()
+    }
+
+    /// Max off-diagonal rank.
+    pub fn max_rank(&self) -> usize {
+        self.nodes.iter().filter_map(|nd| nd.u12.as_ref().map(Mat::cols)).max().unwrap_or(0)
+    }
+
+    /// y = K̃ x (tree order).
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.n);
+        let mut y = vec![0.0; self.n];
+        self.matvec_rec(self.root(), x, &mut y);
+        y
+    }
+
+    fn matvec_rec(&self, id: usize, x: &[f64], y: &mut [f64]) {
+        let nd = &self.nodes[id];
+        if let Some(d) = &nd.d {
+            // accumulate (ancestors already wrote off-diag contributions)
+            let xl = &x[nd.begin..nd.end];
+            let mut tmp = vec![0.0; xl.len()];
+            blas::gemv(d, xl, &mut tmp);
+            for (yi, ti) in y[nd.begin..nd.end].iter_mut().zip(tmp.iter()) {
+                *yi += ti;
+            }
+            return;
+        }
+        let (li, ri) = (nd.left.unwrap(), nd.right.unwrap());
+        let (lb, le) = (self.nodes[li].begin, self.nodes[li].end);
+        let (rb, re) = (self.nodes[ri].begin, self.nodes[ri].end);
+        let u = nd.u12.as_ref().unwrap();
+        let v = nd.v12.as_ref().unwrap();
+        // y_left += U (Vᵀ x_right); y_right += V (Uᵀ x_left)
+        let r = u.cols();
+        let mut t = vec![0.0; r];
+        blas::gemv_t(v, &x[rb..re], &mut t);
+        let mut add = vec![0.0; le - lb];
+        blas::gemv(u, &t, &mut add);
+        for (yi, ai) in y[lb..le].iter_mut().zip(add.iter()) {
+            *yi += ai;
+        }
+        let mut t2 = vec![0.0; r];
+        blas::gemv_t(u, &x[lb..le], &mut t2);
+        let mut add2 = vec![0.0; re - rb];
+        blas::gemv(v, &t2, &mut add2);
+        for (yi, ai) in y[rb..re].iter_mut().zip(add2.iter()) {
+            *yi += ai;
+        }
+        self.matvec_rec(li, x, y);
+        self.matvec_rec(ri, x, y);
+    }
+}
+
+/// Recursive-Woodbury factorization of K̃ + βI (the HODLR solver).
+///
+/// At each internal node the matrix is D_blk + [U₁V₂ᵀ; V... ] written as
+/// Ablk + W Zᵀ with W = diag(U, V), Z = [0 V; U 0]-style rank-2r update;
+/// solve via the children and the (2r × 2r) capacitance system.
+pub struct HodlrFactor<'a> {
+    h: &'a Hodlr,
+    shift: f64,
+    /// Per-node: leaf Cholesky (or LU fallback) of D + βI.
+    leaf: Vec<Option<LeafFactor>>,
+    /// Per-internal-node capacitance LU and precomputed A⁻¹W.
+    cap: Vec<Option<CapFactor>>,
+}
+
+enum LeafFactor {
+    Chol(Chol),
+    Lu(Lu),
+}
+
+impl LeafFactor {
+    fn solve(&self, b: &[f64]) -> Vec<f64> {
+        match self {
+            LeafFactor::Chol(c) => c.solve(b),
+            LeafFactor::Lu(l) => l.solve(b),
+        }
+    }
+}
+
+struct CapFactor {
+    /// A_blk⁻¹ W (n_node × 2r), columns solved recursively at factor time.
+    ainv_w: Mat,
+    /// LU of (I + Zᵀ A⁻¹ W).
+    cap_lu: Lu,
+    /// Z (n_node × 2r).
+    z: Mat,
+}
+
+impl<'a> HodlrFactor<'a> {
+    pub fn new(h: &'a Hodlr, shift: f64) -> Result<Self> {
+        let mut f = HodlrFactor {
+            h,
+            shift,
+            leaf: (0..h.nodes.len()).map(|_| None).collect(),
+            cap: (0..h.nodes.len()).map(|_| None).collect(),
+        };
+        f.factor_rec(h.root())?;
+        Ok(f)
+    }
+
+    fn factor_rec(&mut self, id: usize) -> Result<()> {
+        let nd = &self.h.nodes[id];
+        if let Some(d) = &nd.d {
+            let mut dl = d.clone();
+            dl.shift_diag(self.shift);
+            let lf = match Chol::new(&dl) {
+                Ok(c) => LeafFactor::Chol(c),
+                Err(_) => {
+                    let mut d2 = dl.clone();
+                    d2.shift_diag(1e-10);
+                    match Lu::new(&d2) {
+                        Ok(l) => LeafFactor::Lu(l),
+                        Err(e) => bail!("HODLR leaf factorization failed: {e}"),
+                    }
+                }
+            };
+            self.leaf[id] = Some(lf);
+            return Ok(());
+        }
+        let (li, ri) = (nd.left.unwrap(), nd.right.unwrap());
+        self.factor_rec(li)?;
+        self.factor_rec(ri)?;
+
+        // Build W, Z for the rank-2r correction:
+        // [0 UVᵀ; VUᵀ 0] = W Zᵀ with W = [U 0; 0 V], Z = [0 V... ]:
+        //   W = [[U, 0], [0, V]],  Z = [[0, V·?]] — concretely:
+        //   off = W Zᵀ where W = diag(U, V) (n × 2r),
+        //   Z = [ [0, U]ᵀ-block arrangement ]: Zᵀ = [[0, Vᵀ],[Uᵀ, 0]]
+        let nd = &self.h.nodes[id];
+        let u = nd.u12.as_ref().unwrap();
+        let v = nd.v12.as_ref().unwrap();
+        let (nl, nr) = (u.rows(), v.rows());
+        let r = u.cols();
+        let ntot = nl + nr;
+        let mut w = Mat::zeros(ntot, 2 * r);
+        w.set_block(0, 0, u);
+        w.set_block(nl, r, v);
+        let mut z = Mat::zeros(ntot, 2 * r);
+        z.set_block(nl, 0, v);
+        z.set_block(0, r, u);
+        // sanity: W Zᵀ == [[0, UVᵀ],[VUᵀ, 0]] (checked in tests)
+
+        // A⁻¹ W column-wise via children solves
+        let mut ainv_w = Mat::zeros(ntot, 2 * r);
+        for c in 0..2 * r {
+            let col = w.col(c);
+            let sol = self.solve_block_diag(id, &col);
+            for i in 0..ntot {
+                ainv_w[(i, c)] = sol[i];
+            }
+        }
+        // capacitance I + Zᵀ A⁻¹ W
+        let mut capm = matmul(&z, Trans::Yes, &ainv_w, Trans::No);
+        capm.shift_diag(1.0);
+        let cap_lu = match Lu::new(&capm) {
+            Ok(l) => l,
+            Err(e) => bail!("HODLR capacitance singular at node {id}: {e}"),
+        };
+        self.cap[id] = Some(CapFactor { ainv_w, cap_lu, z });
+        Ok(())
+    }
+
+    /// Solve with the *block-diagonal* part of node `id` (children solves).
+    fn solve_block_diag(&self, id: usize, b: &[f64]) -> Vec<f64> {
+        let nd = &self.h.nodes[id];
+        if self.leaf[id].is_some() {
+            return self.leaf[id].as_ref().unwrap().solve(b);
+        }
+        let (li, ri) = (nd.left.unwrap(), nd.right.unwrap());
+        let nl = self.h.nodes[li].end - self.h.nodes[li].begin;
+        let mut out = self.solve_full(li, &b[..nl]);
+        out.extend(self.solve_full(ri, &b[nl..]));
+        out
+    }
+
+    /// Solve (K̃ + βI) restricted to node `id` (full, with off-diagonal).
+    fn solve_full(&self, id: usize, b: &[f64]) -> Vec<f64> {
+        if self.leaf[id].is_some() {
+            return self.leaf[id].as_ref().unwrap().solve(b);
+        }
+        let cap = self.cap[id].as_ref().unwrap();
+        // Woodbury: x = A⁻¹b − A⁻¹W (I + ZᵀA⁻¹W)⁻¹ Zᵀ A⁻¹ b
+        let ainv_b = self.solve_block_diag(id, b);
+        let mut zt_ainvb = vec![0.0; cap.z.cols()];
+        blas::gemv_t(&cap.z, &ainv_b, &mut zt_ainvb);
+        let y = cap.cap_lu.solve(&zt_ainvb);
+        let mut corr = vec![0.0; b.len()];
+        blas::gemv(&cap.ainv_w, &y, &mut corr);
+        ainv_b.iter().zip(corr.iter()).map(|(a, c)| a - c).collect()
+    }
+
+    /// Solve (K̃ + shift·I) x = b (tree order).
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        assert_eq!(b.len(), self.h.n);
+        self.solve_full(self.h.root(), b)
+    }
+}
+
+impl crate::admm::solver::ShiftedSolve for HodlrFactor<'_> {
+    fn solve_shifted(&self, b: &[f64]) -> Vec<f64> {
+        self.solve(b)
+    }
+
+    fn dim(&self) -> usize {
+        self.h.n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::hss::matvec as hss_matvec;
+    use crate::util::testkit;
+
+    fn tight_params() -> HodlrParams {
+        HodlrParams {
+            rel_tol: 1e-10,
+            abs_tol: 1e-12,
+            max_rank: usize::MAX,
+            leaf_size: 32,
+            sample_cols: 1 << 16,
+            seed: 3,
+        }
+    }
+
+    #[test]
+    fn matvec_matches_dense() {
+        testkit::check("hodlr-matvec", 5, |rng, _| {
+            let n = 60 + rng.below(150);
+            let ds = synth::blobs(n, 3, 3, 0.3, rng);
+            let kernel = Kernel::Gaussian { h: 1.0 };
+            let (h, pds) = Hodlr::compress(&ds, &kernel, &tight_params());
+            let kd = kernel.gram(&pds.x);
+            let x: Vec<f64> = (0..n).map(|_| rng.gauss()).collect();
+            let mut want = vec![0.0; n];
+            blas::gemv(&kd, &x, &mut want);
+            let got = h.matvec(&x);
+            testkit::assert_allclose(&got, &want, 1e-6);
+        });
+    }
+
+    #[test]
+    fn woodbury_solve_roundtrip() {
+        testkit::check("hodlr-solve", 5, |rng, _| {
+            let n = 60 + rng.below(200);
+            let ds = synth::blobs(n, 3, 3, 0.3, rng);
+            let kernel = Kernel::Gaussian { h: 1.2 };
+            let (h, _) = Hodlr::compress(&ds, &kernel, &tight_params());
+            let beta = 1.0 + rng.f64();
+            let f = HodlrFactor::new(&h, beta).unwrap();
+            let want: Vec<f64> = (0..n).map(|_| rng.gauss()).collect();
+            let mut b = h.matvec(&want);
+            for (bi, wi) in b.iter_mut().zip(want.iter()) {
+                *bi += beta * wi;
+            }
+            let got = f.solve(&b);
+            testkit::assert_allclose(&got, &want, 1e-6);
+        });
+    }
+
+    #[test]
+    fn hodlr_uses_more_memory_than_hss_at_same_tolerance() {
+        // the format ablation: nested bases pay off
+        let mut rng = Rng::new(91);
+        let ds = synth::blobs(1200, 6, 5, 0.3, &mut rng);
+        let kernel = Kernel::Gaussian { h: 2.0 };
+        let hodlr_p = HodlrParams { rel_tol: 1e-4, leaf_size: 64, sample_cols: 64, ..Default::default() };
+        let (hod, _) = Hodlr::compress(&ds, &kernel, &hodlr_p);
+        let hss_p = crate::hss::HssParams {
+            rel_tol: 1e-4,
+            abs_tol: 1e-10,
+            max_rank: 200,
+            ann_neighbors: 32,
+            oversample: 32,
+            leaf_size: 64,
+            split: SplitMethod::TwoMeans,
+            seed: 3,
+        };
+        let c = crate::hss::compress::compress(&ds, &kernel, &hss_p, 1);
+        // HODLR stores one factor pair per level per node: ≥ HSS memory
+        assert!(
+            hod.memory_bytes() as f64 > 0.8 * c.stats.memory_bytes as f64,
+            "hodlr {} vs hss {}",
+            hod.memory_bytes(),
+            c.stats.memory_bytes
+        );
+        // both must approximate the same matrix
+        let x: Vec<f64> = (0..1200).map(|_| rng.gauss()).collect();
+        let yh = hod.matvec(&x);
+        // different permutations → compare norms only (same matrix up to perm)
+        let ys = hss_matvec::matvec(&c.hss, &x);
+        let nh = blas::nrm2(&yh);
+        let ns = blas::nrm2(&ys);
+        assert!((nh - ns).abs() / ns < 0.2, "matvec norms differ wildly: {nh} vs {ns}");
+    }
+
+    #[test]
+    fn admm_trains_through_hodlr() {
+        let mut rng = Rng::new(92);
+        let train = synth::two_moons(300, 0.08, &mut rng);
+        let kernel = Kernel::Gaussian { h: 0.3 };
+        let (h, pds) = Hodlr::compress(&train, &kernel, &tight_params());
+        let f = HodlrFactor::new(&h, 10.0).unwrap();
+        let solver = crate::admm::AdmmSolver::new(
+            &f,
+            &pds.y,
+            crate::admm::AdmmParams { beta: 10.0, max_it: 20, relax: 1.0, tol: 0.0 },
+        );
+        let out = solver.run(10.0);
+        assert!(out.z.iter().all(|v| v.is_finite()));
+        assert!(*out.primal.last().unwrap() < 1.0);
+    }
+}

@@ -1,0 +1,348 @@
+//! HSS-ANN compression (partially matrix-free).
+//!
+//! Per node, the off-diagonal row block `K(I_node, I_nodeᶜ)` is never
+//! formed: a **sample** of its columns — ANN columns (geometry-driven,
+//! the [10] idea) plus uniform random columns — is evaluated, a row
+//! interpolative decomposition picks skeleton rows, and the sampling
+//! adaptively grows when the detected rank saturates the sample. All
+//! retained quantities (D, B, skeletons) are exact kernel entries.
+
+use crate::ann::{self, AnnParams, KnnLists};
+use crate::cluster::ClusterTree;
+use crate::data::Dataset;
+use crate::hss::{Hss, HssNode, HssParams, HssStats};
+use crate::kernel::Kernel;
+use crate::linalg::cpqr;
+use crate::linalg::Mat;
+use crate::util::prng::Rng;
+use crate::util::threadpool;
+use crate::util::timer::Timer;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Output of compression: the HSS matrix, the dataset **in tree order**
+/// (callers do all further work in this order), and statistics.
+pub struct Compressed {
+    pub hss: Hss,
+    /// Training set permuted to tree order (row p = original `perm[p]`).
+    pub pds: Dataset,
+    pub stats: HssStats,
+}
+
+/// Kernel-independent preprocessing: cluster tree, permuted dataset,
+/// ANN lists. These do NOT depend on the kernel width h, so a grid
+/// search over h computes them once (§Perf: 3× redundant ANN removed
+/// from the h-grid) — see [`crate::coordinator::cache::KernelCache`].
+pub struct Preprocessed {
+    pub tree: ClusterTree,
+    pub pds: Dataset,
+    pub ann: ann::KnnLists,
+    /// RNG state to continue sampling from (forked per compression).
+    seed: u64,
+}
+
+/// Build the h-independent preprocessing state.
+pub fn preprocess(ds: &Dataset, params: &HssParams, threads: usize) -> Preprocessed {
+    let n = ds.len();
+    assert!(n >= 2, "need at least 2 points");
+    let mut rng = Rng::new(params.seed);
+    let tree = ClusterTree::build(ds, params.leaf_size, params.split, &mut rng);
+    let pds = ds.permute(&tree.perm);
+    let k_ann = params.ann_neighbors.min(n.saturating_sub(1));
+    let ann = if n <= 512 {
+        ann::knn_exact(&pds, k_ann, threads)
+    } else {
+        let bucket = k_ann.clamp(64, 256).min(n);
+        ann::knn(&pds, AnnParams { k: k_ann, trees: 3, bucket, refine: 1 }, threads, &mut rng)
+    };
+    Preprocessed { tree, pds, ann, seed: rng.next_u64() }
+}
+
+/// Compress the kernel matrix of `ds` into HSS form (one-call API).
+pub fn compress(ds: &Dataset, kernel: &Kernel, params: &HssParams, threads: usize) -> Compressed {
+    let pre = preprocess(ds, params, threads);
+    compress_preprocessed(&pre, kernel, params, threads)
+}
+
+/// Compress reusing cached preprocessing (the h-grid hot path).
+pub fn compress_preprocessed(
+    pre: &Preprocessed,
+    kernel: &Kernel,
+    params: &HssParams,
+    threads: usize,
+) -> Compressed {
+    let timer = Timer::start();
+    let tree = &pre.tree;
+    let pds = &pre.pds;
+    let ann_lists = &pre.ann;
+    let n = pds.len();
+    let mut rng = Rng::new(pre.seed);
+
+    // bottom-up per-level compression (nodes of a level are independent).
+    let n_nodes = tree.nodes.len();
+    let kernel_evals = AtomicUsize::new(0);
+    let mut slots: Vec<Option<HssNode>> = (0..n_nodes).map(|_| None).collect();
+
+    let max_level = tree.nodes.iter().map(|t| t.level).max().unwrap_or(0);
+    for level in (0..=max_level).rev() {
+        let ids: Vec<usize> = (0..n_nodes).filter(|&i| tree.nodes[i].level == level).collect();
+        // Per-node RNG forks for determinism regardless of thread schedule.
+        let seeds: Vec<u64> = ids.iter().map(|&i| rng.fork(i as u64).next_u64()).collect();
+        let built: Vec<HssNode> = {
+            let slots_ref = &slots;
+            threadpool::parallel_map(threads, ids.len(), |t| {
+                let mut node_rng = Rng::new(seeds[t]);
+                compress_node(CompressCtx {
+                    node_id: ids[t],
+                    tree,
+                    pds,
+                    kernel,
+                    params,
+                    slots: slots_ref,
+                    ann: ann_lists,
+                    kernel_evals: &kernel_evals,
+                    rng: &mut node_rng,
+                })
+            })
+        };
+        for (t, hn) in built.into_iter().enumerate() {
+            slots[ids[t]] = Some(hn);
+        }
+    }
+
+    let nodes: Vec<HssNode> = slots.into_iter().map(|s| s.expect("node built")).collect();
+    let hss =
+        Hss { nodes, n, perm: tree.perm.clone(), iperm: tree.iperm.clone(), params: *params };
+    let stats = HssStats {
+        max_rank: hss.max_rank(),
+        memory_bytes: hss.memory_bytes(),
+        kernel_evals: kernel_evals.load(Ordering::Relaxed),
+        compress_secs: timer.secs(),
+    };
+    Compressed { hss, pds: pds.clone(), stats }
+}
+
+struct CompressCtx<'a> {
+    node_id: usize,
+    tree: &'a ClusterTree,
+    pds: &'a Dataset,
+    kernel: &'a Kernel,
+    params: &'a HssParams,
+    slots: &'a [Option<HssNode>],
+    ann: &'a KnnLists,
+    kernel_evals: &'a AtomicUsize,
+    rng: &'a mut Rng,
+}
+
+fn compress_node(ctx: CompressCtx<'_>) -> HssNode {
+    let CompressCtx { node_id, tree, pds, kernel, params, slots, ann, kernel_evals, rng } = ctx;
+    let t = &tree.nodes[node_id];
+    let n = pds.len();
+    let is_root = t.begin == 0 && t.end == n;
+
+    // Row set: leaf → all points of the node; internal → children skeletons.
+    let (row_pos, d, b): (Vec<usize>, Option<Mat>, Option<Mat>) = if t.is_leaf() {
+        let rows: Vec<usize> = (t.begin..t.end).collect();
+        let pts = pds.x.select_rows(&rows);
+        kernel_evals.fetch_add(rows.len() * rows.len(), Ordering::Relaxed);
+        let d = crate::kernel::kernel_block(kernel, &pts, &pts);
+        (rows, Some(d), None)
+    } else {
+        let l = slots[t.left.unwrap()].as_ref().expect("left child built");
+        let r = slots[t.right.unwrap()].as_ref().expect("right child built");
+        let mut rows = l.skel.clone();
+        rows.extend_from_slice(&r.skel);
+        // Sibling coupling: exact kernel entries between skeletons.
+        let lp = pds.x.select_rows(&l.skel);
+        let rp = pds.x.select_rows(&r.skel);
+        kernel_evals.fetch_add(l.skel.len() * r.skel.len(), Ordering::Relaxed);
+        let b = crate::kernel::kernel_block(kernel, &lp, &rp);
+        (rows, None, Some(b))
+    };
+
+    if is_root {
+        // Root has no off-diagonal block: only D (single-node tree) / B.
+        return HssNode {
+            begin: t.begin,
+            end: t.end,
+            left: t.left,
+            right: t.right,
+            d,
+            u: None,
+            b,
+            skel: Vec::new(),
+        };
+    }
+
+    // ---- column sampling of the complement ----
+    let complement = n - t.len();
+    let in_node = |p: usize| p >= t.begin && p < t.end;
+
+    // ANN candidates: out-of-node neighbours of the row points, nearest
+    // first (these dominate the off-diagonal block for decaying kernels).
+    let mut ann_cand: Vec<(usize, f64)> = Vec::new();
+    for &rp in &row_pos {
+        for &(nb, d2) in &ann.neighbors[rp] {
+            if !in_node(nb) {
+                ann_cand.push((nb, d2));
+            }
+        }
+    }
+    ann_cand.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+    let mut cols: Vec<usize> = Vec::new();
+    let mut seen = vec![false; n];
+    let ann_budget = params.ann_neighbors.max(8);
+    for (c, _) in ann_cand {
+        if !seen[c] {
+            seen[c] = true;
+            cols.push(c);
+            if cols.len() >= ann_budget {
+                break;
+            }
+        }
+    }
+
+    // Uniform random complement columns (oversampling, guarantees the
+    // sample sees far-field structure too).
+    let add_random = |cols: &mut Vec<usize>, seen: &mut Vec<bool>, count: usize, rng: &mut Rng| {
+        let mut added = 0;
+        let mut guard = 0;
+        while added < count && cols.len() < complement && guard < 50 * count + 100 {
+            guard += 1;
+            let p = rng.below(n);
+            if !in_node(p) && !seen[p] {
+                seen[p] = true;
+                cols.push(p);
+                added += 1;
+            }
+        }
+    };
+    add_random(&mut cols, &mut seen, params.oversample.min(complement), rng);
+
+    // ---- adaptive row-ID ----
+    let row_pts = pds.x.select_rows(&row_pos);
+    let mut round = 0;
+    #[allow(unused_assignments)]
+    let (skel_local, u) = loop {
+        let col_pts = pds.x.select_rows(&cols);
+        kernel_evals.fetch_add(row_pos.len() * cols.len(), Ordering::Relaxed);
+        let sample = crate::kernel::kernel_block(kernel, &row_pts, &col_pts);
+        let (j, x) = cpqr::row_id(&sample, params.rel_tol, params.abs_tol, params.max_rank);
+        let saturated = j.len() == cols.len().min(row_pos.len()) && j.len() < params.max_rank;
+        if saturated && cols.len() < complement && round < 3 {
+            // rank saturated the sample: double the random columns
+            let extra = cols.len().max(16);
+            add_random(&mut cols, &mut seen, extra, rng);
+            round += 1;
+            continue;
+        }
+        break (j, x);
+    };
+
+    let skel: Vec<usize> = skel_local.iter().map(|&j| row_pos[j]).collect();
+    HssNode {
+        begin: t.begin,
+        end: t.end,
+        left: t.left,
+        right: t.right,
+        d,
+        u: Some(u),
+        b,
+        skel,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::hss::matvec::to_dense;
+
+    #[test]
+    fn near_exact_compression_reconstructs_kernel() {
+        let mut rng = Rng::new(21);
+        let ds = synth::blobs(180, 3, 4, 0.3, &mut rng);
+        let kernel = Kernel::Gaussian { h: 1.0 };
+        let c = compress(&ds, &kernel, &HssParams::near_exact(), 2);
+        // dense kernel of the permuted points
+        let want = kernel.gram(&c.pds.x);
+        let got = to_dense(&c.hss);
+        let mut diff = got.clone();
+        diff.axpy(-1.0, &want);
+        let rel = diff.fro() / want.fro();
+        assert!(rel < 1e-6, "near-exact compression rel error {rel}");
+    }
+
+    #[test]
+    fn loose_tolerance_gives_smaller_memory_and_bounded_error() {
+        let mut rng = Rng::new(22);
+        let ds = synth::blobs(300, 4, 5, 0.4, &mut rng);
+        let kernel = Kernel::Gaussian { h: 2.0 }; // smooth → compressible
+        let tight = compress(&ds, &kernel, &HssParams::near_exact(), 2);
+        let mut loose_p = HssParams::low_accuracy();
+        loose_p.leaf_size = 32;
+        let loose = compress(&ds, &kernel, &loose_p, 2);
+        assert!(loose.stats.memory_bytes <= tight.stats.memory_bytes);
+        let want = kernel.gram(&loose.pds.x);
+        let got = to_dense(&loose.hss);
+        let mut diff = got;
+        diff.axpy(-1.0, &want);
+        // rel_tol=1 is the paper's "very rough approximation" regime
+        // (Table 4): large Frobenius error is EXPECTED — the surprising
+        // finding of the paper is that classification survives it. The
+        // approximation must still be finite and not amplified.
+        let rel = diff.fro() / want.fro();
+        assert!(rel.is_finite() && rel < 1.2, "loose compression diverged: {rel}");
+    }
+
+    #[test]
+    fn compression_never_forms_full_matrix() {
+        // kernel_evals must be o(n²) for a compressible kernel
+        let mut rng = Rng::new(23);
+        let n = 1200;
+        let ds = synth::blobs(n, 3, 6, 0.25, &mut rng);
+        let kernel = Kernel::Gaussian { h: 3.0 };
+        let mut p = HssParams::low_accuracy();
+        p.leaf_size = 64;
+        p.ann_neighbors = 16;
+        p.oversample = 16;
+        let c = compress(&ds, &kernel, &p, 2);
+        let full = n * n;
+        assert!(
+            c.stats.kernel_evals < full / 3,
+            "kernel evals {} vs n² {}",
+            c.stats.kernel_evals,
+            full
+        );
+        assert!(c.stats.max_rank <= p.max_rank);
+    }
+
+    #[test]
+    fn stats_are_consistent() {
+        let mut rng = Rng::new(24);
+        let ds = synth::blobs(150, 2, 3, 0.3, &mut rng);
+        let c = compress(&ds, &Kernel::Gaussian { h: 1.0 }, &HssParams::near_exact(), 1);
+        assert_eq!(c.hss.n, 150);
+        assert_eq!(c.pds.len(), 150);
+        assert_eq!(c.stats.memory_bytes, c.hss.memory_bytes());
+        assert_eq!(c.stats.max_rank, c.hss.max_rank());
+        assert!(c.stats.compress_secs >= 0.0);
+        // permutation round-trip
+        let x: Vec<f64> = (0..150).map(|i| i as f64).collect();
+        let xp = c.hss.permute_vec(&x);
+        let back = c.hss.unpermute_vec(&xp);
+        assert_eq!(back, x);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut rng = Rng::new(25);
+        let ds = synth::blobs(200, 3, 4, 0.3, &mut rng);
+        let k = Kernel::Gaussian { h: 1.5 };
+        let p = HssParams { seed: 99, ..HssParams::low_accuracy() };
+        let a = compress(&ds, &k, &p, 3);
+        let b = compress(&ds, &k, &p, 1); // thread count must not matter
+        assert_eq!(a.hss.perm, b.hss.perm);
+        assert_eq!(a.stats.max_rank, b.stats.max_rank);
+        assert_eq!(a.stats.memory_bytes, b.stats.memory_bytes);
+    }
+}

@@ -1,0 +1,411 @@
+//! ULV-style factorization and solve of the shifted HSS matrix K̃ + βI.
+//!
+//! Implements the two-sided orthogonal elimination of
+//! Chandrasekaran–Gu–Pals (SIMAX 2006, ref [8] of the paper), adapted to
+//! the symmetric skeleton-based representation produced by
+//! [`crate::hss::compress`]:
+//!
+//! * at each node the basis U is QL-compressed — a full orthogonal Q with
+//!   QᵀU = [0; Ũ] — so the first m−r rotated rows decouple from all
+//!   off-diagonal blocks and can be eliminated with a local LU;
+//! * the Schur complement S and reduced basis Ũ are passed to the parent,
+//!   which merges its two children into a small (r_l + r_r) block and
+//!   recurses;
+//! * the root block is factorized densely.
+//!
+//! Total cost O(d·m²) with m ≤ max(leaf, 2·max_rank); every subsequent
+//! solve costs O(d·m) — this is the "one cheap solve per ADMM iteration"
+//! that the whole paper turns on. The shift β only touches the diagonal
+//! blocks, so re-factorizing for a new β reuses the compression verbatim.
+
+use crate::hss::Hss;
+use crate::linalg::blas::{self, matmul, Trans};
+use crate::linalg::lu::Lu;
+use crate::linalg::qr::Qr;
+use crate::linalg::Mat;
+use anyhow::{bail, Result};
+
+/// Factorized (K̃ + shift·I) ready for repeated solves.
+pub struct UlvFactor {
+    n: usize,
+    shift: f64,
+    nodes: Vec<UlvNode>,
+}
+
+struct UlvNode {
+    begin: usize,
+    end: usize,
+    left: Option<usize>,
+    right: Option<usize>,
+    /// Rank surviving after elimination (0 at root).
+    rank: usize,
+    /// Eliminated rows e = m − rank.
+    e: usize,
+    /// Orthogonal rotation with Qᵀ U = [0; Ũ]; `None` = identity.
+    q: Option<Mat>,
+    /// LU of the leading e×e block of the rotated diagonal.
+    lu11: Lu,
+    /// Rotated off-diagonal blocks of the local diagonal.
+    d21: Mat, // rank × e
+    /// D11⁻¹ D12 (e × rank), precomputed for the downsweep.
+    f: Mat,
+}
+
+impl UlvFactor {
+    /// Factor K̃ + shift·I. Fails only if an elimination block is
+    /// numerically singular (cannot happen for PSD K̃ and shift > 0
+    /// unless the compression destroyed positive-definiteness badly).
+    pub fn new(h: &Hss, shift: f64) -> Result<Self> {
+        let nn = h.nodes.len();
+        let mut nodes: Vec<UlvNode> = Vec::with_capacity(nn);
+        // Passed-up reductions: (schur, utilde) per node.
+        let mut reduced: Vec<Option<(Mat, Mat)>> = (0..nn).map(|_| None).collect();
+
+        for i in 0..nn {
+            let node = &h.nodes[i];
+            let is_root = i == nn - 1;
+
+            // local diagonal block + local basis
+            let (dloc, uloc): (Mat, Option<Mat>) = if node.is_leaf() {
+                let mut d = node.d.clone().expect("leaf has D");
+                d.shift_diag(shift);
+                (d, node.u.clone())
+            } else {
+                let (li, ri) = (node.left.unwrap(), node.right.unwrap());
+                let (s1, ut1) = reduced[li].take().expect("left reduced");
+                let (s2, ut2) = reduced[ri].take().expect("right reduced");
+                let b = node.b.as_ref().expect("internal has B");
+                let (r1, r2) = (s1.rows(), s2.rows());
+                // off-diagonal coupling in reduced coordinates
+                let c12 = if r1 > 0 && r2 > 0 {
+                    let tb = matmul(&ut1, Trans::No, b, Trans::No);
+                    matmul(&tb, Trans::No, &ut2, Trans::Yes)
+                } else {
+                    Mat::zeros(r1, r2)
+                };
+                let mut d = Mat::zeros(r1 + r2, r1 + r2);
+                d.set_block(0, 0, &s1);
+                d.set_block(r1, r1, &s2);
+                d.set_block(0, r1, &c12);
+                d.set_block(r1, 0, &c12.transpose());
+                // merged basis: [Ũ₁ R₁ ; Ũ₂ R₂]
+                let u = node.u.as_ref().map(|u_stack| {
+                    let top = u_stack.block(0, 0, r1, u_stack.cols());
+                    let bot = u_stack.block(r1, 0, r2, u_stack.cols());
+                    let mt = if r1 > 0 { matmul(&ut1, Trans::No, &top, Trans::No) } else { top };
+                    let mb = if r2 > 0 { matmul(&ut2, Trans::No, &bot, Trans::No) } else { bot };
+                    mt.vstack(&mb)
+                });
+                (d, u)
+            };
+
+            let m = dloc.rows();
+            if is_root {
+                // eliminate everything densely
+                let lu11 = match Lu::new(&dloc) {
+                    Ok(f) => f,
+                    Err(e) => bail!("ULV root block singular: {e}"),
+                };
+                nodes.push(UlvNode {
+                    begin: node.begin,
+                    end: node.end,
+                    left: node.left,
+                    right: node.right,
+                    rank: 0,
+                    e: m,
+                    q: None,
+                    lu11,
+                    d21: Mat::zeros(0, m),
+                    f: Mat::zeros(m, 0),
+                });
+                continue;
+            }
+
+            let u = uloc.expect("non-root node has U");
+            debug_assert_eq!(u.rows(), m);
+            let r = u.cols().min(m);
+            let e = m - r;
+
+            // QL compression via QR: full Q = [range | null] → reorder to
+            // [null | range] so QᵀU = [0; Ũ].
+            let (q, utilde, dtil) = if r == 0 {
+                (None, Mat::zeros(0, 0), dloc)
+            } else if e == 0 {
+                // no elimination possible; Ũ = U unchanged, Q = I
+                (None, u.clone(), dloc)
+            } else {
+                let qr = Qr::new(&u);
+                let qf = qr.full_q(); // m×m, first r cols = range
+                let order: Vec<usize> = (r..m).chain(0..r).collect();
+                let q = qf.select_cols(&order);
+                let utilde = qr.r().block(0, 0, r, r); // r×r upper tri
+                let tmp = matmul(&q, Trans::Yes, &dloc, Trans::No);
+                let dtil = matmul(&tmp, Trans::No, &q, Trans::No);
+                (Some(q), utilde, dtil)
+            };
+
+            // partition and eliminate the leading e rows
+            let d11 = dtil.block(0, 0, e, e);
+            let d12 = dtil.block(0, e, e, r);
+            let d21 = dtil.block(e, 0, r, e);
+            let d22 = dtil.block(e, e, r, r);
+            let lu11 = match Lu::new(&d11) {
+                Ok(f) => f,
+                Err(err) => bail!(
+                    "ULV elimination block singular at node {i} (size {e}): {err}; \
+                     increase the shift β or tighten compression tolerances"
+                ),
+            };
+            let f = lu11.solve_mat(&d12); // e×r
+            let mut s = d22;
+            if e > 0 && r > 0 {
+                let d21f = matmul(&d21, Trans::No, &f, Trans::No);
+                s.axpy(-1.0, &d21f);
+            }
+            reduced[i] = Some((s, utilde));
+            nodes.push(UlvNode {
+                begin: node.begin,
+                end: node.end,
+                left: node.left,
+                right: node.right,
+                rank: r,
+                e,
+                q,
+                lu11,
+                d21,
+                f,
+            });
+        }
+
+        Ok(UlvFactor { n: h.n, shift, nodes })
+    }
+
+    /// The shift this factorization was built with.
+    pub fn shift(&self) -> f64 {
+        self.shift
+    }
+
+    /// Matrix order.
+    pub fn dim(&self) -> usize {
+        self.n
+    }
+
+    /// Approximate memory held by the factorization.
+    pub fn memory_bytes(&self) -> usize {
+        let mut total = 0usize;
+        for nd in &self.nodes {
+            if let Some(q) = &nd.q {
+                total += q.bytes();
+            }
+            total += (nd.e * nd.e + nd.d21.rows() * nd.d21.cols() + nd.f.rows() * nd.f.cols())
+                * std::mem::size_of::<f64>();
+        }
+        total
+    }
+
+    /// Solve (K̃ + shift·I) x = b, both in tree (permuted) order.
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        assert_eq!(b.len(), self.n);
+        let nn = self.nodes.len();
+        // upsweep state
+        let mut y1: Vec<Vec<f64>> = vec![Vec::new(); nn];
+        let mut c2: Vec<Vec<f64>> = vec![Vec::new(); nn];
+        let mut bred: Vec<Vec<f64>> = vec![Vec::new(); nn];
+
+        for i in 0..nn {
+            let nd = &self.nodes[i];
+            let bloc: Vec<f64> = match (nd.left, nd.right) {
+                (None, None) => b[nd.begin..nd.end].to_vec(),
+                (Some(l), Some(r)) => {
+                    let mut v = std::mem::take(&mut bred[l]);
+                    v.extend_from_slice(&bred[r]);
+                    v
+                }
+                _ => unreachable!("binary tree"),
+            };
+            // rotate
+            let c = match &nd.q {
+                Some(q) => {
+                    let mut out = vec![0.0; bloc.len()];
+                    blas::gemv_t(q, &bloc, &mut out);
+                    out
+                }
+                None => bloc,
+            };
+            let (c1, c2l) = c.split_at(nd.e);
+            let yl = nd.lu11.solve(c1);
+            // bred = c2 − D21 y1
+            let mut br = c2l.to_vec();
+            if nd.e > 0 && nd.rank > 0 {
+                let mut tmp = vec![0.0; nd.rank];
+                blas::gemv(&nd.d21, &yl, &mut tmp);
+                for (b, t) in br.iter_mut().zip(tmp.iter()) {
+                    *b -= t;
+                }
+            }
+            y1[i] = yl;
+            c2[i] = br.clone();
+            bred[i] = br;
+        }
+
+        // downsweep
+        let mut x = vec![0.0; self.n];
+        let mut x2: Vec<Vec<f64>> = vec![Vec::new(); nn];
+        for i in (0..nn).rev() {
+            let nd = &self.nodes[i];
+            let x2l = std::mem::take(&mut x2[i]); // empty at root (rank 0)
+            debug_assert_eq!(x2l.len(), nd.rank);
+            // x1 = y1 − F x2
+            let mut x1 = std::mem::take(&mut y1[i]);
+            if nd.e > 0 && nd.rank > 0 {
+                let mut tmp = vec![0.0; nd.e];
+                blas::gemv(&nd.f, &x2l, &mut tmp);
+                for (a, t) in x1.iter_mut().zip(tmp.iter()) {
+                    *a -= t;
+                }
+            }
+            // z = [x1; x2], un-rotate
+            let mut z = x1;
+            z.extend_from_slice(&x2l);
+            let xloc = match &nd.q {
+                Some(q) => {
+                    let mut out = vec![0.0; z.len()];
+                    blas::gemv(q, &z, &mut out);
+                    out
+                }
+                None => z,
+            };
+            match (nd.left, nd.right) {
+                (None, None) => {
+                    x[nd.begin..nd.end].copy_from_slice(&xloc);
+                }
+                (Some(l), Some(r)) => {
+                    let rl = self.nodes[l].rank;
+                    x2[l] = xloc[..rl].to_vec();
+                    x2[r] = xloc[rl..].to_vec();
+                }
+                _ => unreachable!(),
+            }
+        }
+        x
+    }
+
+    /// Solve with several right-hand sides (columns of `b`).
+    pub fn solve_mat(&self, b: &Mat) -> Mat {
+        let mut out = Mat::zeros(b.rows(), b.cols());
+        for j in 0..b.cols() {
+            let col = self.solve(&b.col(j));
+            for i in 0..b.rows() {
+                out[(i, j)] = col[i];
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::hss::compress::compress;
+    use crate::hss::matvec::matvec_shifted;
+    use crate::hss::HssParams;
+    use crate::kernel::Kernel;
+    use crate::linalg::chol::Chol;
+    use crate::util::prng::Rng;
+    use crate::util::testkit;
+
+    #[test]
+    fn solve_inverts_shifted_matvec() {
+        testkit::check("ulv-roundtrip", 6, |rng, _| {
+            let n = 50 + rng.below(250);
+            let ds = synth::blobs(n, 1 + rng.below(4), 3, 0.3, rng);
+            let kernel = Kernel::Gaussian { h: 0.7 + rng.f64() };
+            let c = compress(&ds, &kernel, &HssParams::near_exact(), 1);
+            let beta = 0.5 + 2.0 * rng.f64();
+            let ulv = UlvFactor::new(&c.hss, beta).unwrap();
+            let want: Vec<f64> = (0..n).map(|_| rng.gauss()).collect();
+            let b = matvec_shifted(&c.hss, beta, &want);
+            let got = ulv.solve(&b);
+            testkit::assert_allclose(&got, &want, 1e-7);
+        });
+    }
+
+    #[test]
+    fn solve_matches_dense_cholesky() {
+        let mut rng = Rng::new(41);
+        let n = 220;
+        let ds = synth::blobs(n, 3, 4, 0.35, &mut rng);
+        let kernel = Kernel::Gaussian { h: 1.2 };
+        let c = compress(&ds, &kernel, &HssParams::near_exact(), 2);
+        let beta = 1.0;
+        // dense reference on the *same* (approximated) matrix
+        let mut kd = kernel.gram(&c.pds.x);
+        kd.shift_diag(beta);
+        let chol = Chol::new(&kd).unwrap();
+        let ulv = UlvFactor::new(&c.hss, beta).unwrap();
+        let b: Vec<f64> = (0..n).map(|_| rng.gauss()).collect();
+        let want = chol.solve(&b);
+        let got = ulv.solve(&b);
+        testkit::assert_allclose(&got, &want, 1e-6);
+    }
+
+    #[test]
+    fn loose_compression_still_solves_its_own_matrix_exactly() {
+        // ULV must invert K̃+βI (the approximation) to machine precision
+        // even when K̃ is a rough approximation of K.
+        let mut rng = Rng::new(42);
+        let n = 300;
+        let ds = synth::blobs(n, 4, 5, 0.4, &mut rng);
+        let kernel = Kernel::Gaussian { h: 2.0 };
+        let mut p = HssParams::low_accuracy();
+        p.leaf_size = 48;
+        let c = compress(&ds, &kernel, &p, 2);
+        let beta = 10.0;
+        let ulv = UlvFactor::new(&c.hss, beta).unwrap();
+        let want: Vec<f64> = (0..n).map(|_| rng.gauss()).collect();
+        let b = matvec_shifted(&c.hss, beta, &want);
+        let got = ulv.solve(&b);
+        testkit::assert_allclose(&got, &want, 1e-8);
+    }
+
+    #[test]
+    fn single_leaf_tree_dense_solve() {
+        let mut rng = Rng::new(43);
+        let ds = synth::blobs(30, 2, 2, 0.3, &mut rng);
+        let mut p = HssParams::near_exact();
+        p.leaf_size = 100;
+        let kernel = Kernel::Gaussian { h: 1.0 };
+        let c = compress(&ds, &kernel, &p, 1);
+        let ulv = UlvFactor::new(&c.hss, 2.0).unwrap();
+        let want: Vec<f64> = (0..30).map(|_| rng.gauss()).collect();
+        let b = matvec_shifted(&c.hss, 2.0, &want);
+        testkit::assert_allclose(&ulv.solve(&b), &want, 1e-9);
+    }
+
+    #[test]
+    fn solve_mat_columns_match_vector_solves() {
+        let mut rng = Rng::new(44);
+        let ds = synth::blobs(120, 3, 3, 0.3, &mut rng);
+        let kernel = Kernel::Gaussian { h: 1.0 };
+        let c = compress(&ds, &kernel, &HssParams::near_exact(), 1);
+        let ulv = UlvFactor::new(&c.hss, 1.5).unwrap();
+        let b = Mat::gauss(120, 3, &mut rng);
+        let x = ulv.solve_mat(&b);
+        for j in 0..3 {
+            let want = ulv.solve(&b.col(j));
+            testkit::assert_allclose(&x.col(j), &want, 1e-12);
+        }
+    }
+
+    #[test]
+    fn memory_accounting_positive() {
+        let mut rng = Rng::new(45);
+        let ds = synth::blobs(150, 3, 3, 0.3, &mut rng);
+        let c = compress(&ds, &Kernel::Gaussian { h: 1.0 }, &HssParams::near_exact(), 1);
+        let ulv = UlvFactor::new(&c.hss, 1.0).unwrap();
+        assert!(ulv.memory_bytes() > 0);
+        assert_eq!(ulv.dim(), 150);
+        assert_eq!(ulv.shift(), 1.0);
+    }
+}

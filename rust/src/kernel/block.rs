@@ -1,0 +1,140 @@
+//! Dense kernel block evaluation K(X_I, Y_J).
+//!
+//! Uses the ‖x‖² + ‖y‖² − 2 xᵀy expansion: the xᵀy term is a gemm (the
+//! MXU-friendly structure the L1 Pallas kernel also uses), the rest is a
+//! rank-1 broadcast + elementwise exp. This native path is the fallback
+//! and correctness oracle for the PJRT-executed artifact in
+//! [`crate::runtime`].
+
+use crate::kernel::Kernel;
+use crate::linalg::blas::{self, Trans};
+use crate::linalg::Mat;
+use crate::util::threadpool;
+
+/// Squared norms of the rows of X.
+pub fn self_norms(x: &Mat) -> Vec<f64> {
+    (0..x.rows()).map(|i| blas::dot(x.row(i), x.row(i))).collect()
+}
+
+/// K(X, Y): rows of X against rows of Y. O(m n f) via gemm.
+pub fn kernel_block(k: &Kernel, x: &Mat, y: &Mat) -> Mat {
+    assert_eq!(x.cols(), y.cols(), "feature dimension mismatch");
+    let nx = self_norms(x);
+    let ny = self_norms(y);
+    kernel_block_with_norms(k, x, &nx, y, &ny)
+}
+
+/// Same with caller-provided squared row norms (avoids recomputation in
+/// tiled prediction loops).
+pub fn kernel_block_with_norms(k: &Kernel, x: &Mat, nx: &[f64], y: &Mat, ny: &[f64]) -> Mat {
+    let mut g = blas::matmul(x, Trans::No, y, Trans::Yes);
+    finish_block(k, &mut g, nx, ny);
+    g
+}
+
+/// Parallel variant, banding the rows of X across threads.
+pub fn kernel_block_par(threads: usize, k: &Kernel, x: &Mat, y: &Mat) -> Mat {
+    assert_eq!(x.cols(), y.cols(), "feature dimension mismatch");
+    let nx = self_norms(x);
+    let ny = self_norms(y);
+    let mut g = blas::matmul_par(threads, x, Trans::No, y, Trans::Yes);
+    // finish rows in parallel
+    let m = g.rows();
+    let n = g.cols();
+    let data = g.data_mut();
+    let cells = threadpool::as_send_cells(data);
+    threadpool::parallel_for(threads, m, 16, |i| {
+        // SAFETY: row bands are disjoint per index i.
+        let row = unsafe { std::slice::from_raw_parts_mut(cells.get(i * n), n) };
+        for (j, v) in row.iter_mut().enumerate() {
+            *v = k.eval_from_parts(nx[i], ny[j], *v);
+        }
+    });
+    g
+}
+
+fn finish_block(k: &Kernel, g: &mut Mat, nx: &[f64], ny: &[f64]) {
+    let (m, n) = g.shape();
+    assert_eq!(nx.len(), m);
+    assert_eq!(ny.len(), n);
+    for i in 0..m {
+        let row = g.row_mut(i);
+        let nxi = nx[i];
+        for (j, v) in row.iter_mut().enumerate() {
+            *v = k.eval_from_parts(nxi, ny[j], *v);
+        }
+    }
+}
+
+/// Single kernel row K(x_i, Y) as a vector (SMO hot path).
+pub fn kernel_row(k: &Kernel, xi: &[f64], ni: f64, y: &Mat, ny: &[f64], out: &mut [f64]) {
+    assert_eq!(y.rows(), out.len());
+    for j in 0..y.rows() {
+        let ab = blas::dot(xi, y.row(j));
+        out[j] = k.eval_from_parts(ni, ny[j], ab);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+    use crate::util::testkit;
+
+    fn naive_block(k: &Kernel, x: &Mat, y: &Mat) -> Mat {
+        Mat::from_fn(x.rows(), y.rows(), |i, j| k.eval(x.row(i), y.row(j)))
+    }
+
+    #[test]
+    fn block_matches_pointwise_eval() {
+        testkit::check("kernel-block", 10, |rng, _| {
+            let m = 1 + rng.below(30);
+            let n = 1 + rng.below(30);
+            let f = 1 + rng.below(20);
+            let x = Mat::gauss(m, f, rng);
+            let y = Mat::gauss(n, f, rng);
+            for k in [Kernel::Gaussian { h: 0.8 }, Kernel::Polynomial { degree: 2, c: 1.0 }, Kernel::Linear] {
+                let got = kernel_block(&k, &x, &y);
+                let want = naive_block(&k, &x, &y);
+                testkit::assert_allclose(got.data(), want.data(), 1e-11);
+            }
+        });
+    }
+
+    #[test]
+    fn par_matches_serial() {
+        let mut rng = Rng::new(6);
+        let x = Mat::gauss(200, 10, &mut rng);
+        let y = Mat::gauss(150, 10, &mut rng);
+        let k = Kernel::Gaussian { h: 1.3 };
+        let serial = kernel_block(&k, &x, &y);
+        let par = kernel_block_par(4, &k, &x, &y);
+        testkit::assert_allclose(par.data(), serial.data(), 1e-13);
+    }
+
+    #[test]
+    fn kernel_row_matches_block() {
+        let mut rng = Rng::new(7);
+        let x = Mat::gauss(5, 4, &mut rng);
+        let y = Mat::gauss(9, 4, &mut rng);
+        let k = Kernel::Gaussian { h: 0.5 };
+        let block = kernel_block(&k, &x, &y);
+        let ny = self_norms(&y);
+        let mut row = vec![0.0; 9];
+        for i in 0..5 {
+            let ni = crate::linalg::dot(x.row(i), x.row(i));
+            kernel_row(&k, x.row(i), ni, &y, &ny, &mut row);
+            testkit::assert_allclose(&row, block.row(i), 1e-12);
+        }
+    }
+
+    #[test]
+    fn gaussian_diag_is_one() {
+        let mut rng = Rng::new(8);
+        let x = Mat::gauss(12, 6, &mut rng);
+        let g = kernel_block(&Kernel::Gaussian { h: 2.0 }, &x, &x);
+        for i in 0..12 {
+            testkit::assert_close(g[(i, i)], 1.0, 1e-12);
+        }
+    }
+}

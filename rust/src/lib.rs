@@ -1,0 +1,23 @@
+//! hss-svm: training very-large-scale nonlinear SVMs with the Alternating
+//! Direction Method of Multipliers (ADMM) coupled with Hierarchically
+//! Semi-Separable (HSS) kernel approximations.
+//!
+//! Reproduction of Cipolla & Gondzio (2021). See DESIGN.md for the system
+//! inventory and EXPERIMENTS.md for the paper-vs-measured record.
+
+pub mod ann;
+pub mod admm;
+pub mod baselines;
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod cli;
+pub mod eval;
+pub mod hodlr;
+pub mod hss;
+pub mod kernel;
+pub mod linalg;
+pub mod runtime;
+pub mod svm;
+pub mod util;

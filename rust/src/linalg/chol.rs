@@ -1,0 +1,165 @@
+//! Cholesky factorization for SPD matrices — the dense reference solver
+//! the HSS/ULV path is validated against, and the block solver inside the
+//! RACQP baseline.
+
+use crate::linalg::matrix::Mat;
+
+/// Lower-triangular Cholesky factor L with A = L Lᵀ.
+pub struct Chol {
+    l: Mat,
+}
+
+/// Error for non-SPD input.
+#[derive(Debug, thiserror::Error)]
+#[error("matrix not positive definite at pivot {pivot} (value {value:.3e})")]
+pub struct NotSpd {
+    pub pivot: usize,
+    pub value: f64,
+}
+
+impl Chol {
+    /// Factor an SPD matrix. O(n³/3).
+    pub fn new(a: &Mat) -> Result<Self, NotSpd> {
+        let n = a.rows();
+        assert_eq!(a.rows(), a.cols(), "Cholesky needs a square matrix");
+        let mut l = Mat::zeros(n, n);
+        for j in 0..n {
+            // diagonal
+            let mut d = a[(j, j)];
+            {
+                let lj = l.row(j);
+                for k in 0..j {
+                    d -= lj[k] * lj[k];
+                }
+            }
+            if d <= 0.0 || !d.is_finite() {
+                return Err(NotSpd { pivot: j, value: d });
+            }
+            let djs = d.sqrt();
+            l[(j, j)] = djs;
+            let inv = 1.0 / djs;
+            // column below diagonal: L[i,j] = (A[i,j] - dot(L[i,:j], L[j,:j])) / L[j,j]
+            for i in j + 1..n {
+                let mut s = a[(i, j)];
+                let (ri, rj) = (i * n, j * n);
+                let data = l.data();
+                for k in 0..j {
+                    s -= data[ri + k] * data[rj + k];
+                }
+                l[(i, j)] = s * inv;
+            }
+        }
+        Ok(Chol { l })
+    }
+
+    /// The factor L.
+    pub fn l(&self) -> &Mat {
+        &self.l
+    }
+
+    /// Solve A x = b.
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.l.rows();
+        assert_eq!(b.len(), n);
+        // forward: L y = b
+        let mut y = b.to_vec();
+        for i in 0..n {
+            let row = self.l.row(i);
+            let mut s = y[i];
+            for k in 0..i {
+                s -= row[k] * y[k];
+            }
+            y[i] = s / row[i];
+        }
+        // backward: Lᵀ x = y
+        for i in (0..n).rev() {
+            let mut s = y[i];
+            for k in i + 1..n {
+                s -= self.l[(k, i)] * y[k];
+            }
+            y[i] = s / self.l[(i, i)];
+        }
+        y
+    }
+
+    /// Solve with a matrix right-hand side (column-wise).
+    pub fn solve_mat(&self, b: &Mat) -> Mat {
+        let mut x = Mat::zeros(b.rows(), b.cols());
+        for j in 0..b.cols() {
+            let col = b.col(j);
+            let sol = self.solve(&col);
+            for i in 0..b.rows() {
+                x[(i, j)] = sol[i];
+            }
+        }
+        x
+    }
+
+    /// log det(A) = 2 Σ log L_ii.
+    pub fn logdet(&self) -> f64 {
+        (0..self.l.rows()).map(|i| self.l[(i, i)].ln()).sum::<f64>() * 2.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::blas::{self, matmul, Trans};
+    use crate::util::testkit;
+
+    fn random_spd(n: usize, rng: &mut crate::util::prng::Rng) -> Mat {
+        let g = Mat::gauss(n, n, rng);
+        let mut a = matmul(&g, Trans::No, &g, Trans::Yes);
+        a.shift_diag(n as f64); // safely SPD
+        a
+    }
+
+    #[test]
+    fn factor_reconstructs() {
+        testkit::check("chol-reconstruct", 12, |rng, _| {
+            let n = 2 + rng.below(40);
+            let a = random_spd(n, rng);
+            let ch = Chol::new(&a).unwrap();
+            let back = matmul(ch.l(), Trans::No, ch.l(), Trans::Yes);
+            testkit::assert_allclose(back.data(), a.data(), 1e-9);
+        });
+    }
+
+    #[test]
+    fn solve_residual_small() {
+        testkit::check("chol-solve", 12, |rng, _| {
+            let n = 2 + rng.below(40);
+            let a = random_spd(n, rng);
+            let want: Vec<f64> = (0..n).map(|_| rng.gauss()).collect();
+            let mut b = vec![0.0; n];
+            blas::gemv(&a, &want, &mut b);
+            let got = Chol::new(&a).unwrap().solve(&b);
+            testkit::assert_allclose(&got, &want, 1e-8);
+        });
+    }
+
+    #[test]
+    fn rejects_indefinite() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 2.0, 1.0]); // eigenvalues 3, -1
+        assert!(Chol::new(&a).is_err());
+    }
+
+    #[test]
+    fn solve_mat_matches_columns() {
+        let mut rng = crate::util::prng::Rng::new(3);
+        let a = random_spd(10, &mut rng);
+        let b = Mat::gauss(10, 3, &mut rng);
+        let ch = Chol::new(&a).unwrap();
+        let x = ch.solve_mat(&b);
+        for j in 0..3 {
+            let want = ch.solve(&b.col(j));
+            testkit::assert_allclose(&x.col(j), &want, 1e-12);
+        }
+    }
+
+    #[test]
+    fn logdet_identity_zero() {
+        let ch = Chol::new(&Mat::eye(5)).unwrap();
+        assert!(ch.logdet().abs() < 1e-12);
+    }
+}

@@ -1,0 +1,274 @@
+//! Column-pivoted QR and the interpolative decomposition (ID).
+//!
+//! The ID is the engine of HSS compression: given a (sample) matrix S
+//! with rows indexed by the points of a cluster, a **row ID**
+//! `S ≈ X · S[J, :]` picks `|J|` skeleton rows and an interpolation
+//! matrix X with an identity sub-block. The HSS generators are
+//! U = X and the skeleton index sets J (STRUMPACK does exactly this).
+
+use crate::linalg::matrix::Mat;
+
+/// Result of a rank-revealing column-pivoted QR, truncated at `tol`.
+pub struct Cpqr {
+    /// Selected (pivot) column indices of the original matrix, in order.
+    pub piv: Vec<usize>,
+    /// Numerical rank detected.
+    pub rank: usize,
+    /// R factor, rank×n, columns in *pivoted* order.
+    pub r: Mat,
+}
+
+/// Column-pivoted Householder QR with early exit once the residual
+/// column norms drop below `max(abs_tol, rel_tol * ‖A‖)` or `max_rank`
+/// is hit. Returns factors sufficient to build an ID.
+pub fn cpqr(a: &Mat, rel_tol: f64, abs_tol: f64, max_rank: usize) -> Cpqr {
+    let (m, n) = a.shape();
+    let mut work = a.clone();
+    let kmax = m.min(n).min(max_rank.max(1));
+    let mut piv: Vec<usize> = (0..n).collect();
+    // running squared column norms
+    let mut cnorm2: Vec<f64> = (0..n)
+        .map(|j| (0..m).map(|i| work[(i, j)] * work[(i, j)]).sum())
+        .collect();
+    // Relative scale = largest initial column norm (pivot-based semantics,
+    // matching STRUMPACK's hss_rel_tol behaviour more closely than a
+    // Frobenius-norm scale would).
+    let a_norm = cnorm2.iter().cloned().fold(0.0f64, f64::max).sqrt();
+    let thresh = (rel_tol * a_norm).max(abs_tol).max(0.0);
+
+    let mut tau = vec![0.0; kmax];
+    let mut k = 0;
+    while k < kmax {
+        // pick pivot among remaining columns
+        let (jmax, &nmax) = cnorm2[k..]
+            .iter()
+            .enumerate()
+            .max_by(|x, y| x.1.partial_cmp(y.1).unwrap())
+            .unwrap();
+        let jmax = jmax + k;
+        // The first pivot is kept whenever it clears abs_tol: STRUMPACK's
+        // rel_tol=1 ("very rough") setting yields rank-1, not rank-0,
+        // off-diagonal blocks.
+        let col_norm = nmax.sqrt();
+        if col_norm <= thresh && (k > 0 || col_norm <= abs_tol.max(0.0)) {
+            break;
+        }
+        // swap columns k <-> jmax
+        if jmax != k {
+            for i in 0..m {
+                let t = work[(i, k)];
+                work[(i, k)] = work[(i, jmax)];
+                work[(i, jmax)] = t;
+            }
+            piv.swap(k, jmax);
+            cnorm2.swap(k, jmax);
+        }
+        // Householder on column k, rows k..m
+        let mut norm2 = 0.0;
+        for i in k..m {
+            norm2 += work[(i, k)] * work[(i, k)];
+        }
+        let norm = norm2.sqrt();
+        if norm == 0.0 {
+            break;
+        }
+        let a0 = work[(k, k)];
+        let alpha = if a0 >= 0.0 { -norm } else { norm };
+        let v0 = a0 - alpha;
+        tau[k] = -v0 / alpha;
+        let inv_v0 = 1.0 / v0;
+        for i in k + 1..m {
+            work[(i, k)] *= inv_v0;
+        }
+        work[(k, k)] = alpha;
+        // apply reflector to trailing columns + downdate norms
+        for c in k + 1..n {
+            let mut s = work[(k, c)];
+            for i in k + 1..m {
+                s += work[(i, k)] * work[(i, c)];
+            }
+            s *= tau[k];
+            work[(k, c)] -= s;
+            for i in k + 1..m {
+                let v = work[(i, k)];
+                work[(i, c)] -= s * v;
+            }
+            // exact downdate of the remaining norm (recompute guard below)
+            cnorm2[c] -= work[(k, c)] * work[(k, c)];
+            if cnorm2[c] < 1e-14 * a_norm * a_norm {
+                // numerical cancellation: recompute from scratch
+                cnorm2[c] = (k + 1..m).map(|i| work[(i, c)] * work[(i, c)]).sum();
+            }
+        }
+        k += 1;
+    }
+
+    // Extract R (k×n) in pivoted column order.
+    let rank = k;
+    let mut r = Mat::zeros(rank, n);
+    for i in 0..rank {
+        for j in i..n {
+            r[(i, j)] = work[(i, j)];
+        }
+    }
+    piv.truncate(n);
+    Cpqr { piv, rank, r }
+}
+
+/// Column interpolative decomposition: A ≈ A[:, J] · T where
+/// T = [I | R11⁻¹R12] in pivoted order, mapped back to original order.
+///
+/// Returns (J, T) with T of shape rank×n such that A ≈ A[:,J] T.
+pub fn column_id(a: &Mat, rel_tol: f64, abs_tol: f64, max_rank: usize) -> (Vec<usize>, Mat) {
+    let n = a.cols();
+    let f = cpqr(a, rel_tol, abs_tol, max_rank);
+    let k = f.rank;
+    let j: Vec<usize> = f.piv[..k].to_vec();
+    // Solve R11 * W = R12 by back substitution (R11 is k×k upper tri in
+    // pivoted order, R12 the remaining n-k columns).
+    let mut t_piv = Mat::zeros(k, n);
+    for i in 0..k {
+        t_piv[(i, i)] = 1.0;
+    }
+    for c in k..n {
+        // solve R11 w = R[:, c]
+        let mut w = vec![0.0; k];
+        for i in (0..k).rev() {
+            let mut s = f.r[(i, c)];
+            for p in i + 1..k {
+                s -= f.r[(i, p)] * w[p];
+            }
+            let d = f.r[(i, i)];
+            w[i] = if d.abs() > 1e-300 { s / d } else { 0.0 };
+        }
+        for i in 0..k {
+            t_piv[(i, c)] = w[i];
+        }
+    }
+    // un-pivot columns: column piv[c] of T gets t_piv column c
+    let mut t = Mat::zeros(k, n);
+    for c in 0..n {
+        let orig = f.piv[c];
+        for i in 0..k {
+            t[(i, orig)] = t_piv[(i, c)];
+        }
+    }
+    (j, t)
+}
+
+/// Row interpolative decomposition: A ≈ X · A[J, :].
+/// Implemented as the column ID of Aᵀ; X has shape m×rank with an
+/// identity block on the skeleton rows J.
+pub fn row_id(a: &Mat, rel_tol: f64, abs_tol: f64, max_rank: usize) -> (Vec<usize>, Mat) {
+    let at = a.transpose();
+    let (j, t) = column_id(&at, rel_tol, abs_tol, max_rank);
+    (j, t.transpose())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::blas::{matmul, Trans};
+    use crate::util::prng::Rng;
+    use crate::util::testkit;
+
+    /// Random m×n matrix of (numerical) rank r, well-scaled.
+    fn low_rank(m: usize, n: usize, r: usize, rng: &mut Rng) -> Mat {
+        let u = Mat::gauss(m, r, rng);
+        let v = Mat::gauss(r, n, rng);
+        matmul(&u, Trans::No, &v, Trans::No)
+    }
+
+    #[test]
+    fn cpqr_detects_rank() {
+        testkit::check("cpqr-rank", 12, |rng, _| {
+            let m = 10 + rng.below(30);
+            let n = 10 + rng.below(30);
+            let r = 1 + rng.below(m.min(n).min(8));
+            let a = low_rank(m, n, r, rng);
+            let f = cpqr(&a, 1e-10, 0.0, usize::MAX);
+            assert_eq!(f.rank, r, "rank mismatch {} vs {}", f.rank, r);
+        });
+    }
+
+    #[test]
+    fn cpqr_respects_max_rank() {
+        let mut rng = Rng::new(5);
+        let a = Mat::gauss(30, 30, &mut rng);
+        let f = cpqr(&a, 0.0, 0.0, 7);
+        assert_eq!(f.rank, 7);
+        assert_eq!(f.r.rows(), 7);
+    }
+
+    #[test]
+    fn column_id_reconstructs() {
+        testkit::check("col-id", 12, |rng, _| {
+            let m = 15 + rng.below(25);
+            let n = 15 + rng.below(25);
+            let r = 1 + rng.below(6);
+            let a = low_rank(m, n, r, rng);
+            let (j, t) = column_id(&a, 1e-12, 0.0, usize::MAX);
+            assert_eq!(j.len(), r);
+            let aj = a.select_cols(&j);
+            let back = matmul(&aj, Trans::No, &t, Trans::No);
+            let denom = a.fro().max(1.0);
+            assert!(
+                {
+                    let mut d = back.clone();
+                    d.axpy(-1.0, &a);
+                    d.fro() / denom < 1e-8
+                },
+                "column ID reconstruction error too large"
+            );
+        });
+    }
+
+    #[test]
+    fn row_id_reconstructs_and_has_identity_block() {
+        testkit::check("row-id", 12, |rng, _| {
+            let m = 15 + rng.below(25);
+            let n = 10 + rng.below(25);
+            let r = 1 + rng.below(5);
+            let a = low_rank(m, n, r, rng);
+            let (j, x) = row_id(&a, 1e-12, 0.0, usize::MAX);
+            assert_eq!(j.len(), r);
+            assert_eq!(x.shape(), (m, r));
+            // identity block: X[j[k], :] = e_k
+            for (k, &row) in j.iter().enumerate() {
+                for c in 0..r {
+                    let want = if c == k { 1.0 } else { 0.0 };
+                    assert!((x[(row, c)] - want).abs() < 1e-10);
+                }
+            }
+            let aj = a.select_rows(&j);
+            let back = matmul(&x, Trans::No, &aj, Trans::No);
+            let mut d = back;
+            d.axpy(-1.0, &a);
+            assert!(d.fro() / a.fro().max(1.0) < 1e-8);
+        });
+    }
+
+    #[test]
+    fn id_truncation_error_bounded_by_tolerance() {
+        // Matrix with geometrically decaying singular values: truncating at
+        // rel_tol should give a comparable reconstruction error.
+        let mut rng = Rng::new(42);
+        let m = 60;
+        let n = 60;
+        let mut a = Mat::zeros(m, n);
+        for k in 0..20 {
+            let u = Mat::gauss(m, 1, &mut rng);
+            let v = Mat::gauss(1, n, &mut rng);
+            let mut uv = matmul(&u, Trans::No, &v, Trans::No);
+            uv.scale(0.5f64.powi(k as i32));
+            a.axpy(1.0, &uv);
+        }
+        let (j, x) = row_id(&a, 1e-4, 0.0, usize::MAX);
+        let back = matmul(&x, Trans::No, &a.select_rows(&j), Trans::No);
+        let mut d = back;
+        d.axpy(-1.0, &a);
+        let rel = d.fro() / a.fro();
+        assert!(rel < 1e-2, "rel err {rel} too large for tol 1e-4");
+        assert!(j.len() < 30, "rank {} should be well below 30", j.len());
+    }
+}

@@ -1,0 +1,185 @@
+//! Symmetric eigensolver (cyclic Jacobi).
+//!
+//! Needed for Figure 1 (singular-value decay of Gaussian kernel matrices —
+//! for a symmetric PSD kernel the singular values are the eigenvalues) and
+//! for spectral diagnostics of the HSS approximation error. Jacobi is
+//! O(n³) per sweep but rock-solid and accurate; Figure-1-sized matrices
+//! (hundreds of rows) converge in a handful of sweeps.
+
+use crate::linalg::matrix::Mat;
+
+/// Eigen-decomposition A = V diag(w) Vᵀ of a symmetric matrix.
+pub struct SymEig {
+    /// Eigenvalues, descending.
+    pub values: Vec<f64>,
+    /// Eigenvectors as columns, matching `values` order.
+    pub vectors: Mat,
+}
+
+/// Cyclic Jacobi with threshold sweeping. `a` must be symmetric.
+pub fn sym_eig(a: &Mat) -> SymEig {
+    let n = a.rows();
+    assert_eq!(a.rows(), a.cols(), "sym_eig needs a square matrix");
+    let mut m = a.clone();
+    let mut v = Mat::eye(n);
+
+    let off = |m: &Mat| -> f64 {
+        let mut s = 0.0;
+        for i in 0..n {
+            for j in i + 1..n {
+                s += m[(i, j)] * m[(i, j)];
+            }
+        }
+        s.sqrt()
+    };
+
+    let scale = a.fro().max(1e-300);
+    let tol = 1e-14 * scale;
+    for _sweep in 0..60 {
+        if off(&m) <= tol {
+            break;
+        }
+        for p in 0..n {
+            for q in p + 1..n {
+                let apq = m[(p, q)];
+                if apq.abs() <= tol / (n as f64) {
+                    continue;
+                }
+                let app = m[(p, p)];
+                let aqq = m[(q, q)];
+                // Jacobi rotation: tan(2θ) = 2 apq / (app − aqq)
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = if theta >= 0.0 {
+                    1.0 / (theta + (1.0 + theta * theta).sqrt())
+                } else {
+                    -1.0 / (-theta + (1.0 + theta * theta).sqrt())
+                };
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = t * c;
+                // update rows/cols p and q of A
+                for k in 0..n {
+                    let akp = m[(k, p)];
+                    let akq = m[(k, q)];
+                    m[(k, p)] = c * akp - s * akq;
+                    m[(k, q)] = s * akp + c * akq;
+                }
+                for k in 0..n {
+                    let apk = m[(p, k)];
+                    let aqk = m[(q, k)];
+                    m[(p, k)] = c * apk - s * aqk;
+                    m[(q, k)] = s * apk + c * aqk;
+                }
+                // accumulate eigenvectors
+                for k in 0..n {
+                    let vkp = v[(k, p)];
+                    let vkq = v[(k, q)];
+                    v[(k, p)] = c * vkp - s * vkq;
+                    v[(k, q)] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+
+    // sort by descending eigenvalue
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&i, &j| m[(j, j)].partial_cmp(&m[(i, i)]).unwrap());
+    let values: Vec<f64> = order.iter().map(|&i| m[(i, i)]).collect();
+    let vectors = v.select_cols(&order);
+    SymEig { values, vectors }
+}
+
+/// Singular values of a symmetric PSD matrix = |eigenvalues|, descending.
+pub fn psd_singular_values(a: &Mat) -> Vec<f64> {
+    let mut s: Vec<f64> = sym_eig(a).values.iter().map(|v| v.abs()).collect();
+    s.sort_by(|x, y| y.partial_cmp(x).unwrap());
+    s
+}
+
+/// Largest eigenvalue magnitude via power iteration (cheap spectral-norm
+/// estimate for big matrices where Jacobi is too slow).
+pub fn spectral_norm_est(a: &Mat, iters: usize, rng: &mut crate::util::prng::Rng) -> f64 {
+    let n = a.rows();
+    let mut x: Vec<f64> = (0..n).map(|_| rng.gauss()).collect();
+    let mut y = vec![0.0; n];
+    let mut lam = 0.0;
+    for _ in 0..iters {
+        crate::linalg::blas::gemv(a, &x, &mut y);
+        lam = crate::linalg::blas::nrm2(&y);
+        if lam == 0.0 {
+            return 0.0;
+        }
+        for (xi, yi) in x.iter_mut().zip(y.iter()) {
+            *xi = yi / lam;
+        }
+    }
+    lam
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::blas::{matmul, Trans};
+    use crate::util::prng::Rng;
+    use crate::util::testkit;
+
+    #[test]
+    fn diagonal_matrix_eigenvalues() {
+        let mut a = Mat::zeros(3, 3);
+        a[(0, 0)] = 1.0;
+        a[(1, 1)] = 5.0;
+        a[(2, 2)] = 3.0;
+        let e = sym_eig(&a);
+        testkit::assert_allclose(&e.values, &[5.0, 3.0, 1.0], 1e-12);
+    }
+
+    #[test]
+    fn reconstruction_and_orthogonality() {
+        testkit::check("eig-reconstruct", 8, |rng, _| {
+            let n = 2 + rng.below(20);
+            let g = Mat::gauss(n, n, rng);
+            let a = {
+                let mut s = matmul(&g, Trans::No, &g, Trans::Yes);
+                s.scale(1.0 / n as f64);
+                s
+            };
+            let e = sym_eig(&a);
+            // V diag(w) Vᵀ = A
+            let mut vd = e.vectors.clone();
+            for j in 0..n {
+                for i in 0..n {
+                    vd[(i, j)] *= e.values[j];
+                }
+            }
+            let back = matmul(&vd, Trans::No, &e.vectors, Trans::Yes);
+            testkit::assert_allclose(back.data(), a.data(), 1e-8);
+            // VᵀV = I
+            let vtv = matmul(&e.vectors, Trans::Yes, &e.vectors, Trans::No);
+            testkit::assert_allclose(vtv.data(), Mat::eye(n).data(), 1e-10);
+            // descending order
+            for w in e.values.windows(2) {
+                assert!(w[0] >= w[1] - 1e-12);
+            }
+        });
+    }
+
+    #[test]
+    fn trace_preserved() {
+        let mut rng = Rng::new(8);
+        let g = Mat::gauss(15, 15, &mut rng);
+        let a = matmul(&g, Trans::No, &g, Trans::Yes);
+        let tr: f64 = (0..15).map(|i| a[(i, i)]).sum();
+        let e = sym_eig(&a);
+        let sum: f64 = e.values.iter().sum();
+        testkit::assert_close(tr, sum, 1e-9);
+    }
+
+    #[test]
+    fn power_iteration_close_to_jacobi() {
+        let mut rng = Rng::new(9);
+        let g = Mat::gauss(25, 25, &mut rng);
+        let a = matmul(&g, Trans::No, &g, Trans::Yes);
+        let top = sym_eig(&a).values[0];
+        let est = spectral_norm_est(&a, 200, &mut rng);
+        assert!((est - top).abs() / top < 1e-3, "est {est} vs {top}");
+    }
+}

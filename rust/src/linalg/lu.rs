@@ -1,0 +1,162 @@
+//! LU factorization with partial pivoting — used by the ULV reduction
+//! (the eliminated leading blocks are general square matrices, not SPD)
+//! and the top-level dense solve of the HSS hierarchy.
+
+use crate::linalg::matrix::Mat;
+
+/// P A = L U with partial (row) pivoting.
+pub struct Lu {
+    lu: Mat,
+    /// Row permutation: `perm[i]` = original row now at position i.
+    perm: Vec<usize>,
+    /// Sign of the permutation (for determinants).
+    sign: f64,
+}
+
+/// Singular-matrix error.
+#[derive(Debug, thiserror::Error)]
+#[error("singular matrix at pivot {pivot} (|pivot| = {value:.3e})")]
+pub struct Singular {
+    pub pivot: usize,
+    pub value: f64,
+}
+
+impl Lu {
+    pub fn new(a: &Mat) -> Result<Self, Singular> {
+        let n = a.rows();
+        assert_eq!(a.rows(), a.cols(), "LU needs a square matrix");
+        let mut lu = a.clone();
+        let mut perm: Vec<usize> = (0..n).collect();
+        let mut sign = 1.0;
+        for k in 0..n {
+            // pivot search in column k
+            let mut pmax = k;
+            let mut vmax = lu[(k, k)].abs();
+            for i in k + 1..n {
+                let v = lu[(i, k)].abs();
+                if v > vmax {
+                    vmax = v;
+                    pmax = i;
+                }
+            }
+            if vmax < 1e-300 {
+                return Err(Singular { pivot: k, value: vmax });
+            }
+            if pmax != k {
+                // swap rows
+                for j in 0..n {
+                    let t = lu[(k, j)];
+                    lu[(k, j)] = lu[(pmax, j)];
+                    lu[(pmax, j)] = t;
+                }
+                perm.swap(k, pmax);
+                sign = -sign;
+            }
+            let inv = 1.0 / lu[(k, k)];
+            for i in k + 1..n {
+                let m = lu[(i, k)] * inv;
+                lu[(i, k)] = m;
+                if m != 0.0 {
+                    // row update: lu[i, k+1..] -= m * lu[k, k+1..]
+                    let (top, bot) = lu.data_mut().split_at_mut(i * n);
+                    let row_k = &top[k * n + k + 1..k * n + n];
+                    let row_i = &mut bot[k + 1..n];
+                    for (ri, rk) in row_i.iter_mut().zip(row_k.iter()) {
+                        *ri -= m * rk;
+                    }
+                }
+            }
+        }
+        Ok(Lu { lu, perm, sign })
+    }
+
+    /// Solve A x = b.
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.lu.rows();
+        assert_eq!(b.len(), n);
+        // apply permutation
+        let mut y: Vec<f64> = self.perm.iter().map(|&p| b[p]).collect();
+        // forward L (unit diagonal)
+        for i in 1..n {
+            let row = self.lu.row(i);
+            let mut s = y[i];
+            for k in 0..i {
+                s -= row[k] * y[k];
+            }
+            y[i] = s;
+        }
+        // backward U
+        for i in (0..n).rev() {
+            let row = self.lu.row(i);
+            let mut s = y[i];
+            for k in i + 1..n {
+                s -= row[k] * y[k];
+            }
+            y[i] = s / row[i];
+        }
+        y
+    }
+
+    /// Solve for a matrix RHS, column-wise.
+    pub fn solve_mat(&self, b: &Mat) -> Mat {
+        let mut x = Mat::zeros(b.rows(), b.cols());
+        for j in 0..b.cols() {
+            let sol = self.solve(&b.col(j));
+            for i in 0..b.rows() {
+                x[(i, j)] = sol[i];
+            }
+        }
+        x
+    }
+
+    /// det(A).
+    pub fn det(&self) -> f64 {
+        self.sign * (0..self.lu.rows()).map(|i| self.lu[(i, i)]).product::<f64>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::blas;
+    use crate::util::testkit;
+
+    #[test]
+    fn solve_recovers_solution() {
+        testkit::check("lu-solve", 15, |rng, _| {
+            let n = 1 + rng.below(40);
+            let mut a = Mat::gauss(n, n, rng);
+            a.shift_diag(2.0 * (n as f64).sqrt()); // keep well-conditioned
+            let want: Vec<f64> = (0..n).map(|_| rng.gauss()).collect();
+            let mut b = vec![0.0; n];
+            blas::gemv(&a, &want, &mut b);
+            let got = Lu::new(&a).unwrap().solve(&b);
+            testkit::assert_allclose(&got, &want, 1e-8);
+        });
+    }
+
+    #[test]
+    fn pivoting_handles_zero_leading_entry() {
+        let a = Mat::from_vec(2, 2, vec![0.0, 1.0, 1.0, 0.0]);
+        let lu = Lu::new(&a).unwrap();
+        let x = lu.solve(&[3.0, 7.0]);
+        testkit::assert_allclose(&x, &[7.0, 3.0], 1e-12);
+        assert!((lu.det() + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn singular_detected() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 2.0, 4.0]);
+        assert!(Lu::new(&a).is_err());
+    }
+
+    #[test]
+    fn det_of_diag() {
+        let mut a = Mat::eye(3);
+        a[(0, 0)] = 2.0;
+        a[(1, 1)] = 3.0;
+        a[(2, 2)] = 4.0;
+        let lu = Lu::new(&a).unwrap();
+        assert!((lu.det() - 24.0).abs() < 1e-12);
+    }
+}

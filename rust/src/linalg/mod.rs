@@ -1,0 +1,13 @@
+//! Dense linear-algebra substrate (the paper leans on LAPACK/BLAS inside
+//! STRUMPACK; everything is reimplemented here for the offline build).
+
+pub mod blas;
+pub mod chol;
+pub mod cpqr;
+pub mod eig;
+pub mod lu;
+pub mod matrix;
+pub mod qr;
+
+pub use blas::{dot, matmul, matmul_par, Trans};
+pub use matrix::Mat;

@@ -1,0 +1,299 @@
+//! Householder QR factorization (thin), used by the randomized range
+//! finder and the ULV elimination steps.
+
+use crate::linalg::matrix::Mat;
+
+/// Compact Householder QR of an m×n matrix (m ≥ n not required; for
+/// m < n only the first m reflectors exist).
+pub struct Qr {
+    /// R in the upper triangle; Householder vectors (below diagonal,
+    /// implicit leading 1) underneath.
+    qr: Mat,
+    /// Scalar coefficients tau_j of the reflectors H_j = I − tau v vᵀ.
+    tau: Vec<f64>,
+}
+
+impl Qr {
+    /// Factor A = Q R.
+    pub fn new(a: &Mat) -> Self {
+        let mut qr = a.clone();
+        let (m, n) = qr.shape();
+        let p = m.min(n);
+        let mut tau = vec![0.0; p];
+        for j in 0..p {
+            // Build reflector for column j, rows j..m
+            let mut norm2 = 0.0;
+            for i in j..m {
+                norm2 += qr[(i, j)] * qr[(i, j)];
+            }
+            let norm = norm2.sqrt();
+            if norm == 0.0 {
+                tau[j] = 0.0;
+                continue;
+            }
+            let a0 = qr[(j, j)];
+            let alpha = if a0 >= 0.0 { -norm } else { norm };
+            // v = x - alpha e1, normalized so v[0] = 1
+            let v0 = a0 - alpha;
+            tau[j] = -v0 / alpha; // = 2 / (vᵀv / v0²) standard LAPACK form
+            let inv_v0 = 1.0 / v0;
+            for i in j + 1..m {
+                qr[(i, j)] *= inv_v0;
+            }
+            qr[(j, j)] = alpha;
+            // Apply H to trailing columns: A := (I - tau v vᵀ) A
+            for c in j + 1..n {
+                let mut s = qr[(j, c)];
+                for i in j + 1..m {
+                    s += qr[(i, j)] * qr[(i, c)];
+                }
+                s *= tau[j];
+                qr[(j, c)] -= s;
+                for i in j + 1..m {
+                    let vij = qr[(i, j)];
+                    qr[(i, c)] -= s * vij;
+                }
+            }
+        }
+        Qr { qr, tau }
+    }
+
+    /// Thin Q: m×p with orthonormal columns (p = min(m, n)).
+    pub fn thin_q(&self) -> Mat {
+        let (m, n) = self.qr.shape();
+        let p = m.min(n);
+        let mut q = Mat::zeros(m, p);
+        for i in 0..p {
+            q[(i, i)] = 1.0;
+        }
+        // Accumulate Q = H_0 H_1 ... H_{p-1} applied to I (back to front).
+        for j in (0..p).rev() {
+            if self.tau[j] == 0.0 {
+                continue;
+            }
+            for c in 0..p {
+                let mut s = q[(j, c)];
+                for i in j + 1..m {
+                    s += self.qr[(i, j)] * q[(i, c)];
+                }
+                s *= self.tau[j];
+                q[(j, c)] -= s;
+                for i in j + 1..m {
+                    let vij = self.qr[(i, j)];
+                    q[(i, c)] -= s * vij;
+                }
+            }
+        }
+        q
+    }
+
+    /// Full m×m orthogonal Q (needed by the ULV two-sided rotations).
+    pub fn full_q(&self) -> Mat {
+        let (m, n) = self.qr.shape();
+        let p = m.min(n);
+        let mut q = Mat::eye(m);
+        for j in (0..p).rev() {
+            if self.tau[j] == 0.0 {
+                continue;
+            }
+            for c in 0..m {
+                let mut s = q[(j, c)];
+                for i in j + 1..m {
+                    s += self.qr[(i, j)] * q[(i, c)];
+                }
+                s *= self.tau[j];
+                q[(j, c)] -= s;
+                for i in j + 1..m {
+                    let vij = self.qr[(i, j)];
+                    q[(i, c)] -= s * vij;
+                }
+            }
+        }
+        q
+    }
+
+    /// R factor: p×n upper triangular (p = min(m,n)).
+    pub fn r(&self) -> Mat {
+        let (m, n) = self.qr.shape();
+        let p = m.min(n);
+        let mut r = Mat::zeros(p, n);
+        for i in 0..p {
+            for j in i..n {
+                r[(i, j)] = self.qr[(i, j)];
+            }
+        }
+        r
+    }
+
+    /// Apply Qᵀ to a vector in place (length m).
+    pub fn qt_vec(&self, x: &mut [f64]) {
+        let (m, n) = self.qr.shape();
+        assert_eq!(x.len(), m);
+        let p = m.min(n);
+        for j in 0..p {
+            if self.tau[j] == 0.0 {
+                continue;
+            }
+            let mut s = x[j];
+            for i in j + 1..m {
+                s += self.qr[(i, j)] * x[i];
+            }
+            s *= self.tau[j];
+            x[j] -= s;
+            for i in j + 1..m {
+                x[i] -= s * self.qr[(i, j)];
+            }
+        }
+    }
+
+    /// Apply Q to a vector in place (length m).
+    pub fn q_vec(&self, x: &mut [f64]) {
+        let (m, n) = self.qr.shape();
+        assert_eq!(x.len(), m);
+        let p = m.min(n);
+        for j in (0..p).rev() {
+            if self.tau[j] == 0.0 {
+                continue;
+            }
+            let mut s = x[j];
+            for i in j + 1..m {
+                s += self.qr[(i, j)] * x[i];
+            }
+            s *= self.tau[j];
+            x[j] -= s;
+            for i in j + 1..m {
+                x[i] -= s * self.qr[(i, j)];
+            }
+        }
+    }
+
+    /// Least-squares solve min ‖Ax − b‖ for full-column-rank A (m ≥ n).
+    pub fn solve_ls(&self, b: &[f64]) -> Vec<f64> {
+        let (m, n) = self.qr.shape();
+        assert!(m >= n, "solve_ls requires m >= n");
+        assert_eq!(b.len(), m);
+        let mut y = b.to_vec();
+        self.qt_vec(&mut y);
+        // back substitution with R (n×n upper part)
+        let mut x = vec![0.0; n];
+        for i in (0..n).rev() {
+            let mut s = y[i];
+            for j in i + 1..n {
+                s -= self.qr[(i, j)] * x[j];
+            }
+            let d = self.qr[(i, i)];
+            assert!(d.abs() > 1e-300, "rank-deficient matrix in solve_ls");
+            x[i] = s / d;
+        }
+        x
+    }
+}
+
+/// Orthonormalize the columns of A (thin Q of its QR).
+pub fn orth(a: &Mat) -> Mat {
+    Qr::new(a).thin_q()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::blas::{self, matmul, Trans};
+    use crate::util::testkit;
+
+    #[test]
+    fn qr_reconstructs_a() {
+        testkit::check("qr-reconstruct", 15, |rng, _| {
+            let m = 2 + rng.below(30);
+            let n = 1 + rng.below(30);
+            let a = Mat::gauss(m, n, rng);
+            let qr = Qr::new(&a);
+            let q = qr.thin_q();
+            let r = qr.r();
+            let back = matmul(&q, Trans::No, &r, Trans::No);
+            testkit::assert_allclose(back.data(), a.data(), 1e-10);
+        });
+    }
+
+    #[test]
+    fn q_is_orthonormal() {
+        testkit::check("qr-orthonormal", 15, |rng, _| {
+            let m = 5 + rng.below(30);
+            let n = 1 + rng.below(m.min(20));
+            let a = Mat::gauss(m, n, rng);
+            let q = orth(&a);
+            let qtq = matmul(&q, Trans::Yes, &q, Trans::No);
+            let eye = Mat::eye(q.cols());
+            testkit::assert_allclose(qtq.data(), eye.data(), 1e-10);
+        });
+    }
+
+    #[test]
+    fn qt_q_vec_roundtrip() {
+        testkit::check("qr-qvec", 10, |rng, _| {
+            let m = 4 + rng.below(20);
+            let n = 1 + rng.below(m);
+            let a = Mat::gauss(m, n, rng);
+            let qr = Qr::new(&a);
+            let x0: Vec<f64> = (0..m).map(|_| rng.gauss()).collect();
+            let mut x = x0.clone();
+            qr.qt_vec(&mut x);
+            qr.q_vec(&mut x);
+            testkit::assert_allclose(&x, &x0, 1e-11);
+        });
+    }
+
+    #[test]
+    fn full_q_orthogonal_and_consistent_with_thin() {
+        testkit::check("qr-fullq", 10, |rng, _| {
+            let m = 3 + rng.below(20);
+            let n = 1 + rng.below(m);
+            let a = Mat::gauss(m, n, rng);
+            let qr = Qr::new(&a);
+            let qf = qr.full_q();
+            // orthogonal
+            let qtq = matmul(&qf, Trans::Yes, &qf, Trans::No);
+            testkit::assert_allclose(qtq.data(), Mat::eye(m).data(), 1e-10);
+            // first min(m,n) columns match thin Q
+            let thin = qr.thin_q();
+            let first = qf.block(0, 0, m, thin.cols());
+            testkit::assert_allclose(first.data(), thin.data(), 1e-10);
+        });
+    }
+
+    #[test]
+    fn least_squares_solves_square_system() {
+        testkit::check("qr-ls", 10, |rng, _| {
+            let n = 2 + rng.below(15);
+            let a = {
+                let mut m = Mat::gauss(n, n, rng);
+                m.shift_diag(3.0 * n as f64); // well-conditioned
+                m
+            };
+            let want: Vec<f64> = (0..n).map(|_| rng.gauss()).collect();
+            let mut b = vec![0.0; n];
+            blas::gemv(&a, &want, &mut b);
+            let got = Qr::new(&a).solve_ls(&b);
+            testkit::assert_allclose(&got, &want, 1e-9);
+        });
+    }
+
+    #[test]
+    fn ls_overdetermined_residual_orthogonal() {
+        testkit::check("qr-ls-over", 10, |rng, _| {
+            let m = 20 + rng.below(20);
+            let n = 3 + rng.below(8);
+            let a = Mat::gauss(m, n, rng);
+            let b: Vec<f64> = (0..m).map(|_| rng.gauss()).collect();
+            let x = Qr::new(&a).solve_ls(&b);
+            // residual r = b - Ax must satisfy Aᵀ r = 0
+            let mut ax = vec![0.0; m];
+            blas::gemv(&a, &x, &mut ax);
+            let r: Vec<f64> = b.iter().zip(ax.iter()).map(|(bi, ai)| bi - ai).collect();
+            let mut atr = vec![0.0f64; n];
+            blas::gemv_t(&a, &r, &mut atr);
+            for v in atr {
+                assert!(v.abs() < 1e-8, "normal equations violated: {v}");
+            }
+        });
+    }
+}

@@ -1,0 +1,451 @@
+//! `hss-svm` — train very-large-scale nonlinear SVMs with ADMM + HSS
+//! kernel approximations (Cipolla & Gondzio 2021 reproduction).
+//!
+//! Subcommands:
+//!   train       train on a Table-1 synthetic dataset or a LIBSVM file
+//!   grid        (h, C) grid search with HSS/ULV caching
+//!   experiment  regenerate a paper table/figure (table1..table5, fig1,
+//!               fig2, reuse, all)
+//!   info        environment, artifacts and dataset inventory
+//!   help        this text
+
+use anyhow::{bail, Context, Result};
+use hss_svm::admm::AdmmParams;
+use hss_svm::cli::Args;
+use hss_svm::cluster::SplitMethod;
+use hss_svm::coordinator::{run_suite, GridSearch, SuiteConfig};
+use hss_svm::data::synth::Table1Spec;
+use hss_svm::data::{libsvm, scale, synth, Dataset};
+use hss_svm::eval::{figures, report, tables};
+use hss_svm::hss::HssParams;
+use hss_svm::kernel::Kernel;
+use hss_svm::runtime::PjrtRuntime;
+use hss_svm::svm::{predict, train::train_hss_svm};
+use hss_svm::util::threadpool;
+use hss_svm::util::timer::Timer;
+use std::path::PathBuf;
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("argument error: {e:#}");
+            std::process::exit(2);
+        }
+    };
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: &Args) -> Result<()> {
+    match args.command.as_str() {
+        "train" => cmd_train(args),
+        "predict" => cmd_predict(args),
+        "serve" => cmd_serve(args),
+        "grid" => cmd_grid(args),
+        "experiment" => cmd_experiment(args),
+        "info" => cmd_info(args),
+        "help" | "" => {
+            print!("{HELP}");
+            Ok(())
+        }
+        other => bail!("unknown subcommand {other:?} (try `hss-svm help`)"),
+    }
+}
+
+const HELP: &str = r#"hss-svm — nonlinear SVM training via ADMM + HSS kernel approximations
+
+USAGE:
+  hss-svm train      --dataset <table1-name> [--scale F] [--h F] [--c F]
+                     [--beta F] [--iters N] [--hss low|high|exact]
+                     [--threads N] [--pjrt]
+  hss-svm train      --train-file f.libsvm --test-file g.libsvm [...same]
+                     [--save-model m.model]
+  hss-svm predict    --model m.model --test-file g.libsvm [--out pred.txt]
+                     [--pjrt]
+  hss-svm serve      --model m.model     # LIBSVM lines on stdin ->
+                                         # "<label> <decision>" per line
+  hss-svm grid       --dataset <name> [--scale F] [--h 0.1,1,10]
+                     [--c 0.1,1,10] [--hss low|high] [--threads N]
+  hss-svm experiment --id table1|table2|table3|table4|table5|fig1|fig2|reuse|all
+                     [--scale F] [--datasets a,b,...] [--out results/]
+                     [--baseline-cap N] [--threads N]
+  hss-svm info
+
+Datasets: synthetic workloads matched to the paper's Table 1
+(a8a w7a rcv1.binary a9a w8a ijcnn1 cod.rna skin.nonskin webspam.uni susy);
+--scale F generates F x the paper's sizes (default 0.01).
+"#;
+
+fn hss_params_from(args: &Args) -> Result<HssParams> {
+    let mut p = match args.str_or("hss", "low").as_str() {
+        "low" => HssParams::low_accuracy(),
+        "high" => HssParams::high_accuracy(),
+        "exact" => HssParams::near_exact(),
+        other => bail!("--hss must be low|high|exact, got {other:?}"),
+    };
+    if let Some(v) = args.str_opt("leaf") {
+        p.leaf_size = v.parse().context("--leaf expects an integer")?;
+    }
+    if let Some(v) = args.str_opt("split") {
+        p.split = match v {
+            "kmeans" => SplitMethod::TwoMeans,
+            "pca" => SplitMethod::Pca,
+            other => bail!("--split must be kmeans|pca, got {other:?}"),
+        };
+    }
+    Ok(p)
+}
+
+fn load_pair(args: &Args) -> Result<(Dataset, Dataset)> {
+    if let Some(train_file) = args.str_opt("train-file") {
+        let mut train = libsvm::read_file(train_file, None)?;
+        let dim = train.dim();
+        let mut test = match args.str_opt("test-file") {
+            Some(f) => libsvm::read_file(f, Some(dim))?,
+            None => {
+                // 70/30 split
+                let n = train.len();
+                let (tr, te) = train.split_at(n * 7 / 10);
+                train = tr;
+                te
+            }
+        };
+        scale::scale_pair(&mut train, &mut test);
+        Ok((train, test))
+    } else {
+        let name = args.str_or("dataset", "ijcnn1");
+        let spec = synth::table1_spec(&name)
+            .with_context(|| format!("unknown dataset {name:?} (see `hss-svm info`)"))?;
+        let scale_frac = args.f64_or("scale", 0.01)?;
+        let seed = args.usize_or("seed", 2021)? as u64;
+        Ok(hss_svm::coordinator::suite::prepare_dataset(spec, scale_frac, seed))
+    }
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let threads = args.usize_or("threads", threadpool::default_threads())?;
+    let (train, test) = load_pair(args)?;
+    let beta = args.f64_or("beta", Table1Spec::beta_for(train.len()))?;
+    let h = args.f64_or("h", 1.0)?;
+    let c = args.f64_or("c", 1.0)?;
+    let iters = args.usize_or("iters", 10)?;
+    let hss = hss_params_from(args)?;
+    println!(
+        "training on {} ({} pts x {} feats, {} positive; test {})",
+        train.name,
+        train.len(),
+        train.dim(),
+        train.positives(),
+        test.len()
+    );
+    let (model, stats) = train_hss_svm(
+        &train,
+        Kernel::Gaussian { h },
+        &hss,
+        &AdmmParams { beta, max_it: iters, relax: 1.0, tol: 0.0 },
+        c,
+        threads,
+    )?;
+    let t = Timer::start();
+    let acc = if args.has("pjrt") {
+        let rt = PjrtRuntime::load(PjrtRuntime::default_dir())
+            .context("--pjrt requires artifacts (run `make artifacts`)")?;
+        let pred = hss_svm::runtime::predict_pjrt(&rt, &model, &test.x)?;
+        let hits = pred.iter().zip(test.y.iter()).filter(|(p, y)| p == y).count();
+        hits as f64 / test.len().max(1) as f64
+    } else {
+        predict::accuracy(&model, &test, threads)
+    };
+    let predict_secs = t.secs();
+
+    println!(
+        "  compression   {:>9.3} s   (HSS max rank {}, {:.3} MB, {} kernel evals)",
+        stats.compress_secs,
+        stats.hss_max_rank,
+        stats.hss_memory_bytes as f64 / 1e6,
+        stats.kernel_evals
+    );
+    println!("  factorization {:>9.3} s", stats.factor_secs);
+    println!("  ADMM ({iters} it)  {:>9.3} s", stats.admm_secs);
+    println!(
+        "  prediction    {predict_secs:>9.3} s   ({} path)",
+        if args.has("pjrt") { "PJRT" } else { "native" }
+    );
+    println!("  support vectors: {}", model.n_sv());
+    println!("  test accuracy:   {:.3}%", acc * 100.0);
+    if let Some(path) = args.str_opt("save-model") {
+        hss_svm::svm::persist::save(&model, path)?;
+        println!("  model saved to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_predict(args: &Args) -> Result<()> {
+    let threads = args.usize_or("threads", threadpool::default_threads())?;
+    let model_path = args.str_opt("model").context("--model is required")?;
+    let model = hss_svm::svm::persist::load(model_path)?;
+    let test_path = args.str_opt("test-file").context("--test-file is required")?;
+    let test = libsvm::read_file(test_path, Some(model.sv.cols()))?;
+    let t = Timer::start();
+    let (pred, path_label) = if args.has("pjrt") {
+        let rt = PjrtRuntime::load(PjrtRuntime::default_dir())
+            .context("--pjrt requires artifacts (run `make artifacts`)")?;
+        (hss_svm::runtime::predict_pjrt(&rt, &model, &test.x)?, "PJRT")
+    } else {
+        (predict::predict(&model, &test.x, threads), "native")
+    };
+    let secs = t.secs();
+    let hits = pred.iter().zip(test.y.iter()).filter(|(p, y)| p == y).count();
+    println!(
+        "predicted {} points in {secs:.3}s ({path_label} path): accuracy {:.3}%",
+        test.len(),
+        100.0 * hits as f64 / test.len().max(1) as f64
+    );
+    if let Some(out) = args.str_opt("out") {
+        use std::io::Write;
+        let mut f = std::io::BufWriter::new(std::fs::File::create(out)?);
+        for p in &pred {
+            writeln!(f, "{}", if *p > 0.0 { "+1" } else { "-1" })?;
+        }
+        println!("predictions written to {out}");
+    }
+    Ok(())
+}
+
+/// Request loop: LIBSVM-format feature lines on stdin (label optional,
+/// use 0), one "<predicted label> <decision value>" per line on stdout.
+/// Requests are micro-batched per read for tile efficiency; this is the
+/// L3 "serving" mode — Python never runs here, prediction goes through
+/// the AOT artifacts when available.
+fn cmd_serve(args: &Args) -> Result<()> {
+    use std::io::BufRead;
+    let threads = args.usize_or("threads", threadpool::default_threads())?;
+    let model_path = args.str_opt("model").context("--model is required")?;
+    let model = hss_svm::svm::persist::load(model_path)?;
+    let rt = if args.has("pjrt") { PjrtRuntime::try_default() } else { None };
+    eprintln!(
+        "serving {} ({} SVs, dim {}), {} path; send LIBSVM lines, EOF to stop",
+        model_path,
+        model.n_sv(),
+        model.sv.cols(),
+        if rt.is_some() { "PJRT" } else { "native" }
+    );
+    let stdin = std::io::stdin();
+    let mut batch: Vec<String> = Vec::new();
+    let mut lines = stdin.lock().lines();
+    loop {
+        batch.clear();
+        // micro-batch: drain up to 128 lines (one tile)
+        for line in lines.by_ref() {
+            let line = line?;
+            if !line.trim().is_empty() {
+                batch.push(line);
+            }
+            if batch.len() >= 128 {
+                break;
+            }
+        }
+        if batch.is_empty() {
+            break;
+        }
+        let text = batch
+            .iter()
+            .map(|l| {
+                // allow bare feature lists (no label)
+                if l.trim_start().starts_with(|c: char| c.is_ascii_digit() && l.contains(':')) && !l.contains(' ') {
+                    format!("0 {l}")
+                } else if l.split_ascii_whitespace().next().map(|t| t.contains(':')).unwrap_or(false) {
+                    format!("0 {l}")
+                } else {
+                    l.clone()
+                }
+            })
+            .collect::<Vec<_>>()
+            .join("\n");
+        let ds = libsvm::read(std::io::Cursor::new(text), Some(model.sv.cols()))?;
+        let f = match &rt {
+            Some(rt) => hss_svm::runtime::decision_function_pjrt(rt, &model, &ds.x)?,
+            None => predict::decision_function(&model, &ds.x, threads),
+        };
+        for v in f {
+            println!("{} {v:.6}", if v >= 0.0 { "+1" } else { "-1" });
+        }
+        if batch.len() < 128 {
+            break; // stdin exhausted
+        }
+    }
+    Ok(())
+}
+
+fn cmd_grid(args: &Args) -> Result<()> {
+    let threads = args.usize_or("threads", threadpool::default_threads())?;
+    let (train, test) = load_pair(args)?;
+    let beta = args.f64_or("beta", Table1Spec::beta_for(train.len()))?;
+    let h_values = args.f64_list_or("h", &[0.1, 1.0, 10.0])?;
+    let c_values = args.f64_list_or("c", &[0.1, 1.0, 10.0])?;
+    let grid = GridSearch {
+        h_values: h_values.clone(),
+        c_values: c_values.clone(),
+        hss: hss_params_from(args)?,
+        admm: AdmmParams { beta, max_it: args.usize_or("iters", 10)?, relax: 1.0, tol: 0.0 },
+        threads,
+    };
+    println!("grid search on {} ({} pts), beta = {beta}", train.name, train.len());
+    let res = grid.run(&train, &test)?;
+    println!("{}", hss_svm::coordinator::grid::ascii_heatmap(&res, &h_values, &c_values));
+    println!(
+        "compression {:.3}s ({} h values) | factorization {:.3}s | total ADMM {:.3}s ({} cells)",
+        res.compress_secs,
+        h_values.len(),
+        res.factor_secs,
+        res.total_admm_secs,
+        res.cells.len()
+    );
+    println!(
+        "best: h = {}, C = {} -> accuracy {:.3}%",
+        res.best_h,
+        report::c_set(&res.best_cs),
+        res.best_accuracy * 100.0
+    );
+    Ok(())
+}
+
+fn cmd_experiment(args: &Args) -> Result<()> {
+    // config file first, CLI flags override
+    let cfg = match args.str_opt("config") {
+        Some(path) => hss_svm::config::Config::load(path)?,
+        None => hss_svm::config::Config::default(),
+    };
+    let id = args.str_opt("id").map(|s| s.to_string()).unwrap_or_else(|| cfg.str_or("", "id", "all"));
+    let scale_frac = args.f64_or("scale", cfg.f64_or("", "scale", 0.01))?;
+    let seed = args.usize_or("seed", cfg.usize_or("", "seed", 2021))? as u64;
+    let threads = args.usize_or("threads", threadpool::default_threads())?;
+    let out_dir = PathBuf::from(args.str_or("out", &cfg.str_or("", "out", "results")));
+    std::fs::create_dir_all(&out_dir).ok();
+    let cfg_datasets: Vec<&str> = Vec::new();
+    let mut datasets = args.str_list_or("datasets", &cfg_datasets);
+    if datasets.is_empty() {
+        if let Some(v) = cfg.get("suite", "datasets").and_then(|v| v.as_str_array()) {
+            datasets = v;
+        }
+    }
+    let baseline_cap =
+        args.usize_or("baseline-cap", cfg.usize_or("suite", "baseline_cap", 20_000))?;
+
+    let emit = |name: &str, t: &report::Table| -> Result<()> {
+        println!("{}", t.render());
+        let p = out_dir.join(format!("{name}.csv"));
+        t.write_csv(&p)?;
+        println!("[csv] {}\n", p.display());
+        Ok(())
+    };
+
+    let run_tables = |hss: HssParams,
+                      label: &str,
+                      with_baselines: bool|
+     -> Result<Vec<hss_svm::coordinator::SuiteRow>> {
+        let cfg = SuiteConfig {
+            datasets: datasets.clone(),
+            scale: scale_frac,
+            hss,
+            run_smo: with_baselines,
+            run_racqp: with_baselines,
+            baseline_cap,
+            threads,
+            seed,
+            ..Default::default()
+        };
+        println!("running suite [{label}] at scale {scale_frac} ...");
+        run_suite(&cfg)
+    };
+
+    match id.as_str() {
+        "table1" => emit("table1", &tables::table1(scale_frac, seed))?,
+        "table2" | "table3" => {
+            let rows = run_tables(HssParams::high_accuracy(), "high accuracy + baselines", true)?;
+            if id == "table2" {
+                emit("table2", &tables::baseline_table("Table 2: LIBSVM-style SMO", &rows, |r| r.smo))?;
+            } else {
+                emit(
+                    "table3",
+                    &tables::baseline_table("Table 3: RACQP-style multi-block ADMM", &rows, |r| {
+                        r.racqp
+                    }),
+                )?;
+            }
+        }
+        "table4" => {
+            let rows = run_tables(HssParams::low_accuracy(), "Table 4 (low accuracy)", false)?;
+            emit("table4", &tables::hss_table("Table 4: Strumpack&ADMM (low accuracy HSS)", &rows))?;
+        }
+        "table5" => {
+            let rows = run_tables(HssParams::high_accuracy(), "Table 5 (high accuracy)", false)?;
+            emit("table5", &tables::hss_table("Table 5: Strumpack&ADMM (high accuracy HSS)", &rows))?;
+        }
+        "fig1" => {
+            let (decay, ranks) = figures::fig1(seed);
+            emit("fig1_decay", &decay)?;
+            emit("fig1_ranks", &ranks)?;
+        }
+        "fig2" => {
+            for (name, heat, table) in figures::fig2(scale_frac, seed, threads)? {
+                println!("--- {name} ---\n{heat}");
+                emit(&format!("fig2_{name}"), &table)?;
+            }
+        }
+        "reuse" => {
+            let rows = run_tables(HssParams::low_accuracy(), "grid-reuse", true)?;
+            emit("reuse", &tables::grid_reuse_table(&rows, 3))?;
+        }
+        "all" => {
+            emit("table1", &tables::table1(scale_frac, seed))?;
+            let rows4 = run_tables(HssParams::low_accuracy(), "Table 4 (low accuracy)", false)?;
+            emit("table4", &tables::hss_table("Table 4: Strumpack&ADMM (low accuracy HSS)", &rows4))?;
+            let rows5 = run_tables(HssParams::high_accuracy(), "Table 5 + baselines", true)?;
+            emit("table5", &tables::hss_table("Table 5: Strumpack&ADMM (high accuracy HSS)", &rows5))?;
+            emit("table2", &tables::baseline_table("Table 2: LIBSVM-style SMO", &rows5, |r| r.smo))?;
+            emit(
+                "table3",
+                &tables::baseline_table("Table 3: RACQP-style multi-block ADMM", &rows5, |r| r.racqp),
+            )?;
+            emit("reuse", &tables::grid_reuse_table(&rows5, 3))?;
+            let (decay, ranks) = figures::fig1(seed);
+            emit("fig1_decay", &decay)?;
+            emit("fig1_ranks", &ranks)?;
+            for (name, heat, table) in figures::fig2(scale_frac, seed, threads)? {
+                println!("--- {name} ---\n{heat}");
+                emit(&format!("fig2_{name}"), &table)?;
+            }
+        }
+        other => bail!("unknown experiment {other:?}"),
+    }
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let _ = args;
+    println!("hss-svm {} — ADMM + HSS nonlinear SVM training", env!("CARGO_PKG_VERSION"));
+    println!("threads (default): {}", threadpool::default_threads());
+    match PjrtRuntime::load(PjrtRuntime::default_dir()) {
+        Ok(rt) => {
+            let (k, d) = rt.dims();
+            println!("PJRT artifacts: kernel tiles f={k:?}, decision tiles f={d:?}");
+        }
+        Err(e) => println!("PJRT artifacts: unavailable ({e})"),
+    }
+    println!("\nTable-1 datasets (synthetic; use --scale to size):");
+    for s in synth::TABLE1 {
+        println!(
+            "  {:<14} features {:>6}  train {:>8} (+{:>7})  test {:>8}",
+            s.name, s.features, s.train, s.train_pos, s.test
+        );
+    }
+    Ok(())
+}

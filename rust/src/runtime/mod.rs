@@ -1,0 +1,48 @@
+//! PJRT runtime: load AOT artifacts and execute them from the hot path.
+//!
+//! The bridge half of the three-layer architecture: `make artifacts`
+//! lowers the L2 JAX model (which embeds the L1 Pallas kernel) to HLO
+//! text; this module parses each `artifacts/*.hlo.txt` with
+//! `HloModuleProto::from_text_file`, compiles it **once** on the CPU
+//! PJRT client, and serves tile evaluations to prediction and
+//! kernel-probe call sites. Python never runs at request time.
+//!
+//! Shape adaptation: artifacts exist for a few feature dims (8/32/128/
+//! 512); inputs are zero-padded up to the next available dim (exact for
+//! the Gaussian kernel — padding adds 0 to every squared distance) and
+//! SV chunks are padded with αy = 0 rows (exactly no contribution).
+
+pub mod pjrt;
+
+pub use pjrt::{PjrtRuntime, RuntimeStats};
+
+use crate::linalg::Mat;
+use crate::svm::SvmModel;
+use anyhow::Result;
+
+/// Decision function served by PJRT-executed fused tiles
+/// (falls back tile-by-tile is NOT done here: callers choose the native
+/// path explicitly when no runtime is available).
+pub fn decision_function_pjrt(rt: &PjrtRuntime, model: &SvmModel, x: &Mat) -> Result<Vec<f64>> {
+    let n = x.rows();
+    let mut out = Vec::with_capacity(n);
+    let tile = pjrt::TILE_M;
+    let mut i0 = 0;
+    while i0 < n {
+        let ib = tile.min(n - i0);
+        let rows: Vec<usize> = (i0..i0 + ib).collect();
+        let xb = x.select_rows(&rows);
+        let f = rt.decision_tile(&xb, &model.sv, &model.alpha_y, model.kernel.gamma())?;
+        out.extend(f.into_iter().take(ib).map(|v| v + model.bias));
+        i0 += ib;
+    }
+    Ok(out)
+}
+
+/// Predicted ±1 labels via the PJRT path.
+pub fn predict_pjrt(rt: &PjrtRuntime, model: &SvmModel, x: &Mat) -> Result<Vec<f64>> {
+    Ok(decision_function_pjrt(rt, model, x)?
+        .into_iter()
+        .map(|f| if f >= 0.0 { 1.0 } else { -1.0 })
+        .collect())
+}

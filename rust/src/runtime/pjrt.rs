@@ -1,0 +1,225 @@
+//! The PJRT client wrapper: artifact discovery, one-time compilation,
+//! literal marshalling, tile execution.
+
+use crate::linalg::Mat;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Tile geometry — must match python/compile/model.py.
+pub const TILE_M: usize = 128;
+pub const TILE_N: usize = 128;
+pub const SV_CHUNK: usize = 1024;
+
+/// Execution counters (observability for the perf pass).
+#[derive(Debug, Default)]
+pub struct RuntimeStats {
+    pub kernel_tile_calls: AtomicUsize,
+    pub decision_tile_calls: AtomicUsize,
+}
+
+/// Compiled-once PJRT executables keyed by feature dimension.
+pub struct PjrtRuntime {
+    // PJRT handles are not Sync; all execution goes through this mutex.
+    // Tile execution is milliseconds-scale, callers batch work per call.
+    inner: Mutex<Inner>,
+    /// Feature dims with a compiled kernel-tile artifact.
+    kernel_dims: Vec<usize>,
+    /// Feature dims with a compiled decision-tile artifact.
+    decision_dims: Vec<usize>,
+    pub stats: RuntimeStats,
+}
+
+struct Inner {
+    _client: xla::PjRtClient,
+    kernel_tiles: BTreeMap<usize, xla::PjRtLoadedExecutable>,
+    decision_tiles: BTreeMap<usize, xla::PjRtLoadedExecutable>,
+}
+
+// SAFETY: all raw PJRT access is guarded by the Mutex above; the handles
+// themselves are only ever used from one thread at a time.
+unsafe impl Send for Inner {}
+
+impl PjrtRuntime {
+    /// Default artifact directory: $HSS_SVM_ARTIFACTS or ./artifacts.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("HSS_SVM_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    /// Load and compile every artifact listed in `<dir>/manifest.txt`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref();
+        let manifest = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&manifest)
+            .with_context(|| format!("no artifact manifest at {} (run `make artifacts`)", manifest.display()))?;
+
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
+        let mut kernel_tiles = BTreeMap::new();
+        let mut decision_tiles = BTreeMap::new();
+
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let mut parts = line.split_ascii_whitespace();
+            let name = parts.next().unwrap();
+            let mut kind = "";
+            let mut f = 0usize;
+            for kv in parts {
+                if let Some((k, v)) = kv.split_once('=') {
+                    match k {
+                        "kind" => kind = if v == "kernel_tile" { "k" } else { "d" },
+                        "f" => f = v.parse().context("bad f in manifest")?,
+                        _ => {}
+                    }
+                }
+            }
+            if f == 0 || kind.is_empty() {
+                bail!("malformed manifest line: {line}");
+            }
+            let path = dir.join(format!("{name}.hlo.txt"));
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 path")?,
+            )
+            .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {}: {e:?}", path.display()))?;
+            if kind == "k" {
+                kernel_tiles.insert(f, exe);
+            } else {
+                decision_tiles.insert(f, exe);
+            }
+        }
+        if kernel_tiles.is_empty() && decision_tiles.is_empty() {
+            bail!("manifest {} lists no artifacts", manifest.display());
+        }
+        let kernel_dims: Vec<usize> = kernel_tiles.keys().copied().collect();
+        let decision_dims: Vec<usize> = decision_tiles.keys().copied().collect();
+        Ok(PjrtRuntime {
+            inner: Mutex::new(Inner { _client: client, kernel_tiles, decision_tiles }),
+            kernel_dims,
+            decision_dims,
+            stats: RuntimeStats::default(),
+        })
+    }
+
+    /// Try loading from the default dir; `None` when artifacts absent.
+    pub fn try_default() -> Option<Self> {
+        Self::load(Self::default_dir()).ok()
+    }
+
+    /// Smallest compiled feature dim ≥ `f` (zero-padding is exact).
+    fn pick_dim(dims: &[usize], f: usize) -> Result<usize> {
+        dims.iter()
+            .copied()
+            .find(|&d| d >= f)
+            .ok_or_else(|| anyhow!("feature dim {f} exceeds all compiled artifacts {dims:?}"))
+    }
+
+    /// K(x, y) tile: x (m ≤ 128, f), y (n ≤ 128, f) → (m, n).
+    /// Rows beyond m/n are zero-padded and sliced away.
+    pub fn kernel_tile(&self, x: &Mat, y: &Mat, gamma: f64) -> Result<Mat> {
+        assert_eq!(x.cols(), y.cols());
+        let (m, n) = (x.rows(), y.rows());
+        assert!(m <= TILE_M && n <= TILE_N, "tile too large: {m}x{n}");
+        let fdim = Self::pick_dim(&self.kernel_dims, x.cols())?;
+        let xl = mat_to_literal(x, TILE_M, fdim)?;
+        let yl = mat_to_literal(y, TILE_N, fdim)?;
+        let gl = xla::Literal::scalar(gamma as f32);
+        self.stats.kernel_tile_calls.fetch_add(1, Ordering::Relaxed);
+
+        let inner = self.inner.lock().unwrap();
+        let exe = inner.kernel_tiles.get(&fdim).unwrap();
+        let result = exe
+            .execute::<xla::Literal>(&[xl, yl, gl])
+            .map_err(|e| anyhow!("kernel_tile execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("kernel_tile fetch: {e:?}"))?;
+        let out = result.to_tuple1().map_err(|e| anyhow!("kernel_tile tuple: {e:?}"))?;
+        let vals: Vec<f32> = out.to_vec().map_err(|e| anyhow!("kernel_tile vec: {e:?}"))?;
+        debug_assert_eq!(vals.len(), TILE_M * TILE_N);
+        let mut k = Mat::zeros(m, n);
+        for i in 0..m {
+            for j in 0..n {
+                k[(i, j)] = vals[i * TILE_N + j] as f64;
+            }
+        }
+        Ok(k)
+    }
+
+    /// Fused decision tile: f(x) = Σ_chunks K(x, sv_chunk) @ αy_chunk.
+    /// x (t ≤ 128, f), sv (s, f) any s. Bias NOT added here.
+    pub fn decision_tile(&self, x: &Mat, sv: &Mat, alpha_y: &[f64], gamma: f64) -> Result<Vec<f64>> {
+        assert_eq!(x.cols(), sv.cols());
+        assert_eq!(sv.rows(), alpha_y.len());
+        let t = x.rows();
+        assert!(t <= TILE_M, "tile too large: {t}");
+        let fdim = Self::pick_dim(&self.decision_dims, x.cols())?;
+        let xl = mat_to_literal(x, TILE_M, fdim)?;
+        let gl = xla::Literal::scalar(gamma as f32);
+
+        let mut acc = vec![0.0f64; t];
+        let s = sv.rows();
+        let mut c0 = 0;
+        while c0 < s {
+            let cb = SV_CHUNK.min(s - c0);
+            let rows: Vec<usize> = (c0..c0 + cb).collect();
+            let svb = sv.select_rows(&rows);
+            let svl = mat_to_literal(&svb, SV_CHUNK, fdim)?;
+            let mut av = vec![0.0f32; SV_CHUNK];
+            for (k, &r) in rows.iter().enumerate() {
+                av[k] = alpha_y[r] as f32;
+            }
+            let al = xla::Literal::vec1(&av);
+            self.stats.decision_tile_calls.fetch_add(1, Ordering::Relaxed);
+
+            let inner = self.inner.lock().unwrap();
+            let exe = inner.decision_tiles.get(&fdim).unwrap();
+            let result = exe
+                .execute::<xla::Literal>(&[
+                    xl.reshape(&[TILE_M as i64, fdim as i64])
+                        .map_err(|e| anyhow!("reshape: {e:?}"))?,
+                    svl,
+                    al,
+                    gl.reshape(&[]).map_err(|e| anyhow!("reshape g: {e:?}"))?,
+                ])
+                .map_err(|e| anyhow!("decision_tile execute: {e:?}"))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("decision_tile fetch: {e:?}"))?;
+            let out = result.to_tuple1().map_err(|e| anyhow!("tuple: {e:?}"))?;
+            let vals: Vec<f32> = out.to_vec().map_err(|e| anyhow!("vec: {e:?}"))?;
+            for i in 0..t {
+                acc[i] += vals[i] as f64;
+            }
+            c0 += cb;
+        }
+        Ok(acc)
+    }
+
+    /// Feature dims available per artifact kind (diagnostics).
+    pub fn dims(&self) -> (Vec<usize>, Vec<usize>) {
+        (self.kernel_dims.clone(), self.decision_dims.clone())
+    }
+}
+
+/// Pack a Mat (f64) into a zero-padded (rows_pad × cols_pad) f32 literal.
+fn mat_to_literal(m: &Mat, rows_pad: usize, cols_pad: usize) -> Result<xla::Literal> {
+    assert!(m.rows() <= rows_pad && m.cols() <= cols_pad);
+    let mut buf = vec![0.0f32; rows_pad * cols_pad];
+    for i in 0..m.rows() {
+        let src = m.row(i);
+        for (j, &v) in src.iter().enumerate() {
+            buf[i * cols_pad + j] = v as f32;
+        }
+    }
+    xla::Literal::vec1(&buf)
+        .reshape(&[rows_pad as i64, cols_pad as i64])
+        .map_err(|e| anyhow!("literal reshape: {e:?}"))
+}

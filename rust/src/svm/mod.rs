@@ -1,0 +1,16 @@
+//! SVM training and prediction built on the ADMM + HSS stack.
+//!
+//! NOTE on the paper's eq. (2): as printed, b = Σᵢyᵢx̄ᵢK(fᵢ,fⱼ) − yⱼ has
+//! the sign flipped relative to the KKT condition yⱼ(f(fⱼ)) = 1; we
+//! implement the KKT-consistent version b = yⱼ − Σᵢyᵢx̄ᵢK(fᵢ,fⱼ)
+//! (averaged over margin SVs per eq. (7)), which is what LIBSVM computes.
+
+pub mod model;
+pub mod multiclass;
+pub mod persist;
+pub mod predict;
+pub mod svr;
+pub mod train;
+
+pub use model::SvmModel;
+pub use train::{train_hss_svm, HssSvmTrainer, TrainStats};

@@ -1,0 +1,91 @@
+//! Trained SVM model: support vectors, coefficients, bias.
+
+use crate::kernel::Kernel;
+use crate::linalg::Mat;
+
+/// A trained (binary) SVM classifier.
+///
+/// Stores only the support vectors (points with nonzero dual weight),
+/// their combined coefficients αᵢyᵢ, and the bias b. The decision
+/// function is  f(t) = Σᵢ (αy)ᵢ K(svᵢ, t) + b.
+#[derive(Clone)]
+pub struct SvmModel {
+    /// Support vectors, one per row.
+    pub sv: Mat,
+    /// Combined coefficients (αy)ᵢ = αᵢ·yᵢ, one per support vector.
+    pub alpha_y: Vec<f64>,
+    /// Bias term b.
+    pub bias: f64,
+    /// Kernel the model was trained with.
+    pub kernel: Kernel,
+    /// Penalty C used at training time (diagnostics).
+    pub c: f64,
+}
+
+impl SvmModel {
+    /// Number of support vectors.
+    pub fn n_sv(&self) -> usize {
+        self.sv.rows()
+    }
+
+    /// Decision value for a single point.
+    pub fn decision_one(&self, t: &[f64]) -> f64 {
+        let mut f = self.bias;
+        for i in 0..self.n_sv() {
+            f += self.alpha_y[i] * self.kernel.eval(self.sv.row(i), t);
+        }
+        f
+    }
+
+    /// Predicted label (±1) for a single point.
+    pub fn predict_one(&self, t: &[f64]) -> f64 {
+        if self.decision_one(t) >= 0.0 {
+            1.0
+        } else {
+            -1.0
+        }
+    }
+
+    /// Model memory footprint (bytes).
+    pub fn memory_bytes(&self) -> usize {
+        self.sv.bytes() + self.alpha_y.len() * std::mem::size_of::<f64>()
+    }
+}
+
+impl std::fmt::Debug for SvmModel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "SvmModel({} SVs, dim {}, {}, C={}, b={:.4})",
+            self.n_sv(),
+            self.sv.cols(),
+            self.kernel.label(),
+            self.c,
+            self.bias
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decision_function_hand_computed() {
+        // two SVs on a line with linear kernel: f(t) = 1·(1·t) − 0.5·(2·t) + 0.25
+        let sv = Mat::from_vec(2, 1, vec![1.0, 2.0]);
+        let m = SvmModel {
+            sv,
+            alpha_y: vec![1.0, -0.5],
+            bias: 0.25,
+            kernel: Kernel::Linear,
+            c: 1.0,
+        };
+        let f = m.decision_one(&[3.0]);
+        // 1*3 − 0.5*6 + 0.25 = 0.25
+        assert!((f - 0.25).abs() < 1e-14);
+        assert_eq!(m.predict_one(&[3.0]), 1.0);
+        assert_eq!(m.n_sv(), 2);
+        assert!(m.memory_bytes() > 0);
+    }
+}

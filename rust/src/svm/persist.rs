@@ -1,0 +1,169 @@
+//! Model persistence: a self-describing text format (versioned, no
+//! external serialization crates) compatible in spirit with LIBSVM's
+//! model files. Round-trips exactly (f64 bit patterns are preserved via
+//! hex encoding with a human-readable decimal alongside).
+
+use crate::kernel::Kernel;
+use crate::linalg::Mat;
+use crate::svm::SvmModel;
+use anyhow::{bail, Context, Result};
+use std::io::{BufRead, BufWriter, Write};
+use std::path::Path;
+
+const MAGIC: &str = "hss-svm-model v1";
+
+/// Write a model to a file.
+pub fn save(model: &SvmModel, path: impl AsRef<Path>) -> Result<()> {
+    let f = std::fs::File::create(path.as_ref())
+        .with_context(|| format!("cannot create {}", path.as_ref().display()))?;
+    let mut w = BufWriter::new(f);
+    writeln!(w, "{MAGIC}")?;
+    match model.kernel {
+        Kernel::Gaussian { h } => writeln!(w, "kernel gaussian {}", hexf(h))?,
+        Kernel::Polynomial { degree, c } => writeln!(w, "kernel polynomial {degree} {}", hexf(c))?,
+        Kernel::Linear => writeln!(w, "kernel linear")?,
+    }
+    writeln!(w, "c {}", hexf(model.c))?;
+    writeln!(w, "bias {}", hexf(model.bias))?;
+    writeln!(w, "sv {} {}", model.sv.rows(), model.sv.cols())?;
+    for i in 0..model.sv.rows() {
+        write!(w, "{}", hexf(model.alpha_y[i]))?;
+        for &v in model.sv.row(i) {
+            write!(w, " {}", hexf(v))?;
+        }
+        writeln!(w)?;
+    }
+    Ok(())
+}
+
+/// Load a model from a file.
+pub fn load(path: impl AsRef<Path>) -> Result<SvmModel> {
+    let f = std::fs::File::open(path.as_ref())
+        .with_context(|| format!("cannot open {}", path.as_ref().display()))?;
+    let mut lines = std::io::BufReader::new(f).lines();
+    let mut next = || -> Result<String> {
+        lines.next().context("unexpected end of model file")?.context("I/O error")
+    };
+    let magic = next()?;
+    if magic.trim() != MAGIC {
+        bail!("not a hss-svm model file (got header {magic:?})");
+    }
+    let kline = next()?;
+    let mut kp = kline.split_ascii_whitespace();
+    if kp.next() != Some("kernel") {
+        bail!("expected kernel line, got {kline:?}");
+    }
+    let kernel = match kp.next() {
+        Some("gaussian") => Kernel::Gaussian { h: unhexf(kp.next().context("missing h")?)? },
+        Some("polynomial") => Kernel::Polynomial {
+            degree: kp.next().context("missing degree")?.parse()?,
+            c: unhexf(kp.next().context("missing c")?)?,
+        },
+        Some("linear") => Kernel::Linear,
+        other => bail!("unknown kernel {other:?}"),
+    };
+    let c = parse_kv(&next()?, "c")?;
+    let bias = parse_kv(&next()?, "bias")?;
+    let svline = next()?;
+    let mut sp = svline.split_ascii_whitespace();
+    if sp.next() != Some("sv") {
+        bail!("expected sv line, got {svline:?}");
+    }
+    let rows: usize = sp.next().context("missing sv rows")?.parse()?;
+    let cols: usize = sp.next().context("missing sv cols")?.parse()?;
+    let mut sv = Mat::zeros(rows, cols);
+    let mut alpha_y = Vec::with_capacity(rows);
+    for i in 0..rows {
+        let line = next()?;
+        let mut parts = line.split_ascii_whitespace();
+        alpha_y.push(unhexf(parts.next().context("missing alpha")?)?);
+        for j in 0..cols {
+            sv[(i, j)] = unhexf(parts.next().with_context(|| format!("row {i}: missing sv value {j}"))?)?;
+        }
+    }
+    Ok(SvmModel { sv, alpha_y, bias, kernel, c })
+}
+
+fn parse_kv(line: &str, key: &str) -> Result<f64> {
+    let mut p = line.split_ascii_whitespace();
+    if p.next() != Some(key) {
+        bail!("expected {key} line, got {line:?}");
+    }
+    unhexf(p.next().with_context(|| format!("missing {key} value"))?)
+}
+
+/// Exact f64 as hex bits (with decimal comment form `0x…` only).
+fn hexf(v: f64) -> String {
+    format!("{:016x}", v.to_bits())
+}
+
+fn unhexf(s: &str) -> Result<f64> {
+    let bits = u64::from_str_radix(s, 16).with_context(|| format!("bad f64 hex {s:?}"))?;
+    Ok(f64::from_bits(bits))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn toy_model(rng: &mut Rng) -> SvmModel {
+        SvmModel {
+            sv: Mat::gauss(7, 3, rng),
+            alpha_y: (0..7).map(|_| rng.gauss()).collect(),
+            bias: rng.gauss(),
+            kernel: Kernel::Gaussian { h: 0.37 },
+            c: 2.5,
+        }
+    }
+
+    #[test]
+    fn roundtrip_is_bit_exact() {
+        let mut rng = Rng::new(601);
+        let model = toy_model(&mut rng);
+        let dir = std::env::temp_dir().join("hss_svm_persist_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("m.model");
+        save(&model, &p).unwrap();
+        let back = load(&p).unwrap();
+        assert_eq!(back.sv.data(), model.sv.data());
+        assert_eq!(back.alpha_y, model.alpha_y);
+        assert_eq!(back.bias.to_bits(), model.bias.to_bits());
+        assert_eq!(back.kernel, model.kernel);
+        assert_eq!(back.c, model.c);
+        // identical decisions
+        let x = Mat::gauss(10, 3, &mut rng);
+        for i in 0..10 {
+            assert_eq!(model.decision_one(x.row(i)), back.decision_one(x.row(i)));
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn all_kernel_variants_roundtrip() {
+        let mut rng = Rng::new(602);
+        let dir = std::env::temp_dir().join("hss_svm_persist_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        for kernel in [
+            Kernel::Gaussian { h: 1.5 },
+            Kernel::Polynomial { degree: 3, c: 0.5 },
+            Kernel::Linear,
+        ] {
+            let model = SvmModel { kernel, ..toy_model(&mut rng) };
+            let p = dir.join("k.model");
+            save(&model, &p).unwrap();
+            assert_eq!(load(&p).unwrap().kernel, kernel);
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let dir = std::env::temp_dir().join("hss_svm_persist_test3");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.model");
+        std::fs::write(&p, "not a model\n").unwrap();
+        assert!(load(&p).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

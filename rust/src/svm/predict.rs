@@ -1,0 +1,127 @@
+//! Blocked prediction (Algorithm 3, lines 18–20).
+//!
+//! Test points are processed in row tiles; each tile needs one dense
+//! kernel block K(tile, SV) followed by a matvec against αy — exactly the
+//! fused "decision tile" the L2 JAX model lowers to HLO. The native path
+//! here is the correctness oracle for (and fallback of) the PJRT path in
+//! [`crate::runtime`].
+
+use crate::data::Dataset;
+use crate::kernel::block::{kernel_block_with_norms, self_norms};
+use crate::linalg::blas;
+use crate::linalg::Mat;
+use crate::svm::model::SvmModel;
+use crate::util::threadpool;
+
+/// Rows per prediction tile (matches the AOT artifact tile height).
+pub const TILE: usize = 128;
+
+/// Decision values f(tⱼ) for every row of `x`.
+pub fn decision_function(model: &SvmModel, x: &Mat, threads: usize) -> Vec<f64> {
+    assert_eq!(x.cols(), model.sv.cols(), "feature dimension mismatch");
+    let n = x.rows();
+    let sv_norms = self_norms(&model.sv);
+    let n_tiles = n.div_ceil(TILE);
+    let tiles: Vec<Vec<f64>> = threadpool::parallel_map(threads, n_tiles, |t| {
+        let lo = t * TILE;
+        let hi = (lo + TILE).min(n);
+        let rows: Vec<usize> = (lo..hi).collect();
+        let xb = x.select_rows(&rows);
+        let xb_norms = self_norms(&xb);
+        let kb = kernel_block_with_norms(&model.kernel, &xb, &xb_norms, &model.sv, &sv_norms);
+        let mut f = vec![0.0; hi - lo];
+        blas::gemv(&kb, &model.alpha_y, &mut f);
+        for v in &mut f {
+            *v += model.bias;
+        }
+        f
+    });
+    tiles.concat()
+}
+
+/// Predicted labels (±1).
+pub fn predict(model: &SvmModel, x: &Mat, threads: usize) -> Vec<f64> {
+    decision_function(model, x, threads)
+        .into_iter()
+        .map(|f| if f >= 0.0 { 1.0 } else { -1.0 })
+        .collect()
+}
+
+/// Classification accuracy on a labelled dataset.
+pub fn accuracy(model: &SvmModel, ds: &Dataset, threads: usize) -> f64 {
+    if ds.is_empty() {
+        return 1.0;
+    }
+    let pred = predict(model, &ds.x, threads);
+    let hits = pred.iter().zip(ds.y.iter()).filter(|(p, y)| p == y).count();
+    hits as f64 / ds.len() as f64
+}
+
+/// Confusion counts (tp, fp, tn, fn).
+pub fn confusion(model: &SvmModel, ds: &Dataset, threads: usize) -> (usize, usize, usize, usize) {
+    let pred = predict(model, &ds.x, threads);
+    let (mut tp, mut fp, mut tn, mut fneg) = (0, 0, 0, 0);
+    for (p, &y) in pred.iter().zip(ds.y.iter()) {
+        match (*p > 0.0, y > 0.0) {
+            (true, true) => tp += 1,
+            (true, false) => fp += 1,
+            (false, false) => tn += 1,
+            (false, true) => fneg += 1,
+        }
+    }
+    (tp, fp, tn, fneg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::Kernel;
+    use crate::util::prng::Rng;
+    use crate::util::testkit;
+
+    fn toy_model(rng: &mut Rng, n_sv: usize, dim: usize) -> SvmModel {
+        SvmModel {
+            sv: Mat::gauss(n_sv, dim, rng),
+            alpha_y: (0..n_sv).map(|_| rng.gauss()).collect(),
+            bias: rng.gauss(),
+            kernel: Kernel::Gaussian { h: 0.9 },
+            c: 1.0,
+        }
+    }
+
+    #[test]
+    fn blocked_decision_matches_pointwise() {
+        let mut rng = Rng::new(71);
+        let model = toy_model(&mut rng, 37, 5);
+        // n crosses several tile boundaries
+        let x = Mat::gauss(TILE * 2 + 17, 5, &mut rng);
+        let got = decision_function(&model, &x, 3);
+        for i in 0..x.rows() {
+            let want = model.decision_one(x.row(i));
+            testkit::assert_close(got[i], want, 1e-10);
+        }
+    }
+
+    #[test]
+    fn accuracy_and_confusion_consistent() {
+        let mut rng = Rng::new(72);
+        let model = toy_model(&mut rng, 20, 3);
+        let ds = crate::data::synth::blobs(130, 3, 3, 0.4, &mut rng);
+        let acc = accuracy(&model, &ds, 2);
+        let (tp, fp, tn, fneg) = confusion(&model, &ds, 2);
+        assert_eq!(tp + fp + tn + fneg, 130);
+        testkit::assert_close(acc, (tp + tn) as f64 / 130.0, 1e-12);
+    }
+
+    #[test]
+    fn predict_labels_are_signs() {
+        let mut rng = Rng::new(73);
+        let model = toy_model(&mut rng, 10, 2);
+        let x = Mat::gauss(50, 2, &mut rng);
+        let f = decision_function(&model, &x, 1);
+        let p = predict(&model, &x, 1);
+        for i in 0..50 {
+            assert_eq!(p[i], if f[i] >= 0.0 { 1.0 } else { -1.0 });
+        }
+    }
+}

@@ -1,0 +1,129 @@
+//! Micro/macro benchmark harness (offline substitute for criterion).
+//!
+//! `cargo bench` targets use `harness = false` and drive this: warmup,
+//! adaptive iteration count targeting a wall-time budget, then report
+//! median / p10 / p90 per-iteration times.
+
+use crate::util::timer::Timer;
+use std::time::Duration;
+
+/// One measured benchmark result.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub median: Duration,
+    pub p10: Duration,
+    pub p90: Duration,
+}
+
+impl BenchResult {
+    pub fn line(&self) -> String {
+        format!(
+            "{:<44} {:>12} {:>12} {:>12}   x{}",
+            self.name,
+            fmt_dur(self.median),
+            fmt_dur(self.p10),
+            fmt_dur(self.p90),
+            self.iters
+        )
+    }
+}
+
+fn fmt_dur(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else {
+        format!("{:.3} us", s * 1e6)
+    }
+}
+
+/// Benchmark runner with a per-case time budget.
+pub struct Bench {
+    budget: Duration,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self::new(Duration::from_secs(2))
+    }
+}
+
+impl Bench {
+    pub fn new(budget: Duration) -> Self {
+        println!(
+            "{:<44} {:>12} {:>12} {:>12}   iters",
+            "benchmark", "median", "p10", "p90"
+        );
+        println!("{}", "-".repeat(92));
+        Bench { budget, results: Vec::new() }
+    }
+
+    /// Measure `f` (called once per iteration). A warmup call estimates
+    /// the single-shot cost; heavy cases run at least 3 iterations.
+    pub fn run(&mut self, name: &str, mut f: impl FnMut()) -> &BenchResult {
+        // warmup + cost estimate
+        let t = Timer::start();
+        f();
+        let once = t.elapsed();
+        let iters = (self.budget.as_secs_f64() / once.as_secs_f64().max(1e-9)) as usize;
+        let iters = iters.clamp(3, 10_000);
+        let mut samples = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let t = Timer::start();
+            f();
+            samples.push(t.elapsed());
+        }
+        samples.sort();
+        let result = BenchResult {
+            name: name.to_string(),
+            iters,
+            median: samples[samples.len() / 2],
+            p10: samples[samples.len() / 10],
+            p90: samples[samples.len() * 9 / 10],
+        };
+        println!("{}", result.line());
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    /// Record an externally measured one-shot duration (for multi-minute
+    /// macro benchmarks where repetition is pointless).
+    pub fn record_once(&mut self, name: &str, d: Duration) {
+        let result = BenchResult { name: name.to_string(), iters: 1, median: d, p10: d, p90: d };
+        println!("{}", result.line());
+        self.results.push(result);
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_stats() {
+        let mut b = Bench::new(Duration::from_millis(50));
+        let r = b.run("noop-ish", || {
+            std::hint::black_box((0..100).sum::<usize>());
+        });
+        assert!(r.iters >= 3);
+        assert!(r.p10 <= r.median && r.median <= r.p90);
+        b.record_once("macro", Duration::from_secs(1));
+        assert_eq!(b.results().len(), 2);
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert_eq!(fmt_dur(Duration::from_secs(2)), "2.000 s");
+        assert_eq!(fmt_dur(Duration::from_millis(5)), "5.000 ms");
+        assert_eq!(fmt_dur(Duration::from_micros(7)), "7.000 us");
+    }
+}

@@ -1,0 +1,29 @@
+//! Shared utilities: deterministic PRNG, timers, scoped parallelism, the
+//! property-test harness, and human-readable size formatting.
+
+pub mod bench;
+pub mod prng;
+pub mod testkit;
+pub mod threadpool;
+pub mod timer;
+
+/// Format a byte count as MB with 3 decimals (paper tables report MB).
+pub fn fmt_mb(bytes: usize) -> String {
+    format!("{:.3}", bytes as f64 / 1e6)
+}
+
+/// Bytes of an `f64` buffer with `n` entries.
+pub const fn f64_bytes(n: usize) -> usize {
+    n * std::mem::size_of::<f64>()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mb_formatting() {
+        assert_eq!(fmt_mb(1_500_000), "1.500");
+        assert_eq!(f64_bytes(10), 80);
+    }
+}

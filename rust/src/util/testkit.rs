@@ -1,0 +1,94 @@
+//! Minimal property-based testing harness (offline substitute for
+//! `proptest`). Runs a property over many seeded random cases and, on
+//! failure, reports the seed so the case replays deterministically.
+
+use crate::util::prng::Rng;
+
+/// Run `prop(rng, case_index)` for `cases` seeded cases. Panics with the
+/// replay seed on the first failing case (a property fails by panicking).
+pub fn check(name: &str, cases: usize, prop: impl Fn(&mut Rng, usize)) {
+    let base = env_seed().unwrap_or(0xC0FFEE);
+    for case in 0..cases {
+        let seed = base ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut rng, case);
+        }));
+        if let Err(e) = result {
+            let msg = panic_msg(&e);
+            panic!(
+                "property `{name}` failed on case {case}/{cases} \
+                 (replay: HSS_SVM_TEST_SEED={base}): {msg}"
+            );
+        }
+    }
+}
+
+fn env_seed() -> Option<u64> {
+    std::env::var("HSS_SVM_TEST_SEED").ok()?.parse().ok()
+}
+
+fn panic_msg(e: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = e.downcast_ref::<&str>() {
+        s.to_string()
+    } else if let Some(s) = e.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "<non-string panic>".into()
+    }
+}
+
+/// Assert two floats are close in the `max(abs, rel)` sense.
+#[track_caller]
+pub fn assert_close(a: f64, b: f64, tol: f64) {
+    let scale = 1.0f64.max(a.abs()).max(b.abs());
+    assert!(
+        (a - b).abs() <= tol * scale,
+        "assert_close failed: {a} vs {b} (tol {tol}, |diff| {})",
+        (a - b).abs()
+    );
+}
+
+/// Assert two slices are element-wise close.
+#[track_caller]
+pub fn assert_allclose(a: &[f64], b: &[f64], tol: f64) {
+    assert_eq!(a.len(), b.len(), "length mismatch {} vs {}", a.len(), b.len());
+    for (i, (&x, &y)) in a.iter().zip(b.iter()).enumerate() {
+        let scale = 1.0f64.max(x.abs()).max(y.abs());
+        assert!(
+            (x - y).abs() <= tol * scale,
+            "assert_allclose failed at index {i}: {x} vs {y} (tol {tol})"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_trivial_property() {
+        check("unit-interval", 50, |rng, _| {
+            let x = rng.f64();
+            assert!((0.0..1.0).contains(&x));
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always-fails`")]
+    fn check_reports_failures() {
+        check("always-fails", 5, |_, _| panic!("boom"));
+    }
+
+    #[test]
+    fn close_helpers() {
+        assert_close(1.0, 1.0 + 1e-12, 1e-9);
+        assert_allclose(&[1.0, 2.0], &[1.0, 2.0 + 1e-12], 1e-9);
+    }
+
+    #[test]
+    #[should_panic]
+    fn close_rejects_far() {
+        assert_close(1.0, 2.0, 1e-6);
+    }
+}

@@ -1,0 +1,138 @@
+//! A small scoped-parallelism layer over `std::thread`.
+//!
+//! No tokio/rayon in the offline crate set, and the workloads here are
+//! CPU-bound data parallel loops (kernel block evaluation, per-node HSS
+//! compression, per-dataset experiments), so `std::thread::scope` with a
+//! shared atomic work counter covers everything we need while staying
+//! deterministic when `threads == 1`.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of worker threads to use by default: `HSS_SVM_THREADS` env var,
+/// else available parallelism, else 1.
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("HSS_SVM_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Run `f(i)` for every `i in 0..n` across `threads` workers using atomic
+/// chunk self-scheduling. `f` must be `Sync` (called concurrently).
+pub fn parallel_for(threads: usize, n: usize, chunk: usize, f: impl Fn(usize) + Sync) {
+    let threads = threads.max(1).min(n.max(1));
+    if threads <= 1 || n <= chunk {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    let chunk = chunk.max(1);
+    let counter = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let start = counter.fetch_add(chunk, Ordering::Relaxed);
+                if start >= n {
+                    break;
+                }
+                let end = (start + chunk).min(n);
+                for i in start..end {
+                    f(i);
+                }
+            });
+        }
+    });
+}
+
+/// Map `f` over `0..n` in parallel, collecting results in index order.
+pub fn parallel_map<T: Send>(threads: usize, n: usize, f: impl Fn(usize) -> T + Sync) -> Vec<T> {
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    {
+        let slots = as_send_cells(&mut out);
+        parallel_for(threads, n, 1, |i| {
+            // SAFETY: each index is written by exactly one task.
+            unsafe { *slots.get(i) = Some(f(i)) };
+        });
+    }
+    out.into_iter().map(|o| o.expect("slot filled")).collect()
+}
+
+/// Helper: expose disjoint-index mutable access to a slice across threads.
+pub struct SendCells<'a, T> {
+    ptr: *mut T,
+    len: usize,
+    _marker: std::marker::PhantomData<&'a mut T>,
+}
+
+unsafe impl<T: Send> Sync for SendCells<'_, T> {}
+unsafe impl<T: Send> Send for SendCells<'_, T> {}
+
+impl<'a, T> SendCells<'a, T> {
+    /// # Safety contract (enforced by callers)
+    /// Concurrent callers must access disjoint indices.
+    pub fn get(&self, i: usize) -> *mut T {
+        assert!(i < self.len);
+        unsafe { self.ptr.add(i) }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
+/// Wrap a mutable slice for disjoint-index parallel writes.
+pub fn as_send_cells<T>(xs: &mut [T]) -> SendCells<'_, T> {
+    SendCells { ptr: xs.as_mut_ptr(), len: xs.len(), _marker: std::marker::PhantomData }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn parallel_for_covers_all_indices_once() {
+        let n = 10_000;
+        let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        parallel_for(4, n, 64, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn parallel_for_single_thread_sequential() {
+        let n = 100;
+        let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        parallel_for(1, n, 8, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn parallel_map_ordered() {
+        let out = parallel_map(4, 1000, |i| i * i);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i * i);
+        }
+    }
+
+    #[test]
+    fn parallel_map_empty() {
+        let out: Vec<usize> = parallel_map(4, 0, |i| i);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn default_threads_at_least_one() {
+        assert!(default_threads() >= 1);
+    }
+}

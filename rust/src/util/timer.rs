@@ -1,0 +1,143 @@
+//! Wall-clock timing and a hierarchical phase profiler.
+//!
+//! The paper reports per-phase times (Compression / Factorization / ADMM)
+//! — `PhaseTimer` collects exactly those, and the bench harness reuses the
+//! same machinery.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Simple scope timer.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+
+    pub fn millis(&self) -> f64 {
+        self.elapsed().as_secs_f64() * 1e3
+    }
+}
+
+/// Time a closure, returning (result, seconds).
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t = Timer::start();
+    let out = f();
+    (out, t.secs())
+}
+
+/// Accumulating named-phase timer (thread-safe). Phases are reported in
+/// insertion order so tables come out in pipeline order.
+#[derive(Default)]
+pub struct PhaseTimer {
+    inner: Mutex<PhaseInner>,
+}
+
+#[derive(Default)]
+struct PhaseInner {
+    order: Vec<String>,
+    totals: HashMap<String, (Duration, u64)>,
+}
+
+impl PhaseTimer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one timed execution of `phase`.
+    pub fn record(&self, phase: &str, f: impl FnOnce()) {
+        let t = Instant::now();
+        f();
+        self.add(phase, t.elapsed());
+    }
+
+    /// Record one timed execution returning a value.
+    pub fn record_val<T>(&self, phase: &str, f: impl FnOnce() -> T) -> T {
+        let t = Instant::now();
+        let out = f();
+        self.add(phase, t.elapsed());
+        out
+    }
+
+    /// Add a pre-measured duration.
+    pub fn add(&self, phase: &str, d: Duration) {
+        let mut g = self.inner.lock().unwrap();
+        if !g.totals.contains_key(phase) {
+            g.order.push(phase.to_string());
+        }
+        let e = g.totals.entry(phase.to_string()).or_insert((Duration::ZERO, 0));
+        e.0 += d;
+        e.1 += 1;
+    }
+
+    /// Total seconds for a phase (0 when never recorded).
+    pub fn secs(&self, phase: &str) -> f64 {
+        let g = self.inner.lock().unwrap();
+        g.totals.get(phase).map(|(d, _)| d.as_secs_f64()).unwrap_or(0.0)
+    }
+
+    /// Number of recordings for a phase.
+    pub fn count(&self, phase: &str) -> u64 {
+        let g = self.inner.lock().unwrap();
+        g.totals.get(phase).map(|&(_, c)| c).unwrap_or(0)
+    }
+
+    /// (phase, total seconds, count) in insertion order.
+    pub fn report(&self) -> Vec<(String, f64, u64)> {
+        let g = self.inner.lock().unwrap();
+        g.order
+            .iter()
+            .map(|p| {
+                let (d, c) = g.totals[p];
+                (p.clone(), d.as_secs_f64(), c)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_measures_something() {
+        let t = Timer::start();
+        std::thread::sleep(Duration::from_millis(5));
+        assert!(t.secs() >= 0.004);
+    }
+
+    #[test]
+    fn phase_timer_accumulates_in_order() {
+        let pt = PhaseTimer::new();
+        pt.record("compress", || {});
+        pt.record("factor", || {});
+        pt.record("compress", || {});
+        let rep = pt.report();
+        assert_eq!(rep.len(), 2);
+        assert_eq!(rep[0].0, "compress");
+        assert_eq!(rep[0].2, 2);
+        assert_eq!(rep[1].0, "factor");
+        assert_eq!(pt.count("compress"), 2);
+        assert_eq!(pt.count("missing"), 0);
+        assert_eq!(pt.secs("missing"), 0.0);
+    }
+
+    #[test]
+    fn timed_returns_value() {
+        let (v, s) = timed(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(s >= 0.0);
+    }
+}

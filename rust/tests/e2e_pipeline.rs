@@ -1,0 +1,119 @@
+//! End-to-end integration across modules: data → cluster → HSS → ULV →
+//! ADMM → model → prediction, plus cross-solver agreement.
+
+use hss_svm::admm::AdmmParams;
+use hss_svm::baselines::{smo::SmoParams, train_racqp, train_smo, RacqpParams};
+use hss_svm::data::{scale, synth};
+use hss_svm::hss::HssParams;
+use hss_svm::kernel::Kernel;
+use hss_svm::svm::{predict, train::train_hss_svm, HssSvmTrainer};
+use hss_svm::util::prng::Rng;
+
+#[test]
+fn checkerboard_needs_nonlinearity_and_gets_it() {
+    // linear kernel fails on a checkerboard, Gaussian succeeds — the
+    // "nonlinear SVMs produce significantly higher quality" premise.
+    let mut rng = Rng::new(201);
+    let train = synth::checkerboard(1200, 3, &mut rng);
+    let test = synth::checkerboard(600, 3, &mut rng);
+    let admm = AdmmParams { beta: 10.0, max_it: 20, relax: 1.0, tol: 0.0 };
+    let mut hp = HssParams::near_exact();
+    hp.leaf_size = 96;
+
+    let (gauss_model, _) =
+        train_hss_svm(&train, Kernel::Gaussian { h: 0.15 }, &hp, &admm, 10.0, 2).unwrap();
+    let gauss_acc = predict::accuracy(&gauss_model, &test, 2);
+    assert!(gauss_acc > 0.9, "gaussian checkerboard accuracy {gauss_acc}");
+
+    let (lin_model, _) = train_smo(&train, Kernel::Linear, 1.0, &SmoParams {
+        max_iter: 20_000,
+        ..Default::default()
+    });
+    let lin_acc = predict::accuracy(&lin_model, &test, 2);
+    assert!(lin_acc < 0.7, "linear kernel should fail on checkerboard: {lin_acc}");
+}
+
+#[test]
+fn three_solvers_agree_on_scaled_table1_miniature() {
+    // miniature ijcnn1-like workload through the full preprocessing path
+    let spec = synth::table1_spec("ijcnn1").unwrap();
+    let (mut train, mut test) = spec.generate(0.01, 42); // ~500 points
+    scale::scale_pair(&mut train, &mut test);
+    let kernel = Kernel::Gaussian { h: 1.0 };
+    let c = 1.0;
+
+    let mut hp = HssParams::high_accuracy();
+    hp.leaf_size = 64;
+    let admm = AdmmParams { beta: 100.0, max_it: 10, relax: 1.0, tol: 0.0 };
+    let (hss_model, stats) = train_hss_svm(&train, kernel, &hp, &admm, c, 2).unwrap();
+    let hss_acc = predict::accuracy(&hss_model, &test, 2);
+
+    let (smo_model, _) = train_smo(&train, kernel, c, &Default::default());
+    let smo_acc = predict::accuracy(&smo_model, &test, 2);
+
+    let (racqp_model, _) = train_racqp(
+        &train,
+        kernel,
+        c,
+        &RacqpParams { block_size: 100, beta: 1.0, sweeps: 25, seed: 5 },
+    )
+    .unwrap();
+    let racqp_acc = predict::accuracy(&racqp_model, &test, 2);
+
+    // the paper's Table 4/5-vs-2/3 claim: comparable accuracy. The paper
+    // itself reports a ~3.6pt gap on ijcnn1 (92.40 HSS-ADMM vs 96.01
+    // LIBSVM) — "comparable" means within a few points, not equal.
+    assert!(hss_acc > 0.75, "hss accuracy {hss_acc}");
+    assert!(smo_acc - hss_acc < 0.12, "hss {hss_acc} vs smo {smo_acc}");
+    assert!(racqp_acc - hss_acc < 0.12, "hss {hss_acc} vs racqp {racqp_acc}");
+    assert!(stats.admm_secs < stats.compress_secs + stats.factor_secs + 1.0);
+}
+
+#[test]
+fn grid_search_reuse_is_cheaper_than_recompression() {
+    use std::time::Instant;
+    let mut rng = Rng::new(202);
+    let train = synth::blobs(1500, 8, 5, 0.3, &mut rng);
+    let kernel = Kernel::Gaussian { h: 1.0 };
+    let mut hp = HssParams::low_accuracy();
+    hp.leaf_size = 128;
+
+    let t0 = Instant::now();
+    let trainer = HssSvmTrainer::compress(&train, kernel, &hp, 2);
+    let ulv = trainer.factor(100.0).unwrap();
+    let setup = t0.elapsed().as_secs_f64();
+
+    let admm = AdmmParams { beta: 100.0, max_it: 10, relax: 1.0, tol: 0.0 };
+    let solver = hss_svm::admm::AdmmSolver::new(&ulv, &trainer.y, admm);
+    let t1 = Instant::now();
+    for c in [0.1, 1.0, 10.0] {
+        let (_model, out) = trainer.train_c_with_solver(&solver, c);
+        assert_eq!(out.z.len(), train.len());
+    }
+    let grid = t1.elapsed().as_secs_f64();
+    // ADMM-per-C must be much cheaper than compression+factorization
+    // (paper: "ADMM Time is completely negligible")
+    assert!(
+        grid < setup * 0.8,
+        "grid over 3 C values ({grid:.3}s) should be well under setup ({setup:.3}s)"
+    );
+}
+
+#[test]
+fn labels_and_permutations_survive_the_pipeline() {
+    let mut rng = Rng::new(203);
+    let train = synth::two_moons(257, 0.07, &mut rng); // odd size
+    let kernel = Kernel::Gaussian { h: 0.35 };
+    let trainer = HssSvmTrainer::compress(&train, kernel, &HssParams::near_exact(), 1);
+    // permuted labels must be a permutation of the originals
+    let mut a: Vec<i64> = train.y.iter().map(|&v| v as i64).collect();
+    let mut b: Vec<i64> = trainer.y.iter().map(|&v| v as i64).collect();
+    a.sort_unstable();
+    b.sort_unstable();
+    assert_eq!(a, b);
+    // training still works on odd sizes
+    let ulv = trainer.factor(10.0).unwrap();
+    let (model, _) = trainer.train_c(&ulv, &AdmmParams { beta: 10.0, max_it: 15, relax: 1.0, tol: 0.0 }, 5.0);
+    let acc = predict::accuracy(&model, &train, 1);
+    assert!(acc > 0.95, "train accuracy {acc}");
+}

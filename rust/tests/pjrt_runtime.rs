@@ -1,0 +1,101 @@
+//! Integration: PJRT-executed artifacts vs the native Rust kernel path.
+//!
+//! Requires `make artifacts` (skips cleanly when absent so `cargo test`
+//! works before the Python step, but the Makefile always builds them).
+
+use hss_svm::data::synth;
+use hss_svm::kernel::{kernel_block, Kernel};
+use hss_svm::linalg::Mat;
+use hss_svm::runtime::{decision_function_pjrt, predict_pjrt, PjrtRuntime};
+use hss_svm::svm::{predict, SvmModel};
+use hss_svm::util::prng::Rng;
+
+fn runtime() -> Option<PjrtRuntime> {
+    let rt = PjrtRuntime::try_default();
+    if rt.is_none() {
+        eprintln!("SKIP: no artifacts/ — run `make artifacts` first");
+    }
+    rt
+}
+
+#[test]
+fn kernel_tile_matches_native() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Rng::new(1);
+    for &(m, n, f) in &[(128usize, 128usize, 8usize), (128, 128, 122), (64, 100, 8), (1, 1, 3)] {
+        let x = Mat::gauss(m, f, &mut rng);
+        let y = Mat::gauss(n, f, &mut rng);
+        for h in [0.3, 1.0, 4.0] {
+            let k = Kernel::Gaussian { h };
+            let native = kernel_block(&k, &x, &y);
+            let pjrt = rt.kernel_tile(&x, &y, k.gamma()).unwrap();
+            assert_eq!(pjrt.shape(), (m, n));
+            for i in 0..m {
+                for j in 0..n {
+                    let (a, b) = (native[(i, j)], pjrt[(i, j)]);
+                    assert!(
+                        (a - b).abs() < 5e-5,
+                        "tile mismatch at ({i},{j}) f={f} h={h}: {a} vs {b}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn decision_tile_matches_native_model() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Rng::new(2);
+    // SV count crossing the 1024 chunk boundary exercises accumulation
+    for &(t, s, f) in &[(128usize, 1024usize, 8usize), (77, 1500, 22), (128, 100, 122)] {
+        let model = SvmModel {
+            sv: Mat::gauss(s, f, &mut rng),
+            alpha_y: (0..s).map(|_| rng.gauss()).collect(),
+            bias: rng.gauss(),
+            kernel: Kernel::Gaussian { h: 1.0 },
+            c: 1.0,
+        };
+        let x = Mat::gauss(t, f, &mut rng);
+        let native = predict::decision_function(&model, &x, 1);
+        let pj = decision_function_pjrt(&rt, &model, &x).unwrap();
+        assert_eq!(pj.len(), t);
+        for i in 0..t {
+            // f32 accumulation over up to 1500 SVs: tolerance scales
+            let tol = 5e-4 * (1.0 + native[i].abs());
+            assert!(
+                (native[i] - pj[i]).abs() < tol,
+                "decision mismatch at {i} (t={t},s={s},f={f}): {} vs {}",
+                native[i],
+                pj[i]
+            );
+        }
+    }
+}
+
+#[test]
+fn end_to_end_predictions_agree() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Rng::new(3);
+    let train = synth::two_moons(300, 0.08, &mut rng);
+    let test = synth::two_moons(200, 0.08, &mut rng);
+    let (model, _) = hss_svm::svm::train::train_hss_svm(
+        &train,
+        Kernel::Gaussian { h: 0.3 },
+        &hss_svm::hss::HssParams::near_exact(),
+        &hss_svm::admm::AdmmParams { beta: 10.0, max_it: 20, relax: 1.0, tol: 0.0 },
+        10.0,
+        2,
+    )
+    .unwrap();
+    let native = predict::predict(&model, &test.x, 2);
+    let pj = predict_pjrt(&rt, &model, &test.x).unwrap();
+    let agree = native.iter().zip(pj.iter()).filter(|(a, b)| a == b).count();
+    // f32 vs f64 can flip points sitting exactly on the boundary
+    assert!(agree + 2 >= test.len(), "only {agree}/{} labels agree", test.len());
+    let (k_calls, d_calls) = (
+        rt.stats.kernel_tile_calls.load(std::sync::atomic::Ordering::Relaxed),
+        rt.stats.decision_tile_calls.load(std::sync::atomic::Ordering::Relaxed),
+    );
+    assert!(d_calls > 0, "PJRT was not actually used ({k_calls}, {d_calls})");
+}

@@ -1,0 +1,191 @@
+//! Robustness and edge-case integration tests: degenerate inputs,
+//! non-default kernels, extreme hyperparameters, failure injection.
+
+use hss_svm::admm::{AdmmParams, AdmmSolver};
+use hss_svm::data::{libsvm, synth, Dataset};
+use hss_svm::hss::compress::compress;
+use hss_svm::hss::ulv::UlvFactor;
+use hss_svm::hss::HssParams;
+use hss_svm::kernel::Kernel;
+use hss_svm::linalg::Mat;
+use hss_svm::svm::{predict, train::train_hss_svm, HssSvmTrainer};
+use hss_svm::util::prng::Rng;
+use hss_svm::util::testkit;
+
+#[test]
+fn polynomial_kernel_full_pipeline() {
+    let mut rng = Rng::new(401);
+    let train = synth::blobs(300, 4, 2, 0.15, &mut rng);
+    let test = synth::blobs(150, 4, 2, 0.15, &mut {
+        let mut r = Rng::new(401);
+        r
+    });
+    let kernel = Kernel::Polynomial { degree: 2, c: 1.0 };
+    let c = compress(&train, &kernel, &HssParams::near_exact(), 1);
+    // HSS must reproduce the polynomial kernel too (structure-agnostic)
+    let want = kernel.gram(&c.pds.x);
+    let got = hss_svm::hss::matvec::to_dense(&c.hss);
+    let mut d = got;
+    d.axpy(-1.0, &want);
+    assert!(d.fro() / want.fro() < 1e-6, "poly HSS error {}", d.fro() / want.fro());
+
+    let (model, _) = train_hss_svm(
+        &train,
+        kernel,
+        &HssParams::near_exact(),
+        &AdmmParams { beta: 10.0, max_it: 20, relax: 1.0, tol: 0.0 },
+        1.0,
+        1,
+    )
+    .unwrap();
+    let acc = predict::accuracy(&model, &test, 1);
+    assert!(acc > 0.9, "poly accuracy {acc}");
+}
+
+#[test]
+fn beta_staging_values_all_converge() {
+    let mut rng = Rng::new(402);
+    let train = synth::blobs(400, 5, 4, 0.3, &mut rng);
+    let trainer = HssSvmTrainer::compress(
+        &train,
+        Kernel::Gaussian { h: 1.0 },
+        &HssParams::low_accuracy(),
+        1,
+    );
+    // the paper's three staged β values must all produce working models
+    for beta in [1e2, 1e3, 1e4] {
+        let ulv = trainer.factor(beta).unwrap();
+        let (model, out) = trainer.train_c(&ulv, &AdmmParams { beta, max_it: 10, relax: 1.0, tol: 0.0 }, 1.0);
+        assert!(out.z.iter().all(|v| v.is_finite()));
+        let acc = predict::accuracy(&model, &train, 1);
+        assert!(acc > 0.7, "beta={beta} train accuracy {acc}");
+    }
+}
+
+#[test]
+fn extreme_c_values_stay_feasible() {
+    let mut rng = Rng::new(403);
+    let train = synth::two_moons(200, 0.08, &mut rng);
+    let trainer =
+        HssSvmTrainer::compress(&train, Kernel::Gaussian { h: 0.3 }, &HssParams::near_exact(), 1);
+    let ulv = trainer.factor(10.0).unwrap();
+    for c in [1e-6, 1e6] {
+        let (model, out) = trainer.train_c(&ulv, &AdmmParams { beta: 10.0, max_it: 10, relax: 1.0, tol: 0.0 }, c);
+        assert!(out.z.iter().all(|&z| (0.0..=c + 1e-9).contains(&z)));
+        assert!(model.bias.is_finite());
+    }
+}
+
+#[test]
+fn single_class_training_does_not_panic() {
+    let mut rng = Rng::new(404);
+    let x = Mat::gauss(60, 3, &mut rng);
+    let ds = Dataset::new("onesided", x, vec![1.0; 60]);
+    // yᵀx = 0 with all-positive labels forces x ≈ 0; must not panic
+    let result = train_hss_svm(
+        &ds,
+        Kernel::Gaussian { h: 1.0 },
+        &HssParams::near_exact(),
+        &AdmmParams { beta: 10.0, max_it: 5, relax: 1.0, tol: 0.0 },
+        1.0,
+        1,
+    );
+    let (model, _) = result.unwrap();
+    assert!(model.bias.is_finite());
+}
+
+#[test]
+fn tiny_beta_solve_is_still_accurate() {
+    // β → 0 stresses the ULV elimination (K̃ is only PSD); near-exact
+    // compression keeps K̃ ≈ K PD-ish, tiny shift must still solve well
+    let mut rng = Rng::new(405);
+    let ds = synth::blobs(150, 3, 3, 0.4, &mut rng);
+    let kernel = Kernel::Gaussian { h: 0.4 }; // small h → well-conditioned K
+    let c = compress(&ds, &kernel, &HssParams::near_exact(), 1);
+    let beta = 1e-3;
+    let ulv = UlvFactor::new(&c.hss, beta).unwrap();
+    let want: Vec<f64> = (0..150).map(|_| rng.gauss()).collect();
+    let b = hss_svm::hss::matvec::matvec_shifted(&c.hss, beta, &want);
+    let got = ulv.solve(&b);
+    testkit::assert_allclose(&got, &want, 1e-5);
+}
+
+#[test]
+fn admm_solver_reuse_is_deterministic() {
+    let mut rng = Rng::new(406);
+    let train = synth::circles(200, 0.05, &mut rng);
+    let trainer =
+        HssSvmTrainer::compress(&train, Kernel::Gaussian { h: 0.4 }, &HssParams::near_exact(), 1);
+    let ulv = trainer.factor(10.0).unwrap();
+    let solver = AdmmSolver::new(&ulv, &trainer.y, AdmmParams { beta: 10.0, max_it: 10, relax: 1.0, tol: 0.0 });
+    let a = solver.run(1.0);
+    let b = solver.run(1.0);
+    assert_eq!(a.z, b.z, "ADMM must be deterministic");
+    // a C small enough to clip some coordinates changes the iterates
+    let max_z = a.z.iter().cloned().fold(0.0f64, f64::max);
+    let c = solver.run(max_z * 0.25);
+    assert_ne!(a.z, c.z);
+}
+
+#[test]
+fn libsvm_file_to_model_roundtrip() {
+    let mut rng = Rng::new(407);
+    let ds = synth::two_moons(300, 0.08, &mut rng);
+    let dir = std::env::temp_dir().join("hss_svm_rt_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("moons.libsvm");
+    libsvm::write_file(&ds, &path).unwrap();
+    let back = libsvm::read_file(&path, None).unwrap();
+    assert_eq!(back.len(), 300);
+    let (model, _) = train_hss_svm(
+        &back,
+        Kernel::Gaussian { h: 0.3 },
+        &HssParams::near_exact(),
+        &AdmmParams { beta: 10.0, max_it: 15, relax: 1.0, tol: 0.0 },
+        10.0,
+        1,
+    )
+    .unwrap();
+    let acc = predict::accuracy(&model, &back, 1);
+    assert!(acc > 0.95, "roundtrip accuracy {acc}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn compression_scales_subquadratically_in_kernel_evals() {
+    // O(r² d) construction: kernel-eval count per point must not grow
+    // linearly with n (that would be O(n²) total)
+    let mut rng = Rng::new(408);
+    let kernel = Kernel::Gaussian { h: 1.5 };
+    let mut per_point = Vec::new();
+    for &n in &[1000usize, 4000] {
+        let ds = synth::blobs(n, 6, 5, 0.3, &mut rng);
+        let mut p = HssParams::low_accuracy();
+        p.ann_neighbors = 16;
+        p.oversample = 16;
+        let c = compress(&ds, &kernel, &p, 1);
+        per_point.push(c.stats.kernel_evals as f64 / n as f64);
+    }
+    // allow some growth (deeper tree), but far below 4x
+    assert!(
+        per_point[1] < per_point[0] * 2.5,
+        "kernel evals/point grew {:.0} → {:.0} (not matrix-free?)",
+        per_point[0],
+        per_point[1]
+    );
+}
+
+#[test]
+fn predict_on_mismatched_dims_panics() {
+    let mut rng = Rng::new(409);
+    let model = hss_svm::svm::SvmModel {
+        sv: Mat::gauss(5, 3, &mut rng),
+        alpha_y: vec![1.0; 5],
+        bias: 0.0,
+        kernel: Kernel::Gaussian { h: 1.0 },
+        c: 1.0,
+    };
+    let bad = Mat::gauss(4, 7, &mut rng);
+    let result = std::panic::catch_unwind(|| predict::decision_function(&model, &bad, 1));
+    assert!(result.is_err(), "dimension mismatch must be caught");
+}
