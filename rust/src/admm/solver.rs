@@ -8,12 +8,34 @@ use crate::linalg::Mat;
 /// reference used in tests and the dense-ADMM baseline).
 pub trait ShiftedSolve {
     fn solve_shifted(&self, b: &[f64]) -> Vec<f64>;
+
+    /// Solve (K + βI) X = B for an n×k block of right-hand sides in one
+    /// pass. Backends override this with blocked BLAS-3 kernels; the
+    /// default solves column-by-column, which is always column-invariant
+    /// (column j of the result is exactly `solve_shifted(B.col(j))`).
+    /// Overrides must preserve that invariance bit-for-bit — the batched
+    /// C-grid ([`AdmmSolver::run_grid`]) is validated against it.
+    fn solve_shifted_multi(&self, b: &Mat) -> Mat {
+        let mut out = Mat::zeros(b.rows(), b.cols());
+        for j in 0..b.cols() {
+            let col = self.solve_shifted(&b.col(j));
+            for (i, v) in col.iter().enumerate() {
+                out[(i, j)] = *v;
+            }
+        }
+        out
+    }
+
     fn dim(&self) -> usize;
 }
 
 impl ShiftedSolve for crate::hss::ulv::UlvFactor {
     fn solve_shifted(&self, b: &[f64]) -> Vec<f64> {
         self.solve(b)
+    }
+
+    fn solve_shifted_multi(&self, b: &Mat) -> Mat {
+        self.solve_mat(b)
     }
 
     fn dim(&self) -> usize {
@@ -39,6 +61,10 @@ impl DenseShifted {
 impl ShiftedSolve for DenseShifted {
     fn solve_shifted(&self, b: &[f64]) -> Vec<f64> {
         self.chol.solve(b)
+    }
+
+    fn solve_shifted_multi(&self, b: &Mat) -> Mat {
+        self.chol.solve_mat(b)
     }
 
     fn dim(&self) -> usize {
@@ -92,6 +118,41 @@ pub struct AdmmOutput {
     /// Dual objective  ½ zᵀYKYz − eᵀz  evaluated through the solver's K̃
     /// (only filled when requested).
     pub objective: Option<f64>,
+}
+
+/// One ADMM half-iteration after the x-update: project z into [0, C],
+/// update μ, and return the (primal, dual) residual norms. Shared by the
+/// scalar and batched paths so their per-column arithmetic cannot
+/// diverge — the bit-for-bit `run` == `run_grid` contract depends on
+/// both calling exactly this code.
+fn admm_zmu_step(
+    x: &[f64],
+    z: &mut [f64],
+    mu: &mut [f64],
+    c: f64,
+    beta: f64,
+    relax: f64,
+) -> (f64, f64) {
+    // over-relaxation: x̂ = αx + (1−α)z (α = 1 → paper's scheme)
+    // z = Π_[0,C](x̂ − μ/β), track dual residual
+    let n = z.len();
+    let mut dz2 = 0.0;
+    for i in 0..n {
+        let xh = relax * x[i] + (1.0 - relax) * z[i];
+        let znew = (xh - mu[i] / beta).clamp(0.0, c);
+        let d = znew - z[i];
+        dz2 += d * d;
+        z[i] = znew;
+    }
+    // μ = μ − β(x̂ − z), track primal residual (x̂ uses the new z)
+    let mut pr2 = 0.0;
+    for i in 0..n {
+        let xh = relax * x[i] + (1.0 - relax) * z[i];
+        let r = xh - z[i];
+        pr2 += r * r;
+        mu[i] -= beta * r;
+    }
+    (pr2.sqrt(), beta * dz2.sqrt())
 }
 
 /// Precomputed per-(h, β) state shared across all C values.
@@ -161,26 +222,9 @@ impl<'a, S: ShiftedSolve> AdmmSolver<'a, S> {
             for i in 0..n {
                 x[i] = self.y[i] * v[i] - ratio * self.w[i];
             }
-            // over-relaxation: x̂ = αx + (1−α)z (α = 1 → paper's scheme)
-            // z = Π_[0,C](x̂ − μ/β), track dual residual
-            let mut dz2 = 0.0;
-            for i in 0..n {
-                let xh = relax * x[i] + (1.0 - relax) * z[i];
-                let znew = (xh - mu[i] / beta).clamp(0.0, c);
-                let d = znew - z[i];
-                dz2 += d * d;
-                z[i] = znew;
-            }
-            // μ = μ − β(x̂ − z), track primal residual
-            let mut pr2 = 0.0;
-            for i in 0..n {
-                let xh = relax * x[i] + (1.0 - relax) * z[i];
-                let r = xh - z[i];
-                pr2 += r * r;
-                mu[i] -= beta * r;
-            }
-            primal.push(pr2.sqrt());
-            dual.push(beta * dz2.sqrt());
+            let (pr, du) = admm_zmu_step(&x, &mut z, &mut mu, c, beta, relax);
+            primal.push(pr);
+            dual.push(du);
             if self.params.tol > 0.0 {
                 let p = *primal.last().unwrap();
                 let d = *dual.last().unwrap();
@@ -191,6 +235,90 @@ impl<'a, S: ShiftedSolve> AdmmSolver<'a, S> {
         }
 
         AdmmOutput { z, x, mu, primal, dual, objective: None }
+    }
+
+    /// Run the whole C-grid in lockstep: one blocked multi-RHS solve per
+    /// iteration advances every value of C at once, each column keeping
+    /// its own z/μ iterates and box projection [0, C_j]. Column j of the
+    /// result is identical to `run(cs[j])` — bit-for-bit, because both
+    /// in-tree backends' `solve_shifted_multi` are column-invariant (see
+    /// the `run_grid_matches_sequential_*` property tests).
+    ///
+    /// This turns the grid search's k·MaxIt sequential O(d·m) solves
+    /// into MaxIt blocked O(d·m·k) GEMM-dominated sweeps — the missing
+    /// half of the paper's "one factorization, every C" reuse story
+    /// (Algorithm 3 / Tables 4–5).
+    pub fn run_grid(&self, cs: &[f64]) -> Vec<AdmmOutput> {
+        let k = cs.len();
+        if k == 0 {
+            return Vec::new();
+        }
+        let n = self.solver.dim();
+        let beta = self.params.beta;
+        let relax = self.params.relax.clamp(1.0, 1.9);
+        let mut xs = vec![vec![0.0; n]; k];
+        let mut zs = vec![vec![0.0; n]; k];
+        let mut mus = vec![vec![0.0; n]; k];
+        let mut primals: Vec<Vec<f64>> = vec![Vec::with_capacity(self.params.max_it); k];
+        let mut duals: Vec<Vec<f64>> = vec![Vec::with_capacity(self.params.max_it); k];
+        // with tol > 0 columns converge independently; frozen columns
+        // keep their state and drop out of the updates AND the solve
+        // (the RHS block is compacted to the active columns — safe
+        // because the multi-solve is column-invariant)
+        let mut active = vec![true; k];
+        let mut w2s = vec![0.0; k];
+
+        for _it in 0..self.params.max_it {
+            let act: Vec<usize> = (0..k).filter(|&j| active[j]).collect();
+            if act.is_empty() {
+                break;
+            }
+            // q_j = e + μ_j + βz_j ;  U[:, col] = Y q_j. The scalar
+            // w·q_j is accumulated on the fly (same i-order fold as the
+            // scalar path's sum, so bitwise identical) instead of
+            // keeping k n-length q buffers alive.
+            let mut u = Mat::zeros(n, act.len());
+            for (col, &j) in act.iter().enumerate() {
+                let (z, mu) = (&zs[j], &mus[j]);
+                let mut w2 = 0.0;
+                for i in 0..n {
+                    let qi = 1.0 + mu[i] + beta * z[i];
+                    u[(i, col)] = self.y[i] * qi;
+                    w2 += self.w[i] * qi;
+                }
+                w2s[j] = w2;
+            }
+            // V = K_β⁻¹ U — the single batched solve of the iteration
+            let v = self.solver.solve_shifted_multi(&u);
+            for (col, &j) in act.iter().enumerate() {
+                let c = cs[j];
+                let x = &mut xs[j];
+                let z = &mut zs[j];
+                let mu = &mut mus[j];
+                // x_j = Y v_j − (w·q_j / w₁) w
+                let ratio = w2s[j] / self.w1;
+                for i in 0..n {
+                    x[i] = self.y[i] * v[(i, col)] - ratio * self.w[i];
+                }
+                let (pr, du) = admm_zmu_step(x, z, mu, c, beta, relax);
+                primals[j].push(pr);
+                duals[j].push(du);
+                if self.params.tol > 0.0 && pr.max(du) < self.params.tol {
+                    active[j] = false;
+                }
+            }
+        }
+
+        (0..k)
+            .map(|j| AdmmOutput {
+                z: std::mem::take(&mut zs[j]),
+                x: std::mem::take(&mut xs[j]),
+                mu: std::mem::take(&mut mus[j]),
+                primal: std::mem::take(&mut primals[j]),
+                dual: std::mem::take(&mut duals[j]),
+                objective: None,
+            })
+            .collect()
     }
 
     /// w₁ = eᵀK_β⁻¹e (positive for SPD K_β — useful sanity probe).
@@ -296,6 +424,115 @@ mod tests {
                 );
             }
         }
+    }
+
+    fn assert_outputs_bitwise(grid: &AdmmOutput, single: &AdmmOutput, label: &str) {
+        assert_eq!(grid.z, single.z, "{label}: z mismatch");
+        assert_eq!(grid.x, single.x, "{label}: x mismatch");
+        assert_eq!(grid.mu, single.mu, "{label}: mu mismatch");
+        assert_eq!(grid.primal, single.primal, "{label}: primal residuals mismatch");
+        assert_eq!(grid.dual, single.dual, "{label}: dual residuals mismatch");
+    }
+
+    #[test]
+    fn run_grid_matches_sequential_dense_bitwise() {
+        let mut rng = Rng::new(56);
+        let (k, y) = tiny_problem(90, &mut rng);
+        let solver = DenseShifted::new(&k, 10.0).unwrap();
+        let admm = AdmmSolver::new(
+            &solver,
+            &y,
+            AdmmParams { beta: 10.0, max_it: 12, relax: 1.0, tol: 0.0 },
+        );
+        let cs = [0.05, 0.3, 1.0, 2.5, 10.0];
+        let grid = admm.run_grid(&cs);
+        assert_eq!(grid.len(), cs.len());
+        for (j, &c) in cs.iter().enumerate() {
+            let single = admm.run(c);
+            assert_outputs_bitwise(&grid[j], &single, &format!("dense C={c}"));
+        }
+    }
+
+    #[test]
+    fn run_grid_matches_sequential_ulv_bitwise() {
+        use crate::hss::compress::compress;
+        use crate::hss::ulv::UlvFactor;
+        use crate::hss::HssParams;
+        let mut rng = Rng::new(57);
+        let ds = synth::blobs(260, 3, 4, 0.3, &mut rng);
+        let kernel = Kernel::Gaussian { h: 1.0 };
+        let comp = compress(&ds, &kernel, &HssParams::near_exact(), 1);
+        let beta = 5.0;
+        let ulv = UlvFactor::new(&comp.hss, beta).unwrap();
+        let admm = AdmmSolver::new(
+            &ulv,
+            &comp.pds.y,
+            AdmmParams { beta, max_it: 10, relax: 1.0, tol: 0.0 },
+        );
+        let cs = [0.1, 1.0, 3.0, 10.0];
+        let grid = admm.run_grid(&cs);
+        for (j, &c) in cs.iter().enumerate() {
+            let single = admm.run(c);
+            assert_outputs_bitwise(&grid[j], &single, &format!("ulv C={c}"));
+        }
+    }
+
+    #[test]
+    fn run_grid_matches_sequential_with_relaxation() {
+        // over-relaxed runs go through the same arithmetic, but the
+        // contract only promises 1e-10 agreement away from relax = 1
+        let mut rng = Rng::new(58);
+        let (k, y) = tiny_problem(70, &mut rng);
+        let solver = DenseShifted::new(&k, 5.0).unwrap();
+        let admm = AdmmSolver::new(
+            &solver,
+            &y,
+            AdmmParams { beta: 5.0, max_it: 15, relax: 1.5, tol: 0.0 },
+        );
+        let cs = [0.2, 1.0, 4.0];
+        let grid = admm.run_grid(&cs);
+        for (j, &c) in cs.iter().enumerate() {
+            let single = admm.run(c);
+            crate::util::testkit::assert_allclose(&grid[j].z, &single.z, 1e-10);
+            crate::util::testkit::assert_allclose(&grid[j].mu, &single.mu, 1e-10);
+        }
+    }
+
+    #[test]
+    fn run_grid_early_stops_per_column() {
+        // with tol > 0 each column must stop at the same iteration count
+        // (and with the same iterates) as its sequential run
+        let mut rng = Rng::new(59);
+        let (k, y) = tiny_problem(60, &mut rng);
+        let solver = DenseShifted::new(&k, 10.0).unwrap();
+        let admm = AdmmSolver::new(
+            &solver,
+            &y,
+            AdmmParams { beta: 10.0, max_it: 200, relax: 1.0, tol: 1e-4 },
+        );
+        let cs = [0.1, 1.0, 10.0];
+        let grid = admm.run_grid(&cs);
+        for (j, &c) in cs.iter().enumerate() {
+            let single = admm.run(c);
+            assert_eq!(
+                grid[j].primal.len(),
+                single.primal.len(),
+                "C={c}: different stopping iteration"
+            );
+            assert_outputs_bitwise(&grid[j], &single, &format!("tol C={c}"));
+        }
+    }
+
+    #[test]
+    fn run_grid_empty_and_single() {
+        let mut rng = Rng::new(60);
+        let (k, y) = tiny_problem(40, &mut rng);
+        let solver = DenseShifted::new(&k, 5.0).unwrap();
+        let admm = AdmmSolver::new(&solver, &y, AdmmParams::default());
+        assert!(admm.run_grid(&[]).is_empty());
+        let one = admm.run_grid(&[1.5]);
+        assert_eq!(one.len(), 1);
+        assert_outputs_bitwise(&one[0], &admm.run(1.5), "singleton grid");
     }
 
     #[test]

@@ -66,7 +66,12 @@ pub struct SuiteRow {
     pub compress_secs: f64,
     pub factor_secs: f64,
     pub memory_mb: f64,
-    pub admm_secs: f64, // per single C (the paper's "ADMM Time")
+    /// Amortized ADMM time per C value. The grid now advances all C in
+    /// one batched multi-RHS run per h, so this is that run's wall time
+    /// divided by the number of C values — a LOWER number than the
+    /// paper's per-single-C "ADMM Time" (that is the point: the batched
+    /// sweep is what one grid cell effectively costs).
+    pub admm_secs: f64,
     pub best_h: f64,
     pub best_cs: Vec<f64>,
     pub accuracy: f64,

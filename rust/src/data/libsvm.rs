@@ -4,6 +4,13 @@
 //! ascending indices. All of the paper's datasets ship in this format, so
 //! a user with the real a8a/w7a/... files can run the exact experiments;
 //! our synthetic generators write the same format for parity.
+//!
+//! Label convention: `{−1, +1}` files are read verbatim; any other
+//! two-label encoding maps the numerically greater label to `+1` and the
+//! smaller to `−1` (`{0,1}`: 1 is positive; `{1,2}`: 2 is positive). A
+//! single-class file maps positive labels to `+1` and non-positive ones
+//! to `−1`. [`write_file`] always emits `{−1, +1}`, so write→read
+//! round-trips preserve labels exactly.
 
 use crate::data::dataset::Dataset;
 use crate::linalg::Mat;
@@ -61,18 +68,27 @@ pub fn read(r: impl BufRead, dim: Option<usize>) -> Result<Dataset> {
         None => max_idx,
     };
 
-    // map labels to ±1
+    // Map labels to ±1. Convention (applies to every two-label
+    // encoding): {−1, +1} is preserved verbatim; otherwise the
+    // numerically GREATER label maps to +1 and the smaller to −1, so
+    // {0,1} → 0↦−1 1↦+1 and {1,2} → 1↦−1 2↦+1. (The {1,2} case used to
+    // map the *lower* label to +1 while the generic fallback mapped the
+    // *higher* one — the polarity now matches across all encodings.)
     let distinct: std::collections::BTreeSet<i64> =
         labels.iter().map(|&l| l.round() as i64).collect();
-    let to_pm1: Box<dyn Fn(f64) -> f64> = if distinct == [(-1), 1].into_iter().collect() {
+    let to_pm1: Box<dyn Fn(f64) -> f64> = if distinct.is_empty() {
+        Box::new(|l| l) // empty file: nothing to map
+    } else if distinct == [(-1), 1].into_iter().collect() {
         Box::new(|l| l)
-    } else if distinct == [0, 1].into_iter().collect() {
-        Box::new(|l| if l > 0.5 { 1.0 } else { -1.0 })
-    } else if distinct == [1, 2].into_iter().collect() {
-        Box::new(|l| if l < 1.5 { 1.0 } else { -1.0 })
-    } else if distinct.len() <= 2 {
-        let lo = *distinct.iter().next().unwrap() as f64;
-        Box::new(move |l| if l > lo { 1.0 } else { -1.0 })
+    } else if distinct.len() == 1 {
+        // single-class file: positive labels ↦ +1, non-positive ↦ −1 —
+        // consistent with the two-label rule ({1} is the positive of
+        // {0,1}, {2} of {1,2}) and keeps write→read round-trips of
+        // one-class subsets label-preserving
+        Box::new(|l| if l > 0.0 { 1.0 } else { -1.0 })
+    } else if distinct.len() == 2 {
+        let lo = *distinct.iter().next().expect("two labels");
+        Box::new(move |l| if (l.round() as i64) > lo { 1.0 } else { -1.0 })
     } else {
         bail!("not a binary dataset: labels {distinct:?}");
     };
@@ -134,10 +150,57 @@ mod tests {
 
     #[test]
     fn label_mappings() {
+        // unified polarity: the greater label is always the positive class
         let ds = read(Cursor::new("0 1:1\n1 1:2\n"), None).unwrap();
         assert_eq!(ds.y, vec![-1.0, 1.0]);
         let ds2 = read(Cursor::new("1 1:1\n2 1:2\n"), None).unwrap();
-        assert_eq!(ds2.y, vec![1.0, -1.0]); // 1 → +1, 2 → −1 (cod-rna style)
+        assert_eq!(ds2.y, vec![-1.0, 1.0]);
+        let ds3 = read(Cursor::new("-1 1:1\n+1 1:2\n"), None).unwrap();
+        assert_eq!(ds3.y, vec![-1.0, 1.0]);
+        let ds4 = read(Cursor::new("7 1:1\n3 1:2\n"), None).unwrap();
+        assert_eq!(ds4.y, vec![1.0, -1.0]);
+    }
+
+    #[test]
+    fn single_class_files_keep_their_polarity() {
+        let pos = read(Cursor::new("+1 1:1.0\n1 2:2.0\n"), None).unwrap();
+        assert_eq!(pos.y, vec![1.0, 1.0]);
+        let two = read(Cursor::new("2 1:1.0\n2 2:2.0\n"), None).unwrap();
+        assert_eq!(two.y, vec![1.0, 1.0]);
+        let neg = read(Cursor::new("-1 1:1.0\n"), None).unwrap();
+        assert_eq!(neg.y, vec![-1.0]);
+        let zero = read(Cursor::new("0 1:1.0\n"), None).unwrap();
+        assert_eq!(zero.y, vec![-1.0]);
+        // empty input parses to an empty dataset, not an error
+        assert_eq!(read(Cursor::new("# nothing\n"), None).unwrap().len(), 0);
+    }
+
+    #[test]
+    fn all_two_label_encodings_roundtrip() {
+        // read → write → read must preserve the ±1 labels for every
+        // supported input encoding (unique dir: concurrent `cargo test`
+        // processes must not race on a shared temp path)
+        let dir = std::env::temp_dir()
+            .join(format!("hss_svm_test_libsvm_rt_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        for (name, text) in [
+            ("zero_one", "0 1:1.0\n1 1:2.0\n1 2:0.5\n0 2:1.5\n"),
+            ("one_two", "1 1:1.0\n2 1:2.0\n2 2:0.5\n1 2:1.5\n"),
+            ("pm_one", "-1 1:1.0\n+1 1:2.0\n1 2:0.5\n-1 2:1.5\n"),
+            ("arbitrary", "3 1:1.0\n7 1:2.0\n7 2:0.5\n3 2:1.5\n"),
+        ] {
+            let ds = read(Cursor::new(text), None).unwrap();
+            // greater raw label ⇒ +1, in every encoding
+            assert_eq!(ds.y, vec![-1.0, 1.0, 1.0, -1.0], "polarity for {name}");
+            let path = dir.join(format!("{name}.libsvm"));
+            write_file(&ds, &path).unwrap();
+            let back = read_file(&path, Some(ds.dim())).unwrap();
+            assert_eq!(back.y, ds.y, "labels changed across round-trip for {name}");
+            for i in 0..ds.len() {
+                assert_eq!(back.point(i), ds.point(i), "features changed for {name} row {i}");
+            }
+        }
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -2,8 +2,9 @@
 //! Direction Method of Multipliers (ADMM) coupled with Hierarchically
 //! Semi-Separable (HSS) kernel approximations.
 //!
-//! Reproduction of Cipolla & Gondzio (2021). See DESIGN.md for the system
-//! inventory and EXPERIMENTS.md for the paper-vs-measured record.
+//! Reproduction of Cipolla & Gondzio (2021). See `DESIGN.md` at the
+//! repository root for the module inventory, the reuse structure and the
+//! batched multi-RHS solve API that runs the whole C-grid in lockstep.
 
 pub mod ann;
 pub mod admm;

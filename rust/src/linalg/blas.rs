@@ -137,12 +137,23 @@ pub fn gemm(alpha: f64, a: &Mat, ta: Trans, b: &Mat, tb: Trans, beta: f64, c: &m
 
     // Pack op(A) row-major and op(B) column-panels to make the inner loop
     // stride-1 on both operands.
+    //
+    // INVARIANT (the batched multi-RHS solvers rely on it): the value of
+    // C[i, j] is produced by a fixed sequence of floating-point ops that
+    // depends only on row i of op(A), column j of op(B) and the KC depth
+    // blocking — never on m or n. Every path below (4×4 micro-kernel and
+    // both remainder loops) therefore accumulates its panel contribution
+    // with the same single sequential accumulator over p, so adding or
+    // removing other RHS columns cannot perturb a column's result.
     const MC: usize = 64; // rows of A per block
     const KC: usize = 256; // depth per block
     const NC: usize = 128; // cols of B per block
 
-    let mut a_pack = vec![0.0f64; MC * KC];
-    let mut b_pack = vec![0.0f64; KC * NC];
+    // Right-size the packing buffers: a fixed MC·KC + KC·NC allocation
+    // (384 KB zeroed) dwarfs the arithmetic of the small blocked solves
+    // in the ULV sweeps (§Perf: dominant cost of 1-RHS gemm delegation).
+    let mut a_pack = vec![0.0f64; MC.min(m) * KC.min(k)];
+    let mut b_pack = vec![0.0f64; KC.min(k) * NC.min(n)];
 
     for p0 in (0..k).step_by(KC) {
         let pb = KC.min(k - p0);
@@ -208,23 +219,32 @@ pub fn gemm(alpha: f64, a: &Mat, ta: Trans, b: &Mat, tb: Trans, beta: f64, c: &m
                         }
                         jj += 4;
                     }
-                    // jb remainder
+                    // jb remainder — sequential accumulation, matching
+                    // the micro-kernel's per-entry op order exactly
                     while jj < jb {
                         let bcol = &b_pack[jj * pb..jj * pb + pb];
                         for (r, arow) in [a0, a1, a2, a3].into_iter().enumerate() {
-                            c.row_mut(i0 + ii + r)[j0 + jj] += alpha * dot(arow, bcol);
+                            let mut acc = 0.0;
+                            for (&a, &b) in arow.iter().zip(bcol.iter()) {
+                                acc += a * b;
+                            }
+                            c.row_mut(i0 + ii + r)[j0 + jj] += alpha * acc;
                         }
                         jj += 1;
                     }
                     ii += 4;
                 }
-                // ib remainder
+                // ib remainder — same sequential accumulation
                 while ii < ib {
                     let arow = &a_pack[ii * pb..ii * pb + pb];
                     let crow = c.row_mut(i0 + ii);
                     for jj in 0..jb {
                         let bcol = &b_pack[jj * pb..jj * pb + pb];
-                        crow[j0 + jj] += alpha * dot(arow, bcol);
+                        let mut acc = 0.0;
+                        for (&a, &b) in arow.iter().zip(bcol.iter()) {
+                            acc += a * b;
+                        }
+                        crow[j0 + jj] += alpha * acc;
                     }
                     ii += 1;
                 }
@@ -392,6 +412,24 @@ mod tests {
             let got = matmul(&a, Trans::No, &b, Trans::No);
             let want = naive_matmul(&a, &b);
             testkit::assert_allclose(got.data(), want.data(), 1e-10);
+        }
+    }
+
+    #[test]
+    fn gemm_columns_invariant_to_rhs_width() {
+        // C[:, j] must be bitwise identical whether B carries 1 or many
+        // columns — the batched multi-RHS solve stack depends on this.
+        // Sizes straddle the MC/KC/NC blocking boundaries on purpose.
+        let mut rng = Rng::new(5);
+        for &(m, k) in &[(30usize, 40usize), (70, 300), (129, 513)] {
+            let a = Mat::gauss(m, k, &mut rng);
+            let b = Mat::gauss(k, 9, &mut rng);
+            let full = matmul(&a, Trans::No, &b, Trans::No);
+            for j in 0..b.cols() {
+                let bj = b.select_cols(&[j]);
+                let single = matmul(&a, Trans::No, &bj, Trans::No);
+                assert_eq!(full.col(j), single.col(0), "column {j} differs at m={m} k={k}");
+            }
         }
     }
 

@@ -10,12 +10,23 @@ pub struct Chol {
 }
 
 /// Error for non-SPD input.
-#[derive(Debug, thiserror::Error)]
-#[error("matrix not positive definite at pivot {pivot} (value {value:.3e})")]
+#[derive(Debug)]
 pub struct NotSpd {
     pub pivot: usize,
     pub value: f64,
 }
+
+impl std::fmt::Display for NotSpd {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "matrix not positive definite at pivot {} (value {:.3e})",
+            self.pivot, self.value
+        )
+    }
+}
+
+impl std::error::Error for NotSpd {}
 
 impl Chol {
     /// Factor an SPD matrix. O(n³/3).
@@ -82,14 +93,50 @@ impl Chol {
         y
     }
 
-    /// Solve with a matrix right-hand side (column-wise).
+    /// Solve A X = B for a whole block of right-hand sides at once.
+    ///
+    /// Blocked substitution: each row operation is vectorized across all
+    /// k columns of the RHS (the multi-RHS analogue of `dtrsm`), so the
+    /// triangular factor is streamed through cache once per sweep instead
+    /// of once per column. The per-column sequence of floating-point
+    /// operations is *identical* to [`Chol::solve`] — column j of the
+    /// result is bit-for-bit the single-RHS solve of column j, which the
+    /// batched ADMM grid relies on.
     pub fn solve_mat(&self, b: &Mat) -> Mat {
-        let mut x = Mat::zeros(b.rows(), b.cols());
-        for j in 0..b.cols() {
-            let col = b.col(j);
-            let sol = self.solve(&col);
-            for i in 0..b.rows() {
-                x[(i, j)] = sol[i];
+        let n = self.l.rows();
+        assert_eq!(b.rows(), n, "solve_mat dimension mismatch");
+        let k = b.cols();
+        let mut x = b.clone();
+        // forward: L Y = B, row i minus L[i, :i] · Y[:i, :]
+        for i in 0..n {
+            let (head, tail) = x.data_mut().split_at_mut(i * k);
+            let xi = &mut tail[..k];
+            let lrow = self.l.row(i);
+            for (p, &a) in lrow.iter().enumerate().take(i) {
+                let xp = &head[p * k..(p + 1) * k];
+                for (v, &w) in xi.iter_mut().zip(xp.iter()) {
+                    *v -= a * w;
+                }
+            }
+            let d = lrow[i];
+            for v in xi.iter_mut() {
+                *v /= d;
+            }
+        }
+        // backward: Lᵀ X = Y, row i minus L[i+1.., i]ᵀ · X[i+1.., :]
+        for i in (0..n).rev() {
+            let (head, tail) = x.data_mut().split_at_mut((i + 1) * k);
+            let xi = &mut head[i * k..];
+            for p in i + 1..n {
+                let a = self.l[(p, i)];
+                let xp = &tail[(p - i - 1) * k..(p - i) * k];
+                for (v, &w) in xi.iter_mut().zip(xp.iter()) {
+                    *v -= a * w;
+                }
+            }
+            let d = self.l[(i, i)];
+            for v in xi.iter_mut() {
+                *v /= d;
             }
         }
         x
@@ -145,15 +192,19 @@ mod tests {
     }
 
     #[test]
-    fn solve_mat_matches_columns() {
+    fn solve_mat_matches_columns_bitwise() {
+        // the multi-RHS path must replay the exact per-column arithmetic
+        // of the scalar path (the batched ADMM grid depends on this)
         let mut rng = crate::util::prng::Rng::new(3);
-        let a = random_spd(10, &mut rng);
-        let b = Mat::gauss(10, 3, &mut rng);
-        let ch = Chol::new(&a).unwrap();
-        let x = ch.solve_mat(&b);
-        for j in 0..3 {
-            let want = ch.solve(&b.col(j));
-            testkit::assert_allclose(&x.col(j), &want, 1e-12);
+        for ncols in [1usize, 2, 5, 17] {
+            let a = random_spd(23, &mut rng);
+            let b = Mat::gauss(23, ncols, &mut rng);
+            let ch = Chol::new(&a).unwrap();
+            let x = ch.solve_mat(&b);
+            for j in 0..ncols {
+                let want = ch.solve(&b.col(j));
+                assert_eq!(x.col(j), want, "column {j} of {ncols} not bitwise equal");
+            }
         }
     }
 

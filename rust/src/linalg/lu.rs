@@ -14,12 +14,19 @@ pub struct Lu {
 }
 
 /// Singular-matrix error.
-#[derive(Debug, thiserror::Error)]
-#[error("singular matrix at pivot {pivot} (|pivot| = {value:.3e})")]
+#[derive(Debug)]
 pub struct Singular {
     pub pivot: usize,
     pub value: f64,
 }
+
+impl std::fmt::Display for Singular {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "singular matrix at pivot {} (|pivot| = {:.3e})", self.pivot, self.value)
+    }
+}
+
+impl std::error::Error for Singular {}
 
 impl Lu {
     pub fn new(a: &Mat) -> Result<Self, Singular> {
@@ -97,13 +104,50 @@ impl Lu {
         y
     }
 
-    /// Solve for a matrix RHS, column-wise.
+    /// Solve A X = B for a whole block of right-hand sides at once.
+    ///
+    /// Blocked substitution with each row operation vectorized across
+    /// the k RHS columns (multi-RHS `dtrsm` style), so L and U stream
+    /// through cache once per sweep instead of once per column. Column j
+    /// of the result is bit-for-bit identical to `solve(b.col(j))` — the
+    /// per-column operation sequence is unchanged, which the batched
+    /// ADMM grid relies on.
     pub fn solve_mat(&self, b: &Mat) -> Mat {
-        let mut x = Mat::zeros(b.rows(), b.cols());
-        for j in 0..b.cols() {
-            let sol = self.solve(&b.col(j));
-            for i in 0..b.rows() {
-                x[(i, j)] = sol[i];
+        let n = self.lu.rows();
+        assert_eq!(b.rows(), n, "solve_mat dimension mismatch");
+        let k = b.cols();
+        // apply the row permutation
+        let mut x = Mat::zeros(n, k);
+        for (i, &p) in self.perm.iter().enumerate() {
+            x.row_mut(i).copy_from_slice(b.row(p));
+        }
+        // forward: L Y = P B (unit diagonal)
+        for i in 1..n {
+            let (head, tail) = x.data_mut().split_at_mut(i * k);
+            let xi = &mut tail[..k];
+            let lurow = self.lu.row(i);
+            for (p, &a) in lurow.iter().enumerate().take(i) {
+                let xp = &head[p * k..(p + 1) * k];
+                for (v, &w) in xi.iter_mut().zip(xp.iter()) {
+                    *v -= a * w;
+                }
+            }
+        }
+        // backward: U X = Y
+        for i in (0..n).rev() {
+            let (head, tail) = x.data_mut().split_at_mut((i + 1) * k);
+            let xi = &mut head[i * k..];
+            let lurow = self.lu.row(i);
+            for p in i + 1..n {
+                let a = lurow[p];
+                let xp = &tail[(p - i - 1) * k..(p - i) * k];
+                for (v, &w) in xi.iter_mut().zip(xp.iter()) {
+                    *v -= a * w;
+                }
+            }
+            let d = lurow[i];
+            for v in xi.iter_mut() {
+                *v /= d;
             }
         }
         x
@@ -148,6 +192,24 @@ mod tests {
     fn singular_detected() {
         let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 2.0, 4.0]);
         assert!(Lu::new(&a).is_err());
+    }
+
+    #[test]
+    fn solve_mat_matches_columns_bitwise() {
+        // multi-RHS substitution must replay the exact per-column
+        // arithmetic of the scalar solve (batched ADMM depends on this)
+        let mut rng = crate::util::prng::Rng::new(9);
+        for ncols in [1usize, 3, 8] {
+            let mut a = Mat::gauss(19, 19, &mut rng);
+            a.shift_diag(9.0);
+            let b = Mat::gauss(19, ncols, &mut rng);
+            let lu = Lu::new(&a).unwrap();
+            let x = lu.solve_mat(&b);
+            for j in 0..ncols {
+                let want = lu.solve(&b.col(j));
+                assert_eq!(x.col(j), want, "column {j} of {ncols} not bitwise equal");
+            }
+        }
     }
 
     #[test]

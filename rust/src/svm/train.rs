@@ -93,6 +93,27 @@ impl HssSvmTrainer {
         (model, out)
     }
 
+    /// Stage 3, batched: advance the whole C-grid in lockstep through
+    /// [`AdmmSolver::run_grid`] — one blocked multi-RHS ULV sweep per
+    /// iteration instead of one scalar solve per (C, iteration) — and
+    /// assemble one model per C. Results match `train_c_with_solver`
+    /// column-for-column (bit-for-bit at `relax = 1`).
+    pub fn train_grid_with_solver(
+        &self,
+        solver: &AdmmSolver<'_, UlvFactor>,
+        cs: &[f64],
+    ) -> Vec<(SvmModel, AdmmOutput)> {
+        solver
+            .run_grid(cs)
+            .into_iter()
+            .zip(cs.iter())
+            .map(|(out, &c)| {
+                let model = self.assemble_model(&out.z, c);
+                (model, out)
+            })
+            .collect()
+    }
+
     /// Build the model from the final z (tree order): bias from margin
     /// support vectors through the HSS matvec, SVs = nonzero z.
     pub fn assemble_model(&self, z: &[f64], c: f64) -> SvmModel {
@@ -111,7 +132,11 @@ impl HssSvmTrainer {
             .collect();
         let m_count = ebar.iter().sum::<f64>();
 
-        // bias: b = (z_yᵀ K̃ ē − Σ_{j∈M} y_j) / |M|   (line 17)
+        // bias: b = (Σ_{j∈M} y_j − z_yᵀ K̃ ē) / |M|   (line 17, written in
+        // the KKT-consistent orientation: averaging b = y_j − f(x_j) over
+        // the margin SVs; the paper's eq. (2) prints the negation — see
+        // the note in `crate::svm`. Guarded by the regression test
+        // `hss_bias_matches_dense_margin_bias` below.)
         let bias = if m_count > 0.0 {
             let ke = matvec::matvec(hss, &ebar);
             let zky: f64 = zy.iter().zip(ke.iter()).map(|(a, b)| a * b).sum();
@@ -232,12 +257,14 @@ mod tests {
     fn paper_iteration_budget_is_enough_on_loose_compression() {
         // MaxIt = 10 and the Table-4 (low accuracy) HSS setting must
         // still classify clusterable data decently — the paper's claim.
+        // Train and test are disjoint splits of a single draw: the test
+        // set used to be generated from a fresh Rng with the same seed
+        // as the training set, so it replayed the same stream and
+        // partially duplicated training points (train/test leakage).
+        // The threshold is re-tuned for a genuinely held-out test set.
         let mut rng = Rng::new(63);
-        let train = synth::blobs(800, 6, 4, 0.35, &mut rng);
-        let test = synth::blobs(400, 6, 4, 0.35, &mut {
-            let mut r = Rng::new(63);
-            r
-        });
+        let ds = synth::blobs(1200, 6, 4, 0.35, &mut rng);
+        let (train, test) = ds.split_at(800);
         let kernel = Kernel::Gaussian { h: 1.0 };
         let mut hp = HssParams::low_accuracy();
         hp.leaf_size = 64;
@@ -251,6 +278,93 @@ mod tests {
         )
         .unwrap();
         let acc = predict::accuracy(&model, &test, 2);
-        assert!(acc > 0.8, "blobs accuracy with loose HSS {acc}");
+        assert!(acc > 0.75, "blobs accuracy with loose HSS {acc}");
+    }
+
+    #[test]
+    fn hss_bias_matches_dense_margin_bias() {
+        // Regression guard for the bias sign (Algorithm 3 line 17): the
+        // HSS-path bias must equal the pointwise KKT bias computed from
+        // margin SVs through the dense kernel, b = avg_j (y_j − f(x_j)).
+        // With the sign flipped, the two differ by 2|b|.
+        let mut rng = Rng::new(65);
+        let train = synth::two_moons(240, 0.08, &mut rng);
+        let kernel = Kernel::Gaussian { h: 0.4 };
+        let trainer = HssSvmTrainer::compress(&train, kernel, &HssParams::near_exact(), 1);
+        let beta = 5.0;
+        let c = 5.0;
+        let ulv = trainer.factor(beta).unwrap();
+        let solver = AdmmSolver::new(
+            &ulv,
+            &trainer.y,
+            AdmmParams { beta, max_it: 2000, relax: 1.0, tol: 0.0 },
+        );
+        let out = solver.run(c);
+        let model = trainer.assemble_model(&out.z, c);
+
+        // dense pointwise bias over the same margin window as
+        // assemble_model (tree order throughout)
+        let k = kernel.gram(&trainer.compressed.pds.x);
+        let y = &trainer.y;
+        let n = out.z.len();
+        let (lo, hi) = (1e-6 * c, c * (1.0 - 1e-6));
+        let mut acc = 0.0;
+        let mut cnt = 0usize;
+        for j in 0..n {
+            if out.z[j] > lo && out.z[j] < hi {
+                let mut f = 0.0;
+                for i in 0..n {
+                    f += y[i] * out.z[i] * k[(i, j)];
+                }
+                acc += y[j] - f;
+                cnt += 1;
+            }
+        }
+        assert!(cnt > 0, "no margin support vectors in the regression setup");
+        let b_dense = acc / cnt as f64;
+        // a sign flip would show up as |Δ| = 2|b|; 1e-4 leaves room for
+        // the near-exact compression's K̃ ≈ K residual only
+        assert!(
+            (model.bias - b_dense).abs() < 1e-4 * (1.0 + b_dense.abs()),
+            "HSS bias {} vs dense margin bias {b_dense}",
+            model.bias
+        );
+        // and the assembled bias must place well-interior margin SVs on
+        // the margin: y_j (f_j + b) ≈ 1 (KKT) — this pins the sign even
+        // when |b| itself is small
+        for j in 0..n {
+            if out.z[j] > 1e-2 * c && out.z[j] < c * (1.0 - 1e-2) {
+                let mut f = model.bias;
+                for i in 0..n {
+                    f += y[i] * out.z[i] * k[(i, j)];
+                }
+                let margin = y[j] * f;
+                assert!(
+                    (margin - 1.0).abs() < 0.1,
+                    "margin SV {j} off the margin with assembled bias: y·f = {margin}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn grid_trainer_matches_sequential_models() {
+        let mut rng = Rng::new(66);
+        let train = synth::circles(220, 0.05, &mut rng);
+        let kernel = Kernel::Gaussian { h: 0.4 };
+        let trainer = HssSvmTrainer::compress(&train, kernel, &HssParams::near_exact(), 1);
+        let beta = 10.0;
+        let ulv = trainer.factor(beta).unwrap();
+        let ap = AdmmParams { beta, max_it: 12, relax: 1.0, tol: 0.0 };
+        let solver = AdmmSolver::new(&ulv, &trainer.y, ap);
+        let cs = [0.1, 1.0, 10.0];
+        let batched = trainer.train_grid_with_solver(&solver, &cs);
+        assert_eq!(batched.len(), cs.len());
+        for ((model, out), &c) in batched.iter().zip(cs.iter()) {
+            let (model_seq, out_seq) = trainer.train_c_with_solver(&solver, c);
+            assert_eq!(out.z, out_seq.z, "z mismatch at C={c}");
+            assert_eq!(model.bias, model_seq.bias, "bias mismatch at C={c}");
+            assert_eq!(model.alpha_y, model_seq.alpha_y, "alpha mismatch at C={c}");
+        }
     }
 }
