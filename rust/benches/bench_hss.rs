@@ -1,10 +1,20 @@
 //! HSS scaling benchmarks: compression / factorization / solve versus n,
 //! validating the paper's complexity claims (O(r²d) construction, O(rd)
-//! memory, O(rd)-ish solves) plus two ablations the DESIGN.md calls out:
-//! ANN-guided vs pure-random column sampling, and kmeans vs PCA splits.
+//! memory, O(rd)-ish solves), the two batching/parallelism tentpoles
+//! (batched C-grid vs sequential runs; level-scheduled parallel tree
+//! engine vs the serial sweeps) plus two ablations the DESIGN.md calls
+//! out: ANN-guided vs pure-random column sampling, and kmeans vs PCA
+//! splits.
+//!
+//! Flags (CI uses all three — see `.github/workflows/ci.yml`):
+//!   --smoke              reduced problem sizes / budgets for PR gating
+//!   --json <path>        write the headline metrics as JSON (artifact)
+//!   --baseline <path>    TOML (key = value) with the committed speedup
+//!                        floors; exit nonzero on a >25% regression
 
 use hss_svm::admm::{AdmmParams, AdmmSolver};
 use hss_svm::cluster::SplitMethod;
+use hss_svm::config::Config;
 use hss_svm::data::synth;
 use hss_svm::hss::compress::compress;
 use hss_svm::hss::matvec;
@@ -17,17 +27,52 @@ use hss_svm::util::threadpool;
 use hss_svm::util::timer::Timer;
 use std::time::Duration;
 
+struct Opts {
+    smoke: bool,
+    json: Option<String>,
+    baseline: Option<String>,
+}
+
+/// Cargo runs bench binaries with cwd = the package dir (`rust/`), not
+/// the workspace root; resolve relative paths against the repository
+/// root so CI and the README can both say `ci/bench_baseline.toml`.
+fn from_repo_root(p: &str) -> std::path::PathBuf {
+    let path = std::path::Path::new(p);
+    if path.is_absolute() {
+        path.to_path_buf()
+    } else {
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join(path)
+    }
+}
+
+fn parse_opts() -> Opts {
+    let mut opts = Opts { smoke: false, json: None, baseline: None };
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--smoke" => opts.smoke = true,
+            "--json" => opts.json = args.next(),
+            "--baseline" => opts.baseline = args.next(),
+            other => eprintln!("[hss] ignoring unknown flag {other:?}"),
+        }
+    }
+    opts
+}
+
 fn main() {
+    let opts = parse_opts();
     let threads = threadpool::default_threads();
     let mut rng = Rng::new(7);
-    let mut b = Bench::new(Duration::from_secs(1));
-    println!("[hss] threads = {threads}\n");
+    let budget = if opts.smoke { Duration::from_millis(200) } else { Duration::from_secs(1) };
+    let mut b = Bench::new(budget);
+    println!("[hss] threads = {threads}, smoke = {}\n", opts.smoke);
 
     let kernel = Kernel::Gaussian { h: 1.5 };
 
     // --- scaling in n (near-linear is the paper's claim) ---
     println!("-- scaling (low-accuracy params, blobs dim 8) --");
-    for &n in &[1000usize, 2000, 4000, 8000] {
+    let scaling_ns: &[usize] = if opts.smoke { &[1000, 2000] } else { &[1000, 2000, 4000, 8000] };
+    for &n in scaling_ns {
         let ds = synth::blobs(n, 8, 6, 0.3, &mut rng);
         let p = HssParams::low_accuracy();
 
@@ -67,13 +112,14 @@ fn main() {
     // amortized, advancing all k values of C in lockstep through one
     // blocked multi-RHS ULV sweep per iteration beats k scalar ADMM
     // runs. Verified to agree within 1e-10 (bitwise at relax = 1).
-    println!("\n-- batched C-grid vs sequential runs (n=2000, near_exact, 1 thread) --");
-    let dsg = synth::blobs(2000, 6, 5, 0.3, &mut rng);
+    let n_grid = if opts.smoke { 1000 } else { 2000 };
+    println!("\n-- batched C-grid vs sequential runs (n={n_grid}, near_exact, 1 thread) --");
+    let dsg = synth::blobs(n_grid, 6, 5, 0.3, &mut rng);
     let mut pg = HssParams::near_exact();
     pg.leaf_size = 64;
     let t = Timer::start();
     let comp = compress(&dsg, &kernel, &pg, 1);
-    b.record_once("grid: compress n=2000 near_exact", t.elapsed());
+    b.record_once(&format!("grid: compress n={n_grid} near_exact"), t.elapsed());
     let beta = 100.0;
     let t = Timer::start();
     let ulv_g = UlvFactor::new(&comp.hss, beta).unwrap();
@@ -99,42 +145,153 @@ fn main() {
         max_dev <= 1e-10,
         "batched C-grid deviates from the sequential path: max |Δz| = {max_dev:.3e}"
     );
+    let batched_speedup = seq_secs / batch_secs;
     println!(
         "    8 × run       {seq_secs:>8.3} s\n    1 × run_grid  {batch_secs:>8.3} s   \
-         ({:.2}x speedup, max |Δz| = {max_dev:.1e})",
-        seq_secs / batch_secs
+         ({batched_speedup:.2}x speedup, max |Δz| = {max_dev:.1e})"
     );
 
-    // --- ablation: ANN sampling vs pure random ---
-    println!("\n-- ablation: column sampling strategy (n=3000) --");
-    let ds = synth::blobs(3000, 8, 6, 0.25, &mut rng);
-    for (label, ann, oversample) in
-        [("ann-guided (paper)", 64usize, 32usize), ("pure-random", 0, 96)]
-    {
-        let p = HssParams {
-            ann_neighbors: ann,
-            oversample,
-            ..HssParams::low_accuracy()
-        };
-        let t = Timer::start();
-        let c = compress(&ds, &kernel, &p, threads);
-        b.record_once(&format!("compress {label}"), t.elapsed());
-        let mut err_rng = Rng::new(1);
-        let err = matvec::rel_error_probes(&c.hss, &kernel, &c.pds, 3, &mut err_rng);
-        println!("    -> rel matvec error {err:.3e}, max rank {}", c.stats.max_rank);
+    // --- level-scheduled tree engine: serial vs parallel factor +
+    //     grid-train (the ISSUE-2 tentpole's headline numbers) ---
+    let par_threads = threads.clamp(2, 8);
+    let n_par = if opts.smoke { 2000 } else { 8000 };
+    println!(
+        "\n-- tree-parallel engine: factor + C-grid train, 1 vs {par_threads} threads \
+         (n={n_par}) --"
+    );
+    let dsp = synth::blobs(n_par, 8, 6, 0.3, &mut rng);
+    let pp = HssParams::low_accuracy();
+    let compp = compress(&dsp, &kernel, &pp, par_threads);
+    let beta_p = 100.0;
+    let admm_p = AdmmParams { beta: beta_p, max_it: 10, relax: 1.0, tol: 0.0 };
+    let cs_p: Vec<f64> = (0..8).map(|i| 0.05 * 2.0f64.powi(i)).collect();
+
+    let t = Timer::start();
+    let ulv_serial = UlvFactor::new_threaded(&compp.hss, beta_p, 1).unwrap();
+    let serial_factor = t.secs();
+    let solver_serial = AdmmSolver::new(&ulv_serial, &compp.pds.y, admm_p).with_threads(1);
+    let t = Timer::start();
+    let outs_serial = solver_serial.run_grid(&cs_p);
+    let serial_grid = t.secs();
+
+    let t = Timer::start();
+    let ulv_par = UlvFactor::new_threaded(&compp.hss, beta_p, par_threads).unwrap();
+    let par_factor = t.secs();
+    let solver_par =
+        AdmmSolver::new(&ulv_par, &compp.pds.y, admm_p).with_threads(par_threads);
+    let t = Timer::start();
+    let outs_par = solver_par.run_grid(&cs_p);
+    let par_grid = t.secs();
+
+    // the thread-invariance contract: AdmmOutput must be bitwise equal
+    for (s, p) in outs_serial.iter().zip(outs_par.iter()) {
+        assert_eq!(s.z, p.z, "parallel C-grid z deviates from serial");
+        assert_eq!(s.x, p.x, "parallel C-grid x deviates from serial");
+        assert_eq!(s.mu, p.mu, "parallel C-grid mu deviates from serial");
+    }
+    let parallel_speedup = (serial_factor + serial_grid) / (par_factor + par_grid).max(1e-12);
+    b.record_once(
+        "engine: factor+grid 1 thread",
+        Duration::from_secs_f64(serial_factor + serial_grid),
+    );
+    b.record_once(
+        &format!("engine: factor+grid {par_threads} threads"),
+        Duration::from_secs_f64(par_factor + par_grid),
+    );
+    println!(
+        "    factor   {serial_factor:>8.3} s → {par_factor:>8.3} s\n    \
+         grid     {serial_grid:>8.3} s → {par_grid:>8.3} s\n    \
+         combined {parallel_speedup:.2}x speedup at {par_threads} threads \
+         (bitwise-identical outputs)"
+    );
+
+    if !opts.smoke {
+        // --- ablation: ANN sampling vs pure random ---
+        println!("\n-- ablation: column sampling strategy (n=3000) --");
+        let ds = synth::blobs(3000, 8, 6, 0.25, &mut rng);
+        for (label, ann, oversample) in
+            [("ann-guided (paper)", 64usize, 32usize), ("pure-random", 0, 96)]
+        {
+            let p = HssParams {
+                ann_neighbors: ann,
+                oversample,
+                ..HssParams::low_accuracy()
+            };
+            let t = Timer::start();
+            let c = compress(&ds, &kernel, &p, threads);
+            b.record_once(&format!("compress {label}"), t.elapsed());
+            let mut err_rng = Rng::new(1);
+            let err = matvec::rel_error_probes(&c.hss, &kernel, &c.pds, 3, &mut err_rng);
+            println!("    -> rel matvec error {err:.3e}, max rank {}", c.stats.max_rank);
+        }
+
+        // --- ablation: split method ---
+        println!("\n-- ablation: cluster split method (n=3000) --");
+        for (label, split) in [("kmeans", SplitMethod::TwoMeans), ("pca", SplitMethod::Pca)] {
+            let p = HssParams { split, ..HssParams::low_accuracy() };
+            let t = Timer::start();
+            let c = compress(&ds, &kernel, &p, threads);
+            b.record_once(&format!("compress split={label}"), t.elapsed());
+            println!(
+                "    -> memory {:.2} MB, max rank {}",
+                c.stats.memory_bytes as f64 / 1e6,
+                c.stats.max_rank
+            );
+        }
     }
 
-    // --- ablation: split method ---
-    println!("\n-- ablation: cluster split method (n=3000) --");
-    for (label, split) in [("kmeans", SplitMethod::TwoMeans), ("pca", SplitMethod::Pca)] {
-        let p = HssParams { split, ..HssParams::low_accuracy() };
-        let t = Timer::start();
-        let c = compress(&ds, &kernel, &p, threads);
-        b.record_once(&format!("compress split={label}"), t.elapsed());
+    // --- machine-readable artifact + committed-baseline regression gate ---
+    if let Some(path) = &opts.json {
+        let mut json = String::from("{\n");
+        json.push_str(&format!("  \"smoke\": {},\n", opts.smoke));
+        json.push_str(&format!("  \"threads\": {par_threads},\n"));
+        json.push_str(&format!("  \"n_grid\": {n_grid},\n"));
+        json.push_str(&format!("  \"n_parallel\": {n_par},\n"));
+        json.push_str(&format!("  \"batched_seq_secs\": {seq_secs:.6},\n"));
+        json.push_str(&format!("  \"batched_grid_secs\": {batch_secs:.6},\n"));
+        json.push_str(&format!("  \"batched_speedup\": {batched_speedup:.4},\n"));
+        json.push_str(&format!("  \"serial_factor_secs\": {serial_factor:.6},\n"));
+        json.push_str(&format!("  \"serial_grid_secs\": {serial_grid:.6},\n"));
+        json.push_str(&format!("  \"parallel_factor_secs\": {par_factor:.6},\n"));
+        json.push_str(&format!("  \"parallel_grid_secs\": {par_grid:.6},\n"));
+        json.push_str(&format!("  \"parallel_speedup\": {parallel_speedup:.4},\n"));
+        json.push_str(&format!("  \"max_dev\": {max_dev:.3e}\n"));
+        json.push_str("}\n");
+        let out = from_repo_root(path);
+        std::fs::write(&out, json).expect("write bench JSON");
+        println!("\n[hss] wrote {}", out.display());
+    }
+    if let Some(path) = &opts.baseline {
+        let base = Config::load(from_repo_root(path)).expect("read bench baseline");
+        // a typoed/missing key must fail loudly, not quietly weaken the gate
+        let baseline_key = |key: &str| -> f64 {
+            base.get("", key)
+                .and_then(|v| v.as_f64())
+                .unwrap_or_else(|| panic!("baseline {path} is missing numeric key {key:?}"))
+        };
+        let floor_batched = 0.75 * baseline_key("batched_speedup");
+        let floor_parallel = 0.75 * baseline_key("parallel_speedup");
         println!(
-            "    -> memory {:.2} MB, max rank {}",
-            c.stats.memory_bytes as f64 / 1e6,
-            c.stats.max_rank
+            "\n[hss] baseline gate: batched {batched_speedup:.2}x (floor {floor_batched:.2}x), \
+             parallel {parallel_speedup:.2}x (floor {floor_parallel:.2}x)"
         );
+        let mut failed = false;
+        if batched_speedup < floor_batched {
+            eprintln!(
+                "[hss] REGRESSION: batched C-grid speedup {batched_speedup:.2}x fell >25% below \
+                 the committed baseline"
+            );
+            failed = true;
+        }
+        if parallel_speedup < floor_parallel {
+            eprintln!(
+                "[hss] REGRESSION: tree-parallel speedup {parallel_speedup:.2}x fell >25% below \
+                 the committed baseline"
+            );
+            failed = true;
+        }
+        if failed {
+            std::process::exit(1);
+        }
     }
 }

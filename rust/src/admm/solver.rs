@@ -2,6 +2,7 @@
 
 use crate::linalg::chol::Chol;
 use crate::linalg::Mat;
+use crate::util::threadpool;
 
 /// Anything that can solve (K + βI) x = b. Implemented by the HSS ULV
 /// factorization (the paper's path) and by dense Cholesky (the exact
@@ -161,6 +162,9 @@ pub struct AdmmSolver<'a, S: ShiftedSolve> {
     /// Labels in the same ordering as the solver (tree order for HSS).
     y: &'a [f64],
     params: AdmmParams,
+    /// Worker threads for the batched grid's per-column updates (the
+    /// blocked solve parallelizes inside the backend itself).
+    threads: usize,
     /// w = Y K_β⁻¹ e.
     w: Vec<f64>,
     /// w₁ = eᵀ K_β⁻¹ e.
@@ -178,7 +182,16 @@ impl<'a, S: ShiftedSolve> AdmmSolver<'a, S> {
         for (wi, yi) in w.iter_mut().zip(y.iter()) {
             *wi *= yi;
         }
-        AdmmSolver { solver, y, params, w, w1 }
+        AdmmSolver { solver, y, params, threads: 1, w, w1 }
+    }
+
+    /// Set the worker-thread count for [`AdmmSolver::run_grid`]'s
+    /// per-column q/x/z/μ updates. Columns are independent and each
+    /// keeps its exact serial arithmetic, so outputs are bit-for-bit
+    /// identical for every thread count.
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads.max(1);
+        self
     }
 
     /// Run MaxIt closed-form iterations for penalty `c` (lines 8–14),
@@ -248,7 +261,10 @@ impl<'a, S: ShiftedSolve> AdmmSolver<'a, S> {
     /// into MaxIt blocked O(d·m·k) GEMM-dominated sweeps — the missing
     /// half of the paper's "one factorization, every C" reuse story
     /// (Algorithm 3 / Tables 4–5).
-    pub fn run_grid(&self, cs: &[f64]) -> Vec<AdmmOutput> {
+    pub fn run_grid(&self, cs: &[f64]) -> Vec<AdmmOutput>
+    where
+        S: Sync,
+    {
         let k = cs.len();
         if k == 0 {
             return Vec::new();
@@ -276,36 +292,64 @@ impl<'a, S: ShiftedSolve> AdmmSolver<'a, S> {
             // q_j = e + μ_j + βz_j ;  U[:, col] = Y q_j. The scalar
             // w·q_j is accumulated on the fly (same i-order fold as the
             // scalar path's sum, so bitwise identical) instead of
-            // keeping k n-length q buffers alive.
-            let mut u = Mat::zeros(n, act.len());
-            for (col, &j) in act.iter().enumerate() {
-                let (z, mu) = (&zs[j], &mus[j]);
-                let mut w2 = 0.0;
-                for i in 0..n {
-                    let qi = 1.0 + mu[i] + beta * z[i];
-                    u[(i, col)] = self.y[i] * qi;
-                    w2 += self.w[i] * qi;
-                }
-                w2s[j] = w2;
+            // keeping k n-length q buffers alive. Columns are mutually
+            // independent → parallel over the active set, each column
+            // writing its own strided entries of U and its own w2 slot.
+            let kact = act.len();
+            // Per-column updates are O(n) flops; below ~32k total
+            // elements the two scoped-pool spawns per iteration cost
+            // more than they save, so fall back to the serial order
+            // (bitwise identical either way — per-column arithmetic
+            // does not depend on the schedule).
+            let upd_threads = if n * kact >= 32_768 { self.threads } else { 1 };
+            let mut u = Mat::zeros(n, kact);
+            {
+                let uc = threadpool::disjoint(u.data_mut());
+                let w2c = threadpool::disjoint(&mut w2s);
+                threadpool::parallel_for(upd_threads, kact, 1, |col| {
+                    let j = act[col];
+                    let (z, mu) = (&zs[j], &mus[j]);
+                    let mut w2 = 0.0;
+                    for i in 0..n {
+                        let qi = 1.0 + mu[i] + beta * z[i];
+                        // SAFETY: column `col` is owned by this task.
+                        unsafe { *uc.get(i * kact + col) = self.y[i] * qi };
+                        w2 += self.w[i] * qi;
+                    }
+                    unsafe { *w2c.get(j) = w2 };
+                });
             }
             // V = K_β⁻¹ U — the single batched solve of the iteration
             let v = self.solver.solve_shifted_multi(&u);
-            for (col, &j) in act.iter().enumerate() {
-                let c = cs[j];
-                let x = &mut xs[j];
-                let z = &mut zs[j];
-                let mu = &mut mus[j];
-                // x_j = Y v_j − (w·q_j / w₁) w
-                let ratio = w2s[j] / self.w1;
-                for i in 0..n {
-                    x[i] = self.y[i] * v[(i, col)] - ratio * self.w[i];
-                }
-                let (pr, du) = admm_zmu_step(x, z, mu, c, beta, relax);
-                primals[j].push(pr);
-                duals[j].push(du);
-                if self.params.tol > 0.0 && pr.max(du) < self.params.tol {
-                    active[j] = false;
-                }
+            {
+                let xc = threadpool::disjoint(&mut xs);
+                let zc = threadpool::disjoint(&mut zs);
+                let mc = threadpool::disjoint(&mut mus);
+                let pc = threadpool::disjoint(&mut primals);
+                let dc = threadpool::disjoint(&mut duals);
+                let ac = threadpool::disjoint(&mut active);
+                threadpool::parallel_for(upd_threads, kact, 1, |col| {
+                    let j = act[col];
+                    let c = cs[j];
+                    // SAFETY: all slots indexed by j are owned by this
+                    // task (each active j appears once in `act`).
+                    unsafe {
+                        let x = &mut *xc.get(j);
+                        let z = &mut *zc.get(j);
+                        let mu = &mut *mc.get(j);
+                        // x_j = Y v_j − (w·q_j / w₁) w
+                        let ratio = w2s[j] / self.w1;
+                        for i in 0..n {
+                            x[i] = self.y[i] * v[(i, col)] - ratio * self.w[i];
+                        }
+                        let (pr, du) = admm_zmu_step(x, z, mu, c, beta, relax);
+                        (*pc.get(j)).push(pr);
+                        (*dc.get(j)).push(du);
+                        if self.params.tol > 0.0 && pr.max(du) < self.params.tol {
+                            *ac.get(j) = false;
+                        }
+                    }
+                });
             }
         }
 

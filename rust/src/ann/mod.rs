@@ -52,8 +52,9 @@ pub fn knn(ds: &Dataset, params: AnnParams, threads: usize, rng: &mut Rng) -> Kn
         let mut buckets: Vec<(usize, usize)> = Vec::new();
         bisect(ds, &mut idx, 0, n, params.bucket, &mut tree_rng, &mut buckets);
         // brute force within each bucket (parallel over buckets)
+        // chunk = 1: a bucket is O(bucket²) distance evaluations
         let results: Vec<Vec<(usize, usize, f64)>> =
-            threadpool::parallel_map(threads, buckets.len(), |b| {
+            threadpool::parallel_map(threads, buckets.len(), 1, |b| {
                 let (lo, hi) = buckets[b];
                 let ids = &idx[lo..hi];
                 let mut out = Vec::with_capacity(ids.len() * 4);
@@ -81,7 +82,9 @@ pub fn knn(ds: &Dataset, params: AnnParams, threads: usize, rng: &mut Rng) -> Kn
     let fanout = k.min(24);
     for _ in 0..params.refine {
         let snapshot: Vec<Vec<usize>> = best.iter().map(|h| h.closest(fanout)).collect();
-        let updates: Vec<Vec<(usize, f64)>> = threadpool::parallel_map(threads, n, |i| {
+        // per-point expansion is cheap → chunk 32 amortizes the atomic
+        // fetch across a cache-friendly run of points
+        let updates: Vec<Vec<(usize, f64)>> = threadpool::parallel_map(threads, n, 32, |i| {
             let mut cand: Vec<usize> = Vec::new();
             for &j in &snapshot[i] {
                 for &jj in &snapshot[j] {
@@ -111,7 +114,9 @@ pub fn knn(ds: &Dataset, params: AnnParams, threads: usize, rng: &mut Rng) -> Kn
 pub fn knn_exact(ds: &Dataset, k: usize, threads: usize) -> KnnLists {
     let n = ds.len();
     let k = k.min(n.saturating_sub(1));
-    let neighbors = threadpool::parallel_map(threads, n, |i| {
+    // an O(n) scan per point is still small for the n this path serves
+    // (n ≤ 512) → chunk 16
+    let neighbors = threadpool::parallel_map(threads, n, 16, |i| {
         let mut d: Vec<(usize, f64)> = (0..n)
             .filter(|&j| j != i)
             .map(|j| (j, blas::dist2(ds.point(i), ds.point(j))))

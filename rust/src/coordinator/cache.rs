@@ -107,7 +107,10 @@ impl KernelCache {
         trainer
     }
 
-    /// Stage-2 (ULV factor) — once per (h, params, β).
+    /// Stage-2 (ULV factor) — once per (h, params, β). The factorization
+    /// runs level-parallel over this cache's thread pool (the trainer
+    /// carries the knob), and the returned factor reuses the same pool
+    /// for every blocked solve.
     pub fn factor(
         &mut self,
         ds: &Dataset,

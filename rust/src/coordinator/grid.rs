@@ -61,8 +61,10 @@ impl GridSearch {
         let mut total_admm = 0.0;
 
         for &h in &self.h_values {
+            // the cache builds trainer+factor with this grid's thread
+            // pool; the batched ADMM updates share the same knob
             let (trainer, ulv) = cache.factor(train, h, &self.hss, &self.admm)?;
-            let solver = AdmmSolver::new(&*ulv, &trainer.y, self.admm);
+            let solver = AdmmSolver::new(&*ulv, &trainer.y, self.admm).with_threads(self.threads);
             let t = Timer::start();
             let outs = trainer.train_grid_with_solver(&solver, &self.c_values);
             let batch_secs = t.secs();

@@ -10,6 +10,7 @@
 use crate::ann::{self, AnnParams, KnnLists};
 use crate::cluster::ClusterTree;
 use crate::data::Dataset;
+use crate::hss::plan::LevelSchedule;
 use crate::hss::{Hss, HssNode, HssParams, HssStats};
 use crate::kernel::Kernel;
 use crate::linalg::cpqr;
@@ -77,41 +78,55 @@ pub fn compress_preprocessed(
     let n = pds.len();
     let mut rng = Rng::new(pre.seed);
 
-    // bottom-up per-level compression (nodes of a level are independent).
+    // Bottom-up level-scheduled compression: nodes of a level are
+    // independent (an internal node only needs its children's skeletons),
+    // so the shared level schedule drives ALL subtree nodes of a level in
+    // parallel — leaves and internal merges alike — with one worker-pool
+    // spawn for the whole build.
+    let plan = LevelSchedule::from_cluster_tree(tree);
     let n_nodes = tree.nodes.len();
     let kernel_evals = AtomicUsize::new(0);
     let mut slots: Vec<Option<HssNode>> = (0..n_nodes).map(|_| None).collect();
 
-    let max_level = tree.nodes.iter().map(|t| t.level).max().unwrap_or(0);
-    for level in (0..=max_level).rev() {
-        let ids: Vec<usize> = (0..n_nodes).filter(|&i| tree.nodes[i].level == level).collect();
-        // Per-node RNG forks for determinism regardless of thread schedule.
-        let seeds: Vec<u64> = ids.iter().map(|&i| rng.fork(i as u64).next_u64()).collect();
-        let built: Vec<HssNode> = {
-            let slots_ref = &slots;
-            threadpool::parallel_map(threads, ids.len(), |t| {
-                let mut node_rng = Rng::new(seeds[t]);
-                compress_node(CompressCtx {
-                    node_id: ids[t],
-                    tree,
-                    pds,
-                    kernel,
-                    params,
-                    slots: slots_ref,
-                    ann: ann_lists,
-                    kernel_evals: &kernel_evals,
-                    rng: &mut node_rng,
-                })
-            })
-        };
-        for (t, hn) in built.into_iter().enumerate() {
-            slots[ids[t]] = Some(hn);
+    // Per-node RNG forks, drawn from the shared stream in level-major
+    // order (deepest level first, ascending ids) so the sampling is
+    // deterministic regardless of the thread schedule.
+    let bottom_up = plan.bottom_up();
+    let mut seeds = vec![0u64; n_nodes];
+    for level in &bottom_up {
+        for &id in *level {
+            seeds[id] = rng.fork(id as u64).next_u64();
         }
+    }
+    {
+        let cells = threadpool::disjoint(&mut slots);
+        threadpool::run_levels(threads, &bottom_up, |id| {
+            let mut node_rng = Rng::new(seeds[id]);
+            let built = compress_node(CompressCtx {
+                node_id: id,
+                tree,
+                pds,
+                kernel,
+                params,
+                slots: &cells,
+                ann: ann_lists,
+                kernel_evals: &kernel_evals,
+                rng: &mut node_rng,
+            });
+            // SAFETY: each node id is written exactly once, by its own task.
+            unsafe { *cells.get(id) = Some(built) };
+        });
     }
 
     let nodes: Vec<HssNode> = slots.into_iter().map(|s| s.expect("node built")).collect();
-    let hss =
-        Hss { nodes, n, perm: tree.perm.clone(), iperm: tree.iperm.clone(), params: *params };
+    let hss = Hss {
+        nodes,
+        n,
+        perm: tree.perm.clone(),
+        iperm: tree.iperm.clone(),
+        params: *params,
+        plan,
+    };
     let stats = HssStats {
         max_rank: hss.max_rank(),
         memory_bytes: hss.memory_bytes(),
@@ -127,7 +142,9 @@ struct CompressCtx<'a> {
     pds: &'a Dataset,
     kernel: &'a Kernel,
     params: &'a HssParams,
-    slots: &'a [Option<HssNode>],
+    /// Per-node output slots; children (built by earlier levels, the
+    /// level barrier publishes them) are read through here.
+    slots: &'a threadpool::SendCells<'a, Option<HssNode>>,
     ann: &'a KnnLists,
     kernel_evals: &'a AtomicUsize,
     rng: &'a mut Rng,
@@ -147,8 +164,10 @@ fn compress_node(ctx: CompressCtx<'_>) -> HssNode {
         let d = crate::kernel::kernel_block(kernel, &pts, &pts);
         (rows, Some(d), None)
     } else {
-        let l = slots[t.left.unwrap()].as_ref().expect("left child built");
-        let r = slots[t.right.unwrap()].as_ref().expect("right child built");
+        // SAFETY: children were built in a deeper level; no task writes
+        // them while this level runs (disjoint per-node ownership).
+        let l = unsafe { (*slots.get(t.left.unwrap())).as_ref() }.expect("left child built");
+        let r = unsafe { (*slots.get(t.right.unwrap())).as_ref() }.expect("right child built");
         let mut rows = l.skel.clone();
         rows.extend_from_slice(&r.skel);
         // Sibling coupling: exact kernel entries between skeletons.

@@ -10,84 +10,108 @@
 use crate::hss::Hss;
 use crate::linalg::blas;
 use crate::linalg::Mat;
+use crate::util::threadpool;
 
-/// y = K̃ x, both in tree (permuted) order.
+/// y = K̃ x, both in tree (permuted) order (serial path).
 pub fn matvec(h: &Hss, x: &[f64]) -> Vec<f64> {
+    matvec_threads(h, x, 1)
+}
+
+/// y = K̃ x with both sweeps level-scheduled over `threads` workers.
+///
+/// The upsweep compresses bottom-up (x̂_i per node), the downsweep
+/// scatters sibling couplings top-down and finishes each leaf's
+/// y = D x + U g in place. Nodes of one level touch disjoint per-node
+/// state (and disjoint output rows at the leaves), and per-node
+/// arithmetic is the serial path's, so the result is bit-for-bit
+/// identical for every thread count.
+pub fn matvec_threads(h: &Hss, x: &[f64], threads: usize) -> Vec<f64> {
     assert_eq!(x.len(), h.n);
     let nn = h.nodes.len();
 
     // ---- upsweep: x̂_i = U_iᵀ (leaf slice | stacked child x̂) ----
     let mut xhat: Vec<Vec<f64>> = vec![Vec::new(); nn];
-    for i in 0..nn {
-        let node = &h.nodes[i];
-        let Some(u) = &node.u else { continue }; // root
-        let local: Vec<f64> = if node.is_leaf() {
-            x[node.begin..node.end].to_vec()
-        } else {
-            let mut v = xhat[node.left.unwrap()].clone();
-            v.extend_from_slice(&xhat[node.right.unwrap()]);
-            v
-        };
-        let mut out = vec![0.0; u.cols()];
-        blas::gemv_t(u, &local, &mut out);
-        xhat[i] = out;
+    {
+        let xhc = threadpool::disjoint(&mut xhat);
+        let bottom_up = h.plan.bottom_up();
+        threadpool::run_levels(threads, &bottom_up, |i| {
+            let node = &h.nodes[i];
+            let Some(u) = &node.u else { return }; // root
+            // SAFETY: children x̂ come from completed levels; only node
+            // i's own slot is written here.
+            let local: Vec<f64> = if node.is_leaf() {
+                x[node.begin..node.end].to_vec()
+            } else {
+                unsafe {
+                    let mut v = (*xhc.get(node.left.unwrap())).clone();
+                    v.extend_from_slice(&*xhc.get(node.right.unwrap()));
+                    v
+                }
+            };
+            let mut out = vec![0.0; u.cols()];
+            blas::gemv_t(u, &local, &mut out);
+            unsafe { *xhc.get(i) = out };
+        });
     }
 
-    // ---- downsweep: g_i in each node's basis ----
+    // ---- downsweep: g_i in each node's basis; leaves finish y ----
     let mut g: Vec<Vec<f64>> = vec![Vec::new(); nn];
-    // root: children exchange through B
-    for i in (0..nn).rev() {
-        let node = &h.nodes[i];
-        if node.is_leaf() {
-            continue;
-        }
-        let (li, ri) = (node.left.unwrap(), node.right.unwrap());
-        let b = node.b.as_ref().expect("internal node has B");
-        let rl = h.nodes[li].rank();
-        let rr = h.nodes[ri].rank();
-        let mut gl = vec![0.0; rl];
-        let mut gr = vec![0.0; rr];
-        // sibling coupling
-        blas::gemv(b, &xhat[ri], &mut gl); // B x̂_r
-        blas::gemv_t(b, &xhat[li], &mut gr); // Bᵀ x̂_l
-        // parent pass-down: g_child += R_child g_i
-        if !g[i].is_empty() {
-            let u = h.nodes[i].u.as_ref().expect("non-root internal has U");
-            // u = [R_l; R_r] stacked
-            let mut tmp = vec![0.0; u.rows()];
-            blas::gemv(u, &g[i], &mut tmp);
-            for (k, v) in tmp[..rl].iter().enumerate() {
-                gl[k] += v;
-            }
-            for (k, v) in tmp[rl..].iter().enumerate() {
-                gr[k] += v;
-            }
-        }
-        g[li] = gl;
-        g[ri] = gr;
-    }
-
-    // ---- leaves: y = D x_local + U g ----
     let mut y = vec![0.0; h.n];
-    for i in 0..nn {
-        let node = &h.nodes[i];
-        if !node.is_leaf() {
-            continue;
-        }
-        let d = node.d.as_ref().expect("leaf has D");
-        let xl = &x[node.begin..node.end];
-        let yl = &mut y[node.begin..node.end];
-        blas::gemv(d, xl, yl);
-        if let (Some(u), false) = (&node.u, g[i].is_empty()) {
-            let mut tmp = vec![0.0; u.rows()];
-            blas::gemv(u, &g[i], &mut tmp);
-            for (v, t) in yl.iter_mut().zip(tmp.iter()) {
-                *v += t;
+    {
+        let gc = threadpool::disjoint(&mut g);
+        let yc = threadpool::disjoint(&mut y);
+        let top_down = h.plan.top_down();
+        threadpool::run_levels(threads, &top_down, |i| {
+            let node = &h.nodes[i];
+            if node.is_leaf() {
+                // y = D x_local + U g_i (g_i was written by the parent's
+                // level; a root leaf has g_i empty).
+                // SAFETY: leaf row ranges are disjoint across the tree.
+                let d = node.d.as_ref().expect("leaf has D");
+                let xl = &x[node.begin..node.end];
+                let yl = unsafe { yc.slice(node.begin, node.end - node.begin) };
+                blas::gemv(d, xl, yl);
+                let gi = unsafe { &*gc.get(i) };
+                if let (Some(u), false) = (&node.u, gi.is_empty()) {
+                    let mut tmp = vec![0.0; u.rows()];
+                    blas::gemv(u, gi, &mut tmp);
+                    for (v, t) in yl.iter_mut().zip(tmp.iter()) {
+                        *v += t;
+                    }
+                }
+                return;
             }
-        }
+            let (li, ri) = (node.left.unwrap(), node.right.unwrap());
+            let b = node.b.as_ref().expect("internal node has B");
+            let rl = h.nodes[li].rank();
+            let rr = h.nodes[ri].rank();
+            let mut gl = vec![0.0; rl];
+            let mut gr = vec![0.0; rr];
+            // sibling coupling
+            blas::gemv(b, &xhat[ri], &mut gl); // B x̂_r
+            blas::gemv_t(b, &xhat[li], &mut gr); // Bᵀ x̂_l
+            // parent pass-down: g_child += R_child g_i
+            // SAFETY: g_i was written by the parent's completed level;
+            // only the two children's slots are written here.
+            let gi = unsafe { &*gc.get(i) };
+            if !gi.is_empty() {
+                let u = h.nodes[i].u.as_ref().expect("non-root internal has U");
+                // u = [R_l; R_r] stacked
+                let mut tmp = vec![0.0; u.rows()];
+                blas::gemv(u, gi, &mut tmp);
+                for (k, v) in tmp[..rl].iter().enumerate() {
+                    gl[k] += v;
+                }
+                for (k, v) in tmp[rl..].iter().enumerate() {
+                    gr[k] += v;
+                }
+            }
+            unsafe {
+                *gc.get(li) = gl;
+                *gc.get(ri) = gr;
+            }
+        });
     }
-
-    // Single-node tree (root is a leaf): handled above with g empty.
     y
 }
 

@@ -20,10 +20,12 @@
 
 pub mod compress;
 pub mod matvec;
+pub mod plan;
 pub mod ulv;
 
 use crate::cluster::SplitMethod;
 use crate::linalg::Mat;
+use self::plan::LevelSchedule;
 
 /// Compression parameters — mirrors the STRUMPACK knobs the paper sweeps
 /// (Tables 4 and 5 list `hss_rel_tol`, `hss_abs_tol`, `hss_max_rank`,
@@ -148,6 +150,9 @@ pub struct Hss {
     pub iperm: Vec<usize>,
     /// Parameters the matrix was compressed with.
     pub params: HssParams,
+    /// Level schedule of the node array, shared by every traversal
+    /// (matvec sweeps, ULV factorization/solves) — see [`plan`].
+    pub plan: LevelSchedule,
 }
 
 /// Compression statistics (the HSS-Construction columns of Tables 4/5).

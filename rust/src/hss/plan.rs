@@ -1,0 +1,155 @@
+//! Shared level schedule for cluster-tree / HSS traversals.
+//!
+//! Every tree pass in this crate — compression, ULV factorization, the
+//! blocked multi-RHS solve sweeps and the matvec — walks the same
+//! postorder node array either bottom-up (children before parents) or
+//! top-down. Nodes of one depth level are mutually independent in all
+//! four, so a single precomputed schedule (per-level lists of node ids)
+//! drives them all through [`crate::util::threadpool::run_levels`]:
+//! levels are barriers, nodes within a level run in parallel, per-node
+//! arithmetic is untouched. (Row extents stay on the node arrays
+//! themselves — each sweep reads `begin`/`end` from its own nodes when
+//! scattering into disjoint output ranges.) That is what makes the
+//! parallel paths bit-for-bit identical to the serial ones for every
+//! thread count (the thread-invariance contract, pinned by
+//! `tests/thread_invariance.rs`).
+
+/// Level schedule of a postorder tree (children precede parents, root
+/// last). Construction is O(#nodes); the schedule is immutable and
+/// shared by all traversals of the same tree.
+#[derive(Clone, Debug)]
+pub struct LevelSchedule {
+    /// `levels[d]` = node ids at depth d (root = depth 0), ascending
+    /// within a level.
+    levels: Vec<Vec<usize>>,
+}
+
+impl LevelSchedule {
+    /// Build from a postorder node array described by an accessor:
+    /// `children(i)` returns the (left, right) child ids (None for a
+    /// leaf).
+    pub fn from_postorder(
+        n_nodes: usize,
+        children: impl Fn(usize) -> (Option<usize>, Option<usize>),
+    ) -> Self {
+        assert!(n_nodes > 0, "schedule of an empty tree");
+        // parents come after children in postorder, so a reverse sweep
+        // sees every node's depth before visiting its children
+        let mut depth = vec![0usize; n_nodes];
+        for i in (0..n_nodes).rev() {
+            let (l, r) = children(i);
+            if let Some(l) = l {
+                assert!(l < i, "postorder violated: child {l} >= parent {i}");
+                depth[l] = depth[i] + 1;
+            }
+            if let Some(r) = r {
+                assert!(r < i, "postorder violated: child {r} >= parent {i}");
+                depth[r] = depth[i] + 1;
+            }
+        }
+        let max_depth = depth.iter().copied().max().unwrap_or(0);
+        let mut levels = vec![Vec::new(); max_depth + 1];
+        for (i, &d) in depth.iter().enumerate() {
+            levels[d].push(i);
+        }
+        LevelSchedule { levels }
+    }
+
+    /// Build from a cluster tree (the compression-time source of truth;
+    /// the HSS node array mirrors its topology index-for-index).
+    pub fn from_cluster_tree(tree: &crate::cluster::ClusterTree) -> Self {
+        Self::from_postorder(tree.nodes.len(), |i| (tree.nodes[i].left, tree.nodes[i].right))
+    }
+
+    /// Levels deepest-first — the order of upsweeps and bottom-up builds
+    /// (compression, ULV elimination, solve upsweep, matvec upsweep).
+    pub fn bottom_up(&self) -> Vec<&[usize]> {
+        self.levels.iter().rev().map(|v| v.as_slice()).collect()
+    }
+
+    /// Levels root-first — the downsweep order (solve back-substitution,
+    /// matvec scatter).
+    pub fn top_down(&self) -> Vec<&[usize]> {
+        self.levels.iter().map(|v| v.as_slice()).collect()
+    }
+
+    /// Number of depth levels (≥ 1).
+    pub fn n_levels(&self) -> usize {
+        self.levels.len()
+    }
+
+    /// Number of tree nodes.
+    pub fn n_nodes(&self) -> usize {
+        self.levels.iter().map(|l| l.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{ClusterTree, SplitMethod};
+    use crate::data::synth;
+    use crate::util::prng::Rng;
+
+    fn check_schedule(plan: &LevelSchedule, tree: &ClusterTree) {
+        assert_eq!(plan.n_nodes(), tree.nodes.len());
+        // every node appears exactly once, at its tree depth
+        let mut seen = vec![false; tree.nodes.len()];
+        for (d, level) in plan.top_down().iter().enumerate() {
+            assert!(!level.is_empty(), "empty level {d}");
+            let mut prev = None;
+            for &id in *level {
+                assert!(!seen[id], "node {id} scheduled twice");
+                seen[id] = true;
+                assert_eq!(tree.nodes[id].level, d, "depth mismatch for {id}");
+                if let Some(p) = prev {
+                    assert!(p < id, "ids not ascending within level {d}");
+                }
+                prev = Some(id);
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+        // bottom_up is exactly top_down reversed
+        let bu = plan.bottom_up();
+        let td = plan.top_down();
+        assert_eq!(bu.len(), td.len());
+        for (a, b) in bu.iter().zip(td.iter().rev()) {
+            assert_eq!(a, b);
+        }
+        // children always sit one level deeper than their parent
+        for (i, node) in tree.nodes.iter().enumerate() {
+            if let (Some(l), Some(r)) = (node.left, node.right) {
+                assert_eq!(tree.nodes[l].level, tree.nodes[i].level + 1);
+                assert_eq!(tree.nodes[r].level, tree.nodes[i].level + 1);
+            }
+        }
+        assert_eq!(plan.n_levels(), tree.depth());
+    }
+
+    #[test]
+    fn schedule_matches_tree_levels_on_ragged_trees() {
+        crate::util::testkit::check("plan-levels", 8, |rng, case| {
+            // non-power-of-two sizes and small leaves → ragged trees
+            let n = 11 + rng.below(500);
+            let ds = synth::blobs(n, 1 + rng.below(5), 3, 0.3, rng);
+            let leaf = 4 + rng.below(40);
+            let method = if case % 2 == 0 { SplitMethod::TwoMeans } else { SplitMethod::Pca };
+            let tree = ClusterTree::build(&ds, leaf, method, rng);
+            let plan = LevelSchedule::from_cluster_tree(&tree);
+            check_schedule(&plan, &tree);
+        });
+    }
+
+    #[test]
+    fn single_node_tree() {
+        let mut rng = Rng::new(5);
+        let ds = synth::blobs(10, 2, 2, 0.3, &mut rng);
+        let tree = ClusterTree::build(&ds, 64, SplitMethod::TwoMeans, &mut rng);
+        assert_eq!(tree.nodes.len(), 1);
+        let plan = LevelSchedule::from_cluster_tree(&tree);
+        assert_eq!(plan.n_levels(), 1);
+        assert_eq!(plan.n_nodes(), 1);
+        assert_eq!(plan.bottom_up(), vec![&[0usize][..]]);
+        assert_eq!(plan.top_down(), vec![&[0usize][..]]);
+    }
+}

@@ -24,17 +24,26 @@
 //! sweeps), which is how the C-grid search batches every ADMM iteration
 //! across all penalty values at once.
 
+use crate::hss::plan::LevelSchedule;
 use crate::hss::Hss;
 use crate::linalg::blas::{matmul, Trans};
 use crate::linalg::lu::Lu;
 use crate::linalg::qr::Qr;
 use crate::linalg::Mat;
-use anyhow::{bail, Result};
+use crate::util::threadpool;
+use anyhow::{anyhow, bail, Result};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
 
 /// Factorized (K̃ + shift·I) ready for repeated solves.
 pub struct UlvFactor {
     n: usize,
     shift: f64,
+    /// Worker threads for the level-scheduled sweeps (results are
+    /// bit-for-bit independent of this — see the module docs).
+    threads: usize,
+    /// Level schedule shared with the source HSS matrix.
+    plan: LevelSchedule,
     nodes: Vec<UlvNode>,
 }
 
@@ -58,132 +67,59 @@ struct UlvNode {
 }
 
 impl UlvFactor {
-    /// Factor K̃ + shift·I. Fails only if an elimination block is
-    /// numerically singular (cannot happen for PSD K̃ and shift > 0
+    /// Factor K̃ + shift·I serially. Fails only if an elimination block
+    /// is numerically singular (cannot happen for PSD K̃ and shift > 0
     /// unless the compression destroyed positive-definiteness badly).
     pub fn new(h: &Hss, shift: f64) -> Result<Self> {
+        Self::new_threaded(h, shift, 1)
+    }
+
+    /// Factor K̃ + shift·I with a level-scheduled worker pool: the
+    /// per-node QR/LU eliminations of one tree level are independent
+    /// (each consumes only its children's Schur/basis reductions), so
+    /// they run in parallel with a barrier per level. Per-node
+    /// arithmetic is exactly the serial path's, so the factor is
+    /// bit-for-bit identical for every `threads` value.
+    pub fn new_threaded(h: &Hss, shift: f64, threads: usize) -> Result<Self> {
         let nn = h.nodes.len();
-        let mut nodes: Vec<UlvNode> = Vec::with_capacity(nn);
+        let plan = h.plan.clone();
+        let mut slots: Vec<Option<UlvNode>> = (0..nn).map(|_| None).collect();
         // Passed-up reductions: (schur, utilde) per node.
         let mut reduced: Vec<Option<(Mat, Mat)>> = (0..nn).map(|_| None).collect();
-
-        for i in 0..nn {
-            let node = &h.nodes[i];
-            let is_root = i == nn - 1;
-
-            // local diagonal block + local basis
-            let (dloc, uloc): (Mat, Option<Mat>) = if node.is_leaf() {
-                let mut d = node.d.clone().expect("leaf has D");
-                d.shift_diag(shift);
-                (d, node.u.clone())
-            } else {
-                let (li, ri) = (node.left.unwrap(), node.right.unwrap());
-                let (s1, ut1) = reduced[li].take().expect("left reduced");
-                let (s2, ut2) = reduced[ri].take().expect("right reduced");
-                let b = node.b.as_ref().expect("internal has B");
-                let (r1, r2) = (s1.rows(), s2.rows());
-                // off-diagonal coupling in reduced coordinates
-                let c12 = if r1 > 0 && r2 > 0 {
-                    let tb = matmul(&ut1, Trans::No, b, Trans::No);
-                    matmul(&tb, Trans::No, &ut2, Trans::Yes)
-                } else {
-                    Mat::zeros(r1, r2)
-                };
-                let mut d = Mat::zeros(r1 + r2, r1 + r2);
-                d.set_block(0, 0, &s1);
-                d.set_block(r1, r1, &s2);
-                d.set_block(0, r1, &c12);
-                d.set_block(r1, 0, &c12.transpose());
-                // merged basis: [Ũ₁ R₁ ; Ũ₂ R₂]
-                let u = node.u.as_ref().map(|u_stack| {
-                    let top = u_stack.block(0, 0, r1, u_stack.cols());
-                    let bot = u_stack.block(r1, 0, r2, u_stack.cols());
-                    let mt = if r1 > 0 { matmul(&ut1, Trans::No, &top, Trans::No) } else { top };
-                    let mb = if r2 > 0 { matmul(&ut2, Trans::No, &bot, Trans::No) } else { bot };
-                    mt.vstack(&mb)
-                });
-                (d, u)
-            };
-
-            let m = dloc.rows();
-            if is_root {
-                // eliminate everything densely
-                let lu11 = match Lu::new(&dloc) {
-                    Ok(f) => f,
-                    Err(e) => bail!("ULV root block singular: {e}"),
-                };
-                nodes.push(UlvNode {
-                    begin: node.begin,
-                    end: node.end,
-                    left: node.left,
-                    right: node.right,
-                    rank: 0,
-                    e: m,
-                    q: None,
-                    lu11,
-                    d21: Mat::zeros(0, m),
-                    f: Mat::zeros(m, 0),
-                });
-                continue;
-            }
-
-            let u = uloc.expect("non-root node has U");
-            debug_assert_eq!(u.rows(), m);
-            let r = u.cols().min(m);
-            let e = m - r;
-
-            // QL compression via QR: full Q = [range | null] → reorder to
-            // [null | range] so QᵀU = [0; Ũ].
-            let (q, utilde, dtil) = if r == 0 {
-                (None, Mat::zeros(0, 0), dloc)
-            } else if e == 0 {
-                // no elimination possible; Ũ = U unchanged, Q = I
-                (None, u.clone(), dloc)
-            } else {
-                let qr = Qr::new(&u);
-                let qf = qr.full_q(); // m×m, first r cols = range
-                let order: Vec<usize> = (r..m).chain(0..r).collect();
-                let q = qf.select_cols(&order);
-                let utilde = qr.r().block(0, 0, r, r); // r×r upper tri
-                let tmp = matmul(&q, Trans::Yes, &dloc, Trans::No);
-                let dtil = matmul(&tmp, Trans::No, &q, Trans::No);
-                (Some(q), utilde, dtil)
-            };
-
-            // partition and eliminate the leading e rows
-            let d11 = dtil.block(0, 0, e, e);
-            let d12 = dtil.block(0, e, e, r);
-            let d21 = dtil.block(e, 0, r, e);
-            let d22 = dtil.block(e, e, r, r);
-            let lu11 = match Lu::new(&d11) {
-                Ok(f) => f,
-                Err(err) => bail!(
-                    "ULV elimination block singular at node {i} (size {e}): {err}; \
-                     increase the shift β or tighten compression tolerances"
-                ),
-            };
-            let f = lu11.solve_mat(&d12); // e×r
-            let mut s = d22;
-            if e > 0 && r > 0 {
-                let d21f = matmul(&d21, Trans::No, &f, Trans::No);
-                s.axpy(-1.0, &d21f);
-            }
-            reduced[i] = Some((s, utilde));
-            nodes.push(UlvNode {
-                begin: node.begin,
-                end: node.end,
-                left: node.left,
-                right: node.right,
-                rank: r,
-                e,
-                q,
-                lu11,
-                d21,
-                f,
+        let failed = AtomicBool::new(false);
+        let failure: Mutex<Option<anyhow::Error>> = Mutex::new(None);
+        {
+            let node_cells = threadpool::disjoint(&mut slots);
+            let red_cells = threadpool::disjoint(&mut reduced);
+            let bottom_up = plan.bottom_up();
+            threadpool::run_levels(threads, &bottom_up, |i| {
+                // a singular block anywhere aborts the remaining levels
+                // (the level barrier publishes the flag before any
+                // parent could consume the missing reduction)
+                if failed.load(Ordering::Relaxed) {
+                    return;
+                }
+                match factor_node(h, shift, i, i == nn - 1, &red_cells) {
+                    Ok((node, red)) => unsafe {
+                        *red_cells.get(i) = red;
+                        *node_cells.get(i) = Some(node);
+                    },
+                    Err(e) => {
+                        *failure.lock().unwrap() = Some(e);
+                        failed.store(true, Ordering::Relaxed);
+                    }
+                }
             });
         }
-
-        Ok(UlvFactor { n: h.n, shift, nodes })
+        if failed.load(Ordering::Relaxed) {
+            let err = failure
+                .into_inner()
+                .unwrap()
+                .unwrap_or_else(|| anyhow!("ULV factorization failed"));
+            return Err(err);
+        }
+        let nodes: Vec<UlvNode> = slots.into_iter().map(|s| s.expect("node factored")).collect();
+        Ok(UlvFactor { n: h.n, shift, threads: threads.max(1), plan, nodes })
     }
 
     /// The shift this factorization was built with.
@@ -232,70 +168,237 @@ impl UlvFactor {
     /// Column invariance: gemm and the blocked LU substitution compute
     /// column j by an op sequence independent of the other columns, so
     /// `solve_mat(b).col(j)` equals `solve(&b.col(j))` bit-for-bit.
+    ///
+    /// Both sweeps are level-scheduled: nodes of a level touch disjoint
+    /// per-node state (and, in the downsweep, disjoint RHS row ranges of
+    /// the output), so they run in parallel over the factor's worker
+    /// pool with a barrier per level — bit-for-bit identical to the
+    /// serial order for every thread count.
     pub fn solve_mat(&self, b: &Mat) -> Mat {
         assert_eq!(b.rows(), self.n);
         let k = b.cols();
         let nn = self.nodes.len();
+        // Each sweep spawns (and joins) one worker pool; below ~8k RHS
+        // elements the two spawns cost more than the parallel node work
+        // saves, so small solves stay on the serial order (bitwise
+        // identical either way).
+        let sweep_threads = if self.n * k.max(1) >= 8192 { self.threads } else { 1 };
         // upsweep state: y1 = eliminated unknowns, bred = reduced RHS
         let mut y1: Vec<Mat> = vec![Mat::zeros(0, 0); nn];
         let mut bred: Vec<Mat> = vec![Mat::zeros(0, 0); nn];
-
-        for i in 0..nn {
-            let nd = &self.nodes[i];
-            let bloc: Mat = match (nd.left, nd.right) {
-                (None, None) => b.block(nd.begin, 0, nd.end - nd.begin, k),
-                (Some(l), Some(r)) => bred[l].vstack(&bred[r]),
-                _ => unreachable!("binary tree"),
-            };
-            // rotate: c = Qᵀ B_loc
-            let c = match &nd.q {
-                Some(q) => matmul(q, Trans::Yes, &bloc, Trans::No),
-                None => bloc,
-            };
-            let c1 = c.block(0, 0, nd.e, k);
-            let c2 = c.block(nd.e, 0, nd.rank, k);
-            let yl = nd.lu11.solve_mat(&c1);
-            // bred = c2 − D21 Y1
-            let mut br = c2;
-            if nd.e > 0 && nd.rank > 0 {
-                let d21y = matmul(&nd.d21, Trans::No, &yl, Trans::No);
-                br.axpy(-1.0, &d21y);
-            }
-            y1[i] = yl;
-            bred[i] = br;
+        {
+            let y1c = threadpool::disjoint(&mut y1);
+            let brc = threadpool::disjoint(&mut bred);
+            let bottom_up = self.plan.bottom_up();
+            threadpool::run_levels(sweep_threads, &bottom_up, |i| {
+                let nd = &self.nodes[i];
+                // SAFETY: children belong to completed levels; this
+                // level's writes go only to node i's own slots.
+                let bloc: Mat = match (nd.left, nd.right) {
+                    (None, None) => b.block(nd.begin, 0, nd.end - nd.begin, k),
+                    (Some(l), Some(r)) => unsafe { (*brc.get(l)).vstack(&*brc.get(r)) },
+                    _ => unreachable!("binary tree"),
+                };
+                // rotate: c = Qᵀ B_loc
+                let c = match &nd.q {
+                    Some(q) => matmul(q, Trans::Yes, &bloc, Trans::No),
+                    None => bloc,
+                };
+                let c1 = c.block(0, 0, nd.e, k);
+                let c2 = c.block(nd.e, 0, nd.rank, k);
+                let yl = nd.lu11.solve_mat(&c1);
+                // bred = c2 − D21 Y1
+                let mut br = c2;
+                if nd.e > 0 && nd.rank > 0 {
+                    let d21y = matmul(&nd.d21, Trans::No, &yl, Trans::No);
+                    br.axpy(-1.0, &d21y);
+                }
+                unsafe {
+                    *y1c.get(i) = yl;
+                    *brc.get(i) = br;
+                }
+            });
         }
 
         // downsweep
         let mut x = Mat::zeros(self.n, k);
         let mut x2: Vec<Mat> = vec![Mat::zeros(0, k); nn];
-        for i in (0..nn).rev() {
-            let nd = &self.nodes[i];
-            let x2l = std::mem::replace(&mut x2[i], Mat::zeros(0, 0));
-            debug_assert_eq!(x2l.rows(), nd.rank);
-            // X1 = Y1 − F X2
-            let mut x1 = std::mem::replace(&mut y1[i], Mat::zeros(0, 0));
-            if nd.e > 0 && nd.rank > 0 {
-                let fx2 = matmul(&nd.f, Trans::No, &x2l, Trans::No);
-                x1.axpy(-1.0, &fx2);
-            }
-            // Z = [X1; X2], un-rotate
-            let z = x1.vstack(&x2l);
-            let xloc = match &nd.q {
-                Some(q) => matmul(q, Trans::No, &z, Trans::No),
-                None => z,
-            };
-            match (nd.left, nd.right) {
-                (None, None) => x.set_block(nd.begin, 0, &xloc),
-                (Some(l), Some(r)) => {
-                    let rl = self.nodes[l].rank;
-                    x2[l] = xloc.block(0, 0, rl, k);
-                    x2[r] = xloc.block(rl, 0, xloc.rows() - rl, k);
+        {
+            let xc = threadpool::disjoint(x.data_mut());
+            let x2c = threadpool::disjoint(&mut x2);
+            let y1c = threadpool::disjoint(&mut y1);
+            let top_down = self.plan.top_down();
+            threadpool::run_levels(sweep_threads, &top_down, |i| {
+                let nd = &self.nodes[i];
+                // SAFETY: x2[i]/y1[i] are node i's own slots (the parent
+                // wrote x2[i] in an earlier level); leaf output rows
+                // begin..end are disjoint across a level.
+                let x2l = unsafe { std::mem::replace(&mut *x2c.get(i), Mat::zeros(0, 0)) };
+                debug_assert_eq!(x2l.rows(), nd.rank);
+                // X1 = Y1 − F X2
+                let mut x1 = unsafe { std::mem::replace(&mut *y1c.get(i), Mat::zeros(0, 0)) };
+                if nd.e > 0 && nd.rank > 0 {
+                    let fx2 = matmul(&nd.f, Trans::No, &x2l, Trans::No);
+                    x1.axpy(-1.0, &fx2);
                 }
-                _ => unreachable!(),
-            }
+                // Z = [X1; X2], un-rotate
+                let z = x1.vstack(&x2l);
+                let xloc = match &nd.q {
+                    Some(q) => matmul(q, Trans::No, &z, Trans::No),
+                    None => z,
+                };
+                match (nd.left, nd.right) {
+                    (None, None) => {
+                        // x is row-major: rows begin..end form one
+                        // contiguous disjoint range of length rows·k
+                        let rows = nd.end - nd.begin;
+                        let dst = unsafe { xc.slice(nd.begin * k, rows * k) };
+                        dst.copy_from_slice(xloc.data());
+                    }
+                    (Some(l), Some(r)) => {
+                        let rl = self.nodes[l].rank;
+                        unsafe {
+                            *x2c.get(l) = xloc.block(0, 0, rl, k);
+                            *x2c.get(r) = xloc.block(rl, 0, xloc.rows() - rl, k);
+                        }
+                    }
+                    _ => unreachable!(),
+                }
+            });
         }
         x
     }
+}
+
+/// One node's elimination step (shared verbatim by the serial and
+/// level-parallel factorization paths): build the local shifted diagonal
+/// block and basis (leaf) or merge the children's reductions (internal),
+/// QL-rotate, LU-eliminate the decoupled rows, and pass the Schur
+/// complement + reduced basis up. Returns the factored node and
+/// `Some((schur, utilde))` for non-root nodes.
+fn factor_node(
+    h: &Hss,
+    shift: f64,
+    i: usize,
+    is_root: bool,
+    reduced: &threadpool::SendCells<'_, Option<(Mat, Mat)>>,
+) -> Result<(UlvNode, Option<(Mat, Mat)>)> {
+    let node = &h.nodes[i];
+
+    // local diagonal block + local basis
+    let (dloc, uloc): (Mat, Option<Mat>) = if node.is_leaf() {
+        let mut d = node.d.clone().expect("leaf has D");
+        d.shift_diag(shift);
+        (d, node.u.clone())
+    } else {
+        let (li, ri) = (node.left.unwrap(), node.right.unwrap());
+        // SAFETY: children were reduced in a completed deeper level and
+        // have exactly one consumer (this parent), so taking ownership
+        // here both is race-free and frees each reduction as soon as it
+        // is merged — same peak memory as the serial path.
+        let (s1, ut1) = unsafe { (*reduced.get(li)).take() }.expect("left reduced");
+        let (s2, ut2) = unsafe { (*reduced.get(ri)).take() }.expect("right reduced");
+        let b = node.b.as_ref().expect("internal has B");
+        let (r1, r2) = (s1.rows(), s2.rows());
+        // off-diagonal coupling in reduced coordinates
+        let c12 = if r1 > 0 && r2 > 0 {
+            let tb = matmul(&ut1, Trans::No, b, Trans::No);
+            matmul(&tb, Trans::No, &ut2, Trans::Yes)
+        } else {
+            Mat::zeros(r1, r2)
+        };
+        let mut d = Mat::zeros(r1 + r2, r1 + r2);
+        d.set_block(0, 0, &s1);
+        d.set_block(r1, r1, &s2);
+        d.set_block(0, r1, &c12);
+        d.set_block(r1, 0, &c12.transpose());
+        // merged basis: [Ũ₁ R₁ ; Ũ₂ R₂]
+        let u = node.u.as_ref().map(|u_stack| {
+            let top = u_stack.block(0, 0, r1, u_stack.cols());
+            let bot = u_stack.block(r1, 0, r2, u_stack.cols());
+            let mt = if r1 > 0 { matmul(&ut1, Trans::No, &top, Trans::No) } else { top };
+            let mb = if r2 > 0 { matmul(&ut2, Trans::No, &bot, Trans::No) } else { bot };
+            mt.vstack(&mb)
+        });
+        (d, u)
+    };
+
+    let m = dloc.rows();
+    if is_root {
+        // eliminate everything densely
+        let lu11 = match Lu::new(&dloc) {
+            Ok(f) => f,
+            Err(e) => bail!("ULV root block singular: {e}"),
+        };
+        let root = UlvNode {
+            begin: node.begin,
+            end: node.end,
+            left: node.left,
+            right: node.right,
+            rank: 0,
+            e: m,
+            q: None,
+            lu11,
+            d21: Mat::zeros(0, m),
+            f: Mat::zeros(m, 0),
+        };
+        return Ok((root, None));
+    }
+
+    let u = uloc.expect("non-root node has U");
+    debug_assert_eq!(u.rows(), m);
+    let r = u.cols().min(m);
+    let e = m - r;
+
+    // QL compression via QR: full Q = [range | null] → reorder to
+    // [null | range] so QᵀU = [0; Ũ].
+    let (q, utilde, dtil) = if r == 0 {
+        (None, Mat::zeros(0, 0), dloc)
+    } else if e == 0 {
+        // no elimination possible; Ũ = U unchanged, Q = I
+        (None, u.clone(), dloc)
+    } else {
+        let qr = Qr::new(&u);
+        let qf = qr.full_q(); // m×m, first r cols = range
+        let order: Vec<usize> = (r..m).chain(0..r).collect();
+        let q = qf.select_cols(&order);
+        let utilde = qr.r().block(0, 0, r, r); // r×r upper tri
+        let tmp = matmul(&q, Trans::Yes, &dloc, Trans::No);
+        let dtil = matmul(&tmp, Trans::No, &q, Trans::No);
+        (Some(q), utilde, dtil)
+    };
+
+    // partition and eliminate the leading e rows
+    let d11 = dtil.block(0, 0, e, e);
+    let d12 = dtil.block(0, e, e, r);
+    let d21 = dtil.block(e, 0, r, e);
+    let d22 = dtil.block(e, e, r, r);
+    let lu11 = match Lu::new(&d11) {
+        Ok(f) => f,
+        Err(err) => bail!(
+            "ULV elimination block singular at node {i} (size {e}): {err}; \
+             increase the shift β or tighten compression tolerances"
+        ),
+    };
+    let f = lu11.solve_mat(&d12); // e×r
+    let mut s = d22;
+    if e > 0 && r > 0 {
+        let d21f = matmul(&d21, Trans::No, &f, Trans::No);
+        s.axpy(-1.0, &d21f);
+    }
+    let un = UlvNode {
+        begin: node.begin,
+        end: node.end,
+        left: node.left,
+        right: node.right,
+        rank: r,
+        e,
+        q,
+        lu11,
+        d21,
+        f,
+    };
+    Ok((un, Some((s, utilde))))
 }
 
 #[cfg(test)]

@@ -271,7 +271,7 @@ pub fn matmul_par(threads: usize, a: &Mat, ta: Trans, b: &Mat, tb: Trans) -> Mat
         return matmul(a, ta, b, tb);
     }
     let band = m.div_ceil(threads);
-    let bands: Vec<Mat> = threadpool::parallel_map(threads, threads, |t| {
+    let bands: Vec<Mat> = threadpool::parallel_map(threads, threads, 1, |t| {
         let r0 = t * band;
         if r0 >= m {
             return Mat::zeros(0, n);

@@ -12,6 +12,14 @@
 //! the Gaussian kernel — padding adds 0 to every squared distance) and
 //! SV chunks are padded with αy = 0 rows (exactly no contribution).
 
+// The real client references an external `xla` crate that the offline
+// build environment does not provide, so it is feature-gated; the stub
+// serves the same API (load errors, try_default → None) and every call
+// site falls back to the native prediction path.
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+#[cfg(not(feature = "pjrt"))]
+#[path = "pjrt_stub.rs"]
 pub mod pjrt;
 
 pub use pjrt::{PjrtRuntime, RuntimeStats};

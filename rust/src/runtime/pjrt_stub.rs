@@ -1,0 +1,92 @@
+//! Stub PJRT runtime, compiled when the `pjrt` cargo feature is off.
+//!
+//! The real client (`pjrt.rs`) needs an external `xla` crate plus AOT
+//! artifacts, neither of which exists in the offline build environment —
+//! so by default this stub serves the identical public API: loading
+//! always fails with a clear message, `try_default` returns `None`, and
+//! every call site's artifact-absent fallback path (native prediction)
+//! takes over. Enabling the `pjrt` feature requires vendoring the `xla`
+//! dependency; see `rust/Cargo.toml`.
+
+use crate::linalg::Mat;
+use anyhow::{bail, Result};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::AtomicUsize;
+
+/// Tile geometry — must match python/compile/model.py.
+pub const TILE_M: usize = 128;
+pub const TILE_N: usize = 128;
+pub const SV_CHUNK: usize = 1024;
+
+/// Execution counters (observability for the perf pass).
+#[derive(Debug, Default)]
+pub struct RuntimeStats {
+    pub kernel_tile_calls: AtomicUsize,
+    pub decision_tile_calls: AtomicUsize,
+}
+
+/// Stand-in for the compiled-once PJRT executables. Never constructible
+/// without the `pjrt` feature: [`PjrtRuntime::load`] always errors.
+pub struct PjrtRuntime {
+    pub stats: RuntimeStats,
+}
+
+impl PjrtRuntime {
+    /// Default artifact directory: $HSS_SVM_ARTIFACTS or ./artifacts.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("HSS_SVM_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    /// Always fails: the PJRT client is not compiled in.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        bail!(
+            "PJRT runtime unavailable: built without the `pjrt` cargo feature \
+             (artifact dir requested: {})",
+            dir.as_ref().display()
+        )
+    }
+
+    /// `None` — the PJRT client is not compiled in.
+    pub fn try_default() -> Option<Self> {
+        None
+    }
+
+    /// Unreachable in practice (no constructor succeeds); errors for
+    /// API parity with the real client.
+    pub fn kernel_tile(&self, _x: &Mat, _y: &Mat, _gamma: f64) -> Result<Mat> {
+        bail!("PJRT runtime unavailable: built without the `pjrt` cargo feature")
+    }
+
+    /// Unreachable in practice; errors for API parity.
+    pub fn decision_tile(
+        &self,
+        _x: &Mat,
+        _sv: &Mat,
+        _alpha_y: &[f64],
+        _gamma: f64,
+    ) -> Result<Vec<f64>> {
+        bail!("PJRT runtime unavailable: built without the `pjrt` cargo feature")
+    }
+
+    /// Feature dims available per artifact kind (always empty here).
+    pub fn dims(&self) -> (Vec<usize>, Vec<usize>) {
+        (Vec::new(), Vec::new())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_refuses_to_load_and_try_default_is_none() {
+        assert!(PjrtRuntime::try_default().is_none());
+        let err = match PjrtRuntime::load("artifacts") {
+            Err(e) => e,
+            Ok(_) => panic!("stub load must fail"),
+        };
+        assert!(err.to_string().contains("pjrt"), "unexpected error: {err}");
+    }
+}

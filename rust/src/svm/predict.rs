@@ -22,7 +22,9 @@ pub fn decision_function(model: &SvmModel, x: &Mat, threads: usize) -> Vec<f64> 
     let n = x.rows();
     let sv_norms = self_norms(&model.sv);
     let n_tiles = n.div_ceil(TILE);
-    let tiles: Vec<Vec<f64>> = threadpool::parallel_map(threads, n_tiles, |t| {
+    // chunk = 1: each tile is a full kernel-block GEMV, coarse enough
+    // that one atomic fetch per tile is noise
+    let tiles: Vec<Vec<f64>> = threadpool::parallel_map(threads, n_tiles, 1, |t| {
         let lo = t * TILE;
         let hi = (lo + TILE).min(n);
         let rows: Vec<usize> = (lo..hi).collect();

@@ -27,6 +27,11 @@ pub struct HssSvmTrainer {
     pub compressed: Compressed,
     /// Labels in tree order.
     pub y: Vec<f64>,
+    /// Worker threads shared by every downstream stage (ULV
+    /// factorization, batched ADMM updates, bias matvec). All of them
+    /// are thread-invariant: results are bit-for-bit identical for any
+    /// value here.
+    pub threads: usize,
 }
 
 /// Per-run timing/size report (one row of Table 4/5).
@@ -46,7 +51,7 @@ impl HssSvmTrainer {
     pub fn compress(ds: &Dataset, kernel: Kernel, params: &HssParams, threads: usize) -> Self {
         let compressed = compress(ds, &kernel, params, threads);
         let y = compressed.pds.y.clone();
-        HssSvmTrainer { kernel, compressed, y }
+        HssSvmTrainer { kernel, compressed, y, threads: threads.max(1) }
     }
 
     /// Stage 1 with cached h-independent preprocessing (cluster tree +
@@ -59,12 +64,13 @@ impl HssSvmTrainer {
     ) -> Self {
         let compressed = crate::hss::compress::compress_preprocessed(pre, &kernel, params, threads);
         let y = compressed.pds.y.clone();
-        HssSvmTrainer { kernel, compressed, y }
+        HssSvmTrainer { kernel, compressed, y, threads: threads.max(1) }
     }
 
-    /// Stage 2: ULV-factor K̃ + βI.
+    /// Stage 2: ULV-factor K̃ + βI (level-parallel over the trainer's
+    /// worker pool; the factor reuses the same pool for its solves).
     pub fn factor(&self, beta: f64) -> Result<UlvFactor> {
-        UlvFactor::new(&self.compressed.hss, beta)
+        UlvFactor::new_threaded(&self.compressed.hss, beta, self.threads)
     }
 
     /// Stage 3: run ADMM for one C and assemble the model
@@ -75,7 +81,7 @@ impl HssSvmTrainer {
         admm: &AdmmParams,
         c: f64,
     ) -> (SvmModel, AdmmOutput) {
-        let solver = AdmmSolver::new(ulv, &self.y, *admm);
+        let solver = AdmmSolver::new(ulv, &self.y, *admm).with_threads(self.threads);
         let out = solver.run(c);
         let model = self.assemble_model(&out.z, c);
         (model, out)
@@ -125,6 +131,9 @@ impl HssSvmTrainer {
         let margin_hi = c * (1.0 - 1e-6);
 
         // z_y and the margin indicator ē (Algorithm 3, lines 15–16)
+        // small problems: one O(n·r) matvec is cheaper than spawning the
+        // worker pools (same 8k threshold as UlvFactor::solve_mat)
+        let mv_threads = if n >= 8192 { self.threads } else { 1 };
         let zy: Vec<f64> = z.iter().zip(y.iter()).map(|(zi, yi)| zi * yi).collect();
         let ebar: Vec<f64> = z
             .iter()
@@ -138,14 +147,14 @@ impl HssSvmTrainer {
         // the note in `crate::svm`. Guarded by the regression test
         // `hss_bias_matches_dense_margin_bias` below.)
         let bias = if m_count > 0.0 {
-            let ke = matvec::matvec(hss, &ebar);
+            let ke = matvec::matvec_threads(hss, &ebar, mv_threads);
             let zky: f64 = zy.iter().zip(ke.iter()).map(|(a, b)| a * b).sum();
             let ysum: f64 =
                 y.iter().zip(ebar.iter()).map(|(yi, ei)| yi * ei).sum();
             -(zky - ysum) / m_count
         } else {
             // no margin SVs (all at bounds): average y − f over the SVs
-            let f = matvec::matvec(hss, &zy);
+            let f = matvec::matvec_threads(hss, &zy, mv_threads);
             let mut acc = 0.0;
             let mut cnt = 0.0;
             for i in 0..n {

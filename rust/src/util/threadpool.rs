@@ -6,7 +6,8 @@
 //! shared atomic work counter covers everything we need while staying
 //! deterministic when `threads == 1`.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Barrier, Mutex};
 
 /// Number of worker threads to use by default: `HSS_SVM_THREADS` env var,
 /// else available parallelism, else 1.
@@ -48,16 +49,80 @@ pub fn parallel_for(threads: usize, n: usize, chunk: usize, f: impl Fn(usize) + 
 }
 
 /// Map `f` over `0..n` in parallel, collecting results in index order.
-pub fn parallel_map<T: Send>(threads: usize, n: usize, f: impl Fn(usize) -> T + Sync) -> Vec<T> {
+/// `chunk` is the self-scheduling granularity: 1 for coarse per-item work
+/// (tree nodes, row tiles), larger for cheap per-item work so each atomic
+/// fetch amortizes over many items.
+pub fn parallel_map<T: Send>(
+    threads: usize,
+    n: usize,
+    chunk: usize,
+    f: impl Fn(usize) -> T + Sync,
+) -> Vec<T> {
     let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
     {
         let slots = as_send_cells(&mut out);
-        parallel_for(threads, n, 1, |i| {
+        parallel_for(threads, n, chunk, |i| {
             // SAFETY: each index is written by exactly one task.
             unsafe { *slots.get(i) = Some(f(i)) };
         });
     }
     out.into_iter().map(|o| o.expect("slot filled")).collect()
+}
+
+/// Level-scheduled tree traversal: the levels of `levels` run strictly in
+/// order with a barrier between consecutive levels, and the nodes of one
+/// level are self-scheduled across a worker pool spawned ONCE for the
+/// whole traversal (a per-level spawn would pay thread startup at every
+/// level of every sweep). `f(id)` runs exactly once per id; it may read
+/// state produced by earlier levels (the barrier publishes it) and must
+/// confine writes to state owned by `id` — use [`disjoint`] for the
+/// scatter. With `threads <= 1` this degrades to plain nested loops, and
+/// because per-node work is identical either way, results are bit-for-bit
+/// independent of the thread count.
+pub fn run_levels(threads: usize, levels: &[&[usize]], f: impl Fn(usize) + Sync) {
+    let widest = levels.iter().map(|l| l.len()).max().unwrap_or(0);
+    let threads = threads.max(1).min(widest.max(1));
+    if threads <= 1 {
+        for level in levels {
+            for &id in *level {
+                f(id);
+            }
+        }
+        return;
+    }
+    let counters: Vec<AtomicUsize> = levels.iter().map(|_| AtomicUsize::new(0)).collect();
+    let barrier = Barrier::new(threads);
+    // A panicking task must not strand its siblings at the barrier:
+    // capture the payload, drain the remaining levels (every worker hits
+    // every barrier exactly once), then re-throw after the join.
+    let abort = AtomicBool::new(false);
+    let payload: Mutex<Option<Box<dyn std::any::Any + Send>>> = Mutex::new(None);
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| {
+                for (li, level) in levels.iter().enumerate() {
+                    while !abort.load(Ordering::Relaxed) {
+                        let t = counters[li].fetch_add(1, Ordering::Relaxed);
+                        if t >= level.len() {
+                            break;
+                        }
+                        let id = level[t];
+                        if let Err(p) =
+                            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(id)))
+                        {
+                            *payload.lock().unwrap() = Some(p);
+                            abort.store(true, Ordering::Relaxed);
+                        }
+                    }
+                    // barrier publishes this level's writes to the next
+                    barrier.wait();
+                }
+            });
+        }
+    });
+    if let Some(p) = payload.into_inner().unwrap() {
+        std::panic::resume_unwind(p);
+    }
 }
 
 /// Helper: expose disjoint-index mutable access to a slice across threads.
@@ -85,11 +150,29 @@ impl<'a, T> SendCells<'a, T> {
     pub fn is_empty(&self) -> bool {
         self.len == 0
     }
+
+    /// Mutable view of `start..start + len`.
+    ///
+    /// # Safety
+    /// Concurrent callers must access disjoint ranges, and a caller must
+    /// not hold two overlapping slices at once.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn slice(&self, start: usize, len: usize) -> &mut [T] {
+        assert!(start.checked_add(len).is_some_and(|end| end <= self.len));
+        std::slice::from_raw_parts_mut(self.ptr.add(start), len)
+    }
 }
 
 /// Wrap a mutable slice for disjoint-index parallel writes.
 pub fn as_send_cells<T>(xs: &mut [T]) -> SendCells<'_, T> {
     SendCells { ptr: xs.as_mut_ptr(), len: xs.len(), _marker: std::marker::PhantomData }
+}
+
+/// Alias of [`as_send_cells`] that reads better at call sites scattering
+/// into disjoint per-node slots or row ranges (the level-scheduled tree
+/// sweeps in `hss::{compress, ulv, matvec}`).
+pub fn disjoint<T>(xs: &mut [T]) -> SendCells<'_, T> {
+    as_send_cells(xs)
 }
 
 #[cfg(test)]
@@ -119,16 +202,95 @@ mod tests {
 
     #[test]
     fn parallel_map_ordered() {
-        let out = parallel_map(4, 1000, |i| i * i);
-        for (i, v) in out.iter().enumerate() {
-            assert_eq!(*v, i * i);
+        for chunk in [1, 16, 64] {
+            let out = parallel_map(4, 1000, chunk, |i| i * i);
+            for (i, v) in out.iter().enumerate() {
+                assert_eq!(*v, i * i);
+            }
         }
     }
 
     #[test]
     fn parallel_map_empty() {
-        let out: Vec<usize> = parallel_map(4, 0, |i| i);
+        let out: Vec<usize> = parallel_map(4, 0, 1, |i| i);
         assert!(out.is_empty());
+    }
+
+    #[test]
+    fn run_levels_respects_level_order_and_covers_once() {
+        // ragged levels; every id must run once, and nobody may run
+        // before all ids of the previous level finished
+        let levels_owned: Vec<Vec<usize>> = vec![vec![0, 1, 2, 3, 4], vec![5, 6], vec![7]];
+        let levels: Vec<&[usize]> = levels_owned.iter().map(|l| l.as_slice()).collect();
+        for threads in [1, 2, 8] {
+            let hits: Vec<AtomicU64> = (0..8).map(|_| AtomicU64::new(0)).collect();
+            let done_below: Vec<AtomicUsize> =
+                levels_owned.iter().map(|_| AtomicUsize::new(0)).collect();
+            let level_of = |id: usize| match id {
+                0..=4 => 0usize,
+                5 | 6 => 1,
+                _ => 2,
+            };
+            run_levels(threads, &levels, |id| {
+                let li = level_of(id);
+                if li > 0 {
+                    assert_eq!(
+                        done_below[li - 1].load(Ordering::SeqCst),
+                        levels_owned[li - 1].len(),
+                        "node {id} ran before its level's barrier"
+                    );
+                }
+                hits[id].fetch_add(1, Ordering::SeqCst);
+                done_below[li].fetch_add(1, Ordering::SeqCst);
+            });
+            assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+        }
+    }
+
+    #[test]
+    fn run_levels_propagates_panics_without_deadlock() {
+        let levels_owned: Vec<Vec<usize>> = vec![vec![0, 1, 2, 3], vec![4]];
+        let levels: Vec<&[usize]> = levels_owned.iter().map(|l| l.as_slice()).collect();
+        for threads in [1, 4] {
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                run_levels(threads, &levels, |id| {
+                    if id == 2 {
+                        panic!("boom at node {id}");
+                    }
+                });
+            }));
+            assert!(result.is_err(), "panic must propagate at threads={threads}");
+        }
+    }
+
+    #[test]
+    fn run_levels_empty_and_single() {
+        run_levels(4, &[], |_| panic!("no work"));
+        let level: Vec<usize> = vec![0];
+        let hit = AtomicU64::new(0);
+        run_levels(4, &[level.as_slice()], |id| {
+            assert_eq!(id, 0);
+            hit.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(hit.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn disjoint_slice_ranges() {
+        let mut xs = vec![0u64; 256];
+        {
+            let cells = disjoint(&mut xs);
+            parallel_for(4, 8, 1, |t| {
+                // SAFETY: each task owns rows t*32..(t+1)*32.
+                let range = unsafe { cells.slice(t * 32, 32) };
+                for (o, v) in range.iter_mut().enumerate() {
+                    *v = (t * 32 + o) as u64;
+                }
+            });
+        }
+        for (i, v) in xs.iter().enumerate() {
+            assert_eq!(*v, i as u64);
+        }
     }
 
     #[test]
