@@ -15,7 +15,7 @@
 use hss_svm::admm::{AdmmParams, AdmmSolver};
 use hss_svm::cluster::SplitMethod;
 use hss_svm::config::Config;
-use hss_svm::data::synth;
+use hss_svm::data::{synth, CsrMat, Points};
 use hss_svm::hss::compress::compress;
 use hss_svm::hss::matvec;
 use hss_svm::hss::ulv::UlvFactor;
@@ -205,6 +205,77 @@ fn main() {
          (bitwise-identical outputs)"
     );
 
+    // --- sparse data plane: CSR vs dense kernel blocks + predict ---
+    // The paper's sparse Table-1 inputs (a8a/w7a/rcv1-like): wide rows,
+    // ~2% density. The xᵀy term of the kernel block is where sparsity
+    // pays; the gate below keeps the CSR path from regressing to (or
+    // below) dense speed.
+    let (n_sp, dim_sp) = if opts.smoke { (384, 768) } else { (1024, 2048) };
+    let density = 0.02;
+    println!("\n-- sparse data plane: CSR vs dense ({n_sp}x{dim_sp}, {density} density) --");
+    let mut sp_rng = Rng::new(11);
+    let sp_rows: Vec<Vec<(usize, f64)>> = (0..n_sp)
+        .map(|_| {
+            (0..dim_sp)
+                .filter(|_| sp_rng.f64() < density)
+                .map(|c| (c, sp_rng.gauss()))
+                .collect()
+        })
+        .collect();
+    let csr = CsrMat::from_rows(dim_sp, &sp_rows);
+    let sparse_mem_ratio = (n_sp * dim_sp * 8) as f64 / csr.bytes() as f64;
+    let xd = Points::Dense(csr.to_dense());
+    let xs = Points::Sparse(csr);
+    let t = Timer::start();
+    let kb_dense = hss_svm::kernel::kernel_block_pts(&kernel, &xd, &xd);
+    let dense_block_secs = t.secs();
+    let t = Timer::start();
+    let kb_sparse = hss_svm::kernel::kernel_block_pts(&kernel, &xs, &xs);
+    let sparse_block_secs = t.secs();
+    let mut block_dev = 0.0f64;
+    for (a, b) in kb_dense.data().iter().zip(kb_sparse.data().iter()) {
+        block_dev = block_dev.max((a - b).abs());
+    }
+    assert!(block_dev <= 1e-12, "sparse kernel block deviates: {block_dev:.3e}");
+    let sparse_block_speedup = dense_block_secs / sparse_block_secs.max(1e-12);
+    b.record_once("sparse: dense kernel block", Duration::from_secs_f64(dense_block_secs));
+    b.record_once("sparse: CSR kernel block", Duration::from_secs_f64(sparse_block_secs));
+
+    // predict over a CSR-SV model vs its dense twin
+    let n_sv_sp = n_sp / 4;
+    let sv_idx: Vec<usize> = (0..n_sv_sp).collect();
+    let alpha: Vec<f64> = (0..n_sv_sp).map(|_| sp_rng.gauss()).collect();
+    let mk_model = |sv: Points| hss_svm::svm::SvmModel {
+        sv,
+        alpha_y: alpha.clone(),
+        bias: 0.1,
+        kernel,
+        c: 1.0,
+    };
+    let model_d = mk_model(xd.select_rows(&sv_idx));
+    let model_s = mk_model(xs.select_rows(&sv_idx));
+    let t = Timer::start();
+    let fd = hss_svm::svm::predict::decision_function(&model_d, &xd, threads);
+    let dense_predict_secs = t.secs();
+    let t = Timer::start();
+    let fs = hss_svm::svm::predict::decision_function(&model_s, &xs, threads);
+    let sparse_predict_secs = t.secs();
+    let mut predict_dev = 0.0f64;
+    for (a, bb) in fd.iter().zip(fs.iter()) {
+        predict_dev = predict_dev.max((a - bb).abs());
+    }
+    assert!(predict_dev <= 1e-12, "sparse predict deviates: {predict_dev:.3e}");
+    let sparse_predict_speedup = dense_predict_secs / sparse_predict_secs.max(1e-12);
+    b.record_once("sparse: dense predict", Duration::from_secs_f64(dense_predict_secs));
+    b.record_once("sparse: CSR predict", Duration::from_secs_f64(sparse_predict_secs));
+    println!(
+        "    kernel block  {dense_block_secs:>8.3} s → {sparse_block_secs:>8.3} s \
+         ({sparse_block_speedup:.2}x, max |Δ| = {block_dev:.1e})\n    \
+         predict       {dense_predict_secs:>8.3} s → {sparse_predict_secs:>8.3} s \
+         ({sparse_predict_speedup:.2}x, max |Δ| = {predict_dev:.1e})\n    \
+         memory        {sparse_mem_ratio:.1}x smaller in CSR"
+    );
+
     if !opts.smoke {
         // --- ablation: ANN sampling vs pure random ---
         println!("\n-- ablation: column sampling strategy (n=3000) --");
@@ -255,6 +326,13 @@ fn main() {
         json.push_str(&format!("  \"parallel_factor_secs\": {par_factor:.6},\n"));
         json.push_str(&format!("  \"parallel_grid_secs\": {par_grid:.6},\n"));
         json.push_str(&format!("  \"parallel_speedup\": {parallel_speedup:.4},\n"));
+        json.push_str(&format!("  \"sparse_n\": {n_sp},\n"));
+        json.push_str(&format!("  \"sparse_dim\": {dim_sp},\n"));
+        json.push_str(&format!("  \"sparse_block_secs\": {sparse_block_secs:.6},\n"));
+        json.push_str(&format!("  \"dense_block_secs\": {dense_block_secs:.6},\n"));
+        json.push_str(&format!("  \"sparse_block_speedup\": {sparse_block_speedup:.4},\n"));
+        json.push_str(&format!("  \"sparse_predict_speedup\": {sparse_predict_speedup:.4},\n"));
+        json.push_str(&format!("  \"sparse_mem_ratio\": {sparse_mem_ratio:.2},\n"));
         json.push_str(&format!("  \"max_dev\": {max_dev:.3e}\n"));
         json.push_str("}\n");
         let out = from_repo_root(path);
@@ -271,11 +349,20 @@ fn main() {
         };
         let floor_batched = 0.75 * baseline_key("batched_speedup");
         let floor_parallel = 0.75 * baseline_key("parallel_speedup");
+        let floor_sparse = 0.75 * baseline_key("sparse_block_speedup");
         println!(
             "\n[hss] baseline gate: batched {batched_speedup:.2}x (floor {floor_batched:.2}x), \
-             parallel {parallel_speedup:.2}x (floor {floor_parallel:.2}x)"
+             parallel {parallel_speedup:.2}x (floor {floor_parallel:.2}x), \
+             sparse block {sparse_block_speedup:.2}x (floor {floor_sparse:.2}x)"
         );
         let mut failed = false;
+        if sparse_block_speedup < floor_sparse {
+            eprintln!(
+                "[hss] REGRESSION: CSR kernel-block speedup {sparse_block_speedup:.2}x fell >25% \
+                 below the committed baseline"
+            );
+            failed = true;
+        }
         if batched_speedup < floor_batched {
             eprintln!(
                 "[hss] REGRESSION: batched C-grid speedup {batched_speedup:.2}x fell >25% below \

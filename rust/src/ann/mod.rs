@@ -9,7 +9,6 @@
 //! inside buckets, then a neighbour-of-neighbour refinement sweep.
 
 use crate::data::Dataset;
-use crate::linalg::blas;
 use crate::util::prng::Rng;
 use crate::util::threadpool;
 
@@ -60,7 +59,7 @@ pub fn knn(ds: &Dataset, params: AnnParams, threads: usize, rng: &mut Rng) -> Kn
                 let mut out = Vec::with_capacity(ids.len() * 4);
                 for (a_pos, &a) in ids.iter().enumerate() {
                     for &b_id in ids.iter().skip(a_pos + 1) {
-                        let d2 = blas::dist2(ds.point(a), ds.point(b_id));
+                        let d2 = ds.x.dist2_rows(a, &ds.x, b_id);
                         out.push((a, b_id, d2));
                     }
                 }
@@ -96,7 +95,7 @@ pub fn knn(ds: &Dataset, params: AnnParams, threads: usize, rng: &mut Rng) -> Kn
             cand.sort_unstable();
             cand.dedup();
             cand.into_iter()
-                .map(|c| (c, blas::dist2(ds.point(i), ds.point(c))))
+                .map(|c| (c, ds.x.dist2_rows(i, &ds.x, c)))
                 .collect()
         });
         for (i, ups) in updates.into_iter().enumerate() {
@@ -119,7 +118,7 @@ pub fn knn_exact(ds: &Dataset, k: usize, threads: usize) -> KnnLists {
     let neighbors = threadpool::parallel_map(threads, n, 16, |i| {
         let mut d: Vec<(usize, f64)> = (0..n)
             .filter(|&j| j != i)
-            .map(|j| (j, blas::dist2(ds.point(i), ds.point(j))))
+            .map(|j| (j, ds.x.dist2_rows(i, &ds.x, j)))
             .collect();
         d.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
         d.truncate(k);
@@ -238,7 +237,7 @@ fn bisect(
     let dir: Vec<f64> = (0..dim).map(|_| rng.gauss()).collect();
     let mut proj: Vec<(f64, usize)> = idx[lo..hi]
         .iter()
-        .map(|&i| (blas::dot(ds.point(i), &dir) + 1e-12 * rng.gauss(), i))
+        .map(|&i| (ds.x.dot_dense_vec(i, &dir) + 1e-12 * rng.gauss(), i))
         .collect();
     proj.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
     for (t, &(_, i)) in proj.iter().enumerate() {
@@ -294,6 +293,25 @@ mod tests {
             let set: std::collections::HashSet<usize> = l.iter().map(|&(j, _)| j).collect();
             assert_eq!(set.len(), l.len(), "dup in list {i}");
             assert!(l.len() <= 8);
+        }
+    }
+
+    #[test]
+    fn sparse_exact_knn_matches_dense_bitwise() {
+        // dist2 walks indices ascending with one accumulator in every
+        // representation arm, so CSR distances are bit-for-bit equal to
+        // dense ones and the neighbour lists must match exactly
+        let mut rng = Rng::new(13);
+        let ds = synth::blobs(120, 5, 3, 0.3, &mut rng);
+        let sp = Dataset::new(
+            "sp",
+            crate::data::CsrMat::from_dense(ds.x.dense()),
+            ds.y.clone(),
+        );
+        let a = knn_exact(&ds, 6, 2);
+        let b = knn_exact(&sp, 6, 2);
+        for (la, lb) in a.neighbors.iter().zip(b.neighbors.iter()) {
+            assert_eq!(la, lb);
         }
     }
 

@@ -13,7 +13,7 @@
 
 use crate::admm::solver::ShiftedSolve;
 use crate::data::Dataset;
-use crate::kernel::block::{kernel_block_with_norms, self_norms};
+use crate::kernel::block::kernel_block_pts_with_norms;
 use crate::kernel::Kernel;
 use crate::linalg::blas::{self, matmul, Trans};
 use crate::linalg::chol::Chol;
@@ -47,11 +47,11 @@ impl NystromSolver {
         let n = ds.len();
         let m = m.clamp(1, n);
         let landmarks = rng.sample_indices(n, m);
-        let norms = self_norms(&ds.x);
+        let norms = ds.x.self_norms();
         let lpts = ds.x.select_rows(&landmarks);
         let lnorms: Vec<f64> = landmarks.iter().map(|&i| norms[i]).collect();
-        let c = kernel_block_with_norms(kernel, &ds.x, &norms, &lpts, &lnorms); // n×m
-        let mm = kernel_block_with_norms(kernel, &lpts, &lnorms, &lpts, &lnorms); // m×m
+        let c = kernel_block_pts_with_norms(kernel, &ds.x, &norms, &lpts, &lnorms); // n×m
+        let mm = kernel_block_pts_with_norms(kernel, &lpts, &lnorms, &lpts, &lnorms); // m×m
         // βM + CᵀC (SPD for β > 0)
         let mut small = matmul(&c, Trans::Yes, &c, Trans::No);
         for i in 0..m {

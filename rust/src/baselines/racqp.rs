@@ -13,7 +13,7 @@
 //!   the exact-kernel cost the paper's Table 3 exposes.
 
 use crate::data::Dataset;
-use crate::kernel::block::{kernel_block_with_norms, self_norms};
+use crate::kernel::block::kernel_block_pts_with_norms;
 use crate::kernel::Kernel;
 use crate::linalg::blas;
 use crate::linalg::chol::Chol;
@@ -61,7 +61,7 @@ pub fn train_racqp(
     let y = &ds.y;
     let beta = params.beta;
     let p = params.block_size.clamp(8, n);
-    let norms = self_norms(&ds.x);
+    let norms = ds.x.self_norms();
     let mut rng = Rng::new(params.seed);
     let mut kernel_evals = 0usize;
 
@@ -90,7 +90,7 @@ pub fn train_racqp(
             let xb_pts = ds.x.select_rows(block);
             let nb: Vec<f64> = block.iter().map(|&i| norms[i]).collect();
             kernel_evals += n * m;
-            let k_cols = kernel_block_with_norms(&kernel, &ds.x, &norms, &xb_pts, &nb); // n×m
+            let k_cols = kernel_block_pts_with_norms(&kernel, &ds.x, &norms, &xb_pts, &nb); // n×m
 
             // subproblem over x_B (others fixed):
             //   min ½ x_Bᵀ Q_BB x_B + x_Bᵀ (Q_B,rest x_rest) − e x_B·y...
@@ -182,8 +182,8 @@ pub fn train_racqp(
         let mpts = ds.x.select_rows(&margin);
         let mn: Vec<f64> = margin.iter().map(|&i| norms[i]).collect();
         kernel_evals += margin.len() * sv.rows();
-        let svn = self_norms(&sv);
-        let kb = kernel_block_with_norms(&kernel, &mpts, &mn, &sv, &svn);
+        let svn = sv.self_norms();
+        let kb = kernel_block_pts_with_norms(&kernel, &mpts, &mn, &sv, &svn);
         let mut f = vec![0.0; margin.len()];
         blas::gemv(&kb, &alpha_y, &mut f);
         let mut acc = 0.0;

@@ -13,9 +13,8 @@
 //! measures is a property of the algorithm, reproduced here.
 
 use crate::data::Dataset;
-use crate::kernel::block::{kernel_row, self_norms};
+use crate::kernel::block::kernel_row_pts;
 use crate::kernel::Kernel;
-use crate::linalg::Mat;
 use crate::svm::SvmModel;
 use std::collections::HashMap;
 
@@ -93,13 +92,15 @@ pub fn train_smo(
 ) -> (SvmModel, SmoStats) {
     let n = ds.len();
     let y = &ds.y;
-    let norms = self_norms(&ds.x);
-    // exact kernel diagonal (Gaussian: all ones, but stay kernel-generic)
-    let diag: Vec<f64> = (0..n).map(|i| kernel.eval(ds.point(i), ds.point(i))).collect();
+    let norms = ds.x.self_norms();
+    // exact kernel diagonal (Gaussian: all ones, but stay kernel-generic);
+    // eval_from_parts(n, n, n) equals eval(x, x) bit-for-bit: the distance
+    // term cancels to 0 and the inner-product term is the stored norm
+    let diag: Vec<f64> = (0..n).map(|i| kernel.eval_from_parts(norms[i], norms[i], norms[i])).collect();
     let mut cache = RowCache::new(n, params.cache_bytes);
     let compute_row = |i: usize, norms: &[f64], out: &mut Vec<f64>| {
         out.resize(n, 0.0);
-        kernel_row(&kernel, ds.point(i), norms[i], &ds.x, norms, out);
+        kernel_row_pts(&kernel, &ds.x, i, norms[i], &ds.x, norms, out);
     };
 
     let mut alpha = vec![0.0f64; n];
@@ -328,10 +329,10 @@ fn reconstruct_gradient(
     }
 }
 
-/// Dense-feature decision check used in tests.
-pub fn dual_objective(ds: &Dataset, kernel: &Kernel, alpha_y: &[f64], sv: &Mat) -> f64 {
+/// Decision check used in tests (any SV representation).
+pub fn dual_objective(ds: &Dataset, kernel: &Kernel, alpha_y: &[f64], sv: &crate::data::Points) -> f64 {
     // ½ Σ_ij (αy)_i (αy)_j K_ij − Σ_i α_i ; α_i = |αy_i|
-    let k = crate::kernel::kernel_block(kernel, sv, sv);
+    let k = crate::kernel::kernel_block_pts(kernel, sv, sv);
     let mut quad = 0.0;
     for i in 0..sv.rows() {
         for j in 0..sv.rows() {

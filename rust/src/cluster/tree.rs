@@ -7,6 +7,10 @@
 //! binary partition (2-means or PCA bisection) producing a permutation
 //! and a postorder node list, which is exactly the skeleton the HSS
 //! hierarchy is built on.
+//!
+//! All distance/centroid arithmetic goes through the [`Points`]
+//! accessors, so the same splits run on dense and CSR datasets; the
+//! dense arms are the original slice loops (bit-for-bit unchanged).
 
 use crate::data::Dataset;
 use crate::linalg::blas;
@@ -145,8 +149,8 @@ fn split_two_means(ds: &Dataset, idx: &mut [usize], rng: &mut Rng) -> usize {
         .iter()
         .copied()
         .max_by(|&i, &j| {
-            let di = blas::dist2(ds.point(i), ds.point(a));
-            let dj = blas::dist2(ds.point(j), ds.point(a));
+            let di = ds.x.dist2_rows(i, &ds.x, a);
+            let dj = ds.x.dist2_rows(j, &ds.x, a);
             di.partial_cmp(&dj).unwrap()
         })
         .unwrap();
@@ -154,20 +158,25 @@ fn split_two_means(ds: &Dataset, idx: &mut [usize], rng: &mut Rng) -> usize {
         .iter()
         .copied()
         .max_by(|&i, &j| {
-            let di = blas::dist2(ds.point(i), ds.point(c0_id));
-            let dj = blas::dist2(ds.point(j), ds.point(c0_id));
+            let di = ds.x.dist2_rows(i, &ds.x, c0_id);
+            let dj = ds.x.dist2_rows(j, &ds.x, c0_id);
             di.partial_cmp(&dj).unwrap()
         })
         .unwrap();
-    let mut c0: Vec<f64> = ds.point(c0_id).to_vec();
-    let mut c1: Vec<f64> = ds.point(c1_id).to_vec();
+    let row_vec = |i: usize| -> Vec<f64> {
+        let mut v = vec![0.0; dim];
+        ds.x.add_row_scaled(i, 1.0, &mut v);
+        v
+    };
+    let mut c0: Vec<f64> = row_vec(c0_id);
+    let mut c1: Vec<f64> = row_vec(c1_id);
     let mut assign = vec![false; n]; // true → cluster 1
 
     for _iter in 0..8 {
         let mut changed = false;
         for (t, &i) in idx.iter().enumerate() {
-            let d0 = blas::dist2(ds.point(i), &c0);
-            let d1 = blas::dist2(ds.point(i), &c1);
+            let d0 = ds.x.dist2_dense_vec(i, &c0);
+            let d1 = ds.x.dist2_dense_vec(i, &c1);
             let a1 = d1 < d0;
             if a1 != assign[t] {
                 assign[t] = a1;
@@ -180,13 +189,12 @@ fn split_two_means(ds: &Dataset, idx: &mut [usize], rng: &mut Rng) -> usize {
         let mut s0 = vec![0.0; dim];
         let mut s1 = vec![0.0; dim];
         for (t, &i) in idx.iter().enumerate() {
-            let p = ds.point(i);
             if assign[t] {
                 n1 += 1;
-                blas::axpy(1.0, p, &mut s1);
+                ds.x.add_row_scaled(i, 1.0, &mut s1);
             } else {
                 n0 += 1;
-                blas::axpy(1.0, p, &mut s0);
+                ds.x.add_row_scaled(i, 1.0, &mut s0);
             }
         }
         if n0 == 0 || n1 == 0 {
@@ -228,24 +236,38 @@ fn split_pca(ds: &Dataset, idx: &mut [usize], rng: &mut Rng) -> usize {
     // mean
     let mut mean = vec![0.0; dim];
     for &i in idx.iter() {
-        blas::axpy(1.0, ds.point(i), &mut mean);
+        ds.x.add_row_scaled(i, 1.0, &mut mean);
     }
     for v in &mut mean {
         *v /= n as f64;
     }
+    let sparse = ds.is_sparse();
     // power iteration on covariance implicitly: v ← Σ (x−m)(x−m)ᵀ v
     let mut v: Vec<f64> = (0..dim).map(|_| rng.gauss()).collect();
     let mut w = vec![0.0; dim];
     for _ in 0..12 {
         w.fill(0.0);
-        for &i in idx.iter() {
-            let p = ds.point(i);
-            let mut proj = 0.0;
-            for j in 0..dim {
-                proj += (p[j] - mean[j]) * v[j];
+        if sparse {
+            // sparse rows: proj through nnz dots, one dense mean
+            // correction per sweep (w −= (Σ proj) · mean)
+            let mv = blas::dot(&mean, &v);
+            let mut psum = 0.0;
+            for &i in idx.iter() {
+                let proj = ds.x.dot_dense_vec(i, &v) - mv;
+                ds.x.add_row_scaled(i, proj, &mut w);
+                psum += proj;
             }
-            for j in 0..dim {
-                w[j] += proj * (p[j] - mean[j]);
+            blas::axpy(-psum, &mean, &mut w);
+        } else {
+            for &i in idx.iter() {
+                let p = ds.point(i);
+                let mut proj = 0.0;
+                for j in 0..dim {
+                    proj += (p[j] - mean[j]) * v[j];
+                }
+                for j in 0..dim {
+                    w[j] += proj * (p[j] - mean[j]);
+                }
             }
         }
         let nw = blas::nrm2(&w);
@@ -257,14 +279,20 @@ fn split_pca(ds: &Dataset, idx: &mut [usize], rng: &mut Rng) -> usize {
         }
     }
     // projections and median split
+    let mean_v = blas::dot(&mean, &v);
     let mut proj: Vec<(f64, usize)> = idx
         .iter()
         .map(|&i| {
-            let p = ds.point(i);
-            let mut s = 0.0;
-            for j in 0..dim {
-                s += (p[j] - mean[j]) * v[j];
-            }
+            let s = if sparse {
+                ds.x.dot_dense_vec(i, &v) - mean_v
+            } else {
+                let p = ds.point(i);
+                let mut s = 0.0;
+                for j in 0..dim {
+                    s += (p[j] - mean[j]) * v[j];
+                }
+                s
+            };
             (s, i)
         })
         .collect();
@@ -287,7 +315,7 @@ pub fn top_split_separation(ds: &Dataset, tree: &ClusterTree) -> f64 {
     let centroid = |begin: usize, end: usize| -> Vec<f64> {
         let mut c = vec![0.0; ds.dim()];
         for p in begin..end {
-            blas::axpy(1.0, ds.point(tree.perm[p]), &mut c);
+            ds.x.add_row_scaled(tree.perm[p], 1.0, &mut c);
         }
         for v in &mut c {
             *v /= (end - begin) as f64;
@@ -300,7 +328,7 @@ pub fn top_split_separation(ds: &Dataset, tree: &ClusterTree) -> f64 {
     let spread = |begin: usize, end: usize, c: &[f64]| -> f64 {
         let mut s = 0.0;
         for p in begin..end {
-            s += blas::dist2(ds.point(tree.perm[p]), c).sqrt();
+            s += ds.x.dist2_dense_vec(tree.perm[p], c).sqrt();
         }
         s / (end - begin) as f64
     };
@@ -402,6 +430,24 @@ mod tests {
             let tree = ClusterTree::build(&ds, 16, method, &mut rng);
             check_tree_invariants(&tree, 100, 16);
         }
+    }
+
+    #[test]
+    fn sparse_datasets_build_valid_trees() {
+        let mut rng = crate::util::prng::Rng::new(5);
+        let ds = synth::blobs(300, 6, 4, 0.3, &mut rng);
+        let sp = Dataset::new(
+            "sp",
+            crate::data::CsrMat::from_dense(ds.x.dense()),
+            ds.y.clone(),
+        );
+        assert!(sp.is_sparse());
+        for method in [SplitMethod::TwoMeans, SplitMethod::Pca] {
+            let tree = ClusterTree::build(&sp, 32, method, &mut rng);
+            check_tree_invariants(&tree, 300, 32);
+        }
+        let tree = ClusterTree::build(&sp, 64, SplitMethod::TwoMeans, &mut rng);
+        assert!(top_split_separation(&sp, &tree) >= 0.0);
     }
 
     #[test]

@@ -1,24 +1,27 @@
-//! Core dataset representation: dense feature rows + ±1 labels.
+//! Core dataset representation: feature rows + ±1 labels.
 //!
-//! The paper's datasets (Table 1) range from 3 to 47k features; the HSS
-//! pipeline operates on dense points (STRUMPACK densifies too), so the
-//! canonical storage is a row-major [`Mat`] with one point per row.
+//! The paper's datasets (Table 1) range from 3 to 47k features. Storage
+//! is a [`Points`] container: a dense row-major [`Mat`] for the
+//! synthetic/low-dimensional workloads, or a CSR [`crate::data::CsrMat`]
+//! for the sparse LIBSVM benchmarks (rcv1.binary, webspam.uni, ...)
+//! where densifying would cost rows × dim instead of nnz.
 
-use crate::linalg::Mat;
+use crate::data::sparse::Points;
 
 /// A labelled binary-classification dataset.
 #[derive(Clone)]
 pub struct Dataset {
-    /// d × r matrix: one feature row per point.
-    pub x: Mat,
-    /// Labels in {-1, +1}, length d.
+    /// One feature row per point (dense or CSR).
+    pub x: Points,
+    /// Labels in {-1, +1}, length = number of points.
     pub y: Vec<f64>,
     /// Human-readable name (dataset table key).
     pub name: String,
 }
 
 impl Dataset {
-    pub fn new(name: impl Into<String>, x: Mat, y: Vec<f64>) -> Self {
+    pub fn new(name: impl Into<String>, x: impl Into<Points>, y: Vec<f64>) -> Self {
+        let x = x.into();
         assert_eq!(x.rows(), y.len(), "points/labels length mismatch");
         assert!(
             y.iter().all(|&v| v == 1.0 || v == -1.0),
@@ -41,14 +44,21 @@ impl Dataset {
         self.x.cols()
     }
 
+    /// True when the features are CSR-stored.
+    pub fn is_sparse(&self) -> bool {
+        self.x.is_sparse()
+    }
+
     /// Number of positive labels (the |Train₊| column of Table 1).
     pub fn positives(&self) -> usize {
         self.y.iter().filter(|&&v| v > 0.0).count()
     }
 
-    /// Feature row of point i.
+    /// Feature row of point i as a dense slice. Panics on sparse
+    /// storage — sparse-aware consumers go through [`Points`] ops
+    /// (`dot_row`, `dist2_rows`, `add_row_scaled`, ...).
     pub fn point(&self, i: usize) -> &[f64] {
-        self.x.row(i)
+        self.x.dense_row(i)
     }
 
     /// Subset by index list (in that order).
@@ -80,11 +90,16 @@ impl std::fmt::Debug for Dataset {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "Dataset({}: {} pts × {} feats, {} positive)",
+            "Dataset({}: {} pts × {} feats, {} positive{})",
             self.name,
             self.len(),
             self.dim(),
-            self.positives()
+            self.positives(),
+            if self.is_sparse() {
+                format!(", sparse {} nnz", self.x.nnz())
+            } else {
+                String::new()
+            }
         )
     }
 }
@@ -92,6 +107,8 @@ impl std::fmt::Debug for Dataset {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::data::sparse::CsrMat;
+    use crate::linalg::Mat;
 
     fn tiny() -> Dataset {
         let x = Mat::from_fn(4, 2, |i, j| (i * 2 + j) as f64);
@@ -105,6 +122,7 @@ mod tests {
         assert_eq!(d.dim(), 2);
         assert_eq!(d.positives(), 2);
         assert_eq!(d.point(2), &[4.0, 5.0]);
+        assert!(!d.is_sparse());
     }
 
     #[test]
@@ -127,6 +145,21 @@ mod tests {
         assert_eq!(tr.len(), 3);
         assert_eq!(te.len(), 1);
         assert_eq!(te.point(0), &[6.0, 7.0]);
+    }
+
+    #[test]
+    fn sparse_datasets_select_and_split() {
+        let x = CsrMat::from_rows(3, &[vec![(0, 1.0)], vec![], vec![(2, 5.0)], vec![(1, -1.0)]]);
+        let d = Dataset::new("sp", x, vec![1.0, -1.0, 1.0, -1.0]);
+        assert!(d.is_sparse());
+        assert_eq!(d.dim(), 3);
+        let s = d.select(&[2, 0]);
+        assert!(s.is_sparse());
+        assert_eq!(s.x.get(0, 2), 5.0);
+        assert_eq!(s.y, vec![1.0, 1.0]);
+        let (tr, te) = d.split_at(1);
+        assert_eq!(tr.len(), 1);
+        assert_eq!(te.len(), 3);
     }
 
     #[test]

@@ -1,43 +1,96 @@
 //! LIBSVM sparse text format reader/writer.
 //!
 //! Format: one point per line, `<label> <index>:<value> ...` with 1-based
-//! ascending indices. All of the paper's datasets ship in this format, so
-//! a user with the real a8a/w7a/... files can run the exact experiments;
-//! our synthetic generators write the same format for parity.
+//! **strictly ascending** indices (duplicate or out-of-order indices and
+//! non-finite values are rejected with line-numbered errors, matching
+//! LIBSVM's contract). All of the paper's datasets ship in this format,
+//! so a user with the real a8a/w7a/rcv1.binary/... files can run the
+//! exact experiments; our synthetic generators write the same format for
+//! parity.
 //!
-//! Label convention: `{−1, +1}` files are read verbatim; any other
-//! two-label encoding maps the numerically greater label to `+1` and the
-//! smaller to `−1` (`{0,1}`: 1 is positive; `{1,2}`: 2 is positive). A
-//! single-class file maps positive labels to `+1` and non-positive ones
-//! to `−1`. [`write_file`] always emits `{−1, +1}`, so write→read
-//! round-trips preserve labels exactly.
+//! The parser is streaming: it accumulates CSR arrays directly and never
+//! materializes a dense matrix. The returned representation is chosen by
+//! [`Repr`]: `Auto` keeps wide, sparse data (dim ≥ 32 and density ≤ 25%)
+//! in CSR form and densifies the rest, so rcv1-class inputs load in
+//! O(nnz) memory while small dense test fixtures behave exactly as
+//! before.
+//!
+//! Label convention ([`read`]): `{−1, +1}` files are read verbatim; any
+//! other two-label encoding maps the numerically greater label to `+1`
+//! and the smaller to `−1` (`{0,1}`: 1 is positive; `{1,2}`: 2 is
+//! positive). A single-class file maps positive labels to `+1` and
+//! non-positive ones to `−1`. [`write_file`] always emits `{−1, +1}`, so
+//! write→read round-trips preserve labels exactly.
+//!
+//! The predict/serve paths use [`read_features`] instead: it skips the
+//! binary-label normalization entirely (a serving batch legitimately
+//! mixes labeled and unlabeled lines), accepts bare feature lines (first
+//! token contains `:`) as unlabeled (label = NaN), and never fails on
+//! "not a binary dataset".
 
 use crate::data::dataset::Dataset;
-use crate::linalg::Mat;
+use crate::data::sparse::{CsrMat, Points};
 use anyhow::{bail, Context, Result};
 use std::io::{BufRead, BufWriter, Write};
 use std::path::Path;
 
-/// Parse LIBSVM text from a reader. `dim` forces the feature dimension
-/// (use `None` to infer from the max index seen).
-pub fn read(r: impl BufRead, dim: Option<usize>) -> Result<Dataset> {
-    let mut labels: Vec<f64> = Vec::new();
-    let mut rows: Vec<Vec<(usize, f64)>> = Vec::new();
-    let mut max_idx = 0usize;
+/// Requested in-memory representation for parsed features.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum Repr {
+    /// CSR when the data is wide and sparse (dim ≥ 32, density ≤ 25%),
+    /// dense otherwise.
+    #[default]
+    Auto,
+    Dense,
+    Sparse,
+}
 
+/// Auto-representation thresholds (see [`Repr::Auto`]).
+const AUTO_MIN_DIM: usize = 32;
+const AUTO_MAX_DENSITY: f64 = 0.25;
+
+/// Streaming parse result: CSR triplets + raw labels (NaN = unlabeled).
+struct Parsed {
+    labels: Vec<f64>,
+    indptr: Vec<usize>,
+    indices: Vec<usize>,
+    vals: Vec<f64>,
+    max_idx: usize,
+}
+
+/// Parse LIBSVM lines into CSR arrays without ever building a dense
+/// matrix. `allow_bare` additionally accepts label-less lines whose
+/// first token is an `index:value` pair (label recorded as NaN).
+fn parse_stream(r: impl BufRead, allow_bare: bool) -> Result<Parsed> {
+    let mut p = Parsed {
+        labels: Vec::new(),
+        indptr: vec![0],
+        indices: Vec::new(),
+        vals: Vec::new(),
+        max_idx: 0,
+    };
     for (lineno, line) in r.lines().enumerate() {
         let line = line.context("I/O error reading libsvm data")?;
         let line = line.trim();
         if line.is_empty() || line.starts_with('#') {
             continue;
         }
-        let mut parts = line.split_ascii_whitespace();
-        let lab_tok = parts.next().unwrap();
-        let label: f64 = lab_tok
-            .parse()
-            .with_context(|| format!("line {}: bad label {lab_tok:?}", lineno + 1))?;
-        // normalize common encodings: {0,1} → {-1,+1}, {1,2} → {-1,+1}
-        let mut feats = Vec::new();
+        let mut parts = line.split_ascii_whitespace().peekable();
+        let first = *parts.peek().unwrap();
+        let label = if allow_bare && first.contains(':') {
+            // bare feature line: no label token to consume
+            f64::NAN
+        } else {
+            let lab_tok = parts.next().unwrap();
+            let label: f64 = lab_tok
+                .parse()
+                .with_context(|| format!("line {}: bad label {lab_tok:?}", lineno + 1))?;
+            if !label.is_finite() {
+                bail!("line {}: non-finite label {lab_tok:?}", lineno + 1);
+            }
+            label
+        };
+        let mut last_idx: Option<usize> = None;
         for tok in parts {
             let (i_str, v_str) = tok
                 .split_once(':')
@@ -48,25 +101,80 @@ pub fn read(r: impl BufRead, dim: Option<usize>) -> Result<Dataset> {
             if idx == 0 {
                 bail!("line {}: libsvm indices are 1-based, got 0", lineno + 1);
             }
+            if let Some(prev) = last_idx {
+                if idx <= prev {
+                    bail!(
+                        "line {}: feature index {idx} is not strictly ascending \
+                         (previous index {prev}; libsvm requires ascending, duplicate-free indices)",
+                        lineno + 1
+                    );
+                }
+            }
+            last_idx = Some(idx);
             let val: f64 = v_str
                 .parse()
                 .with_context(|| format!("line {}: bad value {v_str:?}", lineno + 1))?;
-            max_idx = max_idx.max(idx);
-            feats.push((idx - 1, val));
+            if !val.is_finite() {
+                bail!("line {}: non-finite value {v_str:?} for index {idx}", lineno + 1);
+            }
+            p.max_idx = p.max_idx.max(idx);
+            if val != 0.0 {
+                p.indices.push(idx - 1);
+                p.vals.push(val);
+            }
         }
-        labels.push(label);
-        rows.push(feats);
+        p.labels.push(label);
+        p.indptr.push(p.indices.len());
     }
+    Ok(p)
+}
 
-    let dim = match dim {
+/// Resolve the feature dimension against a forced value.
+fn resolve_dim(max_idx: usize, dim: Option<usize>) -> Result<usize> {
+    match dim {
         Some(d) => {
             if max_idx > d {
                 bail!("feature index {max_idx} exceeds forced dimension {d}");
             }
-            d
+            Ok(d)
         }
-        None => max_idx,
+        None => Ok(max_idx),
+    }
+}
+
+/// Pick dense or CSR per `repr` and materialize the [`Points`]
+/// (consumes the streamed CSR arrays — no second copy).
+fn build_points(parsed: Parsed, dim: usize, repr: Repr) -> (Points, Vec<f64>) {
+    let Parsed { labels, indptr, indices, vals, .. } = parsed;
+    let rows = labels.len();
+    let csr = CsrMat::new(rows, dim, indptr, indices, vals);
+    let sparse = match repr {
+        Repr::Sparse => true,
+        Repr::Dense => false,
+        Repr::Auto => {
+            let slots = (rows * dim).max(1);
+            dim >= AUTO_MIN_DIM && (csr.nnz() as f64) <= AUTO_MAX_DENSITY * slots as f64
+        }
     };
+    let x = if sparse {
+        Points::Sparse(csr)
+    } else {
+        Points::Dense(csr.to_dense())
+    };
+    (x, labels)
+}
+
+/// Parse LIBSVM text from a reader with binary-label normalization.
+/// `dim` forces the feature dimension (use `None` to infer from the max
+/// index seen).
+pub fn read(r: impl BufRead, dim: Option<usize>) -> Result<Dataset> {
+    read_with(r, dim, Repr::Auto)
+}
+
+/// [`read`] with an explicit representation request.
+pub fn read_with(r: impl BufRead, dim: Option<usize>, repr: Repr) -> Result<Dataset> {
+    let parsed = parse_stream(r, false)?;
+    let dim = resolve_dim(parsed.max_idx, dim)?;
 
     // Map labels to ±1. Convention (applies to every two-label
     // encoding): {−1, +1} is preserved verbatim; otherwise the
@@ -75,7 +183,7 @@ pub fn read(r: impl BufRead, dim: Option<usize>) -> Result<Dataset> {
     // map the *lower* label to +1 while the generic fallback mapped the
     // *higher* one — the polarity now matches across all encodings.)
     let distinct: std::collections::BTreeSet<i64> =
-        labels.iter().map(|&l| l.round() as i64).collect();
+        parsed.labels.iter().map(|&l| l.round() as i64).collect();
     let to_pm1: Box<dyn Fn(f64) -> f64> = if distinct.is_empty() {
         Box::new(|l| l) // empty file: nothing to map
     } else if distinct == [(-1), 1].into_iter().collect() {
@@ -93,38 +201,120 @@ pub fn read(r: impl BufRead, dim: Option<usize>) -> Result<Dataset> {
         bail!("not a binary dataset: labels {distinct:?}");
     };
 
-    let mut x = Mat::zeros(rows.len(), dim);
-    for (i, feats) in rows.iter().enumerate() {
-        let row = x.row_mut(i);
-        for &(j, v) in feats {
-            row[j] = v;
-        }
-    }
+    let (x, labels) = build_points(parsed, dim, repr);
     let y: Vec<f64> = labels.iter().map(|&l| to_pm1(l)).collect();
     Ok(Dataset::new("libsvm", x, y))
 }
 
-/// Read a dataset from a file path.
-pub fn read_file(path: impl AsRef<Path>, dim: Option<usize>) -> Result<Dataset> {
+/// Label-agnostic parse for the predict/serve paths: returns the feature
+/// rows plus the **raw** labels (NaN for bare feature lines), with no
+/// binary-label normalization and no "not a binary dataset" failure —
+/// a serving batch mixing `±1`-labeled lines with unlabeled ones parses
+/// cleanly. Index/value validation is identical to [`read`].
+pub fn read_features(r: impl BufRead, dim: Option<usize>) -> Result<(Points, Vec<f64>)> {
+    read_features_with(r, dim, Repr::Auto)
+}
+
+/// [`read_features`] with an explicit representation request.
+pub fn read_features_with(
+    r: impl BufRead,
+    dim: Option<usize>,
+    repr: Repr,
+) -> Result<(Points, Vec<f64>)> {
+    let parsed = parse_stream(r, true)?;
+    let dim = resolve_dim(parsed.max_idx, dim)?;
+    Ok(build_points(parsed, dim, repr))
+}
+
+/// [`read_features`] from a file path.
+pub fn read_features_file(
+    path: impl AsRef<Path>,
+    dim: Option<usize>,
+    repr: Repr,
+) -> Result<(Points, Vec<f64>)> {
     let f = std::fs::File::open(path.as_ref())
         .with_context(|| format!("cannot open {}", path.as_ref().display()))?;
-    let mut ds = read(std::io::BufReader::new(f), dim)?;
+    read_features_with(std::io::BufReader::new(f), dim, repr)
+}
+
+/// Map raw evaluation labels (from [`read_features`]) onto {−1, +1, NaN}:
+/// when exactly two label classes appear and neither is `0` (e.g.
+/// `{1,2}`, even with unlabeled lines mixed in), the greater label maps
+/// to +1 — the same polarity rule as [`read`] — and unlabeled lines stay
+/// NaN. Otherwise `±1` labels are kept and everything else — explicit
+/// `0` placeholders (the serving convention for "no label", even in an
+/// otherwise `{0,+1}` file), extra classes in a mixed batch — becomes
+/// NaN = unlabeled and is excluded from accuracy.
+pub fn normalize_eval_labels(labels: &[f64]) -> Vec<f64> {
+    let distinct: std::collections::BTreeSet<i64> = labels
+        .iter()
+        .filter(|l| l.is_finite())
+        .map(|&l| l.round() as i64)
+        .collect();
+    let pm1: std::collections::BTreeSet<i64> = [-1, 1].into_iter().collect();
+    if distinct.len() == 2 && distinct != pm1 && !distinct.contains(&0) {
+        // two-class renormalization (greater ↦ +1); applies with or
+        // without unlabeled lines — a {1,2}-coded file must not have its
+        // '1' (negative) lines mistaken for literal +1 labels
+        let lo = *distinct.iter().next().expect("two labels");
+        return labels
+            .iter()
+            .map(|&l| {
+                if l.is_finite() {
+                    if (l.round() as i64) > lo {
+                        1.0
+                    } else {
+                        -1.0
+                    }
+                } else {
+                    f64::NAN
+                }
+            })
+            .collect();
+    }
+    labels
+        .iter()
+        .map(|&l| if l == 1.0 || l == -1.0 { l } else { f64::NAN })
+        .collect()
+}
+
+/// Read a dataset from a file path.
+pub fn read_file(path: impl AsRef<Path>, dim: Option<usize>) -> Result<Dataset> {
+    read_file_with(path, dim, Repr::Auto)
+}
+
+/// [`read_file`] with an explicit representation request.
+pub fn read_file_with(path: impl AsRef<Path>, dim: Option<usize>, repr: Repr) -> Result<Dataset> {
+    let f = std::fs::File::open(path.as_ref())
+        .with_context(|| format!("cannot open {}", path.as_ref().display()))?;
+    let mut ds = read_with(std::io::BufReader::new(f), dim, repr)?;
     if let Some(stem) = path.as_ref().file_stem().and_then(|s| s.to_str()) {
         ds.name = stem.to_string();
     }
     Ok(ds)
 }
 
-/// Write a dataset in LIBSVM format (zeros skipped).
+/// Write a dataset in LIBSVM format (zeros skipped, works for both
+/// representations).
 pub fn write_file(ds: &Dataset, path: impl AsRef<Path>) -> Result<()> {
     let f = std::fs::File::create(path.as_ref())
         .with_context(|| format!("cannot create {}", path.as_ref().display()))?;
     let mut w = BufWriter::new(f);
     for i in 0..ds.len() {
         write!(w, "{}", if ds.y[i] > 0.0 { "+1" } else { "-1" })?;
-        for (j, &v) in ds.point(i).iter().enumerate() {
-            if v != 0.0 {
-                write!(w, " {}:{}", j + 1, v)?;
+        match &ds.x {
+            Points::Dense(m) => {
+                for (j, &v) in m.row(i).iter().enumerate() {
+                    if v != 0.0 {
+                        write!(w, " {}:{}", j + 1, v)?;
+                    }
+                }
+            }
+            Points::Sparse(s) => {
+                let (ci, vi) = s.row(i);
+                for (&c, &v) in ci.iter().zip(vi.iter()) {
+                    write!(w, " {}:{}", c + 1, v)?;
+                }
             }
         }
         writeln!(w)?;
@@ -135,6 +325,7 @@ pub fn write_file(ds: &Dataset, path: impl AsRef<Path>) -> Result<()> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::linalg::Mat;
     use std::io::Cursor;
 
     #[test]
@@ -211,6 +402,105 @@ mod tests {
         assert!(read(Cursor::new("+1 0:1\n"), None).is_err());
         assert!(read(Cursor::new("x 1:1\n"), None).is_err());
         assert!(read(Cursor::new("1 1:1\n2 1:1\n3 1:1\n"), None).is_err()); // 3 classes
+    }
+
+    #[test]
+    fn rejects_duplicate_and_descending_indices() {
+        let dup = read(Cursor::new("+1 1:1 1:2\n"), None);
+        let msg = format!("{:#}", dup.unwrap_err());
+        assert!(msg.contains("line 1") && msg.contains("ascending"), "{msg}");
+        let desc = read(Cursor::new("+1 1:1\n-1 5:1 3:2\n"), None);
+        let msg = format!("{:#}", desc.unwrap_err());
+        assert!(msg.contains("line 2") && msg.contains("ascending"), "{msg}");
+        // ascending stays fine, and the check resets between rows
+        assert!(read(Cursor::new("+1 5:1\n-1 1:1 2:1\n"), None).is_ok());
+        // read_features applies the same contract
+        assert!(read_features(Cursor::new("3:1 2:1\n"), None).is_err());
+    }
+
+    #[test]
+    fn rejects_non_finite_values_and_labels() {
+        for text in ["+1 1:nan\n", "+1 1:inf\n", "-1 2:-inf\n"] {
+            let e = read(Cursor::new(text), None);
+            let msg = format!("{:#}", e.unwrap_err());
+            assert!(msg.contains("non-finite value"), "{msg}");
+        }
+        let e = read(Cursor::new("nan 1:1\n"), None);
+        assert!(format!("{:#}", e.unwrap_err()).contains("non-finite label"));
+    }
+
+    #[test]
+    fn read_features_accepts_mixed_and_bare_lines() {
+        // the serve-path crash case: ±1 labels mixed with 0-labeled and
+        // bare feature lines — strict read() sees ≥3 classes and bails,
+        // read_features must parse all of it
+        let text = "+1 1:0.5 3:1.5\n0 2:2.0\n-1 1:1.0\n2:0.25 3:0.5\n";
+        assert!(read(Cursor::new(text), None).is_err());
+        let (x, labels) = read_features(Cursor::new(text), None).unwrap();
+        assert_eq!(x.rows(), 4);
+        assert_eq!(x.cols(), 3);
+        assert_eq!(labels[0], 1.0);
+        assert_eq!(labels[1], 0.0);
+        assert_eq!(labels[2], -1.0);
+        assert!(labels[3].is_nan());
+        assert_eq!(x.get(3, 1), 0.25);
+        assert_eq!(x.get(3, 0), 0.0);
+    }
+
+    #[test]
+    fn eval_label_normalization() {
+        // ±1 with unlabeled holes: kept as-is
+        let n = normalize_eval_labels(&[1.0, -1.0, f64::NAN, 0.0]);
+        assert_eq!(n[0], 1.0);
+        assert_eq!(n[1], -1.0);
+        assert!(n[2].is_nan() && n[3].is_nan());
+        // 0 is always the "no label" placeholder, never a class — a
+        // {0,+1} file scores only its +1 lines
+        let n = normalize_eval_labels(&[0.0, 1.0, 0.0]);
+        assert!(n[0].is_nan() && n[2].is_nan());
+        assert_eq!(n[1], 1.0);
+        // two-class {1,2}: normalized like read() — including when
+        // unlabeled lines are mixed in ('1' is the NEGATIVE class here)
+        assert_eq!(normalize_eval_labels(&[1.0, 2.0]), vec![-1.0, 1.0]);
+        let n = normalize_eval_labels(&[1.0, f64::NAN, 2.0]);
+        assert_eq!(n[0], -1.0);
+        assert!(n[1].is_nan());
+        assert_eq!(n[2], 1.0);
+    }
+
+    #[test]
+    fn auto_repr_picks_csr_for_wide_sparse_data() {
+        // 3 rows over 100 features, 4 nnz → sparse under Auto
+        let text = "+1 1:1 100:2\n-1 50:1\n+1 7:3\n";
+        let ds = read(Cursor::new(text), None).unwrap();
+        assert!(ds.is_sparse(), "{:?}", ds);
+        assert_eq!(ds.x.get(0, 99), 2.0);
+        // forcing dense gives identical entries
+        let dd = read_with(Cursor::new(text), None, Repr::Dense).unwrap();
+        assert!(!dd.is_sparse());
+        assert_eq!(ds.x.to_dense(), dd.x.to_dense());
+        // narrow data stays dense under Auto even when mostly zero
+        let narrow = read(Cursor::new("+1 8:1\n-1 2:1\n"), None).unwrap();
+        assert!(!narrow.is_sparse());
+        // forcing sparse works on anything
+        let fs = read_with(Cursor::new("+1 1:1\n-1 2:1\n"), None, Repr::Sparse).unwrap();
+        assert!(fs.is_sparse());
+    }
+
+    #[test]
+    fn sparse_roundtrip_through_file() {
+        let dir = std::env::temp_dir()
+            .join(format!("hss_svm_test_libsvm_sp_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let text = "+1 1:0.5 64:1.25\n-1 33:2.0\n+1 2:1.0 63:3.5\n";
+        let ds = read(Cursor::new(text), None).unwrap();
+        assert!(ds.is_sparse());
+        let path = dir.join("sp.libsvm");
+        write_file(&ds, &path).unwrap();
+        let back = read_file(&path, Some(ds.dim())).unwrap();
+        assert_eq!(back.y, ds.y);
+        assert_eq!(back.x.to_dense(), ds.x.to_dense());
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

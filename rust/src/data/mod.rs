@@ -1,9 +1,11 @@
-//! Dataset substrate: representation, LIBSVM-format I/O, synthetic
-//! Table-1-matched workload generators, and feature scaling.
+//! Dataset substrate: dense/CSR representation, LIBSVM-format I/O,
+//! synthetic Table-1-matched workload generators, and feature scaling.
 
 pub mod dataset;
 pub mod libsvm;
 pub mod scale;
+pub mod sparse;
 pub mod synth;
 
 pub use dataset::Dataset;
+pub use sparse::{CsrMat, Points};

@@ -2,8 +2,18 @@
 //! or [0, 1]; accuracy and kernel-width grids in the paper assume scaled
 //! inputs, so the same transform is applied to synthetic data before
 //! training (fit on train, apply to test — never the other way).
+//!
+//! Sparse (CSR) datasets follow `svm-scale`'s implicit-zero convention:
+//! fitting counts an implicit 0 toward a feature's min/max whenever the
+//! feature is absent from at least one row, and the affine transform is
+//! applied to **stored entries only** — absent features stay absent
+//! (zero), exactly as `svm-scale` leaves them out of its output. This
+//! preserves sparsity (the whole point of CSR storage) at the cost of
+//! zeros not being shifted, which is the established LIBSVM behaviour
+//! for sparse data.
 
 use crate::data::dataset::Dataset;
+use crate::data::sparse::Points;
 
 /// Per-feature affine transform x ← (x − shift) * factor.
 #[derive(Clone, Debug)]
@@ -12,51 +22,112 @@ pub struct Scaler {
     factor: Vec<f64>,
 }
 
+/// Per-feature (min, max) over a [`Points`] container; sparse features
+/// include an implicit 0 whenever any row omits them.
+fn minmax(x: &Points) -> (Vec<f64>, Vec<f64>) {
+    let dim = x.cols();
+    let mut min = vec![f64::INFINITY; dim];
+    let mut max = vec![f64::NEG_INFINITY; dim];
+    match x {
+        Points::Dense(m) => {
+            for i in 0..m.rows() {
+                for (j, &v) in m.row(i).iter().enumerate() {
+                    min[j] = min[j].min(v);
+                    max[j] = max[j].max(v);
+                }
+            }
+        }
+        Points::Sparse(s) => {
+            let mut count = vec![0usize; dim];
+            for i in 0..s.rows() {
+                let (ci, vi) = s.row(i);
+                for (&c, &v) in ci.iter().zip(vi.iter()) {
+                    min[c] = min[c].min(v);
+                    max[c] = max[c].max(v);
+                    count[c] += 1;
+                }
+            }
+            for j in 0..dim {
+                if count[j] < s.rows() {
+                    // at least one implicit zero participates
+                    min[j] = min[j].min(0.0);
+                    max[j] = max[j].max(0.0);
+                }
+            }
+        }
+    }
+    (min, max)
+}
+
 impl Scaler {
     /// Fit a min-max scaler mapping each feature to [lo, hi].
     pub fn fit_minmax(ds: &Dataset, lo: f64, hi: f64) -> Scaler {
         let dim = ds.dim();
-        let mut min = vec![f64::INFINITY; dim];
-        let mut max = vec![f64::NEG_INFINITY; dim];
-        for i in 0..ds.len() {
-            for (j, &v) in ds.point(i).iter().enumerate() {
-                min[j] = min[j].min(v);
-                max[j] = max[j].max(v);
-            }
-        }
+        let (min, max) = minmax(&ds.x);
         let mut shift = vec![0.0; dim];
         let mut factor = vec![1.0; dim];
         for j in 0..dim {
             if max[j] > min[j] {
                 shift[j] = min[j] - lo * (max[j] - min[j]) / (hi - lo);
                 factor[j] = (hi - lo) / (max[j] - min[j]);
-            } else {
+            } else if min[j].is_finite() {
                 // constant feature → map to lo
                 shift[j] = min[j] - lo;
                 factor[j] = 1.0;
             }
+            // else: feature never observed (empty dataset) → identity
         }
         Scaler { shift, factor }
     }
 
-    /// Fit a z-score scaler (mean 0, std 1).
+    /// Fit a z-score scaler (mean 0, std 1). Implicit zeros of sparse
+    /// data count toward the mean and variance.
     pub fn fit_standard(ds: &Dataset) -> Scaler {
         let dim = ds.dim();
         let n = ds.len().max(1) as f64;
         let mut mean = vec![0.0; dim];
-        for i in 0..ds.len() {
-            for (j, &v) in ds.point(i).iter().enumerate() {
-                mean[j] += v;
-            }
-        }
-        for m in &mut mean {
-            *m /= n;
-        }
         let mut var = vec![0.0; dim];
-        for i in 0..ds.len() {
-            for (j, &v) in ds.point(i).iter().enumerate() {
-                let d = v - mean[j];
-                var[j] += d * d;
+        match &ds.x {
+            Points::Dense(m) => {
+                for i in 0..m.rows() {
+                    for (j, &v) in m.row(i).iter().enumerate() {
+                        mean[j] += v;
+                    }
+                }
+                for mj in &mut mean {
+                    *mj /= n;
+                }
+                for i in 0..m.rows() {
+                    for (j, &v) in m.row(i).iter().enumerate() {
+                        let d = v - mean[j];
+                        var[j] += d * d;
+                    }
+                }
+            }
+            Points::Sparse(s) => {
+                let mut count = vec![0usize; dim];
+                for i in 0..s.rows() {
+                    let (ci, vi) = s.row(i);
+                    for (&c, &v) in ci.iter().zip(vi.iter()) {
+                        mean[c] += v;
+                        count[c] += 1;
+                    }
+                }
+                for mj in &mut mean {
+                    *mj /= n;
+                }
+                for i in 0..s.rows() {
+                    let (ci, vi) = s.row(i);
+                    for (&c, &v) in ci.iter().zip(vi.iter()) {
+                        let d = v - mean[c];
+                        var[c] += d * d;
+                    }
+                }
+                // implicit zeros: (n − nnz_col) copies of (0 − mean)²
+                for j in 0..dim {
+                    let zeros = ds.len() - count[j];
+                    var[j] += zeros as f64 * mean[j] * mean[j];
+                }
             }
         }
         let factor = var
@@ -73,13 +144,26 @@ impl Scaler {
         Scaler { shift: mean, factor }
     }
 
-    /// Apply in place.
+    /// Apply in place. Sparse rows scale their stored entries only
+    /// (implicit zeros stay zero — the `svm-scale` convention).
     pub fn apply(&self, ds: &mut Dataset) {
         assert_eq!(ds.dim(), self.shift.len(), "scaler dimension mismatch");
-        for i in 0..ds.len() {
-            let row = ds.x.row_mut(i);
-            for (j, v) in row.iter_mut().enumerate() {
-                *v = (*v - self.shift[j]) * self.factor[j];
+        match &mut ds.x {
+            Points::Dense(m) => {
+                for i in 0..m.rows() {
+                    let row = m.row_mut(i);
+                    for (j, v) in row.iter_mut().enumerate() {
+                        *v = (*v - self.shift[j]) * self.factor[j];
+                    }
+                }
+            }
+            Points::Sparse(s) => {
+                for i in 0..s.rows() {
+                    let (cols, vals) = s.row_mut(i);
+                    for (v, &c) in vals.iter_mut().zip(cols.iter()) {
+                        *v = (*v - self.shift[c]) * self.factor[c];
+                    }
+                }
             }
         }
     }
@@ -95,6 +179,7 @@ pub fn scale_pair(train: &mut Dataset, test: &mut Dataset) {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::data::sparse::CsrMat;
     use crate::linalg::Mat;
 
     fn ds(vals: Vec<f64>, rows: usize, cols: usize) -> Dataset {
@@ -122,7 +207,7 @@ mod tests {
         let sc = Scaler::fit_minmax(&d, 0.0, 1.0);
         sc.apply(&mut d);
         assert!((d.x[(0, 0)] - 0.0).abs() < 1e-12);
-        assert!(d.x.data().iter().all(|v| v.is_finite()));
+        assert!(d.x.dense().data().iter().all(|v| v.is_finite()));
     }
 
     #[test]
@@ -148,5 +233,72 @@ mod tests {
         scale_pair(&mut tr, &mut te);
         // test point outside train range maps beyond 1
         assert!((te.x[(0, 0)] - 3.0).abs() < 1e-12);
+    }
+
+    fn sparse_ds() -> Dataset {
+        // col 0: {4, _, 2} (has implicit zero) → min 0, max 4
+        // col 1: {2, -2, 6} (fully stored)     → min −2, max 6
+        // col 2: never stored                  → constant 0
+        let x = CsrMat::from_rows(
+            3,
+            &[vec![(0, 4.0), (1, 2.0)], vec![(1, -2.0)], vec![(0, 2.0), (1, 6.0)]],
+        );
+        Dataset::new("sp", x, vec![1.0, -1.0, 1.0])
+    }
+
+    #[test]
+    fn sparse_minmax_counts_implicit_zeros_and_keeps_sparsity() {
+        let mut d = sparse_ds();
+        let sc = Scaler::fit_minmax(&d, 0.0, 1.0);
+        sc.apply(&mut d);
+        assert!(d.is_sparse());
+        // col 0 range [0,4]: stored 4→1.0, 2→0.5; implicit zero stays 0
+        assert!((d.x.get(0, 0) - 1.0).abs() < 1e-12);
+        assert!((d.x.get(2, 0) - 0.5).abs() < 1e-12);
+        assert_eq!(d.x.get(1, 0), 0.0);
+        // col 1 range [−2,6]: 2→0.5, −2→0, 6→1
+        assert!((d.x.get(0, 1) - 0.5).abs() < 1e-12);
+        assert!(d.x.get(1, 1).abs() < 1e-12);
+        assert!((d.x.get(2, 1) - 1.0).abs() < 1e-12);
+        // never-stored column untouched
+        assert_eq!(d.x.get(0, 2), 0.0);
+        // representation and structure preserved
+        assert_eq!(d.x.nnz(), 5);
+    }
+
+    #[test]
+    fn sparse_fit_matches_dense_fit_on_same_data() {
+        // when every implicit zero is also the column min/max candidate,
+        // sparse and dense fits agree on the stored entries
+        let sp = sparse_ds();
+        let dense = Dataset::new("dn", sp.x.to_dense(), sp.y.clone());
+        let mut a = sp.clone();
+        let mut b = dense.clone();
+        Scaler::fit_minmax(&sp, -1.0, 1.0).apply(&mut a);
+        Scaler::fit_minmax(&dense, -1.0, 1.0).apply(&mut b);
+        // stored entries transform identically (zeros differ by design:
+        // dense shifts them, svm-scale leaves them)
+        for (i, j) in [(0usize, 0usize), (0, 1), (1, 1), (2, 0), (2, 1)] {
+            assert!(
+                (a.x.get(i, j) - b.x.get(i, j)).abs() < 1e-12,
+                "entry ({i},{j}): sparse {} vs dense {}",
+                a.x.get(i, j),
+                b.x.get(i, j)
+            );
+        }
+    }
+
+    #[test]
+    fn sparse_standard_scaler_accounts_for_zeros() {
+        let mut d = sparse_ds();
+        let sc = Scaler::fit_standard(&d);
+        sc.apply(&mut d);
+        // col 1 is fully stored: mean/var must match the dense formula →
+        // scaled entries have zero mean, unit variance
+        let col: Vec<f64> = (0..3).map(|i| d.x.get(i, 1)).collect();
+        let mean: f64 = col.iter().sum::<f64>() / 3.0;
+        let var: f64 = col.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / 3.0;
+        assert!(mean.abs() < 1e-12, "mean {mean}");
+        assert!((var - 1.0).abs() < 1e-12, "var {var}");
     }
 }

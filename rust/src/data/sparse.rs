@@ -1,0 +1,674 @@
+//! Sparse feature storage: CSR matrix + the dense-or-sparse [`Points`]
+//! container the whole data plane is generic over.
+//!
+//! The paper's Table-1 benchmarks (a8a, w7a, rcv1.binary, webspam.uni)
+//! ship as sparse LIBSVM files; rcv1.binary alone is 20k × 47,236 with
+//! ~0.16% density, so densifying on load costs ~7.6 GB before training
+//! even starts. [`CsrMat`] stores exactly the nonzeros (row pointers /
+//! column indices / values, indices strictly ascending per row) and
+//! [`Points`] lets every consumer — kernel blocks, cluster splits, ANN
+//! distances, scaling, prediction tiles — run on either representation.
+//! The dense arm of every operation delegates to the exact same
+//! slice-level code paths the data plane used before `Points` existed,
+//! so dense results are bit-for-bit unchanged.
+
+use crate::linalg::blas;
+use crate::linalg::Mat;
+
+/// Compressed sparse row matrix (f64 values, strictly ascending column
+/// indices within each row).
+#[derive(Clone, PartialEq)]
+pub struct CsrMat {
+    rows: usize,
+    cols: usize,
+    /// Row pointers, length `rows + 1`; row i's entries live in
+    /// `indices[indptr[i]..indptr[i+1]]` / `vals[..]`.
+    indptr: Vec<usize>,
+    indices: Vec<usize>,
+    vals: Vec<f64>,
+}
+
+impl CsrMat {
+    /// Build from raw CSR arrays (validated).
+    pub fn new(
+        rows: usize,
+        cols: usize,
+        indptr: Vec<usize>,
+        indices: Vec<usize>,
+        vals: Vec<f64>,
+    ) -> CsrMat {
+        assert_eq!(indptr.len(), rows + 1, "indptr length mismatch");
+        assert_eq!(indptr[0], 0, "indptr must start at 0");
+        assert_eq!(*indptr.last().unwrap(), indices.len(), "indptr/indices mismatch");
+        assert_eq!(indices.len(), vals.len(), "indices/vals length mismatch");
+        for i in 0..rows {
+            assert!(indptr[i] <= indptr[i + 1], "indptr must be monotone");
+            let r = &indices[indptr[i]..indptr[i + 1]];
+            for w in r.windows(2) {
+                assert!(w[0] < w[1], "row {i}: column indices must be strictly ascending");
+            }
+            if let Some(&last) = r.last() {
+                assert!(last < cols, "row {i}: column index {last} out of range {cols}");
+            }
+        }
+        CsrMat { rows, cols, indptr, indices, vals }
+    }
+
+    /// Build from per-row (column, value) lists (each strictly ascending).
+    pub fn from_rows(cols: usize, rows: &[Vec<(usize, f64)>]) -> CsrMat {
+        let nnz = rows.iter().map(Vec::len).sum();
+        let mut indptr = Vec::with_capacity(rows.len() + 1);
+        let mut indices = Vec::with_capacity(nnz);
+        let mut vals = Vec::with_capacity(nnz);
+        indptr.push(0);
+        for r in rows {
+            for &(c, v) in r {
+                indices.push(c);
+                vals.push(v);
+            }
+            indptr.push(indices.len());
+        }
+        CsrMat::new(rows.len(), cols, indptr, indices, vals)
+    }
+
+    /// Convert a dense matrix, dropping exact zeros.
+    pub fn from_dense(m: &Mat) -> CsrMat {
+        let mut indptr = Vec::with_capacity(m.rows() + 1);
+        let mut indices = Vec::new();
+        let mut vals = Vec::new();
+        indptr.push(0);
+        for i in 0..m.rows() {
+            for (j, &v) in m.row(i).iter().enumerate() {
+                if v != 0.0 {
+                    indices.push(j);
+                    vals.push(v);
+                }
+            }
+            indptr.push(indices.len());
+        }
+        CsrMat { rows: m.rows(), cols: m.cols(), indptr, indices, vals }
+    }
+
+    /// Materialize as a dense matrix.
+    pub fn to_dense(&self) -> Mat {
+        let mut m = Mat::zeros(self.rows, self.cols);
+        for i in 0..self.rows {
+            let (ci, vi) = self.row(i);
+            let r = m.row_mut(i);
+            for (&c, &v) in ci.iter().zip(vi.iter()) {
+                r[c] = v;
+            }
+        }
+        m
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Stored entries.
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// (column indices, values) of row i.
+    #[inline]
+    pub fn row(&self, i: usize) -> (&[usize], &[f64]) {
+        debug_assert!(i < self.rows);
+        let (lo, hi) = (self.indptr[i], self.indptr[i + 1]);
+        (&self.indices[lo..hi], &self.vals[lo..hi])
+    }
+
+    /// Row i with mutable values (indices stay fixed — used by scaling).
+    /// The two slices borrow disjoint fields, so no copying is needed.
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> (&[usize], &mut [f64]) {
+        debug_assert!(i < self.rows);
+        let (lo, hi) = (self.indptr[i], self.indptr[i + 1]);
+        (&self.indices[lo..hi], &mut self.vals[lo..hi])
+    }
+
+    /// Entry (i, j), implicit zeros included.
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        let (ci, vi) = self.row(i);
+        match ci.binary_search(&j) {
+            Ok(k) => vi[k],
+            Err(_) => 0.0,
+        }
+    }
+
+    /// Copy of the rows selected by `idx` (in that order).
+    pub fn select_rows(&self, idx: &[usize]) -> CsrMat {
+        let nnz: usize = idx.iter().map(|&i| self.indptr[i + 1] - self.indptr[i]).sum();
+        let mut indptr = Vec::with_capacity(idx.len() + 1);
+        let mut indices = Vec::with_capacity(nnz);
+        let mut vals = Vec::with_capacity(nnz);
+        indptr.push(0);
+        for &i in idx {
+            let (ci, vi) = self.row(i);
+            indices.extend_from_slice(ci);
+            vals.extend_from_slice(vi);
+            indptr.push(indices.len());
+        }
+        CsrMat { rows: idx.len(), cols: self.cols, indptr, indices, vals }
+    }
+
+    /// Squared norms of all rows.
+    pub fn self_norms(&self) -> Vec<f64> {
+        (0..self.rows)
+            .map(|i| {
+                let (_, v) = self.row(i);
+                v.iter().map(|x| x * x).sum()
+            })
+            .collect()
+    }
+
+    /// Heap bytes held (values + indices + row pointers).
+    pub fn bytes(&self) -> usize {
+        self.vals.len() * std::mem::size_of::<f64>()
+            + self.indices.len() * std::mem::size_of::<usize>()
+            + self.indptr.len() * std::mem::size_of::<usize>()
+    }
+}
+
+impl std::fmt::Debug for CsrMat {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "CsrMat {}x{} ({} nnz, {:.3}% dense)",
+            self.rows,
+            self.cols,
+            self.nnz(),
+            100.0 * self.nnz() as f64 / (self.rows.max(1) * self.cols.max(1)) as f64
+        )
+    }
+}
+
+/// Merge-join dot product of two sparse rows (ascending indices).
+fn dot_ss(ai: &[usize], av: &[f64], bi: &[usize], bv: &[f64]) -> f64 {
+    let (mut p, mut q) = (0usize, 0usize);
+    let mut acc = 0.0;
+    while p < ai.len() && q < bi.len() {
+        match ai[p].cmp(&bi[q]) {
+            std::cmp::Ordering::Less => p += 1,
+            std::cmp::Ordering::Greater => q += 1,
+            std::cmp::Ordering::Equal => {
+                acc += av[p] * bv[q];
+                p += 1;
+                q += 1;
+            }
+        }
+    }
+    acc
+}
+
+/// Dot of a sparse row with a dense vector.
+#[inline]
+fn dot_sd(ci: &[usize], vi: &[f64], dense: &[f64]) -> f64 {
+    let mut acc = 0.0;
+    for (&c, &v) in ci.iter().zip(vi.iter()) {
+        acc += v * dense[c];
+    }
+    acc
+}
+
+/// Exact squared distance between a sparse row and a dense vector
+/// (walks the full dense vector, O(dim)).
+fn dist2_sd(ci: &[usize], vi: &[f64], dense: &[f64]) -> f64 {
+    let mut acc = 0.0;
+    let mut p = 0usize;
+    for (j, &b) in dense.iter().enumerate() {
+        let a = if p < ci.len() && ci[p] == j {
+            let v = vi[p];
+            p += 1;
+            v
+        } else {
+            0.0
+        };
+        let d = a - b;
+        acc += d * d;
+    }
+    acc
+}
+
+/// Exact squared distance between two sparse rows (merge over the union
+/// of their index sets, O(nnz_a + nnz_b)).
+fn dist2_ss(ai: &[usize], av: &[f64], bi: &[usize], bv: &[f64]) -> f64 {
+    let (mut p, mut q) = (0usize, 0usize);
+    let mut acc = 0.0;
+    while p < ai.len() || q < bi.len() {
+        let d = if q >= bi.len() || (p < ai.len() && ai[p] < bi[q]) {
+            let v = av[p];
+            p += 1;
+            v
+        } else if p >= ai.len() || bi[q] < ai[p] {
+            let v = -bv[q];
+            q += 1;
+            v
+        } else {
+            let v = av[p] - bv[q];
+            p += 1;
+            q += 1;
+            v
+        };
+        acc += d * d;
+    }
+    acc
+}
+
+/// Feature rows in either dense or CSR representation.
+///
+/// Every accessor's `Dense` arm runs the identical slice-level code the
+/// pre-`Points` data plane ran (same `blas` calls, same loop order), so
+/// introducing the enum changes no dense result bit.
+#[derive(Clone, PartialEq)]
+pub enum Points {
+    Dense(Mat),
+    Sparse(CsrMat),
+}
+
+impl From<Mat> for Points {
+    fn from(m: Mat) -> Points {
+        Points::Dense(m)
+    }
+}
+
+impl From<CsrMat> for Points {
+    fn from(m: CsrMat) -> Points {
+        Points::Sparse(m)
+    }
+}
+
+static ZERO: f64 = 0.0;
+
+impl Points {
+    #[inline]
+    pub fn rows(&self) -> usize {
+        match self {
+            Points::Dense(m) => m.rows(),
+            Points::Sparse(m) => m.rows(),
+        }
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        match self {
+            Points::Dense(m) => m.cols(),
+            Points::Sparse(m) => m.cols(),
+        }
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.rows() == 0
+    }
+
+    #[inline]
+    pub fn is_sparse(&self) -> bool {
+        matches!(self, Points::Sparse(_))
+    }
+
+    /// Stored entries (dense counts every slot).
+    pub fn nnz(&self) -> usize {
+        match self {
+            Points::Dense(m) => m.rows() * m.cols(),
+            Points::Sparse(m) => m.nnz(),
+        }
+    }
+
+    /// Heap bytes held by the representation.
+    pub fn bytes(&self) -> usize {
+        match self {
+            Points::Dense(m) => m.bytes(),
+            Points::Sparse(m) => m.bytes(),
+        }
+    }
+
+    /// Borrow the dense matrix; panics on sparse points. Reserved for
+    /// the few dense-only numeric paths (PJRT tiles, dense baselines) —
+    /// everything on the serve/train path must use the sparse-aware ops.
+    pub fn dense(&self) -> &Mat {
+        match self {
+            Points::Dense(m) => m,
+            Points::Sparse(m) => panic!(
+                "dense-only path reached sparse points ({m:?}); use the Points/kernel sparse ops"
+            ),
+        }
+    }
+
+    /// Dense row slice; panics on sparse points (see [`Points::dense`]).
+    pub fn dense_row(&self, i: usize) -> &[f64] {
+        self.dense().row(i)
+    }
+
+    /// Materialize a dense copy (cheap move for `Dense`).
+    pub fn into_dense(self) -> Mat {
+        match self {
+            Points::Dense(m) => m,
+            Points::Sparse(m) => m.to_dense(),
+        }
+    }
+
+    /// Dense copy without consuming.
+    pub fn to_dense(&self) -> Mat {
+        match self {
+            Points::Dense(m) => m.clone(),
+            Points::Sparse(m) => m.to_dense(),
+        }
+    }
+
+    /// Entry (i, j), implicit zeros included.
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        match self {
+            Points::Dense(m) => m[(i, j)],
+            Points::Sparse(m) => m.get(i, j),
+        }
+    }
+
+    /// Copy of the rows selected by `idx`, keeping the representation.
+    pub fn select_rows(&self, idx: &[usize]) -> Points {
+        match self {
+            Points::Dense(m) => Points::Dense(m.select_rows(idx)),
+            Points::Sparse(m) => Points::Sparse(m.select_rows(idx)),
+        }
+    }
+
+    /// Squared norms of all rows (the ‖x‖² terms of the kernel-block
+    /// expansion).
+    pub fn self_norms(&self) -> Vec<f64> {
+        match self {
+            Points::Dense(m) => (0..m.rows()).map(|i| blas::dot(m.row(i), m.row(i))).collect(),
+            Points::Sparse(m) => m.self_norms(),
+        }
+    }
+
+    /// Inner product of row `i` of `self` with row `j` of `other`
+    /// (any representation pairing).
+    pub fn dot_row(&self, i: usize, other: &Points, j: usize) -> f64 {
+        debug_assert_eq!(self.cols(), other.cols(), "feature dimension mismatch");
+        match (self, other) {
+            (Points::Dense(a), Points::Dense(b)) => blas::dot(a.row(i), b.row(j)),
+            (Points::Sparse(a), Points::Dense(b)) => {
+                let (ci, vi) = a.row(i);
+                dot_sd(ci, vi, b.row(j))
+            }
+            (Points::Dense(a), Points::Sparse(b)) => {
+                let (cj, vj) = b.row(j);
+                dot_sd(cj, vj, a.row(i))
+            }
+            (Points::Sparse(a), Points::Sparse(b)) => {
+                let (ci, vi) = a.row(i);
+                let (cj, vj) = b.row(j);
+                dot_ss(ci, vi, cj, vj)
+            }
+        }
+    }
+
+    /// Inner product of row `i` with a dense vector.
+    #[inline]
+    pub fn dot_dense_vec(&self, i: usize, v: &[f64]) -> f64 {
+        match self {
+            Points::Dense(m) => blas::dot(m.row(i), v),
+            Points::Sparse(m) => {
+                let (ci, vi) = m.row(i);
+                dot_sd(ci, vi, v)
+            }
+        }
+    }
+
+    /// Exact squared distance between row `i` of `self` and row `j` of
+    /// `other`.
+    pub fn dist2_rows(&self, i: usize, other: &Points, j: usize) -> f64 {
+        debug_assert_eq!(self.cols(), other.cols(), "feature dimension mismatch");
+        match (self, other) {
+            (Points::Dense(a), Points::Dense(b)) => blas::dist2(a.row(i), b.row(j)),
+            (Points::Sparse(a), Points::Dense(b)) => {
+                let (ci, vi) = a.row(i);
+                dist2_sd(ci, vi, b.row(j))
+            }
+            (Points::Dense(a), Points::Sparse(b)) => {
+                let (cj, vj) = b.row(j);
+                dist2_sd(cj, vj, a.row(i))
+            }
+            (Points::Sparse(a), Points::Sparse(b)) => {
+                let (ci, vi) = a.row(i);
+                let (cj, vj) = b.row(j);
+                dist2_ss(ci, vi, cj, vj)
+            }
+        }
+    }
+
+    /// Exact squared distance between row `i` and a dense vector.
+    #[inline]
+    pub fn dist2_dense_vec(&self, i: usize, v: &[f64]) -> f64 {
+        match self {
+            Points::Dense(m) => blas::dist2(m.row(i), v),
+            Points::Sparse(m) => {
+                let (ci, vi) = m.row(i);
+                dist2_sd(ci, vi, v)
+            }
+        }
+    }
+
+    /// acc += a · row(i) (dense accumulator — centroid/mean sweeps).
+    #[inline]
+    pub fn add_row_scaled(&self, i: usize, a: f64, acc: &mut [f64]) {
+        match self {
+            Points::Dense(m) => blas::axpy(a, m.row(i), acc),
+            Points::Sparse(m) => {
+                let (ci, vi) = m.row(i);
+                for (&c, &v) in ci.iter().zip(vi.iter()) {
+                    acc[c] += a * v;
+                }
+            }
+        }
+    }
+
+    /// Inner product of row `i` with a dense slice, written into `out`
+    /// for every row of `other`: out[j] = ⟨self[i], other[j]⟩.
+    pub fn row_dots(&self, i: usize, other: &Points, out: &mut [f64]) {
+        debug_assert_eq!(other.rows(), out.len());
+        match (self, other) {
+            // dense×dense: same per-pair blas::dot the old kernel_row used
+            (Points::Dense(a), Points::Dense(b)) => {
+                let xi = a.row(i);
+                for (j, o) in out.iter_mut().enumerate() {
+                    *o = blas::dot(xi, b.row(j));
+                }
+            }
+            (Points::Sparse(a), Points::Dense(b)) => {
+                let (ci, vi) = a.row(i);
+                for (j, o) in out.iter_mut().enumerate() {
+                    *o = dot_sd(ci, vi, b.row(j));
+                }
+            }
+            (Points::Dense(a), Points::Sparse(b)) => {
+                let xi = a.row(i);
+                for (j, o) in out.iter_mut().enumerate() {
+                    let (cj, vj) = b.row(j);
+                    *o = dot_sd(cj, vj, xi);
+                }
+            }
+            (Points::Sparse(a), Points::Sparse(b)) => {
+                let (ci, vi) = a.row(i);
+                for (j, o) in out.iter_mut().enumerate() {
+                    let (cj, vj) = b.row(j);
+                    *o = dot_ss(ci, vi, cj, vj);
+                }
+            }
+        }
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Points {
+    type Output = f64;
+
+    /// Read-only entry access; sparse implicit zeros yield `&0.0`.
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        match self {
+            Points::Dense(m) => &m[(i, j)],
+            Points::Sparse(m) => {
+                let (ci, vi) = m.row(i);
+                match ci.binary_search(&j) {
+                    Ok(k) => &vi[k],
+                    Err(_) => &ZERO,
+                }
+            }
+        }
+    }
+}
+
+impl std::fmt::Debug for Points {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Points::Dense(m) => write!(f, "Points::Dense({}x{})", m.rows(), m.cols()),
+            Points::Sparse(m) => write!(f, "Points::Sparse({m:?})"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+    use crate::util::testkit;
+    use crate::util::testkit::random_csr;
+
+    #[test]
+    fn dense_roundtrip_preserves_entries() {
+        let mut rng = Rng::new(901);
+        let s = random_csr(17, 9, 0.3, &mut rng);
+        let d = s.to_dense();
+        assert_eq!(CsrMat::from_dense(&d), s);
+        for i in 0..17 {
+            for j in 0..9 {
+                assert_eq!(s.get(i, j), d[(i, j)]);
+            }
+        }
+    }
+
+    #[test]
+    fn row_ops_match_dense_oracle() {
+        let mut rng = Rng::new(902);
+        for _case in 0..20 {
+            let cols = 1 + rng.below(24);
+            let a = random_csr(6, cols, 0.4, &mut rng);
+            let b = random_csr(5, cols, 0.2, &mut rng);
+            let ad = Points::Dense(a.to_dense());
+            let bd = Points::Dense(b.to_dense());
+            let asp = Points::Sparse(a);
+            let bsp = Points::Sparse(b);
+            let v: Vec<f64> = (0..cols).map(|_| rng.gauss()).collect();
+            for i in 0..6 {
+                testkit::assert_close(
+                    asp.dot_dense_vec(i, &v),
+                    ad.dot_dense_vec(i, &v),
+                    1e-12,
+                );
+                testkit::assert_close(
+                    asp.dist2_dense_vec(i, &v),
+                    ad.dist2_dense_vec(i, &v),
+                    1e-12,
+                );
+                for j in 0..5 {
+                    testkit::assert_close(
+                        asp.dot_row(i, &bsp, j),
+                        ad.dot_row(i, &bd, j),
+                        1e-12,
+                    );
+                    testkit::assert_close(
+                        asp.dot_row(i, &bd, j),
+                        ad.dot_row(i, &bsp, j),
+                        1e-12,
+                    );
+                    testkit::assert_close(
+                        asp.dist2_rows(i, &bsp, j),
+                        ad.dist2_rows(i, &bd, j),
+                        1e-12,
+                    );
+                    testkit::assert_close(
+                        asp.dist2_rows(i, &bd, j),
+                        ad.dist2_rows(i, &bsp, j),
+                        1e-12,
+                    );
+                }
+            }
+            let ns = asp.self_norms();
+            let nd = ad.self_norms();
+            testkit::assert_allclose(&ns, &nd, 1e-12);
+        }
+    }
+
+    #[test]
+    fn empty_rows_and_all_zero_columns() {
+        // row 1 empty; column 2 never referenced
+        let s = CsrMat::from_rows(
+            4,
+            &[vec![(0, 1.0), (3, -2.0)], vec![], vec![(1, 0.5)], vec![(3, 4.0)]],
+        );
+        assert_eq!(s.nnz(), 4);
+        let p = Points::Sparse(s);
+        assert_eq!(p.self_norms(), vec![5.0, 0.0, 0.25, 16.0]);
+        assert_eq!(p.dot_row(1, &p, 0), 0.0);
+        assert_eq!(p.dist2_rows(1, &p, 2), 0.25);
+        assert_eq!(p.get(0, 2), 0.0);
+        assert_eq!(p[(1, 3)], 0.0);
+        assert_eq!(p[(0, 3)], -2.0);
+    }
+
+    #[test]
+    fn select_rows_keeps_representation() {
+        let mut rng = Rng::new(903);
+        let s = random_csr(10, 6, 0.3, &mut rng);
+        let d = s.to_dense();
+        let idx = [7usize, 0, 7, 3];
+        let ss = Points::Sparse(s).select_rows(&idx);
+        let ds = Points::Dense(d).select_rows(&idx);
+        assert!(ss.is_sparse() && !ds.is_sparse());
+        assert_eq!(ss.to_dense(), ds.to_dense());
+    }
+
+    #[test]
+    fn add_row_scaled_accumulates() {
+        let s = CsrMat::from_rows(3, &[vec![(0, 2.0), (2, 3.0)]]);
+        let p = Points::Sparse(s);
+        let mut acc = vec![1.0, 1.0, 1.0];
+        p.add_row_scaled(0, 0.5, &mut acc);
+        assert_eq!(acc, vec![2.0, 1.0, 2.5]);
+    }
+
+    #[test]
+    fn row_dots_matches_pairwise() {
+        let mut rng = Rng::new(904);
+        let a = random_csr(4, 12, 0.35, &mut rng);
+        let b = random_csr(7, 12, 0.35, &mut rng);
+        let (ap, bp) = (Points::Sparse(a), Points::Sparse(b));
+        let mut out = vec![0.0; 7];
+        for i in 0..4 {
+            ap.row_dots(i, &bp, &mut out);
+            for j in 0..7 {
+                testkit::assert_close(out[j], ap.dot_row(i, &bp, j), 1e-14);
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "strictly ascending")]
+    fn rejects_unsorted_indices() {
+        CsrMat::from_rows(4, &[vec![(2, 1.0), (1, 2.0)]]);
+    }
+
+    #[test]
+    #[should_panic(expected = "dense-only path")]
+    fn dense_accessor_panics_on_sparse() {
+        Points::Sparse(CsrMat::from_rows(2, &[vec![(0, 1.0)]])).dense();
+    }
+}

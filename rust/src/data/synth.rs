@@ -320,10 +320,10 @@ mod tests {
         let spec = table1_spec("ijcnn1").unwrap();
         let (a, _) = spec.generate(0.005, 42);
         let (b, _) = spec.generate(0.005, 42);
-        assert_eq!(a.x.data(), b.x.data());
+        assert_eq!(a.x, b.x);
         assert_eq!(a.y, b.y);
         let (c, _) = spec.generate(0.005, 43);
-        assert_ne!(a.x.data(), c.x.data());
+        assert_ne!(a.x, c.x);
     }
 
     #[test]

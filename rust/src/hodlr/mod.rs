@@ -90,7 +90,7 @@ impl Hodlr {
             if t.is_leaf() {
                 let rows: Vec<usize> = (t.begin..t.end).collect();
                 let pts = pds.x.select_rows(&rows);
-                node.d = Some(crate::kernel::kernel_block(kernel, &pts, &pts));
+                node.d = Some(crate::kernel::kernel_block_pts(kernel, &pts, &pts));
             } else {
                 // low-rank A(left, right): rows = left range, cols sampled
                 // from right range (plus an exact fallback for small blocks)
@@ -108,14 +108,14 @@ impl Hodlr {
                 };
                 let rpts = pds.x.select_rows(&rows);
                 let cpts = pds.x.select_rows(&cols);
-                let sample = crate::kernel::kernel_block(kernel, &rpts, &cpts);
+                let sample = crate::kernel::kernel_block_pts(kernel, &rpts, &cpts);
                 // row ID of the sample picks skeleton rows of the block
                 let (skel, u) =
                     cpqr::row_id(&sample, params.rel_tol, params.abs_tol, params.max_rank);
                 // V = A(right, skel_rows)ᵀ... i.e. vᵀ = A(skel, right)
                 let spts = pds.x.select_rows(&skel.iter().map(|&j| rows[j]).collect::<Vec<_>>());
                 let apts = pds.x.select_rows(&all_cols);
-                let vt = crate::kernel::kernel_block(kernel, &spts, &apts); // r × nr
+                let vt = crate::kernel::kernel_block_pts(kernel, &spts, &apts); // r × nr
                 node.u12 = Some(u);
                 node.v12 = Some(vt.transpose()); // nr × r
             }

@@ -161,7 +161,7 @@ fn compress_node(ctx: CompressCtx<'_>) -> HssNode {
         let rows: Vec<usize> = (t.begin..t.end).collect();
         let pts = pds.x.select_rows(&rows);
         kernel_evals.fetch_add(rows.len() * rows.len(), Ordering::Relaxed);
-        let d = crate::kernel::kernel_block(kernel, &pts, &pts);
+        let d = crate::kernel::kernel_block_pts(kernel, &pts, &pts);
         (rows, Some(d), None)
     } else {
         // SAFETY: children were built in a deeper level; no task writes
@@ -174,7 +174,7 @@ fn compress_node(ctx: CompressCtx<'_>) -> HssNode {
         let lp = pds.x.select_rows(&l.skel);
         let rp = pds.x.select_rows(&r.skel);
         kernel_evals.fetch_add(l.skel.len() * r.skel.len(), Ordering::Relaxed);
-        let b = crate::kernel::kernel_block(kernel, &lp, &rp);
+        let b = crate::kernel::kernel_block_pts(kernel, &lp, &rp);
         (rows, None, Some(b))
     };
 
@@ -244,7 +244,7 @@ fn compress_node(ctx: CompressCtx<'_>) -> HssNode {
     let (skel_local, u) = loop {
         let col_pts = pds.x.select_rows(&cols);
         kernel_evals.fetch_add(row_pos.len() * cols.len(), Ordering::Relaxed);
-        let sample = crate::kernel::kernel_block(kernel, &row_pts, &col_pts);
+        let sample = crate::kernel::kernel_block_pts(kernel, &row_pts, &col_pts);
         let (j, x) = cpqr::row_id(&sample, params.rel_tol, params.abs_tol, params.max_rank);
         let saturated = j.len() == cols.len().min(row_pos.len()) && j.len() < params.max_rank;
         if saturated && cols.len() < complement && round < 3 {

@@ -164,13 +164,13 @@ pub fn rel_error_probes(
         let x: Vec<f64> = (0..n).map(|_| rng.gauss()).collect();
         let approx = matvec(h, &x);
         let mut exact = vec![0.0; n];
-        let ny = crate::kernel::self_norms(&pds.x);
+        let ny = pds.x.self_norms();
         let mut i0 = 0;
         while i0 < n {
             let ib = block.min(n - i0);
             let rows: Vec<usize> = (i0..i0 + ib).collect();
             let xb = pds.x.select_rows(&rows);
-            let kb = crate::kernel::block::kernel_block_with_norms(
+            let kb = crate::kernel::block::kernel_block_pts_with_norms(
                 kernel,
                 &xb,
                 &ny[i0..i0 + ib],

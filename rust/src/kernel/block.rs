@@ -1,17 +1,24 @@
-//! Dense kernel block evaluation K(X_I, Y_J).
+//! Kernel block evaluation K(X_I, Y_J) over dense or CSR rows.
 //!
-//! Uses the ‖x‖² + ‖y‖² − 2 xᵀy expansion: the xᵀy term is a gemm (the
-//! MXU-friendly structure the L1 Pallas kernel also uses), the rest is a
-//! rank-1 broadcast + elementwise exp. This native path is the fallback
-//! and correctness oracle for the PJRT-executed artifact in
+//! Uses the ‖x‖² + ‖y‖² − 2 xᵀy expansion: for dense operands the xᵀy
+//! term is a gemm (the MXU-friendly structure the L1 Pallas kernel also
+//! uses); for CSR operands it is a sparse×dense gather or sparse×sparse
+//! merge accumulation — exactly the term where sparsity pays, since the
+//! norm and exp parts are O(mn) regardless. This native path is the
+//! fallback and correctness oracle for the PJRT-executed artifact in
 //! [`crate::runtime`].
+//!
+//! The `*_pts` functions are the data-plane entry points: their
+//! dense×dense arms delegate to the original `Mat` implementations, so
+//! dense results are bit-for-bit unchanged by the sparse plumbing.
 
+use crate::data::sparse::Points;
 use crate::kernel::Kernel;
 use crate::linalg::blas::{self, Trans};
 use crate::linalg::Mat;
 use crate::util::threadpool;
 
-/// Squared norms of the rows of X.
+/// Squared norms of the rows of X (dense).
 pub fn self_norms(x: &Mat) -> Vec<f64> {
     (0..x.rows()).map(|i| blas::dot(x.row(i), x.row(i))).collect()
 }
@@ -66,7 +73,7 @@ fn finish_block(k: &Kernel, g: &mut Mat, nx: &[f64], ny: &[f64]) {
     }
 }
 
-/// Single kernel row K(x_i, Y) as a vector (SMO hot path).
+/// Single kernel row K(x_i, Y) as a vector (SMO hot path, dense).
 pub fn kernel_row(k: &Kernel, xi: &[f64], ni: f64, y: &Mat, ny: &[f64], out: &mut [f64]) {
     assert_eq!(y.rows(), out.len());
     for j in 0..y.rows() {
@@ -75,11 +82,118 @@ pub fn kernel_row(k: &Kernel, xi: &[f64], ni: f64, y: &Mat, ny: &[f64], out: &mu
     }
 }
 
+// ---------------------------------------------------------------------
+// Representation-generic ([`Points`]) entry points
+// ---------------------------------------------------------------------
+
+/// Squared norms of the rows of a [`Points`] container.
+pub fn self_norms_pts(x: &Points) -> Vec<f64> {
+    x.self_norms()
+}
+
+/// K(X, Y) over any dense/CSR operand pairing. Dense×dense delegates to
+/// the gemm path; any sparse operand routes the xᵀy term through
+/// sparse×dense / sparse×sparse row accumulation.
+pub fn kernel_block_pts(k: &Kernel, x: &Points, y: &Points) -> Mat {
+    assert_eq!(x.cols(), y.cols(), "feature dimension mismatch");
+    let nx = x.self_norms();
+    let ny = y.self_norms();
+    kernel_block_pts_with_norms(k, x, &nx, y, &ny)
+}
+
+/// [`kernel_block_pts`] with caller-provided squared row norms.
+pub fn kernel_block_pts_with_norms(
+    k: &Kernel,
+    x: &Points,
+    nx: &[f64],
+    y: &Points,
+    ny: &[f64],
+) -> Mat {
+    if let (Points::Dense(xm), Points::Dense(ym)) = (x, y) {
+        return kernel_block_with_norms(k, xm, nx, ym, ny);
+    }
+    let m = x.rows();
+    let n = y.rows();
+    assert_eq!(nx.len(), m);
+    assert_eq!(ny.len(), n);
+    let mut g = Mat::zeros(m, n);
+    for i in 0..m {
+        let row = g.row_mut(i);
+        x.row_dots(i, y, row);
+        let nxi = nx[i];
+        for (j, v) in row.iter_mut().enumerate() {
+            *v = k.eval_from_parts(nxi, ny[j], *v);
+        }
+    }
+    g
+}
+
+/// Parallel [`kernel_block_pts`], banding the rows of X across threads.
+pub fn kernel_block_pts_par(threads: usize, k: &Kernel, x: &Points, y: &Points) -> Mat {
+    if let (Points::Dense(xm), Points::Dense(ym)) = (x, y) {
+        return kernel_block_par(threads, k, xm, ym);
+    }
+    assert_eq!(x.cols(), y.cols(), "feature dimension mismatch");
+    let nx = x.self_norms();
+    let ny = y.self_norms();
+    let m = x.rows();
+    let n = y.rows();
+    let mut g = Mat::zeros(m, n);
+    {
+        let data = g.data_mut();
+        let cells = threadpool::as_send_cells(data);
+        threadpool::parallel_for(threads, m, 16, |i| {
+            // SAFETY: row bands are disjoint per index i.
+            let row = unsafe { std::slice::from_raw_parts_mut(cells.get(i * n), n) };
+            x.row_dots(i, y, row);
+            for (j, v) in row.iter_mut().enumerate() {
+                *v = k.eval_from_parts(nx[i], ny[j], *v);
+            }
+        });
+    }
+    g
+}
+
+/// Single kernel row K(x_i, Y) over any representation pairing
+/// (SMO hot path).
+pub fn kernel_row_pts(
+    k: &Kernel,
+    x: &Points,
+    i: usize,
+    ni: f64,
+    y: &Points,
+    ny: &[f64],
+    out: &mut [f64],
+) {
+    assert_eq!(y.rows(), out.len());
+    x.row_dots(i, y, out);
+    for (j, v) in out.iter_mut().enumerate() {
+        *v = k.eval_from_parts(ni, ny[j], *v);
+    }
+}
+
+/// K(x_i, t) for a single dense point `t` — the pointwise model
+/// evaluation ([`crate::svm::SvmModel::decision_one`]). The dense arm is
+/// the original `Kernel::eval` on slices; the sparse arm goes through
+/// the norm expansion.
+pub fn eval_one(k: &Kernel, x: &Points, i: usize, t: &[f64]) -> f64 {
+    match x {
+        Points::Dense(m) => k.eval(m.row(i), t),
+        Points::Sparse(_) => {
+            let ni = x.dot_row(i, x, i);
+            let nt = blas::dot(t, t);
+            let ab = x.dot_dense_vec(i, t);
+            k.eval_from_parts(ni, nt, ab)
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::util::prng::Rng;
     use crate::util::testkit;
+    use crate::util::testkit::random_csr;
 
     fn naive_block(k: &Kernel, x: &Mat, y: &Mat) -> Mat {
         Mat::from_fn(x.rows(), y.rows(), |i, j| k.eval(x.row(i), y.row(j)))
@@ -135,6 +249,65 @@ mod tests {
         let g = kernel_block(&Kernel::Gaussian { h: 2.0 }, &x, &x);
         for i in 0..12 {
             testkit::assert_close(g[(i, i)], 1.0, 1e-12);
+        }
+    }
+
+    #[test]
+    fn sparse_block_matches_dense_all_pairings() {
+        testkit::check("sparse-kernel-block", 8, |rng, _| {
+            let m = 1 + rng.below(20);
+            let n = 1 + rng.below(20);
+            let f = 2 + rng.below(40);
+            let xs = random_csr(m, f, 0.3, rng);
+            let ys = random_csr(n, f, 0.3, rng);
+            let xd = Points::Dense(xs.to_dense());
+            let yd = Points::Dense(ys.to_dense());
+            let xs = Points::Sparse(xs);
+            let ys = Points::Sparse(ys);
+            for k in [
+                Kernel::Gaussian { h: 0.8 },
+                Kernel::Polynomial { degree: 2, c: 1.0 },
+                Kernel::Linear,
+            ] {
+                let want = kernel_block_pts(&k, &xd, &yd);
+                for (a, b) in [(&xs, &ys), (&xs, &yd), (&xd, &ys)] {
+                    let got = kernel_block_pts(&k, a, b);
+                    testkit::assert_allclose(got.data(), want.data(), 1e-12);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn sparse_par_matches_serial() {
+        let mut rng = Rng::new(9);
+        let xs = random_csr(90, 50, 0.15, &mut rng);
+        let ys = random_csr(70, 50, 0.15, &mut rng);
+        let (x, y) = (Points::Sparse(xs), Points::Sparse(ys));
+        let k = Kernel::Gaussian { h: 1.1 };
+        let serial = kernel_block_pts(&k, &x, &y);
+        let par = kernel_block_pts_par(3, &k, &x, &y);
+        assert_eq!(serial, par, "sparse parallel block must be bitwise equal");
+    }
+
+    #[test]
+    fn sparse_kernel_row_and_eval_one_match_block() {
+        let mut rng = Rng::new(10);
+        let xs = random_csr(6, 25, 0.3, &mut rng);
+        let ys = random_csr(8, 25, 0.3, &mut rng);
+        let yd = ys.to_dense();
+        let (x, y) = (Points::Sparse(xs), Points::Sparse(ys));
+        let k = Kernel::Gaussian { h: 0.7 };
+        let block = kernel_block_pts(&k, &x, &y);
+        let ny = y.self_norms();
+        let nx = x.self_norms();
+        let mut row = vec![0.0; 8];
+        for i in 0..6 {
+            kernel_row_pts(&k, &x, i, nx[i], &y, &ny, &mut row);
+            testkit::assert_allclose(&row, block.row(i), 1e-12);
+            for j in 0..8 {
+                testkit::assert_close(eval_one(&k, &x, i, yd.row(j)), block[(i, j)], 1e-12);
+            }
         }
     }
 }

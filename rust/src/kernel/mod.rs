@@ -9,8 +9,12 @@
 
 pub mod block;
 
-pub use block::{kernel_block, kernel_block_par, kernel_row, self_norms};
+pub use block::{
+    eval_one, kernel_block, kernel_block_par, kernel_block_pts, kernel_block_pts_par,
+    kernel_block_pts_with_norms, kernel_row, kernel_row_pts, self_norms, self_norms_pts,
+};
 
+use crate::data::sparse::Points;
 use crate::linalg::Mat;
 
 /// A positive-definite kernel function.
@@ -62,8 +66,9 @@ impl Kernel {
     }
 
     /// Full dense kernel matrix K(X, X) — small problems / tests only.
-    pub fn gram(&self, x: &Mat) -> Mat {
-        kernel_block(self, x, x)
+    /// Accepts dense or CSR points; the result is always dense.
+    pub fn gram(&self, x: &Points) -> Mat {
+        kernel_block_pts(self, x, x)
     }
 
     /// Short id for reports ("rbf(h=1)" etc.).
@@ -131,7 +136,7 @@ mod tests {
     #[test]
     fn gram_psd_on_small_sample() {
         let mut rng = Rng::new(5);
-        let x = Mat::gauss(20, 3, &mut rng);
+        let x = Points::Dense(Mat::gauss(20, 3, &mut rng));
         let k = Kernel::Gaussian { h: 1.0 };
         let g = k.gram(&x);
         let eigs = crate::linalg::eig::sym_eig(&g).values;

@@ -20,5 +20,6 @@ pub mod hss;
 pub mod kernel;
 pub mod linalg;
 pub mod runtime;
+pub mod serve;
 pub mod svm;
 pub mod util;

@@ -16,6 +16,7 @@ use hss_svm::cluster::SplitMethod;
 use hss_svm::coordinator::{run_suite, GridSearch, SuiteConfig};
 use hss_svm::data::synth::Table1Spec;
 use hss_svm::data::{libsvm, scale, synth, Dataset};
+use hss_svm::data::libsvm::Repr;
 use hss_svm::eval::{figures, report, tables};
 use hss_svm::hss::HssParams;
 use hss_svm::kernel::Kernel;
@@ -66,11 +67,13 @@ USAGE:
                      [--beta F] [--iters N] [--hss low|high|exact]
                      [--threads N] [--pjrt]
   hss-svm train      --train-file f.libsvm --test-file g.libsvm [...same]
-                     [--save-model m.model]
+                     [--save-model m.model] [--sparse|--dense]
   hss-svm predict    --model m.model --test-file g.libsvm [--out pred.txt]
-                     [--pjrt]
+                     [--pjrt] [--sparse|--dense]
   hss-svm serve      --model m.model     # LIBSVM lines on stdin ->
-                                         # "<label> <decision>" per line
+                                         # "<label> <decision>" per line;
+                                         # labeled, 0-labeled and bare
+                                         # feature lines all accepted
   hss-svm grid       --dataset <name> [--scale F] [--h 0.1,1,10]
                      [--c 0.1,1,10] [--hss low|high] [--threads N]
   hss-svm experiment --id table1|table2|table3|table4|table5|fig1|fig2|reuse|all
@@ -81,6 +84,10 @@ USAGE:
 Datasets: synthetic workloads matched to the paper's Table 1
 (a8a w7a rcv1.binary a9a w8a ijcnn1 cod.rna skin.nonskin webspam.uni susy);
 --scale F generates F x the paper's sizes (default 0.01).
+
+LIBSVM files load without densifying: wide sparse data (dim >= 32,
+density <= 25%) stays in CSR form end-to-end (memory ~ nnz, not
+rows x dim); --sparse / --dense force the representation.
 "#;
 
 fn hss_params_from(args: &Args) -> Result<HssParams> {
@@ -103,12 +110,33 @@ fn hss_params_from(args: &Args) -> Result<HssParams> {
     Ok(p)
 }
 
+/// --sparse / --dense override the Auto representation choice.
+fn repr_from(args: &Args) -> Result<Repr> {
+    match (args.has("sparse"), args.has("dense")) {
+        (true, true) => bail!("--sparse and --dense are mutually exclusive"),
+        (true, false) => Ok(Repr::Sparse),
+        (false, true) => Ok(Repr::Dense),
+        (false, false) => Ok(Repr::Auto),
+    }
+}
+
 fn load_pair(args: &Args) -> Result<(Dataset, Dataset)> {
     if let Some(train_file) = args.str_opt("train-file") {
-        let mut train = libsvm::read_file(train_file, None)?;
+        let repr = repr_from(args)?;
+        let mut train = libsvm::read_file_with(train_file, None, repr)?;
         let dim = train.dim();
+        // the test file must land in the SAME representation as train:
+        // the scaler's zero handling differs per representation (dense
+        // shifts zeros, CSR keeps them — svm-scale convention), so an
+        // Auto split decision would put train and test in different
+        // feature spaces
+        let test_repr = match repr {
+            Repr::Auto if train.is_sparse() => Repr::Sparse,
+            Repr::Auto => Repr::Dense,
+            forced => forced,
+        };
         let mut test = match args.str_opt("test-file") {
-            Some(f) => libsvm::read_file(f, Some(dim))?,
+            Some(f) => libsvm::read_file_with(f, Some(dim), test_repr)?,
             None => {
                 // 70/30 split
                 let n = train.len();
@@ -138,11 +166,16 @@ fn cmd_train(args: &Args) -> Result<()> {
     let iters = args.usize_or("iters", 10)?;
     let hss = hss_params_from(args)?;
     println!(
-        "training on {} ({} pts x {} feats, {} positive; test {})",
+        "training on {} ({} pts x {} feats, {} positive{}; test {})",
         train.name,
         train.len(),
         train.dim(),
         train.positives(),
+        if train.is_sparse() {
+            format!(", CSR {} nnz", train.x.nnz())
+        } else {
+            String::new()
+        },
         test.len()
     );
     let (model, stats) = train_hss_svm(
@@ -192,22 +225,39 @@ fn cmd_predict(args: &Args) -> Result<()> {
     let model_path = args.str_opt("model").context("--model is required")?;
     let model = hss_svm::svm::persist::load(model_path)?;
     let test_path = args.str_opt("test-file").context("--test-file is required")?;
-    let test = libsvm::read_file(test_path, Some(model.sv.cols()))?;
+    // label-agnostic read: unlabeled / partially labeled files predict
+    // fine; accuracy is reported over the labeled lines only
+    let (x, raw_labels) =
+        libsvm::read_features_file(test_path, Some(model.sv.cols()), repr_from(args)?)?;
     let t = Timer::start();
     let (pred, path_label) = if args.has("pjrt") {
         let rt = PjrtRuntime::load(PjrtRuntime::default_dir())
             .context("--pjrt requires artifacts (run `make artifacts`)")?;
-        (hss_svm::runtime::predict_pjrt(&rt, &model, &test.x)?, "PJRT")
+        (hss_svm::runtime::predict_pjrt(&rt, &model, &x)?, "PJRT")
     } else {
-        (predict::predict(&model, &test.x, threads), "native")
+        (predict::predict(&model, &x, threads), "native")
     };
     let secs = t.secs();
-    let hits = pred.iter().zip(test.y.iter()).filter(|(p, y)| p == y).count();
-    println!(
-        "predicted {} points in {secs:.3}s ({path_label} path): accuracy {:.3}%",
-        test.len(),
-        100.0 * hits as f64 / test.len().max(1) as f64
-    );
+    let labels = libsvm::normalize_eval_labels(&raw_labels);
+    let labeled = labels.iter().filter(|l| l.is_finite()).count();
+    let hits = pred
+        .iter()
+        .zip(labels.iter())
+        .filter(|(p, l)| l.is_finite() && **p == **l)
+        .count();
+    if labeled > 0 {
+        println!(
+            "predicted {} points in {secs:.3}s ({path_label} path): accuracy {:.3}% \
+             over {labeled} labeled lines",
+            x.rows(),
+            100.0 * hits as f64 / labeled as f64
+        );
+    } else {
+        println!(
+            "predicted {} points in {secs:.3}s ({path_label} path); no labeled lines",
+            x.rows()
+        );
+    }
     if let Some(out) = args.str_opt("out") {
         use std::io::Write;
         let mut f = std::io::BufWriter::new(std::fs::File::create(out)?);
@@ -219,68 +269,44 @@ fn cmd_predict(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Request loop: LIBSVM-format feature lines on stdin (label optional,
-/// use 0), one "<predicted label> <decision value>" per line on stdout.
-/// Requests are micro-batched per read for tile efficiency; this is the
-/// L3 "serving" mode — Python never runs here, prediction goes through
-/// the AOT artifacts when available.
+/// Request loop: LIBSVM-format feature lines on stdin (labeled,
+/// 0-labeled or bare), one "<predicted label> <decision value>" per line
+/// on stdout. Requests are micro-batched per read for tile efficiency;
+/// this is the L3 "serving" mode — Python never runs here, prediction
+/// goes through the AOT artifacts when available. The loop itself lives
+/// in [`hss_svm::serve`]: batches parse label-agnostically (a mix of ±1
+/// and unlabeled lines no longer kills the server) and a malformed line
+/// fails only its own batch, reported per-line on stderr.
 fn cmd_serve(args: &Args) -> Result<()> {
-    use std::io::BufRead;
     let threads = args.usize_or("threads", threadpool::default_threads())?;
     let model_path = args.str_opt("model").context("--model is required")?;
     let model = hss_svm::svm::persist::load(model_path)?;
-    let rt = if args.has("pjrt") { PjrtRuntime::try_default() } else { None };
+    let mut rt = if args.has("pjrt") { PjrtRuntime::try_default() } else { None };
+    if rt.is_some() && model.sv.is_sparse() {
+        eprintln!("serve: CSR model — PJRT artifacts need dense SVs, using the native path");
+        rt = None;
+    }
     eprintln!(
-        "serving {} ({} SVs, dim {}), {} path; send LIBSVM lines, EOF to stop",
+        "serving {} ({} SVs, dim {}{}), {} path; send LIBSVM lines, EOF to stop",
         model_path,
         model.n_sv(),
         model.sv.cols(),
+        if model.sv.is_sparse() { ", CSR" } else { "" },
         if rt.is_some() { "PJRT" } else { "native" }
     );
     let stdin = std::io::stdin();
-    let mut batch: Vec<String> = Vec::new();
-    let mut lines = stdin.lock().lines();
-    loop {
-        batch.clear();
-        // micro-batch: drain up to 128 lines (one tile)
-        for line in lines.by_ref() {
-            let line = line?;
-            if !line.trim().is_empty() {
-                batch.push(line);
-            }
-            if batch.len() >= 128 {
-                break;
-            }
-        }
-        if batch.is_empty() {
-            break;
-        }
-        let text = batch
-            .iter()
-            .map(|l| {
-                // allow bare feature lists (no label)
-                if l.trim_start().starts_with(|c: char| c.is_ascii_digit() && l.contains(':')) && !l.contains(' ') {
-                    format!("0 {l}")
-                } else if l.split_ascii_whitespace().next().map(|t| t.contains(':')).unwrap_or(false) {
-                    format!("0 {l}")
-                } else {
-                    l.clone()
-                }
-            })
-            .collect::<Vec<_>>()
-            .join("\n");
-        let ds = libsvm::read(std::io::Cursor::new(text), Some(model.sv.cols()))?;
-        let f = match &rt {
-            Some(rt) => hss_svm::runtime::decision_function_pjrt(rt, &model, &ds.x)?,
-            None => predict::decision_function(&model, &ds.x, threads),
-        };
-        for v in f {
-            println!("{} {v:.6}", if v >= 0.0 { "+1" } else { "-1" });
-        }
-        if batch.len() < 128 {
-            break; // stdin exhausted
-        }
-    }
+    let stats = hss_svm::serve::serve_loop(
+        &model,
+        rt.as_ref(),
+        stdin.lock(),
+        std::io::stdout().lock(),
+        std::io::stderr().lock(),
+        threads,
+    )?;
+    eprintln!(
+        "served {} predictions in {} batches ({} lines, {} batches dropped)",
+        stats.predicted, stats.batches, stats.lines, stats.failed_batches
+    );
     Ok(())
 }
 

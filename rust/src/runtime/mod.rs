@@ -24,14 +24,23 @@ pub mod pjrt;
 
 pub use pjrt::{PjrtRuntime, RuntimeStats};
 
-use crate::linalg::Mat;
+use crate::data::sparse::Points;
 use crate::svm::SvmModel;
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 /// Decision function served by PJRT-executed fused tiles
 /// (falls back tile-by-tile is NOT done here: callers choose the native
-/// path explicitly when no runtime is available).
-pub fn decision_function_pjrt(rt: &PjrtRuntime, model: &SvmModel, x: &Mat) -> Result<Vec<f64>> {
+/// path explicitly when no runtime is available). The artifacts consume
+/// dense buffers, so CSR test tiles are densified one 128-row tile at a
+/// time (bounded scratch) and CSR models are rejected — the native path
+/// serves those.
+pub fn decision_function_pjrt(rt: &PjrtRuntime, model: &SvmModel, x: &Points) -> Result<Vec<f64>> {
+    let sv = match &model.sv {
+        Points::Dense(m) => m,
+        Points::Sparse(_) => {
+            anyhow::bail!("PJRT artifacts need a dense model; this model stores CSR support vectors (use the native path)")
+        }
+    };
     let n = x.rows();
     let mut out = Vec::with_capacity(n);
     let tile = pjrt::TILE_M;
@@ -39,8 +48,10 @@ pub fn decision_function_pjrt(rt: &PjrtRuntime, model: &SvmModel, x: &Mat) -> Re
     while i0 < n {
         let ib = tile.min(n - i0);
         let rows: Vec<usize> = (i0..i0 + ib).collect();
-        let xb = x.select_rows(&rows);
-        let f = rt.decision_tile(&xb, &model.sv, &model.alpha_y, model.kernel.gamma())?;
+        let xb = x.select_rows(&rows).into_dense();
+        let f = rt
+            .decision_tile(&xb, sv, &model.alpha_y, model.kernel.gamma())
+            .with_context(|| format!("decision tile at row {i0}"))?;
         out.extend(f.into_iter().take(ib).map(|v| v + model.bias));
         i0 += ib;
     }
@@ -48,7 +59,7 @@ pub fn decision_function_pjrt(rt: &PjrtRuntime, model: &SvmModel, x: &Mat) -> Re
 }
 
 /// Predicted ±1 labels via the PJRT path.
-pub fn predict_pjrt(rt: &PjrtRuntime, model: &SvmModel, x: &Mat) -> Result<Vec<f64>> {
+pub fn predict_pjrt(rt: &PjrtRuntime, model: &SvmModel, x: &Points) -> Result<Vec<f64>> {
     Ok(decision_function_pjrt(rt, model, x)?
         .into_iter()
         .map(|f| if f >= 0.0 { 1.0 } else { -1.0 })

@@ -1,0 +1,122 @@
+//! Streaming prediction server (the `hss-svm serve` request loop),
+//! extracted from the binary so the batching, label handling and error
+//! paths are unit-testable.
+//!
+//! Protocol: LIBSVM-format lines on the input, one
+//! `"<predicted label> <decision value>"` line per request on the
+//! output. Lines may be labeled (`+1 1:0.5 ...` — the label is ignored),
+//! carry the `0` placeholder label, or be bare feature lists
+//! (`1:0.5 3:2 ...`). Requests are micro-batched ([`BATCH`] lines, one
+//! prediction tile) for tile efficiency.
+//!
+//! Parsing goes through [`libsvm::read_features`], which skips binary-
+//! label normalization entirely — a batch mixing `±1` labels with
+//! unlabeled lines used to produce three distinct labels and trip
+//! `libsvm::read`'s "not a binary dataset" bail, killing the server on
+//! valid input. A malformed line now fails only its own batch: the batch
+//! is reparsed line-by-line to report every offending line (with its
+//! global input line number) on the error stream, no predictions are
+//! emitted for that batch, and the loop continues with the next one.
+
+use crate::data::libsvm;
+use crate::runtime::PjrtRuntime;
+use crate::svm::{predict, SvmModel};
+use anyhow::{Context, Result};
+use std::io::{BufRead, Write};
+
+/// Lines per micro-batch (one prediction tile).
+pub const BATCH: usize = 128;
+
+/// Counters reported when the input is exhausted.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ServeStats {
+    /// Micro-batches attempted.
+    pub batches: usize,
+    /// Non-empty input lines consumed.
+    pub lines: usize,
+    /// Predictions emitted.
+    pub predicted: usize,
+    /// Batches dropped because of malformed lines.
+    pub failed_batches: usize,
+}
+
+/// Run the request loop until EOF. Returns the counters; parse failures
+/// are per-batch (reported on `err`), only I/O failures abort the loop.
+pub fn serve_loop(
+    model: &SvmModel,
+    rt: Option<&PjrtRuntime>,
+    input: impl BufRead,
+    mut out: impl Write,
+    mut err: impl Write,
+    threads: usize,
+) -> Result<ServeStats> {
+    let dim = model.sv.cols();
+    let mut stats = ServeStats::default();
+    let mut batch: Vec<(usize, String)> = Vec::new(); // (1-based line no, text)
+    let mut lines = input.lines();
+    let mut lineno = 0usize;
+    loop {
+        batch.clear();
+        // micro-batch: drain up to BATCH request lines (one tile).
+        // Blank and '#'-comment lines are not requests: the parser
+        // would silently drop them mid-batch and desynchronize the
+        // one-output-line-per-request protocol, so skip them here.
+        for line in lines.by_ref() {
+            let line = line.context("I/O error reading serve input")?;
+            lineno += 1;
+            let t = line.trim();
+            if !t.is_empty() && !t.starts_with('#') {
+                batch.push((lineno, line));
+            }
+            if batch.len() >= BATCH {
+                break;
+            }
+        }
+        if batch.is_empty() {
+            break;
+        }
+        stats.batches += 1;
+        stats.lines += batch.len();
+        let text = batch.iter().map(|(_, l)| l.as_str()).collect::<Vec<_>>().join("\n");
+        match libsvm::read_features(std::io::Cursor::new(text), Some(dim)) {
+            Ok((x, _labels)) => {
+                // a PJRT tile failure must not kill the server either:
+                // fall back to the native path for this batch
+                let f = match rt {
+                    Some(rt) => match crate::runtime::decision_function_pjrt(rt, model, &x) {
+                        Ok(f) => f,
+                        Err(e) => {
+                            writeln!(err, "serve: PJRT batch failed ({e:#}); native fallback")?;
+                            predict::decision_function(model, &x, threads)
+                        }
+                    },
+                    None => predict::decision_function(model, &x, threads),
+                };
+                for v in &f {
+                    writeln!(out, "{} {v:.6}", if *v >= 0.0 { "+1" } else { "-1" })?;
+                }
+                out.flush()?;
+                stats.predicted += f.len();
+            }
+            Err(_) => {
+                // fail this batch only: pinpoint every bad line with its
+                // global input line number, emit nothing, keep serving
+                stats.failed_batches += 1;
+                for (no, l) in &batch {
+                    if let Err(e) =
+                        libsvm::read_features(std::io::Cursor::new(l.as_str()), Some(dim))
+                    {
+                        // strip the parser's batch-relative "line 1:" prefix
+                        let msg = format!("{e:#}").replace("line 1:", "").trim().to_string();
+                        writeln!(err, "serve: input line {no}: {msg} (batch dropped)")?;
+                    }
+                }
+                err.flush()?;
+            }
+        }
+        if batch.len() < BATCH {
+            break; // input exhausted
+        }
+    }
+    Ok(stats)
+}

@@ -1,17 +1,20 @@
 //! Trained SVM model: support vectors, coefficients, bias.
 
+use crate::data::sparse::Points;
 use crate::kernel::Kernel;
-use crate::linalg::Mat;
 
 /// A trained (binary) SVM classifier.
 ///
 /// Stores only the support vectors (points with nonzero dual weight),
 /// their combined coefficients αᵢyᵢ, and the bias b. The decision
-/// function is  f(t) = Σᵢ (αy)ᵢ K(svᵢ, t) + b.
+/// function is  f(t) = Σᵢ (αy)ᵢ K(svᵢ, t) + b. Support vectors keep the
+/// representation of the training data: models trained on CSR inputs
+/// hold CSR support vectors, so a rcv1-class model does not densify
+/// n_sv × 47k slots.
 #[derive(Clone)]
 pub struct SvmModel {
-    /// Support vectors, one per row.
-    pub sv: Mat,
+    /// Support vectors, one per row (dense or CSR).
+    pub sv: Points,
     /// Combined coefficients (αy)ᵢ = αᵢ·yᵢ, one per support vector.
     pub alpha_y: Vec<f64>,
     /// Bias term b.
@@ -28,11 +31,25 @@ impl SvmModel {
         self.sv.rows()
     }
 
-    /// Decision value for a single point.
+    /// Decision value for a single (dense) point.
     pub fn decision_one(&self, t: &[f64]) -> f64 {
         let mut f = self.bias;
-        for i in 0..self.n_sv() {
-            f += self.alpha_y[i] * self.kernel.eval(self.sv.row(i), t);
+        match &self.sv {
+            Points::Dense(m) => {
+                for i in 0..m.rows() {
+                    f += self.alpha_y[i] * self.kernel.eval(m.row(i), t);
+                }
+            }
+            Points::Sparse(_) => {
+                // hoist ‖t‖² out of the SV loop — it is O(dim) while the
+                // per-SV work is O(nnz_row)
+                let nt = crate::linalg::dot(t, t);
+                for i in 0..self.n_sv() {
+                    let ni = self.sv.dot_row(i, &self.sv, i);
+                    let ab = self.sv.dot_dense_vec(i, t);
+                    f += self.alpha_y[i] * self.kernel.eval_from_parts(ni, nt, ab);
+                }
+            }
         }
         f
     }
@@ -56,10 +73,11 @@ impl std::fmt::Debug for SvmModel {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "SvmModel({} SVs, dim {}, {}, C={}, b={:.4})",
+            "SvmModel({} SVs, dim {}, {}{}, C={}, b={:.4})",
             self.n_sv(),
             self.sv.cols(),
             self.kernel.label(),
+            if self.sv.is_sparse() { ", sparse" } else { "" },
             self.c,
             self.bias
         )
@@ -69,13 +87,15 @@ impl std::fmt::Debug for SvmModel {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::data::sparse::CsrMat;
+    use crate::linalg::Mat;
 
     #[test]
     fn decision_function_hand_computed() {
         // two SVs on a line with linear kernel: f(t) = 1·(1·t) − 0.5·(2·t) + 0.25
         let sv = Mat::from_vec(2, 1, vec![1.0, 2.0]);
         let m = SvmModel {
-            sv,
+            sv: sv.into(),
             alpha_y: vec![1.0, -0.5],
             bias: 0.25,
             kernel: Kernel::Linear,
@@ -87,5 +107,29 @@ mod tests {
         assert_eq!(m.predict_one(&[3.0]), 1.0);
         assert_eq!(m.n_sv(), 2);
         assert!(m.memory_bytes() > 0);
+    }
+
+    #[test]
+    fn sparse_model_decisions_match_dense() {
+        let sv = Mat::from_vec(3, 4, vec![
+            1.0, 0.0, 2.0, 0.0, //
+            0.0, 0.0, 0.0, 0.0, //
+            0.5, -1.0, 0.0, 3.0,
+        ]);
+        let alpha_y = vec![0.7, -0.2, 1.1];
+        let dense = SvmModel {
+            sv: sv.clone().into(),
+            alpha_y: alpha_y.clone(),
+            bias: -0.3,
+            kernel: Kernel::Gaussian { h: 0.9 },
+            c: 1.0,
+        };
+        let sparse = SvmModel { sv: CsrMat::from_dense(&sv).into(), ..dense.clone() };
+        assert!(sparse.sv.is_sparse());
+        for t in [[0.0, 0.0, 0.0, 0.0], [1.0, -1.0, 2.0, 3.0], [0.5, 0.0, 0.0, 0.0]] {
+            let (fd, fs) = (dense.decision_one(&t), sparse.decision_one(&t));
+            assert!((fd - fs).abs() <= 1e-12 * (1.0 + fd.abs()), "{fd} vs {fs}");
+        }
+        assert!(sparse.memory_bytes() < dense.memory_bytes() + 200);
     }
 }

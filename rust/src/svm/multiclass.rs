@@ -7,16 +7,18 @@
 //! independent, so a C grid per pair still reuses its factorization.
 
 use crate::admm::AdmmParams;
+use crate::data::sparse::Points;
 use crate::data::Dataset;
 use crate::hss::HssParams;
 use crate::kernel::Kernel;
+#[cfg(test)]
 use crate::linalg::Mat;
 use crate::svm::{predict, train::train_hss_svm, SvmModel};
 use anyhow::{bail, Result};
 
 /// A labelled multiclass dataset (labels are arbitrary integers).
 pub struct MulticlassDataset {
-    pub x: Mat,
+    pub x: Points,
     pub labels: Vec<i64>,
 }
 
@@ -68,7 +70,7 @@ pub fn train_ovo(
 
 impl OvoModel {
     /// Majority-vote prediction for each row of `x`.
-    pub fn predict(&self, x: &Mat, threads: usize) -> Vec<i64> {
+    pub fn predict(&self, x: &Points, threads: usize) -> Vec<i64> {
         let n = x.rows();
         let k = self.classes.len();
         let mut votes = vec![vec![0u32; k]; n];
@@ -117,7 +119,7 @@ mod tests {
             x[(i, 1)] = centers[c][1] + rng.gauss() * 0.4;
             labels.push(c as i64);
         }
-        MulticlassDataset { x, labels }
+        MulticlassDataset { x: x.into(), labels }
     }
 
     #[test]
@@ -142,7 +144,7 @@ mod tests {
 
     #[test]
     fn single_class_is_an_error() {
-        let ds = MulticlassDataset { x: Mat::zeros(5, 2), labels: vec![3; 5] };
+        let ds = MulticlassDataset { x: Mat::zeros(5, 2).into(), labels: vec![3; 5] };
         assert!(train_ovo(
             &ds,
             Kernel::Linear,

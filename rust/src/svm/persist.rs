@@ -1,8 +1,14 @@
 //! Model persistence: a self-describing text format (versioned, no
 //! external serialization crates) compatible in spirit with LIBSVM's
 //! model files. Round-trips exactly (f64 bit patterns are preserved via
-//! hex encoding with a human-readable decimal alongside).
+//! hex encoding).
+//!
+//! Dense models write the original `sv <rows> <cols>` section; sparse
+//! (CSR) models write `svsparse <rows> <cols>` with per-row
+//! `<alpha> <index>:<hexval> ...` lines (0-based ascending indices), so
+//! a rcv1-class model file stays O(nnz). The loader accepts both.
 
+use crate::data::sparse::{CsrMat, Points};
 use crate::kernel::Kernel;
 use crate::linalg::Mat;
 use crate::svm::SvmModel;
@@ -25,13 +31,28 @@ pub fn save(model: &SvmModel, path: impl AsRef<Path>) -> Result<()> {
     }
     writeln!(w, "c {}", hexf(model.c))?;
     writeln!(w, "bias {}", hexf(model.bias))?;
-    writeln!(w, "sv {} {}", model.sv.rows(), model.sv.cols())?;
-    for i in 0..model.sv.rows() {
-        write!(w, "{}", hexf(model.alpha_y[i]))?;
-        for &v in model.sv.row(i) {
-            write!(w, " {}", hexf(v))?;
+    match &model.sv {
+        Points::Dense(sv) => {
+            writeln!(w, "sv {} {}", sv.rows(), sv.cols())?;
+            for i in 0..sv.rows() {
+                write!(w, "{}", hexf(model.alpha_y[i]))?;
+                for &v in sv.row(i) {
+                    write!(w, " {}", hexf(v))?;
+                }
+                writeln!(w)?;
+            }
         }
-        writeln!(w)?;
+        Points::Sparse(sv) => {
+            writeln!(w, "svsparse {} {}", sv.rows(), sv.cols())?;
+            for i in 0..sv.rows() {
+                write!(w, "{}", hexf(model.alpha_y[i]))?;
+                let (ci, vi) = sv.row(i);
+                for (&c, &v) in ci.iter().zip(vi.iter()) {
+                    write!(w, " {}:{}", c, hexf(v))?;
+                }
+                writeln!(w)?;
+            }
+        }
     }
     Ok(())
 }
@@ -66,21 +87,56 @@ pub fn load(path: impl AsRef<Path>) -> Result<SvmModel> {
     let bias = parse_kv(&next()?, "bias")?;
     let svline = next()?;
     let mut sp = svline.split_ascii_whitespace();
-    if sp.next() != Some("sv") {
-        bail!("expected sv line, got {svline:?}");
+    let kind = sp.next();
+    if kind != Some("sv") && kind != Some("svsparse") {
+        bail!("expected sv/svsparse line, got {svline:?}");
     }
     let rows: usize = sp.next().context("missing sv rows")?.parse()?;
     let cols: usize = sp.next().context("missing sv cols")?.parse()?;
-    let mut sv = Mat::zeros(rows, cols);
     let mut alpha_y = Vec::with_capacity(rows);
-    for i in 0..rows {
-        let line = next()?;
-        let mut parts = line.split_ascii_whitespace();
-        alpha_y.push(unhexf(parts.next().context("missing alpha")?)?);
-        for j in 0..cols {
-            sv[(i, j)] = unhexf(parts.next().with_context(|| format!("row {i}: missing sv value {j}"))?)?;
+    let sv: Points = if kind == Some("sv") {
+        let mut sv = Mat::zeros(rows, cols);
+        for i in 0..rows {
+            let line = next()?;
+            let mut parts = line.split_ascii_whitespace();
+            alpha_y.push(unhexf(parts.next().context("missing alpha")?)?);
+            for j in 0..cols {
+                sv[(i, j)] = unhexf(
+                    parts.next().with_context(|| format!("row {i}: missing sv value {j}"))?,
+                )?;
+            }
         }
-    }
+        sv.into()
+    } else {
+        let mut sv_rows: Vec<Vec<(usize, f64)>> = Vec::with_capacity(rows);
+        for i in 0..rows {
+            let line = next()?;
+            let mut parts = line.split_ascii_whitespace();
+            alpha_y.push(unhexf(parts.next().context("missing alpha")?)?);
+            let mut row: Vec<(usize, f64)> = Vec::new();
+            for tok in parts {
+                let (c_str, v_str) = tok
+                    .split_once(':')
+                    .with_context(|| format!("row {i}: bad sparse pair {tok:?}"))?;
+                let col: usize = c_str
+                    .parse()
+                    .with_context(|| format!("row {i}: bad sparse index {c_str:?}"))?;
+                if col >= cols {
+                    bail!("row {i}: sparse index {col} out of range {cols}");
+                }
+                // validate here so corrupt files fail with Err like every
+                // other loader path, not via CsrMat's construction assert
+                if let Some(&(prev, _)) = row.last() {
+                    if col <= prev {
+                        bail!("row {i}: sparse index {col} not strictly ascending after {prev}");
+                    }
+                }
+                row.push((col, unhexf(v_str)?));
+            }
+            sv_rows.push(row);
+        }
+        CsrMat::from_rows(cols, &sv_rows).into()
+    };
     Ok(SvmModel { sv, alpha_y, bias, kernel, c })
 }
 
@@ -92,7 +148,7 @@ fn parse_kv(line: &str, key: &str) -> Result<f64> {
     unhexf(p.next().with_context(|| format!("missing {key} value"))?)
 }
 
-/// Exact f64 as hex bits (with decimal comment form `0x…` only).
+/// Exact f64 as hex bits.
 fn hexf(v: f64) -> String {
     format!("{:016x}", v.to_bits())
 }
@@ -109,7 +165,7 @@ mod tests {
 
     fn toy_model(rng: &mut Rng) -> SvmModel {
         SvmModel {
-            sv: Mat::gauss(7, 3, rng),
+            sv: Mat::gauss(7, 3, rng).into(),
             alpha_y: (0..7).map(|_| rng.gauss()).collect(),
             bias: rng.gauss(),
             kernel: Kernel::Gaussian { h: 0.37 },
@@ -126,7 +182,7 @@ mod tests {
         let p = dir.join("m.model");
         save(&model, &p).unwrap();
         let back = load(&p).unwrap();
-        assert_eq!(back.sv.data(), model.sv.data());
+        assert_eq!(back.sv, model.sv);
         assert_eq!(back.alpha_y, model.alpha_y);
         assert_eq!(back.bias.to_bits(), model.bias.to_bits());
         assert_eq!(back.kernel, model.kernel);
@@ -135,6 +191,37 @@ mod tests {
         let x = Mat::gauss(10, 3, &mut rng);
         for i in 0..10 {
             assert_eq!(model.decision_one(x.row(i)), back.decision_one(x.row(i)));
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn sparse_roundtrip_is_bit_exact() {
+        let mut rng = Rng::new(603);
+        let dense = Mat::from_fn(6, 40, |i, j| {
+            if (i * 7 + j) % 9 == 0 { rng.gauss() } else { 0.0 }
+        });
+        let model = SvmModel {
+            sv: CsrMat::from_dense(&dense).into(),
+            alpha_y: (0..6).map(|_| rng.gauss()).collect(),
+            bias: rng.gauss(),
+            kernel: Kernel::Gaussian { h: 1.2 },
+            c: 0.5,
+        };
+        let dir = std::env::temp_dir()
+            .join(format!("hss_svm_persist_sp_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("sp.model");
+        save(&model, &p).unwrap();
+        let back = load(&p).unwrap();
+        assert!(back.sv.is_sparse());
+        assert_eq!(back.sv, model.sv);
+        assert_eq!(back.alpha_y, model.alpha_y);
+        assert_eq!(back.bias.to_bits(), model.bias.to_bits());
+        // identical decisions through the sparse eval path
+        for _ in 0..10 {
+            let t: Vec<f64> = (0..40).map(|_| rng.gauss()).collect();
+            assert_eq!(model.decision_one(&t), back.decision_one(&t));
         }
         std::fs::remove_dir_all(&dir).ok();
     }

@@ -1,15 +1,17 @@
 //! Blocked prediction (Algorithm 3, lines 18–20).
 //!
-//! Test points are processed in row tiles; each tile needs one dense
-//! kernel block K(tile, SV) followed by a matvec against αy — exactly the
-//! fused "decision tile" the L2 JAX model lowers to HLO. The native path
-//! here is the correctness oracle for (and fallback of) the PJRT path in
-//! [`crate::runtime`].
+//! Test points are processed in row tiles; each tile needs one kernel
+//! block K(tile, SV) followed by a matvec against αy — exactly the fused
+//! "decision tile" the L2 JAX model lowers to HLO. Tiles and support
+//! vectors may each be dense or CSR ([`Points`]); the kernel block
+//! dispatches per pairing, so sparse test sets never densify. The native
+//! path here is the correctness oracle for (and fallback of) the PJRT
+//! path in [`crate::runtime`].
 
+use crate::data::sparse::Points;
 use crate::data::Dataset;
-use crate::kernel::block::{kernel_block_with_norms, self_norms};
+use crate::kernel::block::kernel_block_pts_with_norms;
 use crate::linalg::blas;
-use crate::linalg::Mat;
 use crate::svm::model::SvmModel;
 use crate::util::threadpool;
 
@@ -17,10 +19,10 @@ use crate::util::threadpool;
 pub const TILE: usize = 128;
 
 /// Decision values f(tⱼ) for every row of `x`.
-pub fn decision_function(model: &SvmModel, x: &Mat, threads: usize) -> Vec<f64> {
+pub fn decision_function(model: &SvmModel, x: &Points, threads: usize) -> Vec<f64> {
     assert_eq!(x.cols(), model.sv.cols(), "feature dimension mismatch");
     let n = x.rows();
-    let sv_norms = self_norms(&model.sv);
+    let sv_norms = model.sv.self_norms();
     let n_tiles = n.div_ceil(TILE);
     // chunk = 1: each tile is a full kernel-block GEMV, coarse enough
     // that one atomic fetch per tile is noise
@@ -29,8 +31,8 @@ pub fn decision_function(model: &SvmModel, x: &Mat, threads: usize) -> Vec<f64> 
         let hi = (lo + TILE).min(n);
         let rows: Vec<usize> = (lo..hi).collect();
         let xb = x.select_rows(&rows);
-        let xb_norms = self_norms(&xb);
-        let kb = kernel_block_with_norms(&model.kernel, &xb, &xb_norms, &model.sv, &sv_norms);
+        let xb_norms = xb.self_norms();
+        let kb = kernel_block_pts_with_norms(&model.kernel, &xb, &xb_norms, &model.sv, &sv_norms);
         let mut f = vec![0.0; hi - lo];
         blas::gemv(&kb, &model.alpha_y, &mut f);
         for v in &mut f {
@@ -42,7 +44,7 @@ pub fn decision_function(model: &SvmModel, x: &Mat, threads: usize) -> Vec<f64> 
 }
 
 /// Predicted labels (±1).
-pub fn predict(model: &SvmModel, x: &Mat, threads: usize) -> Vec<f64> {
+pub fn predict(model: &SvmModel, x: &Points, threads: usize) -> Vec<f64> {
     decision_function(model, x, threads)
         .into_iter()
         .map(|f| if f >= 0.0 { 1.0 } else { -1.0 })
@@ -77,13 +79,15 @@ pub fn confusion(model: &SvmModel, ds: &Dataset, threads: usize) -> (usize, usiz
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::data::sparse::CsrMat;
     use crate::kernel::Kernel;
+    use crate::linalg::Mat;
     use crate::util::prng::Rng;
     use crate::util::testkit;
 
     fn toy_model(rng: &mut Rng, n_sv: usize, dim: usize) -> SvmModel {
         SvmModel {
-            sv: Mat::gauss(n_sv, dim, rng),
+            sv: Mat::gauss(n_sv, dim, rng).into(),
             alpha_y: (0..n_sv).map(|_| rng.gauss()).collect(),
             bias: rng.gauss(),
             kernel: Kernel::Gaussian { h: 0.9 },
@@ -96,10 +100,11 @@ mod tests {
         let mut rng = Rng::new(71);
         let model = toy_model(&mut rng, 37, 5);
         // n crosses several tile boundaries
-        let x = Mat::gauss(TILE * 2 + 17, 5, &mut rng);
+        let xm = Mat::gauss(TILE * 2 + 17, 5, &mut rng);
+        let x = Points::Dense(xm.clone());
         let got = decision_function(&model, &x, 3);
-        for i in 0..x.rows() {
-            let want = model.decision_one(x.row(i));
+        for i in 0..xm.rows() {
+            let want = model.decision_one(xm.row(i));
             testkit::assert_close(got[i], want, 1e-10);
         }
     }
@@ -119,11 +124,36 @@ mod tests {
     fn predict_labels_are_signs() {
         let mut rng = Rng::new(73);
         let model = toy_model(&mut rng, 10, 2);
-        let x = Mat::gauss(50, 2, &mut rng);
+        let x = Points::Dense(Mat::gauss(50, 2, &mut rng));
         let f = decision_function(&model, &x, 1);
         let p = predict(&model, &x, 1);
         for i in 0..50 {
             assert_eq!(p[i], if f[i] >= 0.0 { 1.0 } else { -1.0 });
+        }
+    }
+
+    #[test]
+    fn sparse_tiles_and_sparse_svs_agree_with_dense() {
+        // every (test, SV) representation pairing must agree to ≤1e-12
+        let mut rng = Rng::new(74);
+        let dense_model = toy_model(&mut rng, 23, 9);
+        let sparse_model = SvmModel {
+            sv: CsrMat::from_dense(dense_model.sv.dense()).into(),
+            ..dense_model.clone()
+        };
+        let xm = Mat::from_fn(TILE + 31, 9, |i, j| {
+            if (i + j) % 3 == 0 { rng.gauss() } else { 0.0 }
+        });
+        let xd = Points::Dense(xm.clone());
+        let xs = Points::Sparse(CsrMat::from_dense(&xm));
+        let want = decision_function(&dense_model, &xd, 2);
+        for (m, x) in [
+            (&dense_model, &xs),
+            (&sparse_model, &xd),
+            (&sparse_model, &xs),
+        ] {
+            let got = decision_function(m, x, 2);
+            testkit::assert_allclose(&got, &want, 1e-12);
         }
     }
 }

@@ -16,11 +16,13 @@
 //!
 //! One ULV factorization serves every (C, ε) pair of a grid search.
 
+use crate::data::sparse::Points;
 use crate::data::Dataset;
 use crate::hss::matvec;
 use crate::hss::ulv::UlvFactor;
 use crate::hss::HssParams;
 use crate::kernel::Kernel;
+#[cfg(test)]
 use crate::linalg::Mat;
 use anyhow::Result;
 
@@ -44,7 +46,7 @@ impl Default for SvrParams {
 /// Trained regressor: f(t) = Σᵢ dᵢ K(svᵢ, t) + b.
 #[derive(Clone)]
 pub struct SvrModel {
-    pub sv: Mat,
+    pub sv: Points,
     pub coef: Vec<f64>,
     pub bias: f64,
     pub kernel: Kernel,
@@ -57,19 +59,52 @@ impl SvrModel {
 
     pub fn predict_one(&self, t: &[f64]) -> f64 {
         let mut f = self.bias;
-        for i in 0..self.n_sv() {
-            f += self.coef[i] * self.kernel.eval(self.sv.row(i), t);
+        match &self.sv {
+            Points::Dense(m) => {
+                for i in 0..m.rows() {
+                    f += self.coef[i] * self.kernel.eval(m.row(i), t);
+                }
+            }
+            Points::Sparse(_) => {
+                // ‖t‖² hoisted out of the SV loop (see SvmModel::decision_one)
+                let nt = crate::linalg::dot(t, t);
+                for i in 0..self.n_sv() {
+                    let ni = self.sv.dot_row(i, &self.sv, i);
+                    let ab = self.sv.dot_dense_vec(i, t);
+                    f += self.coef[i] * self.kernel.eval_from_parts(ni, nt, ab);
+                }
+            }
         }
         f
     }
 
-    /// Predictions for every row of x.
-    pub fn predict(&self, x: &Mat) -> Vec<f64> {
-        (0..x.rows()).map(|i| self.predict_one(x.row(i))).collect()
+    /// Predictions for every row of x (dense or CSR).
+    pub fn predict(&self, x: &Points) -> Vec<f64> {
+        if let (Points::Dense(xm), Points::Dense(_)) = (x, &self.sv) {
+            // the original pointwise path — all-dense predictions stay
+            // bit-for-bit unchanged (and agree with predict_one); any
+            // sparse operand uses the block path with hoisted norms
+            return (0..xm.rows()).map(|i| self.predict_one(xm.row(i))).collect();
+        }
+        let sv_norms = self.sv.self_norms();
+        let x_norms = x.self_norms();
+        let kb = crate::kernel::kernel_block_pts_with_norms(
+            &self.kernel,
+            x,
+            &x_norms,
+            &self.sv,
+            &sv_norms,
+        );
+        (0..x.rows())
+            .map(|i| {
+                self.bias
+                    + kb.row(i).iter().zip(self.coef.iter()).map(|(k, c)| k * c).sum::<f64>()
+            })
+            .collect()
     }
 
     /// Mean squared error on labelled data (`targets` real-valued).
-    pub fn mse(&self, x: &Mat, targets: &[f64]) -> f64 {
+    pub fn mse(&self, x: &Points, targets: &[f64]) -> f64 {
         let pred = self.predict(x);
         pred.iter().zip(targets.iter()).map(|(p, t)| (p - t) * (p - t)).sum::<f64>()
             / targets.len().max(1) as f64

@@ -28,6 +28,27 @@ fn env_seed() -> Option<u64> {
     std::env::var("HSS_SVM_TEST_SEED").ok()?.parse().ok()
 }
 
+/// Random CSR matrix at the given density — the shared generator for
+/// sparse-vs-dense property tests. Guarantees at least one empty row
+/// and one all-zero column (when the shape allows it), so the
+/// degenerate cases are always exercised.
+pub fn random_csr(rows: usize, cols: usize, density: f64, rng: &mut Rng) -> crate::data::CsrMat {
+    let dead_row = if rows > 0 { rng.below(rows) } else { 0 };
+    let dead_col = if cols > 0 { rng.below(cols) } else { 0 };
+    let rs: Vec<Vec<(usize, f64)>> = (0..rows)
+        .map(|i| {
+            if i == dead_row {
+                return Vec::new();
+            }
+            (0..cols)
+                .filter(|&c| c != dead_col && rng.f64() < density)
+                .map(|c| (c, rng.gauss()))
+                .collect()
+        })
+        .collect();
+    crate::data::CsrMat::from_rows(cols, &rs)
+}
+
 fn panic_msg(e: &(dyn std::any::Any + Send)) -> String {
     if let Some(s) = e.downcast_ref::<&str>() {
         s.to_string()

@@ -3,7 +3,7 @@
 //! Requires `make artifacts` (skips cleanly when absent so `cargo test`
 //! works before the Python step, but the Makefile always builds them).
 
-use hss_svm::data::synth;
+use hss_svm::data::{synth, Points};
 use hss_svm::kernel::{kernel_block, Kernel};
 use hss_svm::linalg::Mat;
 use hss_svm::runtime::{decision_function_pjrt, predict_pjrt, PjrtRuntime};
@@ -50,13 +50,13 @@ fn decision_tile_matches_native_model() {
     // SV count crossing the 1024 chunk boundary exercises accumulation
     for &(t, s, f) in &[(128usize, 1024usize, 8usize), (77, 1500, 22), (128, 100, 122)] {
         let model = SvmModel {
-            sv: Mat::gauss(s, f, &mut rng),
+            sv: Mat::gauss(s, f, &mut rng).into(),
             alpha_y: (0..s).map(|_| rng.gauss()).collect(),
             bias: rng.gauss(),
             kernel: Kernel::Gaussian { h: 1.0 },
             c: 1.0,
         };
-        let x = Mat::gauss(t, f, &mut rng);
+        let x = Points::Dense(Mat::gauss(t, f, &mut rng));
         let native = predict::decision_function(&model, &x, 1);
         let pj = decision_function_pjrt(&rt, &model, &x).unwrap();
         assert_eq!(pj.len(), t);

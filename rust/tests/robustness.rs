@@ -179,13 +179,13 @@ fn compression_scales_subquadratically_in_kernel_evals() {
 fn predict_on_mismatched_dims_panics() {
     let mut rng = Rng::new(409);
     let model = hss_svm::svm::SvmModel {
-        sv: Mat::gauss(5, 3, &mut rng),
+        sv: Mat::gauss(5, 3, &mut rng).into(),
         alpha_y: vec![1.0; 5],
         bias: 0.0,
         kernel: Kernel::Gaussian { h: 1.0 },
         c: 1.0,
     };
-    let bad = Mat::gauss(4, 7, &mut rng);
+    let bad = hss_svm::data::Points::Dense(Mat::gauss(4, 7, &mut rng));
     let result = std::panic::catch_unwind(|| predict::decision_function(&model, &bad, 1));
     assert!(result.is_err(), "dimension mismatch must be caught");
 }

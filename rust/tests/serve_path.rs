@@ -1,0 +1,156 @@
+//! Serve-path integration tests: the micro-batched request loop must
+//! survive mixed labeled/unlabeled batches (the crash the old
+//! `libsvm::read`-based loop had), hit the exactly-one-batch boundary
+//! correctly, and fail malformed batches without exiting.
+
+use hss_svm::data::{CsrMat, Points};
+use hss_svm::kernel::Kernel;
+use hss_svm::serve::{serve_loop, BATCH};
+use hss_svm::svm::{predict, SvmModel};
+use hss_svm::util::prng::Rng;
+use hss_svm::linalg::Mat;
+use std::io::Cursor;
+
+fn toy_model(rng: &mut Rng, n_sv: usize, dim: usize) -> SvmModel {
+    SvmModel {
+        sv: Mat::gauss(n_sv, dim, rng).into(),
+        alpha_y: (0..n_sv).map(|_| rng.gauss()).collect(),
+        bias: rng.gauss(),
+        kernel: Kernel::Gaussian { h: 0.8 },
+        c: 1.0,
+    }
+}
+
+fn run(model: &SvmModel, input: &str) -> (hss_svm::serve::ServeStats, String, String) {
+    let mut out = Vec::new();
+    let mut err = Vec::new();
+    let stats = serve_loop(model, None, Cursor::new(input.to_string()), &mut out, &mut err, 2)
+        .expect("serve loop must not abort");
+    (stats, String::from_utf8(out).unwrap(), String::from_utf8(err).unwrap())
+}
+
+/// `<i>:<v>` lines for a point with a couple of features.
+fn feature_line(rng: &mut Rng, dim: usize) -> String {
+    let a = 1 + rng.below(dim / 2);
+    let b = a + 1 + rng.below(dim - a);
+    format!("{a}:{:.3} {b}:{:.3}", rng.gauss(), rng.gauss())
+}
+
+#[test]
+fn mixed_labeled_and_bare_lines_serve_fine() {
+    // the original bug: {+1, −1, 0} labels in one batch = three distinct
+    // classes → "not a binary dataset" killed the server on valid input
+    let mut rng = Rng::new(11);
+    let model = toy_model(&mut rng, 9, 6);
+    let mut lines = Vec::new();
+    for i in 0..40 {
+        let feats = feature_line(&mut rng, 6);
+        match i % 4 {
+            0 => lines.push(format!("+1 {feats}")),
+            1 => lines.push(format!("-1 {feats}")),
+            2 => lines.push(format!("0 {feats}")),
+            _ => lines.push(feats), // bare: no label at all
+        }
+    }
+    let (stats, out, err) = run(&model, &(lines.join("\n") + "\n"));
+    assert_eq!(stats.predicted, 40, "stderr: {err}");
+    assert_eq!(stats.failed_batches, 0);
+    let out_lines: Vec<&str> = out.lines().collect();
+    assert_eq!(out_lines.len(), 40);
+    for l in &out_lines {
+        let mut parts = l.split_ascii_whitespace();
+        let lab = parts.next().unwrap();
+        assert!(lab == "+1" || lab == "-1");
+        let v: f64 = parts.next().unwrap().parse().unwrap();
+        assert!(v.is_finite());
+    }
+}
+
+#[test]
+fn served_decisions_match_decision_function() {
+    let mut rng = Rng::new(12);
+    let model = toy_model(&mut rng, 7, 5);
+    // build points + the same lines; include an all-zero (empty) line? A
+    // fully empty feature list would be a blank line (skipped), so the
+    // sparsest request is a single feature.
+    let rows: Vec<Vec<(usize, f64)>> =
+        (0..10).map(|i| vec![(i % 5, 0.25 * (i as f64 + 1.0))]).collect();
+    let x = Points::Sparse(CsrMat::from_rows(5, &rows));
+    let want = predict::decision_function(&model, &x, 1);
+    let input: String =
+        rows.iter().map(|r| format!("{}:{}\n", r[0].0 + 1, r[0].1)).collect();
+    let (stats, out, _err) = run(&model, &input);
+    assert_eq!(stats.predicted, 10);
+    for (l, w) in out.lines().zip(want.iter()) {
+        let v: f64 = l.split_ascii_whitespace().nth(1).unwrap().parse().unwrap();
+        assert!((v - w).abs() < 1e-5, "served {v} vs direct {w}");
+    }
+}
+
+#[test]
+fn exact_batch_boundary_and_multi_batch() {
+    let mut rng = Rng::new(13);
+    let model = toy_model(&mut rng, 5, 8);
+    for n in [BATCH - 1, BATCH, BATCH + 1, 2 * BATCH] {
+        let input: String = (0..n).map(|_| feature_line(&mut rng, 8) + "\n").collect();
+        let (stats, out, err) = run(&model, &input);
+        assert_eq!(stats.predicted, n, "n={n}, stderr: {err}");
+        assert_eq!(out.lines().count(), n, "n={n}");
+        assert_eq!(stats.lines, n);
+        let want_batches = n.div_ceil(BATCH);
+        assert_eq!(stats.batches, want_batches, "n={n}");
+    }
+}
+
+#[test]
+fn empty_input_and_blank_lines() {
+    let mut rng = Rng::new(14);
+    let model = toy_model(&mut rng, 4, 4);
+    let (stats, out, _) = run(&model, "");
+    assert_eq!(stats, hss_svm::serve::ServeStats::default());
+    assert!(out.is_empty());
+    // blank and '#'-comment lines are not requests and never shift the
+    // one-output-per-request alignment
+    let (stats, out, _) = run(&model, "\n\n  \n# ping\n1:0.5\n# pong\n\n");
+    assert_eq!(stats.predicted, 1);
+    assert_eq!(stats.lines, 1);
+    assert_eq!(out.lines().count(), 1);
+}
+
+#[test]
+fn malformed_line_fails_its_batch_only() {
+    let mut rng = Rng::new(15);
+    let model = toy_model(&mut rng, 6, 6);
+    // batch 1 (lines 1..=BATCH) contains two bad lines; batch 2 is clean
+    let mut lines: Vec<String> = (0..BATCH).map(|_| feature_line(&mut rng, 6)).collect();
+    lines[3] = "+1 2:1 2:2".to_string(); // duplicate index
+    lines[10] = "+1 4:abc".to_string(); // unparseable value
+    for _ in 0..5 {
+        lines.push(feature_line(&mut rng, 6));
+    }
+    let (stats, out, err) = run(&model, &(lines.join("\n") + "\n"));
+    // batch 1 dropped, batch 2 (5 lines) served
+    assert_eq!(stats.batches, 2);
+    assert_eq!(stats.failed_batches, 1);
+    assert_eq!(stats.predicted, 5);
+    assert_eq!(out.lines().count(), 5);
+    // per-line errors name the offending global line numbers
+    assert!(err.contains("input line 4"), "stderr: {err}");
+    assert!(err.contains("input line 11"), "stderr: {err}");
+    assert!(err.contains("batch dropped"), "stderr: {err}");
+    // exactly the two bad lines are reported
+    assert_eq!(err.lines().filter(|l| l.contains("input line")).count(), 2, "{err}");
+}
+
+#[test]
+fn out_of_range_feature_index_fails_batch_not_loop() {
+    let mut rng = Rng::new(16);
+    let model = toy_model(&mut rng, 4, 3); // dim 3
+    let input = "1:0.5\n9:1.0\n2:0.25\n";
+    let (stats, out, err) = run(&model, input);
+    // the over-dim line poisons its whole (single) batch
+    assert_eq!(stats.failed_batches, 1);
+    assert_eq!(stats.predicted, 0);
+    assert!(out.is_empty());
+    assert!(err.contains("input line 2"), "stderr: {err}");
+}

@@ -1,0 +1,201 @@
+//! Property tests pinning the sparse (CSR) data plane to the dense one:
+//! `kernel_block` / `self_norms` / `decision_function` must agree to
+//! ≤ 1e-12 on randomized sparse matrices, including degenerate shapes
+//! (empty rows, all-zero columns, empty feature lists), and the whole
+//! train→predict pipeline must run CSR end-to-end.
+
+use hss_svm::admm::AdmmParams;
+use hss_svm::data::{libsvm, scale, synth, CsrMat, Dataset, Points};
+use hss_svm::hss::HssParams;
+use hss_svm::kernel::{kernel_block_pts, kernel_block_pts_par, Kernel};
+use hss_svm::linalg::Mat;
+use hss_svm::svm::{predict, train::train_hss_svm, SvmModel};
+use hss_svm::util::prng::Rng;
+use hss_svm::util::testkit;
+
+use hss_svm::util::testkit::random_csr;
+
+#[test]
+fn kernel_block_and_self_norms_agree_across_representations() {
+    testkit::check("sparse-vs-dense-block", 12, |rng, _| {
+        let m = 1 + rng.below(40);
+        let n = 1 + rng.below(40);
+        let f = 2 + rng.below(60);
+        let xs = random_csr(m, f, 0.15 + 0.4 * rng.f64(), rng);
+        let ys = random_csr(n, f, 0.15 + 0.4 * rng.f64(), rng);
+        let xd = Points::Dense(xs.to_dense());
+        let yd = Points::Dense(ys.to_dense());
+        let (xs, ys) = (Points::Sparse(xs), Points::Sparse(ys));
+
+        testkit::assert_allclose(&xs.self_norms(), &xd.self_norms(), 1e-12);
+        for k in [
+            Kernel::Gaussian { h: 0.6 + rng.f64() },
+            Kernel::Polynomial { degree: 2, c: 1.0 },
+            Kernel::Linear,
+        ] {
+            let want = kernel_block_pts(&k, &xd, &yd);
+            for (a, b) in [(&xs, &ys), (&xs, &yd), (&xd, &ys)] {
+                let got = kernel_block_pts(&k, a, b);
+                testkit::assert_allclose(got.data(), want.data(), 1e-12);
+            }
+            let par = kernel_block_pts_par(4, &k, &xs, &ys);
+            testkit::assert_allclose(par.data(), want.data(), 1e-12);
+        }
+    });
+}
+
+#[test]
+fn decision_function_agrees_across_representations() {
+    testkit::check("sparse-vs-dense-decision", 8, |rng, _| {
+        let f = 3 + rng.below(40);
+        let n_sv = 1 + rng.below(30);
+        let n = 1 + rng.below(300); // crosses the 128-row tile boundary
+        let sv = random_csr(n_sv, f, 0.3, rng);
+        let x = random_csr(n, f, 0.25, rng);
+        let alpha_y: Vec<f64> = (0..n_sv).map(|_| rng.gauss()).collect();
+        let mk = |svp: Points| SvmModel {
+            sv: svp,
+            alpha_y: alpha_y.clone(),
+            bias: rng_free_bias(&alpha_y),
+            kernel: Kernel::Gaussian { h: 0.9 },
+            c: 1.0,
+        };
+        let dense_model = mk(Points::Dense(sv.to_dense()));
+        let sparse_model = mk(Points::Sparse(sv));
+        let xd = Points::Dense(x.to_dense());
+        let xs = Points::Sparse(x);
+        let want = predict::decision_function(&dense_model, &xd, 2);
+        for (m, xx) in [
+            (&dense_model, &xs),
+            (&sparse_model, &xd),
+            (&sparse_model, &xs),
+        ] {
+            let got = predict::decision_function(m, xx, 2);
+            testkit::assert_allclose(&got, &want, 1e-12);
+        }
+    });
+}
+
+/// Deterministic bias derived from the coefficients (keeps the model
+/// builder closure free of a second &mut rng borrow).
+fn rng_free_bias(alpha_y: &[f64]) -> f64 {
+    0.25 * alpha_y.iter().sum::<f64>()
+}
+
+#[test]
+fn csr_train_predict_pipeline_end_to_end() {
+    // CSR from parse to model: train on a sparse dataset without any
+    // densification and agree with the dense run of the same data
+    let mut rng = Rng::new(31);
+    let base = synth::blobs(420, 6, 4, 0.3, &mut rng);
+    let sparse_all = Dataset::new(
+        "blobs-csr",
+        CsrMat::from_dense(base.x.dense()),
+        base.y.clone(),
+    );
+    let (train, test) = sparse_all.split_at(300);
+    assert!(train.is_sparse() && test.is_sparse());
+    let (model, stats) = train_hss_svm(
+        &train,
+        Kernel::Gaussian { h: 1.0 },
+        &HssParams::near_exact(),
+        &AdmmParams { beta: 10.0, max_it: 15, relax: 1.0, tol: 0.0 },
+        1.0,
+        2,
+    )
+    .unwrap();
+    assert!(model.sv.is_sparse(), "CSR training data must yield CSR SVs");
+    assert!(stats.n_sv > 0);
+    let acc = predict::accuracy(&model, &test, 2);
+    assert!(acc > 0.8, "sparse pipeline accuracy {acc}");
+
+    // the same model predicts identically (≤1e-12) on dense test points
+    let dense_test = Dataset::new("dn", test.x.to_dense(), test.y.clone());
+    let fs = predict::decision_function(&model, &test.x, 2);
+    let fd = predict::decision_function(&model, &dense_test.x, 2);
+    testkit::assert_allclose(&fs, &fd, 1e-12);
+}
+
+#[test]
+fn libsvm_auto_load_scale_train_on_wide_sparse_file() {
+    // write a wide sparse file, Auto-load it (must come back CSR), scale
+    // with the implicit-zero convention, train, and stay sparse throughout
+    let mut rng = Rng::new(32);
+    let dim = 64usize;
+    let rows: Vec<Vec<(usize, f64)>> = (0..260)
+        .map(|i| {
+            // class anchor feature (0 or 1) + one random noise column:
+            // sparse but trivially separable
+            let anchor = if i % 2 == 0 { 0 } else { 1 };
+            let noise_col = 2 + rng.below(dim - 2);
+            vec![(anchor, 1.0), (noise_col, 0.3 * rng.gauss())]
+        })
+        .collect();
+    let y: Vec<f64> = (0..260).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect();
+    let ds = Dataset::new("wide", CsrMat::from_rows(dim, &rows), y);
+    let dir = std::env::temp_dir().join(format!("hss_svm_sparse_e2e_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("wide.libsvm");
+    libsvm::write_file(&ds, &path).unwrap();
+
+    let loaded = libsvm::read_file(&path, None).unwrap();
+    assert!(loaded.is_sparse(), "Auto must keep a 260x{dim} 2-nnz/row file in CSR");
+    assert_eq!(loaded.x.nnz(), ds.x.nnz());
+
+    let (mut train, mut test) = loaded.split_at(200);
+    scale::scale_pair(&mut train, &mut test);
+    assert!(train.is_sparse(), "scaling must preserve CSR");
+
+    let (model, _) = train_hss_svm(
+        &train,
+        Kernel::Gaussian { h: 1.0 },
+        &HssParams::high_accuracy(),
+        &AdmmParams { beta: 10.0, max_it: 12, relax: 1.0, tol: 0.0 },
+        1.0,
+        2,
+    )
+    .unwrap();
+    let acc = predict::accuracy(&model, &test, 2);
+    assert!(acc > 0.9, "wide sparse file accuracy {acc}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn sparse_model_persists_and_reloads() {
+    let mut rng = Rng::new(33);
+    let sv = random_csr(12, 48, 0.2, &mut rng);
+    let model = SvmModel {
+        sv: Points::Sparse(sv),
+        alpha_y: (0..12).map(|_| rng.gauss()).collect(),
+        bias: 0.125,
+        kernel: Kernel::Gaussian { h: 1.5 },
+        c: 2.0,
+    };
+    let dir = std::env::temp_dir().join(format!("hss_svm_sp_model_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let p = dir.join("m.model");
+    hss_svm::svm::persist::save(&model, &p).unwrap();
+    let back = hss_svm::svm::persist::load(&p).unwrap();
+    assert!(back.sv.is_sparse());
+    let x = Points::Dense(Mat::gauss(40, 48, &mut rng));
+    let a = predict::decision_function(&model, &x, 1);
+    let b = predict::decision_function(&back, &x, 1);
+    assert_eq!(a, b, "persisted sparse model must predict bit-identically");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn csr_memory_is_nnz_proportional() {
+    // the tentpole's memory claim, in miniature: a 200×2000 matrix at
+    // ~1% density must hold ~100× less than its dense form
+    let mut rng = Rng::new(34);
+    let s = random_csr(200, 2000, 0.01, &mut rng);
+    let sparse_bytes = Points::Sparse(s.clone()).bytes();
+    let dense_bytes = 200 * 2000 * std::mem::size_of::<f64>();
+    assert!(
+        sparse_bytes * 20 < dense_bytes,
+        "CSR {sparse_bytes} B vs dense {dense_bytes} B"
+    );
+    // and round-trips exactly
+    assert_eq!(CsrMat::from_dense(&s.to_dense()), s);
+}
