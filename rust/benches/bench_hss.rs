@@ -251,6 +251,7 @@ fn main() {
         bias: 0.1,
         kernel,
         c: 1.0,
+        labels: hss_svm::data::DEFAULT_LABEL_PAIR,
     };
     let model_d = mk_model(xd.select_rows(&sv_idx));
     let model_s = mk_model(xs.select_rows(&sv_idx));

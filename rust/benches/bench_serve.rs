@@ -1,0 +1,237 @@
+//! Serving throughput/latency benchmark: an in-process load generator
+//! (K TCP connections × M LIBSVM lines each) against `server::Server`,
+//! reporting lines/s and server-side p50/p99 enqueue→response latency,
+//! plus the cross-connection batching speedup (default tile size vs a
+//! forced tile of 1). Every response is asserted bitwise-equal to the
+//! offline prediction path, so the bench doubles as a correctness
+//! smoke under real concurrency.
+//!
+//! Flags (CI uses all three — see `.github/workflows/ci.yml`):
+//!   --smoke              reduced line counts for PR gating
+//!   --json <path>        write the headline metrics as JSON (artifact)
+//!   --baseline <path>    TOML (key = value) with the committed speedup
+//!                        floors; exit nonzero on a >25% regression
+
+use hss_svm::config::Config;
+use hss_svm::data::{libsvm, DEFAULT_LABEL_PAIR};
+use hss_svm::kernel::Kernel;
+use hss_svm::linalg::Mat;
+use hss_svm::serve;
+use hss_svm::server::{ModelRegistry, Server, ServerConfig};
+use hss_svm::svm::{predict, SvmModel};
+use hss_svm::util::prng::Rng;
+use hss_svm::util::threadpool;
+use hss_svm::util::timer::Timer;
+use std::io::{BufRead, BufReader, Cursor, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+const DIM: usize = 24; // < 32: Repr::Auto stays dense on every path
+const CONNS: usize = 8;
+
+struct Opts {
+    smoke: bool,
+    json: Option<String>,
+    baseline: Option<String>,
+}
+
+fn parse_opts() -> Opts {
+    let mut opts = Opts { smoke: false, json: None, baseline: None };
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--smoke" => opts.smoke = true,
+            "--json" => opts.json = args.next(),
+            "--baseline" => opts.baseline = args.next(),
+            other => eprintln!("[serve] ignoring unknown flag {other:?}"),
+        }
+    }
+    opts
+}
+
+/// Cargo runs bench binaries with cwd = the package dir (`rust/`);
+/// resolve relative paths against the repository root.
+fn from_repo_root(p: &str) -> std::path::PathBuf {
+    let path = std::path::Path::new(p);
+    if path.is_absolute() {
+        path.to_path_buf()
+    } else {
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join(path)
+    }
+}
+
+fn toy_model(rng: &mut Rng, n_sv: usize) -> SvmModel {
+    SvmModel {
+        sv: Mat::gauss(n_sv, DIM, rng).into(),
+        alpha_y: (0..n_sv).map(|_| rng.gauss()).collect(),
+        bias: rng.gauss(),
+        kernel: Kernel::Gaussian { h: 0.9 },
+        c: 1.0,
+        labels: DEFAULT_LABEL_PAIR,
+    }
+}
+
+fn feature_line(rng: &mut Rng) -> String {
+    let a = 1 + rng.below(DIM / 2);
+    // b stays strictly below the fixed third index DIM (ascending,
+    // duplicate-free — libsvm's contract)
+    let b = a + 1 + rng.below(DIM - a - 1);
+    format!("{a}:{:.3} {b}:{:.3} {DIM}:{:.3}", rng.gauss(), rng.gauss(), rng.gauss())
+}
+
+fn offline(model: &SvmModel, lines: &[String]) -> Vec<String> {
+    let (x, _) = libsvm::read_features(Cursor::new(lines.join("\n")), Some(DIM)).unwrap();
+    predict::decision_function(model, &x, 1)
+        .into_iter()
+        .map(|v| serve::format_prediction(model, v))
+        .collect()
+}
+
+/// Drive K connections × M lines; returns (lines/s, p50_us, p99_us).
+fn run_load(
+    model: &SvmModel,
+    threads: usize,
+    batch_max: usize,
+    lines_per_conn: usize,
+    workloads: &[(Vec<String>, Vec<String>)],
+) -> (f64, f64, f64) {
+    let cfg = ServerConfig {
+        batch_max,
+        batch_wait: Duration::from_millis(2),
+        // the load generator blasts everything up front; sizing the
+        // queue to the workload keeps backpressure out of the measurement
+        max_inflight: CONNS * lines_per_conn + 1,
+        threads,
+        ..Default::default()
+    };
+    let server =
+        Server::bind("127.0.0.1:0", ModelRegistry::single(model.clone()), cfg).expect("bind");
+    let handle = server.handle();
+    let jh = std::thread::spawn(move || server.run());
+
+    let t = Timer::start();
+    std::thread::scope(|s| {
+        for (lines, want) in workloads {
+            let addr = handle.local_addr();
+            s.spawn(move || {
+                let stream = TcpStream::connect(addr).expect("connect");
+                let mut r = BufReader::new(stream.try_clone().expect("clone"));
+                let mut w = stream;
+                for l in lines {
+                    writeln!(w, "{l}").expect("send");
+                }
+                let mut got = String::new();
+                for (i, want_line) in want.iter().enumerate() {
+                    got.clear();
+                    assert!(r.read_line(&mut got).expect("read") > 0, "EOF at line {i}");
+                    assert_eq!(
+                        got.trim_end(),
+                        want_line,
+                        "line {i}: served != offline (batch_max={batch_max})"
+                    );
+                }
+            });
+        }
+    });
+    let secs = t.secs();
+
+    let stats = handle.stats_line();
+    let p50 = parse_stat(&stats, "p50_us=");
+    let p99 = parse_stat(&stats, "p99_us=");
+    handle.shutdown();
+    jh.join().unwrap().expect("server run");
+    let total = (CONNS * lines_per_conn) as f64;
+    (total / secs.max(1e-9), p50, p99)
+}
+
+fn parse_stat(stats: &str, key: &str) -> f64 {
+    stats
+        .split_ascii_whitespace()
+        .find_map(|kv| kv.strip_prefix(key))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or_else(|| panic!("stats line missing {key:?}: {stats}"))
+}
+
+fn main() {
+    let opts = parse_opts();
+    let threads = threadpool::default_threads();
+    let lines_per_conn = if opts.smoke { 400 } else { 2000 };
+    let mut rng = Rng::new(17);
+    let model = toy_model(&mut rng, 300);
+    println!(
+        "[serve] threads = {threads}, smoke = {}, {CONNS} connections x {lines_per_conn} lines, \
+         model {} SVs x dim {DIM}",
+        opts.smoke,
+        model.n_sv()
+    );
+
+    // per-connection workloads + offline (cmd_predict-path) expectations
+    let workloads: Vec<(Vec<String>, Vec<String>)> = (0..CONNS)
+        .map(|c| {
+            let mut rng = Rng::new(1000 + c as u64);
+            let lines: Vec<String> = (0..lines_per_conn).map(|_| feature_line(&mut rng)).collect();
+            let want = offline(&model, &lines);
+            (lines, want)
+        })
+        .collect();
+
+    // batched: cross-connection tiles at the default size
+    let (batched_lps, p50, p99) =
+        run_load(&model, threads, serve::BATCH, lines_per_conn, &workloads);
+    println!(
+        "[serve] batched   (tile {}): {:>9.0} lines/s   p50 {p50:.0} us   p99 {p99:.0} us",
+        serve::BATCH,
+        batched_lps
+    );
+
+    // unbatched: tile of 1 — what per-line dispatch would cost
+    let (unbatched_lps, up50, up99) = run_load(&model, threads, 1, lines_per_conn, &workloads);
+    println!(
+        "[serve] unbatched (tile   1): {:>9.0} lines/s   p50 {up50:.0} us   p99 {up99:.0} us",
+        unbatched_lps
+    );
+
+    let serve_batch_speedup = batched_lps / unbatched_lps.max(1e-9);
+    println!("[serve] cross-connection batching speedup: {serve_batch_speedup:.2}x");
+
+    if let Some(path) = &opts.json {
+        let mut json = String::from("{\n");
+        json.push_str(&format!("  \"smoke\": {},\n", opts.smoke));
+        json.push_str(&format!("  \"threads\": {threads},\n"));
+        json.push_str(&format!("  \"connections\": {CONNS},\n"));
+        json.push_str(&format!("  \"lines_per_conn\": {lines_per_conn},\n"));
+        json.push_str(&format!("  \"n_sv\": {},\n", model.n_sv()));
+        json.push_str(&format!("  \"dim\": {DIM},\n"));
+        json.push_str(&format!("  \"batched_lines_per_sec\": {batched_lps:.1},\n"));
+        json.push_str(&format!("  \"unbatched_lines_per_sec\": {unbatched_lps:.1},\n"));
+        json.push_str(&format!("  \"serve_batch_speedup\": {serve_batch_speedup:.4},\n"));
+        json.push_str(&format!("  \"p50_us\": {p50:.1},\n"));
+        json.push_str(&format!("  \"p99_us\": {p99:.1}\n"));
+        json.push_str("}\n");
+        let out = from_repo_root(path);
+        std::fs::write(&out, json).expect("write bench JSON");
+        println!("[serve] wrote {}", out.display());
+    }
+
+    if let Some(path) = &opts.baseline {
+        let base = Config::load(from_repo_root(path)).expect("read bench baseline");
+        // a typoed/missing key must fail loudly, not quietly weaken the gate
+        let floor = 0.75
+            * base
+                .get("", "serve_batch_speedup")
+                .and_then(|v| v.as_f64())
+                .unwrap_or_else(|| {
+                    panic!("baseline {path} is missing numeric key \"serve_batch_speedup\"")
+                });
+        println!(
+            "[serve] baseline gate: batching speedup {serve_batch_speedup:.2}x (floor {floor:.2}x)"
+        );
+        if serve_batch_speedup < floor {
+            eprintln!(
+                "[serve] REGRESSION: cross-connection batching speedup \
+                 {serve_batch_speedup:.2}x fell >25% below the committed baseline"
+            );
+            std::process::exit(1);
+        }
+    }
+}

@@ -57,7 +57,7 @@ pub fn train_dense_admm(
         let lin: f64 = out.z.iter().sum();
         0.5 * quad - lin
     };
-    Ok((SvmModel { sv, alpha_y, bias, kernel, c }, obj))
+    Ok((SvmModel { sv, alpha_y, bias, kernel, c, labels: ds.labels }, obj))
 }
 
 #[cfg(test)]

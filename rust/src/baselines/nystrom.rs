@@ -136,7 +136,7 @@ pub fn train_nystrom(
     let sv_idx: Vec<usize> = (0..n).filter(|&i| out.z[i] > sv_tol).collect();
     let sv = ds.x.select_rows(&sv_idx);
     let alpha_y: Vec<f64> = sv_idx.iter().map(|&i| zy[i]).collect();
-    Ok((crate::svm::SvmModel { sv, alpha_y, bias, kernel, c }, mem))
+    Ok((crate::svm::SvmModel { sv, alpha_y, bias, kernel, c, labels: ds.labels }, mem))
 }
 
 #[cfg(test)]

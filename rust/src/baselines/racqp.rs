@@ -193,7 +193,7 @@ pub fn train_racqp(
         acc / margin.len() as f64
     };
 
-    let model = SvmModel { sv, alpha_y, bias, kernel, c };
+    let model = SvmModel { sv, alpha_y, bias, kernel, c, labels: ds.labels };
     let stats = RacqpStats {
         sweeps: params.sweeps,
         kernel_evals,

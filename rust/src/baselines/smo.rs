@@ -289,7 +289,7 @@ pub fn train_smo(
     let sv_idx: Vec<usize> = (0..n).filter(|&i| alpha[i] > 1e-12).collect();
     let sv = ds.x.select_rows(&sv_idx);
     let alpha_y: Vec<f64> = sv_idx.iter().map(|&i| alpha[i] * y[i]).collect();
-    let model = SvmModel { sv, alpha_y, bias, kernel, c };
+    let model = SvmModel { sv, alpha_y, bias, kernel, c, labels: ds.labels };
     let stats = SmoStats {
         iterations: iters,
         kernel_rows_computed: cache.misses,

@@ -8,6 +8,10 @@
 
 use crate::data::sparse::Points;
 
+/// The implied original label pair when none was recorded: `y = −1`
+/// came from a literal `−1`, `y = +1` from a literal `+1`.
+pub const DEFAULT_LABEL_PAIR: [f64; 2] = [-1.0, 1.0];
+
 /// A labelled binary-classification dataset.
 #[derive(Clone)]
 pub struct Dataset {
@@ -17,6 +21,12 @@ pub struct Dataset {
     pub y: Vec<f64>,
     /// Human-readable name (dataset table key).
     pub name: String,
+    /// Original label encoding `[negative, positive]` before the ±1
+    /// normalization (e.g. `[1, 2]` for a {1,2}-coded LIBSVM file).
+    /// Carried into trained models so predictions map back to the
+    /// dataset's own labels; [`DEFAULT_LABEL_PAIR`] when the input was
+    /// already ±1 (or synthetic).
+    pub labels: [f64; 2],
 }
 
 impl Dataset {
@@ -27,7 +37,13 @@ impl Dataset {
             y.iter().all(|&v| v == 1.0 || v == -1.0),
             "labels must be in {{-1, +1}}"
         );
-        Dataset { x, y, name: name.into() }
+        Dataset { x, y, name: name.into(), labels: DEFAULT_LABEL_PAIR }
+    }
+
+    /// Record the original (pre-normalization) label pair.
+    pub fn with_labels(mut self, labels: [f64; 2]) -> Self {
+        self.labels = labels;
+        self
     }
 
     /// Number of points.
@@ -67,6 +83,7 @@ impl Dataset {
             x: self.x.select_rows(idx),
             y: idx.iter().map(|&i| self.y[i]).collect(),
             name: self.name.clone(),
+            labels: self.labels,
         }
     }
 
@@ -166,5 +183,16 @@ mod tests {
     #[should_panic(expected = "labels must be")]
     fn rejects_bad_labels() {
         Dataset::new("bad", Mat::zeros(1, 1), vec![0.5]);
+    }
+
+    #[test]
+    fn label_pair_defaults_and_propagates() {
+        let d = tiny();
+        assert_eq!(d.labels, DEFAULT_LABEL_PAIR);
+        let d = d.with_labels([1.0, 2.0]);
+        assert_eq!(d.select(&[0, 2]).labels, [1.0, 2.0]);
+        let (tr, te) = d.split_at(2);
+        assert_eq!(tr.labels, [1.0, 2.0]);
+        assert_eq!(te.labels, [1.0, 2.0]);
     }
 }

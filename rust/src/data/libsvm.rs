@@ -56,20 +56,28 @@ struct Parsed {
     indices: Vec<usize>,
     vals: Vec<f64>,
     max_idx: usize,
+    /// 1-based (offset-adjusted) number of the line where `max_idx` was
+    /// seen — so a forced-dimension overflow names the offending line.
+    max_idx_line: usize,
 }
 
 /// Parse LIBSVM lines into CSR arrays without ever building a dense
 /// matrix. `allow_bare` additionally accepts label-less lines whose
 /// first token is an `index:value` pair (label recorded as NaN).
-fn parse_stream(r: impl BufRead, allow_bare: bool) -> Result<Parsed> {
+/// `line_offset` shifts every reported line number: serving paths that
+/// re-parse a single line `n` of a longer stream pass `n − 1` so errors
+/// carry the correct global number natively.
+fn parse_stream(r: impl BufRead, allow_bare: bool, line_offset: usize) -> Result<Parsed> {
     let mut p = Parsed {
         labels: Vec::new(),
         indptr: vec![0],
         indices: Vec::new(),
         vals: Vec::new(),
         max_idx: 0,
+        max_idx_line: 0,
     };
-    for (lineno, line) in r.lines().enumerate() {
+    for (rel, line) in r.lines().enumerate() {
+        let lineno = rel + line_offset;
         let line = line.context("I/O error reading libsvm data")?;
         let line = line.trim();
         if line.is_empty() || line.starts_with('#') {
@@ -117,7 +125,10 @@ fn parse_stream(r: impl BufRead, allow_bare: bool) -> Result<Parsed> {
             if !val.is_finite() {
                 bail!("line {}: non-finite value {v_str:?} for index {idx}", lineno + 1);
             }
-            p.max_idx = p.max_idx.max(idx);
+            if idx > p.max_idx {
+                p.max_idx = idx;
+                p.max_idx_line = lineno + 1;
+            }
             if val != 0.0 {
                 p.indices.push(idx - 1);
                 p.vals.push(val);
@@ -130,15 +141,19 @@ fn parse_stream(r: impl BufRead, allow_bare: bool) -> Result<Parsed> {
 }
 
 /// Resolve the feature dimension against a forced value.
-fn resolve_dim(max_idx: usize, dim: Option<usize>) -> Result<usize> {
+fn resolve_dim(parsed: &Parsed, dim: Option<usize>) -> Result<usize> {
     match dim {
         Some(d) => {
-            if max_idx > d {
-                bail!("feature index {max_idx} exceeds forced dimension {d}");
+            if parsed.max_idx > d {
+                bail!(
+                    "line {}: feature index {} exceeds forced dimension {d}",
+                    parsed.max_idx_line,
+                    parsed.max_idx
+                );
             }
             Ok(d)
         }
-        None => Ok(max_idx),
+        None => Ok(parsed.max_idx),
     }
 }
 
@@ -173,8 +188,8 @@ pub fn read(r: impl BufRead, dim: Option<usize>) -> Result<Dataset> {
 
 /// [`read`] with an explicit representation request.
 pub fn read_with(r: impl BufRead, dim: Option<usize>, repr: Repr) -> Result<Dataset> {
-    let parsed = parse_stream(r, false)?;
-    let dim = resolve_dim(parsed.max_idx, dim)?;
+    let parsed = parse_stream(r, false, 0)?;
+    let dim = resolve_dim(&parsed, dim)?;
 
     // Map labels to ±1. Convention (applies to every two-label
     // encoding): {−1, +1} is preserved verbatim; otherwise the
@@ -184,9 +199,16 @@ pub fn read_with(r: impl BufRead, dim: Option<usize>, repr: Repr) -> Result<Data
     // *higher* one — the polarity now matches across all encodings.)
     let distinct: std::collections::BTreeSet<i64> =
         parsed.labels.iter().map(|&l| l.round() as i64).collect();
+    // the identity branch requires the raw labels to be LITERALLY ±1:
+    // classes are formed by rounding, so e.g. {−0.5, 0.5} also lands on
+    // distinct == {−1, 1} but must go through the greater-maps-to-+1
+    // rule (the identity map would hand Dataset::new non-±1 labels)
+    let verbatim_pm1 = !parsed.labels.is_empty()
+        && parsed.labels.iter().all(|&l| l == 1.0 || l == -1.0)
+        && distinct.len() == 2;
     let to_pm1: Box<dyn Fn(f64) -> f64> = if distinct.is_empty() {
         Box::new(|l| l) // empty file: nothing to map
-    } else if distinct == [(-1), 1].into_iter().collect() {
+    } else if verbatim_pm1 {
         Box::new(|l| l)
     } else if distinct.len() == 1 {
         // single-class file: positive labels ↦ +1, non-positive ↦ −1 —
@@ -201,9 +223,31 @@ pub fn read_with(r: impl BufRead, dim: Option<usize>, repr: Repr) -> Result<Data
         bail!("not a binary dataset: labels {distinct:?}");
     };
 
+    // record the original encoding so models answer in it: for any
+    // two-label file other than literal {−1,+1}, [smaller, greater] —
+    // the same orientation as the ±1 mapping above. Use the first RAW
+    // value of each rounded class, so non-integer encodings (e.g.
+    // {0.5, 1.5}, {−0.5, 0.5}) round-trip verbatim instead of as their
+    // rounded stand-ins.
+    let label_pair = if distinct.len() == 2 && !verbatim_pm1 {
+        let raw_of = |cls: i64| {
+            parsed
+                .labels
+                .iter()
+                .copied()
+                .find(|l| l.round() as i64 == cls)
+                .unwrap_or(cls as f64)
+        };
+        let mut it = distinct.iter();
+        let (lo, hi) = (*it.next().expect("two labels"), *it.next().expect("two labels"));
+        [raw_of(lo), raw_of(hi)]
+    } else {
+        crate::data::dataset::DEFAULT_LABEL_PAIR
+    };
+
     let (x, labels) = build_points(parsed, dim, repr);
     let y: Vec<f64> = labels.iter().map(|&l| to_pm1(l)).collect();
-    Ok(Dataset::new("libsvm", x, y))
+    Ok(Dataset::new("libsvm", x, y).with_labels(label_pair))
 }
 
 /// Label-agnostic parse for the predict/serve paths: returns the feature
@@ -212,7 +256,22 @@ pub fn read_with(r: impl BufRead, dim: Option<usize>, repr: Repr) -> Result<Data
 /// a serving batch mixing `±1`-labeled lines with unlabeled ones parses
 /// cleanly. Index/value validation is identical to [`read`].
 pub fn read_features(r: impl BufRead, dim: Option<usize>) -> Result<(Points, Vec<f64>)> {
-    read_features_with(r, dim, Repr::Auto)
+    read_features_offset(r, dim, 0)
+}
+
+/// [`read_features`] with a line-number offset: every error reports
+/// `line (k + line_offset)` for the k-th line of `r`. The serve paths
+/// re-parse a single failing request line `n` with offset `n − 1`, so
+/// the error carries the client-visible line number natively (no
+/// post-hoc message rewriting).
+pub fn read_features_offset(
+    r: impl BufRead,
+    dim: Option<usize>,
+    line_offset: usize,
+) -> Result<(Points, Vec<f64>)> {
+    let parsed = parse_stream(r, true, line_offset)?;
+    let dim = resolve_dim(&parsed, dim)?;
+    Ok(build_points(parsed, dim, Repr::Auto))
 }
 
 /// [`read_features`] with an explicit representation request.
@@ -221,8 +280,8 @@ pub fn read_features_with(
     dim: Option<usize>,
     repr: Repr,
 ) -> Result<(Points, Vec<f64>)> {
-    let parsed = parse_stream(r, true)?;
-    let dim = resolve_dim(parsed.max_idx, dim)?;
+    let parsed = parse_stream(r, true, 0)?;
+    let dim = resolve_dim(&parsed, dim)?;
     Ok(build_points(parsed, dim, repr))
 }
 
@@ -445,6 +504,48 @@ mod tests {
         assert!(labels[3].is_nan());
         assert_eq!(x.get(3, 1), 0.25);
         assert_eq!(x.get(3, 0), 0.0);
+    }
+
+    #[test]
+    fn records_original_label_pair() {
+        use crate::data::dataset::DEFAULT_LABEL_PAIR;
+        let ds = read(Cursor::new("1 1:1\n2 1:2\n"), None).unwrap();
+        assert_eq!(ds.labels, [1.0, 2.0]);
+        let ds = read(Cursor::new("0 1:1\n1 1:2\n"), None).unwrap();
+        assert_eq!(ds.labels, [0.0, 1.0]);
+        // non-integer encodings keep their raw values (classes are
+        // formed by rounding, but the recorded pair is verbatim)
+        let ds = read(Cursor::new("1.5 1:1\n0.5 1:2\n"), None).unwrap();
+        assert_eq!(ds.labels, [0.5, 1.5]);
+        assert_eq!(ds.y, vec![1.0, -1.0]);
+        // {−0.5, 0.5} rounds to {−1, 1} but is NOT the verbatim ±1
+        // encoding: y still normalizes (no panic) and the raw pair is
+        // recorded
+        let ds = read(Cursor::new("-0.5 1:1\n0.5 1:2\n"), None).unwrap();
+        assert_eq!(ds.y, vec![-1.0, 1.0]);
+        assert_eq!(ds.labels, [-0.5, 0.5]);
+        // ±1, single-class and empty files keep the default pair
+        assert_eq!(read(Cursor::new("-1 1:1\n+1 1:2\n"), None).unwrap().labels, DEFAULT_LABEL_PAIR);
+        assert_eq!(read(Cursor::new("2 1:1\n"), None).unwrap().labels, DEFAULT_LABEL_PAIR);
+        assert_eq!(read(Cursor::new(""), None).unwrap().labels, DEFAULT_LABEL_PAIR);
+    }
+
+    #[test]
+    fn line_offset_shifts_error_numbers() {
+        // the serve per-line re-parse case: line 42 of the input stream,
+        // parsed alone with offset 41, reports "line 42" natively
+        let e = read_features_offset(Cursor::new("+1 3:1 2:1\n"), None, 41);
+        let msg = format!("{:#}", e.unwrap_err());
+        assert!(msg.contains("line 42"), "{msg}");
+        let e = read_features_offset(Cursor::new("1:abc\n"), None, 41);
+        assert!(format!("{:#}", e.unwrap_err()).contains("line 42"));
+        // forced-dimension overflow also names its line
+        let e = read_features_offset(Cursor::new("9:1.0\n"), Some(3), 41);
+        let msg = format!("{:#}", e.unwrap_err());
+        assert!(msg.contains("line 42") && msg.contains("exceeds"), "{msg}");
+        // offset 0 keeps the historical numbering
+        let e = read_features(Cursor::new("1:1\n0:1\n"), None);
+        assert!(format!("{:#}", e.unwrap_err()).contains("line 2"));
     }
 
     #[test]

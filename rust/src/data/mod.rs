@@ -7,5 +7,5 @@ pub mod scale;
 pub mod sparse;
 pub mod synth;
 
-pub use dataset::Dataset;
+pub use dataset::{Dataset, DEFAULT_LABEL_PAIR};
 pub use sparse::{CsrMat, Points};

@@ -21,5 +21,6 @@ pub mod kernel;
 pub mod linalg;
 pub mod runtime;
 pub mod serve;
+pub mod server;
 pub mod svm;
 pub mod util;

@@ -70,10 +70,21 @@ USAGE:
                      [--save-model m.model] [--sparse|--dense]
   hss-svm predict    --model m.model --test-file g.libsvm [--out pred.txt]
                      [--pjrt] [--sparse|--dense]
-  hss-svm serve      --model m.model     # LIBSVM lines on stdin ->
+  hss-svm serve      --model m.model [--stdin]
+                                         # LIBSVM lines on stdin ->
                                          # "<label> <decision>" per line;
                                          # labeled, 0-labeled and bare
                                          # feature lines all accepted
+  hss-svm serve      --listen HOST:PORT --model m.model
+                     [--models name=a.model,name2=b.model]
+                     [--batch-wait-ms N] [--max-inflight N]
+                     [--batch-max N] [--threads N]
+                                         # concurrent TCP server: same
+                                         # line protocol per connection,
+                                         # requests micro-batched across
+                                         # connections; admin commands
+                                         # MODEL <name> | RELOAD [name] |
+                                         # STATS | SHUTDOWN | QUIT
   hss-svm grid       --dataset <name> [--scale F] [--h 0.1,1,10]
                      [--c 0.1,1,10] [--hss low|high] [--threads N]
   hss-svm experiment --id table1|table2|table3|table4|table5|fig1|fig2|reuse|all
@@ -190,8 +201,11 @@ fn cmd_train(args: &Args) -> Result<()> {
     let acc = if args.has("pjrt") {
         let rt = PjrtRuntime::load(PjrtRuntime::default_dir())
             .context("--pjrt requires artifacts (run `make artifacts`)")?;
-        let pred = hss_svm::runtime::predict_pjrt(&rt, &model, &test.x)?;
-        let hits = pred.iter().zip(test.y.iter()).filter(|(p, y)| p == y).count();
+        let f = hss_svm::runtime::decision_function_pjrt(&rt, &model, &test.x)?;
+        // decision signs vs ±1 labels: independent of the model's
+        // original label pair (like predict::accuracy)
+        let hits =
+            f.iter().zip(test.y.iter()).filter(|(f, y)| (**f >= 0.0) == (**y > 0.0)).count();
         hits as f64 / test.len().max(1) as f64
     } else {
         predict::accuracy(&model, &test, threads)
@@ -230,20 +244,22 @@ fn cmd_predict(args: &Args) -> Result<()> {
     let (x, raw_labels) =
         libsvm::read_features_file(test_path, Some(model.sv.cols()), repr_from(args)?)?;
     let t = Timer::start();
-    let (pred, path_label) = if args.has("pjrt") {
+    let (f, path_label) = if args.has("pjrt") {
         let rt = PjrtRuntime::load(PjrtRuntime::default_dir())
             .context("--pjrt requires artifacts (run `make artifacts`)")?;
-        (hss_svm::runtime::predict_pjrt(&rt, &model, &x)?, "PJRT")
+        (hss_svm::runtime::decision_function_pjrt(&rt, &model, &x)?, "PJRT")
     } else {
-        (predict::predict(&model, &x, threads), "native")
+        (predict::decision_function(&model, &x, threads), "native")
     };
     let secs = t.secs();
     let labels = libsvm::normalize_eval_labels(&raw_labels);
     let labeled = labels.iter().filter(|l| l.is_finite()).count();
-    let hits = pred
+    // accuracy over decision signs, so models trained on e.g. {1,2}
+    // data score correctly against the normalized ±1 labels
+    let hits = f
         .iter()
         .zip(labels.iter())
-        .filter(|(p, l)| l.is_finite() && **p == **l)
+        .filter(|(f, l)| l.is_finite() && (**f >= 0.0) == (**l > 0.0))
         .count();
     if labeled > 0 {
         println!(
@@ -260,16 +276,19 @@ fn cmd_predict(args: &Args) -> Result<()> {
     }
     if let Some(out) = args.str_opt("out") {
         use std::io::Write;
-        let mut f = std::io::BufWriter::new(std::fs::File::create(out)?);
-        for p in &pred {
-            writeln!(f, "{}", if *p > 0.0 { "+1" } else { "-1" })?;
+        let mut w = std::io::BufWriter::new(std::fs::File::create(out)?);
+        for v in &f {
+            // the model's original label pair (±1 unless the training
+            // data used another encoding, e.g. {1,2})
+            writeln!(w, "{}", model.label_text(*v))?;
         }
         println!("predictions written to {out}");
     }
     Ok(())
 }
 
-/// Request loop: LIBSVM-format feature lines on stdin (labeled,
+/// Serving front-ends. Default (and `--stdin`): the single-stream
+/// request loop — LIBSVM-format feature lines on stdin (labeled,
 /// 0-labeled or bare), one "<predicted label> <decision value>" per line
 /// on stdout. Requests are micro-batched per read for tile efficiency;
 /// this is the L3 "serving" mode — Python never runs here, prediction
@@ -277,7 +296,17 @@ fn cmd_predict(args: &Args) -> Result<()> {
 /// in [`hss_svm::serve`]: batches parse label-agnostically (a mix of ±1
 /// and unlabeled lines no longer kills the server) and a malformed line
 /// fails only its own batch, reported per-line on stderr.
+///
+/// With `--listen HOST:PORT`: the concurrent TCP server
+/// ([`hss_svm::server`]) — same per-connection line protocol and batch
+/// semantics, requests micro-batched **across** connections, plus a
+/// model registry (`--models name=path,...`, `MODEL`/`RELOAD` admin
+/// commands, mtime hot reload), `STATS`, backpressure and graceful
+/// `SHUTDOWN`.
 fn cmd_serve(args: &Args) -> Result<()> {
+    if args.str_opt("listen").is_some() {
+        return cmd_serve_tcp(args);
+    }
     let threads = args.usize_or("threads", threadpool::default_threads())?;
     let model_path = args.str_opt("model").context("--model is required")?;
     let model = hss_svm::svm::persist::load(model_path)?;
@@ -304,9 +333,62 @@ fn cmd_serve(args: &Args) -> Result<()> {
         threads,
     )?;
     eprintln!(
-        "served {} predictions in {} batches ({} lines, {} batches dropped)",
-        stats.predicted, stats.batches, stats.lines, stats.failed_batches
+        "served {} predictions in {} batches ({} lines, {} skipped, {} batches dropped)",
+        stats.predicted, stats.batches, stats.lines, stats.skipped, stats.failed_batches
     );
+    Ok(())
+}
+
+/// TCP serving mode (`serve --listen`): bind, build the model registry
+/// and run until SHUTDOWN. CLI flags map onto
+/// [`hss_svm::server::ServerConfig`] 1:1.
+fn cmd_serve_tcp(args: &Args) -> Result<()> {
+    use hss_svm::server::{ModelRegistry, Server, ServerConfig};
+    let addr = args.str_opt("listen").context("--listen is required")?;
+    let threads = args.usize_or("threads", threadpool::default_threads())?;
+    let mut entries: Vec<(String, PathBuf)> = Vec::new();
+    if let Some(p) = args.str_opt("model") {
+        entries.push(("default".to_string(), PathBuf::from(p)));
+    }
+    if let Some(list) = args.str_opt("models") {
+        for part in list.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (name, path) = part
+                .split_once('=')
+                .with_context(|| format!("--models entries are name=path, got {part:?}"))?;
+            entries.push((name.trim().to_string(), PathBuf::from(path.trim())));
+        }
+    }
+    if entries.is_empty() {
+        bail!("serve --listen needs --model <path> and/or --models name=path,...");
+    }
+    let registry = ModelRegistry::from_paths(&entries)?;
+    let defaults = ServerConfig::default();
+    let cfg = ServerConfig {
+        batch_max: args.usize_or("batch-max", defaults.batch_max)?,
+        batch_wait: std::time::Duration::from_millis(
+            args.usize_or("batch-wait-ms", defaults.batch_wait.as_millis() as usize)? as u64,
+        ),
+        max_inflight: args.usize_or("max-inflight", defaults.max_inflight)?,
+        threads,
+        ..defaults
+    };
+    let server = Server::bind(addr, registry, cfg)?;
+    let handle = server.handle();
+    let names: Vec<String> = entries.iter().map(|(n, _)| n.clone()).collect();
+    eprintln!(
+        "serving on {} (models: {}, default {:?}, {threads} threads); \
+         LIBSVM lines per connection, admin: MODEL <name> | RELOAD [name] | \
+         STATS | SHUTDOWN | QUIT",
+        server.local_addr(),
+        names.join(", "),
+        names[0],
+    );
+    server.run()?;
+    eprintln!("{}", handle.summary());
     Ok(())
 }
 

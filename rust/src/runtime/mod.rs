@@ -58,10 +58,11 @@ pub fn decision_function_pjrt(rt: &PjrtRuntime, model: &SvmModel, x: &Points) ->
     Ok(out)
 }
 
-/// Predicted ±1 labels via the PJRT path.
+/// Predicted labels via the PJRT path (mapped through the model's
+/// original label pair, like [`crate::svm::predict::predict`]).
 pub fn predict_pjrt(rt: &PjrtRuntime, model: &SvmModel, x: &Points) -> Result<Vec<f64>> {
     Ok(decision_function_pjrt(rt, model, x)?
         .into_iter()
-        .map(|f| if f >= 0.0 { 1.0 } else { -1.0 })
+        .map(|f| model.label_of(f))
         .collect())
 }

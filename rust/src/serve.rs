@@ -1,24 +1,32 @@
-//! Streaming prediction server (the `hss-svm serve` request loop),
+//! Streaming prediction core (the `hss-svm serve` request loop),
 //! extracted from the binary so the batching, label handling and error
-//! paths are unit-testable.
+//! paths are unit-testable — and shared verbatim by the concurrent TCP
+//! server in [`crate::server`], so both front-ends have identical
+//! batch-parse / label / error semantics.
 //!
 //! Protocol: LIBSVM-format lines on the input, one
 //! `"<predicted label> <decision value>"` line per request on the
 //! output. Lines may be labeled (`+1 1:0.5 ...` — the label is ignored),
 //! carry the `0` placeholder label, or be bare feature lists
 //! (`1:0.5 3:2 ...`). Requests are micro-batched ([`BATCH`] lines, one
-//! prediction tile) for tile efficiency.
+//! prediction tile) for tile efficiency. Predicted labels come from the
+//! model's original label pair ([`SvmModel::label_text`]): `±1` for
+//! ±1-coded training data, the original encoding (e.g. `1`/`2`)
+//! otherwise.
 //!
 //! Parsing goes through [`libsvm::read_features`], which skips binary-
 //! label normalization entirely — a batch mixing `±1` labels with
 //! unlabeled lines used to produce three distinct labels and trip
 //! `libsvm::read`'s "not a binary dataset" bail, killing the server on
-//! valid input. A malformed line now fails only its own batch: the batch
-//! is reparsed line-by-line to report every offending line (with its
-//! global input line number) on the error stream, no predictions are
-//! emitted for that batch, and the loop continues with the next one.
+//! valid input. A malformed line fails only its own batch: the batch
+//! is reparsed line-by-line ([`parse_batch`]) to report every offending
+//! line — with its global input line number, carried natively by
+//! [`libsvm::read_features_offset`] — on the error stream, no
+//! predictions are emitted for that batch, and the loop continues with
+//! the next one.
 
-use crate::data::libsvm;
+use crate::data::libsvm::{self, Repr};
+use crate::data::sparse::Points;
 use crate::runtime::PjrtRuntime;
 use crate::svm::{predict, SvmModel};
 use anyhow::{Context, Result};
@@ -32,12 +40,87 @@ pub const BATCH: usize = 128;
 pub struct ServeStats {
     /// Micro-batches attempted.
     pub batches: usize,
-    /// Non-empty input lines consumed.
+    /// Request lines consumed (blank and `#`-comment lines are not
+    /// requests — they are counted in `skipped`).
     pub lines: usize,
+    /// Blank / comment input lines skipped.
+    pub skipped: usize,
     /// Predictions emitted.
     pub predicted: usize,
     /// Batches dropped because of malformed lines.
     pub failed_batches: usize,
+}
+
+/// Parse one micro-batch of request lines (`(global 1-based line
+/// number, text)`) into a feature block matching `model`'s dimension
+/// and representation.
+///
+/// The tile representation follows the MODEL, not the tile's own
+/// density: `Repr::Auto` would let the (interleaving-dependent) batch
+/// composition flip a dim ≥ 32 tile between CSR and dense — paths that
+/// agree only to ≤ 1e-12 — and perturb low-order decision bits between
+/// runs. Pinning it makes every line's decision independent of its
+/// tile, and bitwise-equal to offline `predict` under the matching
+/// `--sparse`/`--dense` choice.
+///
+/// On failure the batch is re-parsed line-by-line and every offending
+/// line is returned as `(index into the batch slice, error message)`;
+/// the message carries the line's global input number natively (the
+/// single line is parsed with [`libsvm::read_features_offset`] at
+/// offset `number − 1`), so callers never rewrite parser output.
+pub fn parse_batch(
+    lines: &[(usize, &str)],
+    model: &SvmModel,
+) -> std::result::Result<Points, Vec<(usize, String)>> {
+    let dim = model.sv.cols();
+    let repr = if model.sv.is_sparse() { Repr::Sparse } else { Repr::Dense };
+    let text = lines.iter().map(|(_, l)| *l).collect::<Vec<_>>().join("\n");
+    if let Ok((x, _labels)) =
+        libsvm::read_features_with(std::io::Cursor::new(text), Some(dim), repr)
+    {
+        return Ok(x);
+    }
+    let mut bad = Vec::new();
+    for (i, (no, l)) in lines.iter().enumerate() {
+        if let Err(e) = libsvm::read_features_offset(std::io::Cursor::new(*l), Some(dim), no - 1) {
+            bad.push((i, format!("{e:#}")));
+        }
+    }
+    if bad.is_empty() {
+        // joined parse failed but every line parses alone — should be
+        // impossible for line-oriented input; fail the batch visibly
+        bad.push((0, format!("line {}: batch failed to parse", lines[0].0)));
+    }
+    Err(bad)
+}
+
+/// Decision values for one parsed batch: the PJRT tile path when a
+/// runtime is available, with native fallback — a tile failure must not
+/// kill the server, it is reported on `err` and the batch is recomputed
+/// natively.
+pub fn batch_decisions(
+    model: &SvmModel,
+    rt: Option<&PjrtRuntime>,
+    x: &Points,
+    threads: usize,
+    err: &mut impl Write,
+) -> Result<Vec<f64>> {
+    Ok(match rt {
+        Some(rt) => match crate::runtime::decision_function_pjrt(rt, model, x) {
+            Ok(f) => f,
+            Err(e) => {
+                writeln!(err, "serve: PJRT batch failed ({e:#}); native fallback")?;
+                predict::decision_function(model, x, threads)
+            }
+        },
+        None => predict::decision_function(model, x, threads),
+    })
+}
+
+/// One response line for a decision value: `"<label> <decision>"`, the
+/// label mapped back through the model's original label pair.
+pub fn format_prediction(model: &SvmModel, v: f64) -> String {
+    format!("{} {v:.6}", model.label_text(v))
 }
 
 /// Run the request loop until EOF. Returns the counters; parse failures
@@ -50,7 +133,6 @@ pub fn serve_loop(
     mut err: impl Write,
     threads: usize,
 ) -> Result<ServeStats> {
-    let dim = model.sv.cols();
     let mut stats = ServeStats::default();
     let mut batch: Vec<(usize, String)> = Vec::new(); // (1-based line no, text)
     let mut lines = input.lines();
@@ -65,7 +147,9 @@ pub fn serve_loop(
             let line = line.context("I/O error reading serve input")?;
             lineno += 1;
             let t = line.trim();
-            if !t.is_empty() && !t.starts_with('#') {
+            if t.is_empty() || t.starts_with('#') {
+                stats.skipped += 1;
+            } else {
                 batch.push((lineno, line));
             }
             if batch.len() >= BATCH {
@@ -77,39 +161,23 @@ pub fn serve_loop(
         }
         stats.batches += 1;
         stats.lines += batch.len();
-        let text = batch.iter().map(|(_, l)| l.as_str()).collect::<Vec<_>>().join("\n");
-        match libsvm::read_features(std::io::Cursor::new(text), Some(dim)) {
-            Ok((x, _labels)) => {
-                // a PJRT tile failure must not kill the server either:
-                // fall back to the native path for this batch
-                let f = match rt {
-                    Some(rt) => match crate::runtime::decision_function_pjrt(rt, model, &x) {
-                        Ok(f) => f,
-                        Err(e) => {
-                            writeln!(err, "serve: PJRT batch failed ({e:#}); native fallback")?;
-                            predict::decision_function(model, &x, threads)
-                        }
-                    },
-                    None => predict::decision_function(model, &x, threads),
-                };
+        let refs: Vec<(usize, &str)> = batch.iter().map(|(no, l)| (*no, l.as_str())).collect();
+        match parse_batch(&refs, model) {
+            Ok(x) => {
+                let f = batch_decisions(model, rt, &x, threads, &mut err)?;
                 for v in &f {
-                    writeln!(out, "{} {v:.6}", if *v >= 0.0 { "+1" } else { "-1" })?;
+                    writeln!(out, "{}", format_prediction(model, *v))?;
                 }
                 out.flush()?;
                 stats.predicted += f.len();
             }
-            Err(_) => {
-                // fail this batch only: pinpoint every bad line with its
-                // global input line number, emit nothing, keep serving
+            Err(bad) => {
+                // fail this batch only: every bad line is reported with
+                // its global input line number, no predictions are
+                // emitted, the loop keeps serving
                 stats.failed_batches += 1;
-                for (no, l) in &batch {
-                    if let Err(e) =
-                        libsvm::read_features(std::io::Cursor::new(l.as_str()), Some(dim))
-                    {
-                        // strip the parser's batch-relative "line 1:" prefix
-                        let msg = format!("{e:#}").replace("line 1:", "").trim().to_string();
-                        writeln!(err, "serve: input line {no}: {msg} (batch dropped)")?;
-                    }
+                for (_, msg) in &bad {
+                    writeln!(err, "serve: input {msg} (batch dropped)")?;
                 }
                 err.flush()?;
             }
@@ -119,4 +187,82 @@ pub fn serve_loop(
         }
     }
     Ok(stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::DEFAULT_LABEL_PAIR;
+    use crate::kernel::Kernel;
+    use crate::linalg::Mat;
+    use crate::util::prng::Rng;
+
+    fn toy(rng: &mut Rng, dim: usize) -> SvmModel {
+        SvmModel {
+            sv: Mat::gauss(4, dim, rng).into(),
+            alpha_y: (0..4).map(|_| rng.gauss()).collect(),
+            bias: rng.gauss(),
+            kernel: Kernel::Gaussian { h: 0.8 },
+            c: 1.0,
+            labels: DEFAULT_LABEL_PAIR,
+        }
+    }
+
+    #[test]
+    fn skipped_lines_are_counted_separately() {
+        let mut rng = Rng::new(21);
+        let model = toy(&mut rng, 4);
+        let input = "# ping\n\n1:0.5\n   \n2:0.25\n# pong\n";
+        let mut out = Vec::new();
+        let stats = serve_loop(
+            &model,
+            None,
+            std::io::Cursor::new(input),
+            &mut out,
+            std::io::sink(),
+            1,
+        )
+        .unwrap();
+        assert_eq!(stats.lines, 2);
+        assert_eq!(stats.skipped, 4);
+        assert_eq!(stats.predicted, 2);
+    }
+
+    #[test]
+    fn parse_batch_attributes_errors_by_index_with_global_numbers() {
+        let mut rng = Rng::new(23);
+        let model = toy(&mut rng, 4);
+        let lines: Vec<(usize, &str)> = vec![
+            (7, "1:0.5 2:1.0"),
+            (9, "+1 2:2 2:3"), // duplicate index
+            (12, "1:abc"),     // bad value
+        ];
+        let bad = parse_batch(&lines, &model).unwrap_err();
+        assert_eq!(bad.len(), 2);
+        assert_eq!(bad[0].0, 1);
+        assert!(bad[0].1.contains("line 9"), "{}", bad[0].1);
+        assert_eq!(bad[1].0, 2);
+        assert!(bad[1].1.contains("line 12"), "{}", bad[1].1);
+        // clean batch parses to the right shape, in the MODEL's
+        // representation (dense model => dense tile, sparse => CSR)
+        let x = parse_batch(&lines[..1], &model).unwrap();
+        assert_eq!((x.rows(), x.cols()), (1, 4));
+        assert!(!x.is_sparse());
+        let sparse_model = SvmModel {
+            sv: crate::data::CsrMat::from_dense(model.sv.dense()).into(),
+            ..model.clone()
+        };
+        assert!(parse_batch(&lines[..1], &sparse_model).unwrap().is_sparse());
+    }
+
+    #[test]
+    fn format_prediction_maps_label_pairs() {
+        let mut rng = Rng::new(22);
+        let mut model = toy(&mut rng, 3);
+        assert_eq!(format_prediction(&model, 0.5), "+1 0.500000");
+        assert_eq!(format_prediction(&model, -0.5), "-1 -0.500000");
+        model.labels = [1.0, 2.0];
+        assert_eq!(format_prediction(&model, 0.5), "2 0.500000");
+        assert_eq!(format_prediction(&model, -0.5), "1 -0.500000");
+    }
 }

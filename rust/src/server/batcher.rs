@@ -1,0 +1,311 @@
+//! Cross-connection micro-batcher.
+//!
+//! Requests from every connection land in one bounded FIFO; a single
+//! batcher thread pops the longest front run that shares a model
+//! snapshot (never mixing models inside a tile) and flushes it when it
+//! reaches `batch_max` lines, when the oldest request has waited
+//! `batch_wait`, or when a different-model request is queued right
+//! behind it (waiting could not grow the run). The tile goes through
+//! the same [`serve::parse_batch`] / [`serve::format_prediction`] core
+//! as the stdin loop, decisions come from
+//! [`predict::decision_function`] on the shared `util::threadpool`
+//! workers, and responses are routed back to each request's connection
+//! through its `(seq, line)` channel — the per-connection writer
+//! restores input order.
+//!
+//! Error semantics are per **issuer**: a malformed line fails every
+//! line of *its* connection in the tile (mirroring the stdin mode's
+//! whole-batch drop), while other connections' lines are re-batched and
+//! predicted normally. Backpressure is the bounded queue: when
+//! `max_inflight` requests are already queued, `try_push` hands the
+//! request back and the reader answers that line with an overload
+//! error instead of blocking the socket.
+
+use crate::serve;
+use crate::server::registry::{LoadedModel, ModelRegistry};
+use crate::server::stats::ServerStats;
+use crate::svm::predict;
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::Sender;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// How often an idle batcher wakes up to poll model staleness.
+const IDLE_TICK: Duration = Duration::from_millis(200);
+
+/// One enqueued prediction request.
+pub struct Request {
+    /// Connection id (issuer of the line).
+    pub conn: u64,
+    /// Per-connection response sequence number (writer restores order).
+    pub seq: u64,
+    /// Per-connection 1-based input line number (error reporting).
+    pub lineno: usize,
+    /// The raw request line.
+    pub text: String,
+    /// Model snapshot pinned at enqueue time: a hot-swap after this
+    /// point does not affect this request.
+    pub model: Arc<LoadedModel>,
+    pub enqueued: Instant,
+    /// Response channel of the issuing connection.
+    pub tx: Sender<(u64, String)>,
+}
+
+pub struct Batcher {
+    queue: Mutex<VecDeque<Request>>,
+    ready: Condvar,
+    batch_max: usize,
+    batch_wait: Duration,
+    max_inflight: usize,
+    draining: AtomicBool,
+}
+
+impl Batcher {
+    pub fn new(batch_max: usize, batch_wait: Duration, max_inflight: usize) -> Batcher {
+        Batcher {
+            queue: Mutex::new(VecDeque::new()),
+            ready: Condvar::new(),
+            batch_max: batch_max.max(1),
+            batch_wait,
+            max_inflight: max_inflight.max(1),
+            draining: AtomicBool::new(false),
+        }
+    }
+
+    /// Enqueue a request, or hand it back when the queue is full
+    /// (backpressure) or the server is draining.
+    pub fn try_push(&self, req: Request) -> Result<(), Request> {
+        let mut q = self.queue.lock().unwrap();
+        if q.len() >= self.max_inflight || self.draining.load(Ordering::Relaxed) {
+            return Err(req);
+        }
+        q.push_back(req);
+        drop(q);
+        self.ready.notify_one();
+        Ok(())
+    }
+
+    /// Queued (not yet flushed) requests.
+    pub fn depth(&self) -> usize {
+        self.queue.lock().unwrap().len()
+    }
+
+    /// Begin draining: no new requests are accepted, `run` flushes what
+    /// is queued and returns.
+    pub fn shutdown(&self) {
+        self.draining.store(true, Ordering::Relaxed);
+        self.ready.notify_all();
+    }
+
+    /// Length of the front run sharing one model snapshot, capped.
+    fn prefix_run(q: &VecDeque<Request>, cap: usize) -> usize {
+        let first = &q[0].model;
+        q.iter().take(cap).take_while(|r| Arc::ptr_eq(&r.model, first)).count()
+    }
+
+    /// Block until a tile is ready (or an idle tick passes — the caller
+    /// uses those to poll model staleness). `None` means drained and
+    /// shut down.
+    fn next_batch(&self) -> Option<Vec<Request>> {
+        let mut q = self.queue.lock().unwrap();
+        loop {
+            if !q.is_empty() {
+                let deadline = q[0].enqueued + self.batch_wait;
+                let run = Self::prefix_run(&q, self.batch_max);
+                let now = Instant::now();
+                if run >= self.batch_max
+                    || run < q.len()
+                    || now >= deadline
+                    || self.draining.load(Ordering::Relaxed)
+                {
+                    return Some(q.drain(..run).collect());
+                }
+                let (guard, _) = self.ready.wait_timeout(q, deadline - now).unwrap();
+                q = guard;
+            } else {
+                if self.draining.load(Ordering::Relaxed) {
+                    return None;
+                }
+                let (guard, timeout) = self.ready.wait_timeout(q, IDLE_TICK).unwrap();
+                q = guard;
+                if timeout.timed_out() && q.is_empty() {
+                    return Some(Vec::new()); // idle tick
+                }
+            }
+        }
+    }
+
+    /// Batcher thread body: flush tiles until shut down and drained.
+    pub fn run(
+        &self,
+        registry: &ModelRegistry,
+        stats: &ServerStats,
+        threads: usize,
+        poll_interval: Duration,
+    ) {
+        while let Some(batch) = self.next_batch() {
+            let swapped = registry.poll_stale(poll_interval);
+            if swapped > 0 {
+                ServerStats::add(&stats.reloads, swapped as u64);
+            }
+            if !batch.is_empty() {
+                Self::process(&batch, stats, threads);
+            }
+        }
+    }
+
+    /// Flush one tile (all requests share `batch[0]`'s model snapshot).
+    fn process(batch: &[Request], stats: &ServerStats, threads: usize) {
+        ServerStats::bump(&stats.batches);
+        let model = &batch[0].model.model;
+        let refs: Vec<(usize, &str)> = batch.iter().map(|r| (r.lineno, r.text.as_str())).collect();
+        match serve::parse_batch(&refs, model) {
+            Ok(x) => {
+                let all: Vec<&Request> = batch.iter().collect();
+                Self::respond(&all, &x, stats, threads);
+            }
+            Err(bad) => {
+                // per-issuer failure: malformed lines answer with their
+                // parse error, their connection's other lines in this
+                // tile are dropped (stdin-mode whole-batch semantics,
+                // scoped to the issuer), everyone else proceeds
+                let mut bad_by_idx: BTreeMap<usize, &str> =
+                    bad.iter().map(|(i, m)| (*i, m.as_str())).collect();
+                let poisoned: BTreeSet<u64> = bad.iter().map(|(i, _)| batch[*i].conn).collect();
+                let mut keep: Vec<&Request> = Vec::new();
+                for (i, r) in batch.iter().enumerate() {
+                    if let Some(msg) = bad_by_idx.remove(&i) {
+                        ServerStats::bump(&stats.failed_lines);
+                        let _ = r.tx.send((r.seq, format!("ERR {msg}")));
+                    } else if poisoned.contains(&r.conn) {
+                        ServerStats::bump(&stats.dropped_lines);
+                        let _ = r.tx.send((
+                            r.seq,
+                            format!(
+                                "ERR line {}: dropped (malformed line in this batch \
+                                 from this connection)",
+                                r.lineno
+                            ),
+                        ));
+                    } else {
+                        keep.push(r);
+                    }
+                }
+                if keep.is_empty() {
+                    return;
+                }
+                let refs: Vec<(usize, &str)> =
+                    keep.iter().map(|r| (r.lineno, r.text.as_str())).collect();
+                match serve::parse_batch(&refs, model) {
+                    Ok(x) => Self::respond(&keep, &x, stats, threads),
+                    Err(_) => {
+                        // unreachable: every kept line parsed alone above
+                        for r in keep {
+                            let _ = r.tx.send((
+                                r.seq,
+                                format!("ERR line {}: internal batch parse failure", r.lineno),
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    fn respond(reqs: &[&Request], x: &crate::data::Points, stats: &ServerStats, threads: usize) {
+        // the exact offline path: bitwise-identical to `cmd_predict` on
+        // the same lines regardless of how connections were interleaved
+        // (per-row independence contract of `blas::gemm`)
+        let model = &reqs[0].model.model;
+        let f = predict::decision_function(model, x, threads);
+        debug_assert_eq!(f.len(), reqs.len());
+        let now = Instant::now();
+        for (r, v) in reqs.iter().zip(f) {
+            let _ = r.tx.send((r.seq, serve::format_prediction(model, v)));
+            stats.latency.record(now.duration_since(r.enqueued));
+        }
+        ServerStats::add(&stats.predicted, reqs.len() as u64);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::DEFAULT_LABEL_PAIR;
+    use crate::kernel::Kernel;
+    use crate::linalg::Mat;
+    use crate::svm::SvmModel;
+    use crate::util::prng::Rng;
+    use std::sync::mpsc;
+
+    fn loaded(rng: &mut Rng) -> Arc<LoadedModel> {
+        Arc::new(LoadedModel {
+            name: "t".into(),
+            generation: 1,
+            model: SvmModel {
+                sv: Mat::gauss(3, 4, rng).into(),
+                alpha_y: (0..3).map(|_| rng.gauss()).collect(),
+                bias: rng.gauss(),
+                kernel: Kernel::Gaussian { h: 1.0 },
+                c: 1.0,
+                labels: DEFAULT_LABEL_PAIR,
+            },
+        })
+    }
+
+    fn req(conn: u64, seq: u64, model: &Arc<LoadedModel>, tx: &Sender<(u64, String)>) -> Request {
+        Request {
+            conn,
+            seq,
+            lineno: seq as usize + 1,
+            text: format!("1:{}", seq as f64 * 0.5),
+            model: Arc::clone(model),
+            enqueued: Instant::now(),
+            tx: tx.clone(),
+        }
+    }
+
+    #[test]
+    fn tiles_never_mix_model_snapshots() {
+        let mut rng = Rng::new(41);
+        let (m1, m2) = (loaded(&mut rng), loaded(&mut rng));
+        let (tx, _rx) = mpsc::channel();
+        let b = Batcher::new(8, Duration::from_secs(10), 64);
+        for (i, m) in [&m1, &m1, &m2, &m2, &m2, &m1].into_iter().enumerate() {
+            assert!(b.try_push(req(1, i as u64, m, &tx)).is_ok());
+        }
+        // deadline far away, but model switches force immediate flushes
+        let t1 = b.next_batch().unwrap();
+        assert_eq!(t1.len(), 2);
+        assert!(t1.iter().all(|r| Arc::ptr_eq(&r.model, &m1)));
+        let t2 = b.next_batch().unwrap();
+        assert_eq!(t2.len(), 3);
+        assert!(t2.iter().all(|r| Arc::ptr_eq(&r.model, &m2)));
+        // FIFO order is preserved across flushes
+        assert_eq!(t1[0].seq, 0);
+        assert_eq!(t2[0].seq, 2);
+    }
+
+    #[test]
+    fn full_queue_hands_the_request_back_and_deadline_flushes() {
+        let mut rng = Rng::new(42);
+        let m = loaded(&mut rng);
+        let (tx, _rx) = mpsc::channel();
+        let b = Batcher::new(128, Duration::from_millis(10), 2);
+        assert!(b.try_push(req(1, 0, &m, &tx)).is_ok());
+        assert!(b.try_push(req(1, 1, &m, &tx)).is_ok());
+        let back = b.try_push(req(1, 2, &m, &tx));
+        assert_eq!(back.unwrap_err().seq, 2, "backpressure returns the request");
+        assert_eq!(b.depth(), 2);
+        // under batch_max, flushed once the oldest request ages out
+        let t = Instant::now();
+        let tile = b.next_batch().unwrap();
+        assert_eq!(tile.len(), 2);
+        assert!(t.elapsed() <= Duration::from_secs(5));
+        // draining: rejects new pushes, then reports done
+        b.shutdown();
+        assert!(b.try_push(req(1, 3, &m, &tx)).is_err());
+        assert!(b.next_batch().is_none());
+    }
+}

@@ -1,0 +1,397 @@
+//! Concurrent TCP prediction server.
+//!
+//! Architecture (DESIGN.md §8): one accept loop, one reader thread and
+//! one writer thread per connection, one shared cross-connection
+//! micro-batcher ([`batcher`]), a hot-swappable model registry
+//! ([`registry`]) and lock-free counters ([`stats`]). Readers classify
+//! lines ([`protocol`]): admin commands are answered synchronously,
+//! request lines pin the connection's current model snapshot and enter
+//! the bounded batch queue (or are answered with an overload error —
+//! backpressure never blocks the socket). Every response carries the
+//! reader-assigned sequence number and the writer emits strictly in
+//! sequence, so each connection sees exactly one response per input
+//! line, in input order, no matter how tiles interleaved connections.
+//!
+//! Predictions are bitwise-identical to the offline `predict`
+//! subcommand on the same lines: tiles go through the same
+//! `serve::parse_batch` → `predict::decision_function` →
+//! `serve::format_prediction` pipeline, and per-row results are
+//! independent of tile composition (the `blas::gemm` invariant).
+//!
+//! Graceful shutdown (`SHUTDOWN` admin command or
+//! [`ServerHandle::shutdown`]): stop accepting, half-close every client
+//! socket for reading, let readers finish, drain the batcher (queued
+//! requests are still answered), then join everything.
+
+pub mod batcher;
+pub mod protocol;
+pub mod registry;
+pub mod stats;
+
+pub use registry::{LoadedModel, ModelRegistry};
+pub use stats::ServerStats;
+
+use crate::serve;
+use anyhow::{Context, Result};
+use batcher::{Batcher, Request};
+use protocol::Admin;
+use std::collections::{BTreeMap, HashMap};
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::net::{IpAddr, Ipv4Addr, Ipv6Addr, Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Tunables of the serving loop (CLI flags map 1:1).
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// Lines per prediction tile (default: [`serve::BATCH`]).
+    pub batch_max: usize,
+    /// How long the oldest queued request may wait for its tile to fill.
+    pub batch_wait: Duration,
+    /// Bounded queue size; beyond it lines get an overload error.
+    pub max_inflight: usize,
+    /// Worker threads for the decision-function tiles.
+    pub threads: usize,
+    /// Minimum interval between model-file staleness polls.
+    pub poll_interval: Duration,
+    /// Per-connection write timeout (a client that stops reading cannot
+    /// stall shutdown forever).
+    pub write_timeout: Duration,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            batch_max: serve::BATCH,
+            batch_wait: Duration::from_millis(2),
+            max_inflight: 1024,
+            threads: 1,
+            poll_interval: Duration::from_millis(200),
+            write_timeout: Duration::from_secs(10),
+        }
+    }
+}
+
+struct Shared {
+    registry: ModelRegistry,
+    stats: ServerStats,
+    batcher: Batcher,
+    cfg: ServerConfig,
+    shutdown: AtomicBool,
+    addr: SocketAddr,
+    /// Loopback-reachable form of `addr` (a `0.0.0.0`/`::` bind is not
+    /// self-connectable on every platform) — the shutdown wake-up target.
+    wake_addr: SocketAddr,
+    /// Read-half clones of the live sockets, keyed by connection id so
+    /// finished connections reap their entry (no fd growth under
+    /// connection churn); the rest are half-closed on shutdown to
+    /// unblock their reader threads.
+    conns: Mutex<HashMap<u64, TcpStream>>,
+}
+
+/// Set the shutdown flag and poke the accept loop awake.
+fn trigger_shutdown(shared: &Shared) {
+    if !shared.shutdown.swap(true, Ordering::SeqCst) {
+        let _ = TcpStream::connect(shared.wake_addr);
+    }
+}
+
+/// A bound, not-yet-running server. `bind` → `handle` → `run`.
+pub struct Server {
+    listener: TcpListener,
+    shared: Arc<Shared>,
+}
+
+/// Clonable remote control for a running [`Server`].
+#[derive(Clone)]
+pub struct ServerHandle {
+    shared: Arc<Shared>,
+}
+
+impl ServerHandle {
+    /// Initiate graceful shutdown (idempotent, non-blocking).
+    pub fn shutdown(&self) {
+        trigger_shutdown(&self.shared);
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.shared.addr
+    }
+
+    /// One-line counter summary (the `STATS` payload).
+    pub fn stats_line(&self) -> String {
+        self.shared.stats.stats_line(self.shared.batcher.depth())
+    }
+
+    /// Human exit banner.
+    pub fn summary(&self) -> String {
+        self.shared.stats.summary()
+    }
+}
+
+impl Server {
+    /// Bind `addr` (e.g. `"127.0.0.1:7878"`; port 0 picks a free port).
+    pub fn bind(addr: &str, registry: ModelRegistry, cfg: ServerConfig) -> Result<Server> {
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("cannot listen on {addr}"))?;
+        let local = listener.local_addr().context("local_addr")?;
+        let wake_ip = match local.ip() {
+            IpAddr::V4(ip) if ip.is_unspecified() => IpAddr::V4(Ipv4Addr::LOCALHOST),
+            IpAddr::V6(ip) if ip.is_unspecified() => IpAddr::V6(Ipv6Addr::LOCALHOST),
+            ip => ip,
+        };
+        let shared = Arc::new(Shared {
+            batcher: Batcher::new(cfg.batch_max, cfg.batch_wait, cfg.max_inflight),
+            registry,
+            stats: ServerStats::new(),
+            cfg,
+            shutdown: AtomicBool::new(false),
+            addr: local,
+            wake_addr: SocketAddr::new(wake_ip, local.port()),
+            conns: Mutex::new(HashMap::new()),
+        });
+        Ok(Server { listener, shared })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.shared.addr
+    }
+
+    pub fn handle(&self) -> ServerHandle {
+        ServerHandle { shared: Arc::clone(&self.shared) }
+    }
+
+    /// Serve until shutdown; returns after every connection, the
+    /// batcher and all queued work have drained.
+    pub fn run(self) -> Result<()> {
+        let shared = self.shared;
+        let b = Arc::clone(&shared);
+        let batcher_jh = std::thread::Builder::new()
+            .name("hss-serve-batcher".into())
+            .spawn(move || {
+                b.batcher.run(&b.registry, &b.stats, b.cfg.threads, b.cfg.poll_interval)
+            })
+            .context("spawn batcher thread")?;
+
+        let mut conn_jhs: Vec<std::thread::JoinHandle<()>> = Vec::new();
+        let mut conn_id = 0u64;
+        loop {
+            let stream = match self.listener.accept() {
+                Ok((s, _)) => s,
+                Err(_) if shared.shutdown.load(Ordering::SeqCst) => break,
+                Err(_) => {
+                    // transient (or fd-exhaustion) failure: back off
+                    // instead of busy-spinning the accept loop
+                    std::thread::sleep(Duration::from_millis(10));
+                    continue;
+                }
+            };
+            if shared.shutdown.load(Ordering::SeqCst) {
+                break; // the shutdown wake-up connection (or a loser of the race)
+            }
+            // reap finished connection threads so churn does not grow
+            // the handle list for the server's lifetime
+            conn_jhs.retain(|jh| !jh.is_finished());
+            conn_id += 1;
+            let _ = stream.set_nodelay(true);
+            let _ = stream.set_write_timeout(Some(shared.cfg.write_timeout));
+            match stream.try_clone() {
+                Ok(clone) => shared.conns.lock().unwrap().insert(conn_id, clone),
+                // a connection we cannot register cannot be half-closed
+                // at shutdown — serving it anyway could hang the drain
+                // on its reader thread, so refuse it instead
+                Err(_) => continue,
+            };
+            let sh = Arc::clone(&shared);
+            let id = conn_id;
+            conn_jhs.push(
+                std::thread::Builder::new()
+                    .name(format!("hss-serve-conn-{id}"))
+                    .spawn(move || handle_conn(id, stream, &sh))
+                    .context("spawn connection thread")?,
+            );
+        }
+        drop(self.listener);
+
+        // Drain: half-close every live socket for reading so reader
+        // threads see EOF; their queued requests are still flushed by
+        // the batcher (which keeps running until told to drain), and
+        // each reader joins its writer after the responses went out.
+        for c in shared.conns.lock().unwrap().values() {
+            let _ = c.shutdown(Shutdown::Read);
+        }
+        for jh in conn_jhs {
+            let _ = jh.join();
+        }
+        shared.batcher.shutdown();
+        let _ = batcher_jh.join();
+        Ok(())
+    }
+}
+
+/// Per-connection reader: classify lines, answer admin synchronously,
+/// enqueue requests, and keep the response writer fed.
+fn handle_conn(conn: u64, stream: TcpStream, shared: &Shared) {
+    ServerStats::bump(&shared.stats.connections);
+    ServerStats::bump(&shared.stats.active);
+    let reader = match stream.try_clone() {
+        Ok(s) => BufReader::new(s),
+        Err(_) => {
+            shared.conns.lock().unwrap().remove(&conn);
+            shared.stats.active.fetch_sub(1, Ordering::Relaxed);
+            return;
+        }
+    };
+    let (tx, rx) = mpsc::channel::<(u64, String)>();
+    let writer_jh = std::thread::Builder::new()
+        .name(format!("hss-serve-write-{conn}"))
+        .spawn(move || writer_loop(stream, rx));
+
+    let mut cur_model = shared.registry.default_name().to_string();
+    let mut seq = 0u64;
+    let mut lineno = 0usize;
+    for line in reader.lines() {
+        let Ok(line) = line else { break };
+        lineno += 1;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('#') {
+            ServerStats::bump(&shared.stats.skipped);
+            continue;
+        }
+        match protocol::parse_admin(t) {
+            Some(cmd) => {
+                ServerStats::bump(&shared.stats.admin);
+                let (resp, close) = match cmd {
+                    Err(usage) => (usage, false),
+                    Ok(a) => run_admin(a, &mut cur_model, shared),
+                };
+                let _ = tx.send((seq, resp));
+                seq += 1;
+                if close {
+                    break;
+                }
+            }
+            None => {
+                ServerStats::bump(&shared.stats.lines);
+                let Some(model) = shared.registry.get(&cur_model) else {
+                    // unreachable: names are fixed and MODEL validates
+                    let _ = tx
+                        .send((seq, format!("ERR line {lineno}: model {cur_model:?} is gone")));
+                    seq += 1;
+                    continue;
+                };
+                let req = Request {
+                    conn,
+                    seq,
+                    lineno,
+                    text: line,
+                    model,
+                    enqueued: Instant::now(),
+                    tx: tx.clone(),
+                };
+                seq += 1;
+                if let Err(req) = shared.batcher.try_push(req) {
+                    ServerStats::bump(&shared.stats.rejected);
+                    let _ = req.tx.send((
+                        req.seq,
+                        format!(
+                            "ERR line {}: server overloaded ({} requests in flight), \
+                             line dropped",
+                            req.lineno, shared.cfg.max_inflight
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+    // EOF (or QUIT/SHUTDOWN): the writer exits once every response —
+    // including those of still-queued requests — has been routed.
+    drop(tx);
+    if let Ok(jh) = writer_jh {
+        let _ = jh.join();
+    }
+    // reap this connection's read-half clone (fd) from the shutdown set
+    shared.conns.lock().unwrap().remove(&conn);
+    shared.stats.active.fetch_sub(1, Ordering::Relaxed);
+}
+
+fn run_admin(cmd: Admin, cur_model: &mut String, shared: &Shared) -> (String, bool) {
+    match cmd {
+        Admin::Model(name) => match shared.registry.get(&name) {
+            Some(m) => {
+                *cur_model = name;
+                (format!("OK model {} gen {}", m.name, m.generation), false)
+            }
+            None => (format!("ERR unknown model {name:?}"), false),
+        },
+        Admin::Reload(None) => {
+            let (swapped, failed) = shared.registry.reload_all();
+            ServerStats::add(&shared.stats.reloads, swapped.len() as u64);
+            let resp = if !failed.is_empty() {
+                let errs: Vec<String> =
+                    failed.iter().map(|(n, e)| format!("{n}: {e}")).collect();
+                if swapped.is_empty() {
+                    format!("ERR reload failed ({})", errs.join("; "))
+                } else {
+                    // partial swaps already happened — say so
+                    format!(
+                        "ERR reload partial (reloaded {}; failed {})",
+                        swapped.join(","),
+                        errs.join("; ")
+                    )
+                }
+            } else if swapped.is_empty() {
+                "ERR reload: no file-backed models".to_string()
+            } else {
+                format!("OK reloaded {}", swapped.join(","))
+            };
+            (resp, false)
+        }
+        Admin::Reload(Some(name)) => match shared.registry.reload(&name) {
+            Ok(generation) => {
+                ServerStats::bump(&shared.stats.reloads);
+                (format!("OK reloaded {name} gen {generation}"), false)
+            }
+            Err(e) => (format!("ERR reload {name}: {e:#}"), false),
+        },
+        Admin::Stats => (shared.stats.stats_line(shared.batcher.depth()), false),
+        Admin::Shutdown => {
+            trigger_shutdown(shared);
+            ("OK shutting down".to_string(), true)
+        }
+        Admin::Quit => ("OK bye".to_string(), true),
+    }
+}
+
+/// Per-connection writer: responses arrive tagged with the reader's
+/// sequence number (from the reader itself and from batcher flushes, in
+/// any interleaving) and leave the socket strictly in sequence.
+fn writer_loop(stream: TcpStream, rx: mpsc::Receiver<(u64, String)>) {
+    let mut w = BufWriter::new(stream);
+    let mut pending: BTreeMap<u64, String> = BTreeMap::new();
+    let mut next = 0u64;
+    'recv: while let Ok((seq, line)) = rx.recv() {
+        pending.insert(seq, line);
+        while let Ok((seq, line)) = rx.try_recv() {
+            pending.insert(seq, line);
+        }
+        while let Some(line) = pending.remove(&next) {
+            if writeln!(w, "{line}").is_err() {
+                break 'recv;
+            }
+            next += 1;
+        }
+        if w.flush().is_err() {
+            break;
+        }
+    }
+    // channel closed: whatever is pending is contiguous — flush it
+    while let Some(line) = pending.remove(&next) {
+        if writeln!(w, "{line}").is_err() {
+            break;
+        }
+        next += 1;
+    }
+    let _ = w.flush();
+}

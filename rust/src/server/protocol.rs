@@ -1,0 +1,100 @@
+//! Line protocol of the TCP server.
+//!
+//! Every non-blank, non-comment input line is either a **request** (a
+//! LIBSVM feature line, exactly the stdin serve grammar) or an **admin
+//! command** (an all-caps keyword first token). The two cannot collide:
+//! a LIBSVM line starts with a numeric label or an `index:value` pair,
+//! never with an alphabetic keyword. Each such line gets exactly one
+//! response line, in input order:
+//!
+//! | input                | response                                    |
+//! |----------------------|---------------------------------------------|
+//! | feature line         | `<label> <decision>`                        |
+//! | malformed line       | `ERR line <n>: <why>`                       |
+//! | line in a poisoned   | `ERR line <n>: dropped (malformed line in   |
+//! | per-connection batch | this batch from this connection)`           |
+//! | queue full           | `ERR line <n>: server overloaded (...)`     |
+//! | `MODEL <name>`       | `OK model <name> gen <g>` / `ERR ...`       |
+//! | `RELOAD [<name>]`    | `OK reloaded ...` / `ERR ...`               |
+//! | `STATS`              | `OK stats k=v ...`                          |
+//! | `SHUTDOWN`           | `OK shutting down` (then server drains)     |
+//! | `QUIT`               | `OK bye` (connection closes after drain)    |
+
+/// A parsed admin command.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Admin {
+    /// `MODEL <name>`: switch this connection's model.
+    Model(String),
+    /// `RELOAD` (all file-backed models) or `RELOAD <name>`.
+    Reload(Option<String>),
+    /// `STATS`: one-line counters + latency percentiles.
+    Stats,
+    /// `SHUTDOWN`: graceful server shutdown (drain, then exit).
+    Shutdown,
+    /// `QUIT`: close this connection (after its in-flight lines drain).
+    Quit,
+}
+
+/// Classify a trimmed, non-empty line: `None` = prediction request,
+/// `Some(Ok)` = admin command, `Some(Err(response))` = a recognized
+/// keyword with bad arity (answered without touching the batcher).
+pub fn parse_admin(line: &str) -> Option<Result<Admin, String>> {
+    let mut tok = line.split_ascii_whitespace();
+    let head = tok.next()?;
+    let arg = tok.next();
+    let extra = tok.next().is_some();
+    let usage = |u: &str| Some(Err(format!("ERR usage: {u}")));
+    match head {
+        "MODEL" => match (arg, extra) {
+            (Some(name), false) => Some(Ok(Admin::Model(name.to_string()))),
+            _ => usage("MODEL <name>"),
+        },
+        "RELOAD" => match (arg, extra) {
+            (None, _) => Some(Ok(Admin::Reload(None))),
+            (Some(name), false) => Some(Ok(Admin::Reload(Some(name.to_string())))),
+            _ => usage("RELOAD [<name>]"),
+        },
+        "STATS" if arg.is_none() => Some(Ok(Admin::Stats)),
+        "SHUTDOWN" if arg.is_none() => Some(Ok(Admin::Shutdown)),
+        "QUIT" if arg.is_none() => Some(Ok(Admin::Quit)),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keywords_parse_and_feature_lines_do_not() {
+        assert_eq!(parse_admin("MODEL rcv1"), Some(Ok(Admin::Model("rcv1".into()))));
+        assert_eq!(parse_admin("RELOAD"), Some(Ok(Admin::Reload(None))));
+        assert_eq!(parse_admin("RELOAD a"), Some(Ok(Admin::Reload(Some("a".into())))));
+        assert_eq!(parse_admin("STATS"), Some(Ok(Admin::Stats)));
+        assert_eq!(parse_admin("SHUTDOWN"), Some(Ok(Admin::Shutdown)));
+        assert_eq!(parse_admin("QUIT"), Some(Ok(Admin::Quit)));
+        // requests — labeled, 0-labeled and bare feature lines
+        assert_eq!(parse_admin("+1 1:0.5 3:2"), None);
+        assert_eq!(parse_admin("0 2:1"), None);
+        assert_eq!(parse_admin("1:0.5"), None);
+        // unknown words are requests too (they fail as parse errors with
+        // a line number, like any malformed request)
+        assert_eq!(parse_admin("FLUSH"), None);
+        assert_eq!(parse_admin("model x"), None, "keywords are case-sensitive");
+    }
+
+    #[test]
+    fn bad_arity_is_answered_not_enqueued() {
+        assert_eq!(parse_admin("MODEL"), Some(Err("ERR usage: MODEL <name>".into())));
+        assert_eq!(
+            parse_admin("MODEL a b"),
+            Some(Err("ERR usage: MODEL <name>".into()))
+        );
+        assert_eq!(
+            parse_admin("RELOAD a b"),
+            Some(Err("ERR usage: RELOAD [<name>]".into()))
+        );
+        // STATS with an argument is not a recognized admin form
+        assert_eq!(parse_admin("STATS now"), None);
+    }
+}

@@ -1,0 +1,291 @@
+//! Model registry: named models with atomic hot-swap.
+//!
+//! Each entry holds the current model behind an `RwLock<Arc<_>>`:
+//! readers (connection threads snapshotting a model per request) take a
+//! cheap read lock and clone the `Arc`; a reload builds the new
+//! [`LoadedModel`] entirely outside the lock and swaps the `Arc` in one
+//! write — in-flight batches keep their old `Arc` and finish on the old
+//! model, new requests pick up the new generation. Staleness is driven
+//! two ways: the `RELOAD` admin command (explicit) and an mtime/size
+//! poll ([`ModelRegistry::poll_stale`]) the batcher runs between
+//! flushes (implicit — overwrite the model file and the server picks it
+//! up).
+
+use crate::svm::{persist, SvmModel};
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::{Duration, Instant, SystemTime};
+
+/// One immutable model snapshot. Requests pin the snapshot they were
+/// enqueued with, so a hot-swap never changes a model mid-batch.
+pub struct LoadedModel {
+    /// Registry name this snapshot was loaded under.
+    pub name: String,
+    /// Monotonic per-entry reload counter (1 = initial load).
+    pub generation: u64,
+    pub model: SvmModel,
+}
+
+/// On-disk identity of a loaded file; a change in either field marks
+/// the entry stale (size guards against filesystems with coarse mtime).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+struct FileStamp {
+    mtime: Option<SystemTime>,
+    len: u64,
+}
+
+fn stamp(path: &std::path::Path) -> Option<FileStamp> {
+    let meta = std::fs::metadata(path).ok()?;
+    Some(FileStamp { mtime: meta.modified().ok(), len: meta.len() })
+}
+
+struct ModelEntry {
+    /// Backing file; `None` for in-memory models (tests, benches) —
+    /// those cannot be reloaded.
+    path: Option<PathBuf>,
+    stamp: Mutex<Option<FileStamp>>,
+    generation: AtomicU64,
+    current: RwLock<Arc<LoadedModel>>,
+}
+
+/// Named models, hot-swappable individually. The entry *set* is fixed
+/// at startup (connections select with `MODEL <name>`); the models
+/// behind the names are not.
+pub struct ModelRegistry {
+    entries: BTreeMap<String, ModelEntry>,
+    default_name: String,
+    last_poll: Mutex<Instant>,
+}
+
+impl ModelRegistry {
+    /// Registry over model files; the first entry is the default model.
+    pub fn from_paths(entries: &[(String, PathBuf)]) -> Result<ModelRegistry> {
+        if entries.is_empty() {
+            bail!("model registry needs at least one model");
+        }
+        let mut map = BTreeMap::new();
+        for (name, path) in entries {
+            let model = persist::load(path)
+                .with_context(|| format!("loading model {name:?} from {}", path.display()))?;
+            let loaded = Arc::new(LoadedModel { name: name.clone(), generation: 1, model });
+            let prev = map.insert(
+                name.clone(),
+                ModelEntry {
+                    path: Some(path.clone()),
+                    stamp: Mutex::new(stamp(path)),
+                    generation: AtomicU64::new(1),
+                    current: RwLock::new(loaded),
+                },
+            );
+            if prev.is_some() {
+                bail!("duplicate model name {name:?}");
+            }
+        }
+        Ok(ModelRegistry {
+            entries: map,
+            default_name: entries[0].0.clone(),
+            last_poll: Mutex::new(Instant::now()),
+        })
+    }
+
+    /// In-memory registry (tests / benches); first entry is the default.
+    pub fn from_models(models: Vec<(String, SvmModel)>) -> ModelRegistry {
+        assert!(!models.is_empty(), "model registry needs at least one model");
+        let default_name = models[0].0.clone();
+        let entries = models
+            .into_iter()
+            .map(|(name, model)| {
+                let loaded = Arc::new(LoadedModel { name: name.clone(), generation: 1, model });
+                (
+                    name,
+                    ModelEntry {
+                        path: None,
+                        stamp: Mutex::new(None),
+                        generation: AtomicU64::new(1),
+                        current: RwLock::new(loaded),
+                    },
+                )
+            })
+            .collect();
+        ModelRegistry { entries, default_name, last_poll: Mutex::new(Instant::now()) }
+    }
+
+    /// Single-model convenience wrapper (name `"default"`).
+    pub fn single(model: SvmModel) -> ModelRegistry {
+        Self::from_models(vec![("default".to_string(), model)])
+    }
+
+    pub fn default_name(&self) -> &str {
+        &self.default_name
+    }
+
+    /// `name -> generation` inventory (for banners / STATS).
+    pub fn names(&self) -> Vec<(String, u64)> {
+        self.entries
+            .iter()
+            .map(|(n, e)| (n.clone(), e.generation.load(Ordering::Relaxed)))
+            .collect()
+    }
+
+    /// Snapshot the current model under `name`.
+    pub fn get(&self, name: &str) -> Option<Arc<LoadedModel>> {
+        self.entries.get(name).map(|e| e.current.read().unwrap().clone())
+    }
+
+    /// Reload `name` from its backing file and swap it in atomically.
+    /// Returns the new generation. In-flight batches that already hold
+    /// the old `Arc` are unaffected.
+    ///
+    /// Reloads of one entry are serialized on its stamp mutex (held
+    /// across load → stamp → swap), so a RELOAD admin command racing
+    /// the staleness poll cannot interleave and pin an older model
+    /// under a newer stamp. The stamp is taken *before* reading the
+    /// file: if the file is overwritten mid-load, the recorded stamp is
+    /// older than the disk state and the next poll reloads again.
+    pub fn reload(&self, name: &str) -> Result<u64> {
+        let entry = self
+            .entries
+            .get(name)
+            .with_context(|| format!("unknown model {name:?}"))?;
+        let Some(path) = &entry.path else {
+            bail!("model {name:?} is in-memory and cannot be reloaded");
+        };
+        let mut stamp_guard = entry.stamp.lock().unwrap();
+        let pre = stamp(path);
+        let model = persist::load(path)
+            .with_context(|| format!("reloading model {name:?} from {}", path.display()))?;
+        let generation = entry.generation.fetch_add(1, Ordering::Relaxed) + 1;
+        let loaded = Arc::new(LoadedModel { name: name.to_string(), generation, model });
+        *stamp_guard = pre;
+        *entry.current.write().unwrap() = loaded;
+        Ok(generation)
+    }
+
+    /// Reload every file-backed entry, continuing past failures (a
+    /// half-written file must not abort the rest): returns the names
+    /// that swapped and `(name, error)` for those that did not — so
+    /// callers can report partial success honestly instead of implying
+    /// nothing changed.
+    pub fn reload_all(&self) -> (Vec<String>, Vec<(String, String)>) {
+        let mut swapped = Vec::new();
+        let mut failed = Vec::new();
+        for (name, e) in &self.entries {
+            if e.path.is_some() {
+                match self.reload(name) {
+                    Ok(_) => swapped.push(name.clone()),
+                    Err(e) => failed.push((name.clone(), format!("{e:#}"))),
+                }
+            }
+        }
+        (swapped, failed)
+    }
+
+    /// Rate-limited staleness poll: at most once per `min_interval`,
+    /// compare each file-backed entry's mtime/size stamp and hot-swap
+    /// the changed ones. A reload failure (e.g. the file is mid-write)
+    /// keeps the old model serving and is reported on stderr; the next
+    /// poll retries. Returns how many entries were swapped.
+    pub fn poll_stale(&self, min_interval: Duration) -> usize {
+        {
+            let mut last = self.last_poll.lock().unwrap();
+            if last.elapsed() < min_interval {
+                return 0;
+            }
+            *last = Instant::now();
+        }
+        let mut swapped = 0;
+        for (name, e) in &self.entries {
+            let Some(path) = &e.path else { continue };
+            let now = stamp(path);
+            let known = *e.stamp.lock().unwrap();
+            if now == known {
+                continue;
+            }
+            match self.reload(name) {
+                Ok(generation) => {
+                    swapped += 1;
+                    eprintln!("serve: model {name:?} changed on disk, now gen {generation}");
+                }
+                Err(e) => eprintln!("serve: stale model {name:?} failed to reload: {e:#}"),
+            }
+        }
+        swapped
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::DEFAULT_LABEL_PAIR;
+    use crate::kernel::Kernel;
+    use crate::linalg::Mat;
+    use crate::util::prng::Rng;
+
+    fn toy(rng: &mut Rng, bias: f64) -> SvmModel {
+        SvmModel {
+            sv: Mat::gauss(3, 4, rng).into(),
+            alpha_y: (0..3).map(|_| rng.gauss()).collect(),
+            bias,
+            kernel: Kernel::Gaussian { h: 1.0 },
+            c: 1.0,
+            labels: DEFAULT_LABEL_PAIR,
+        }
+    }
+
+    #[test]
+    fn in_memory_registry_selects_by_name() {
+        let mut rng = Rng::new(31);
+        let reg = ModelRegistry::from_models(vec![
+            ("a".into(), toy(&mut rng, 1.0)),
+            ("b".into(), toy(&mut rng, 2.0)),
+        ]);
+        assert_eq!(reg.default_name(), "a");
+        assert_eq!(reg.get("a").unwrap().model.bias, 1.0);
+        assert_eq!(reg.get("b").unwrap().model.bias, 2.0);
+        assert!(reg.get("c").is_none());
+        assert!(reg.reload("a").is_err(), "in-memory entries cannot reload");
+        let (swapped, failed) = reg.reload_all();
+        assert!(swapped.is_empty() && failed.is_empty(), "in-memory entries are skipped");
+        assert_eq!(reg.names().len(), 2);
+    }
+
+    #[test]
+    fn file_backed_reload_swaps_atomically_and_polls_staleness() {
+        let mut rng = Rng::new(32);
+        let dir = std::env::temp_dir()
+            .join(format!("hss_svm_registry_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("m.model");
+        persist::save(&toy(&mut rng, 10.0), &p).unwrap();
+        let reg = ModelRegistry::from_paths(&[("default".to_string(), p.clone())]).unwrap();
+
+        let old = reg.get("default").unwrap();
+        assert_eq!(old.generation, 1);
+        assert_eq!(old.model.bias, 10.0);
+
+        // different SV count => different file size, so the staleness
+        // stamp changes even on coarse-mtime filesystems
+        let mut newer = toy(&mut rng, 20.0);
+        newer.sv = Mat::gauss(5, 4, &mut rng).into();
+        newer.alpha_y = (0..5).map(|_| rng.gauss()).collect();
+        persist::save(&newer, &p).unwrap();
+
+        // explicit reload bumps the generation; the old Arc still holds
+        // the old model (in-flight batch semantics)
+        assert_eq!(reg.reload("default").unwrap(), 2);
+        assert_eq!(reg.get("default").unwrap().model.bias, 20.0);
+        assert_eq!(old.model.bias, 10.0);
+
+        // mtime/size poll: overwrite again, rate limit respected
+        persist::save(&toy(&mut rng, 30.0), &p).unwrap();
+        assert_eq!(reg.poll_stale(Duration::from_secs(3600)), 0, "rate-limited");
+        std::thread::sleep(Duration::from_millis(5));
+        assert_eq!(reg.poll_stale(Duration::from_millis(1)), 1);
+        assert_eq!(reg.get("default").unwrap().model.bias, 30.0);
+        assert_eq!(reg.get("default").unwrap().generation, 3);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,125 @@
+//! Server-wide counters and latency percentiles.
+//!
+//! Everything is a relaxed atomic (or the lock-free
+//! [`Histogram`] from `util::bench`), so connection readers, the
+//! batcher and the `STATS` admin command never contend. Latency is
+//! measured enqueue → response-routed, i.e. the queueing delay the
+//! micro-batcher trades against tile efficiency, not socket time.
+
+use crate::util::bench::Histogram;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+#[derive(Default)]
+pub struct ServerStats {
+    /// Connections accepted since startup.
+    pub connections: AtomicU64,
+    /// Currently open connections.
+    pub active: AtomicU64,
+    /// Request lines received (admin commands excluded).
+    pub lines: AtomicU64,
+    /// Blank / comment lines skipped.
+    pub skipped: AtomicU64,
+    /// Admin commands processed.
+    pub admin: AtomicU64,
+    /// Predictions emitted.
+    pub predicted: AtomicU64,
+    /// Prediction tiles flushed.
+    pub batches: AtomicU64,
+    /// Malformed request lines answered with an error.
+    pub failed_lines: AtomicU64,
+    /// Well-formed lines dropped because a line from the same
+    /// connection poisoned their tile (per-issuer batch failure).
+    pub dropped_lines: AtomicU64,
+    /// Lines rejected by backpressure (queue full).
+    pub rejected: AtomicU64,
+    /// Model hot-swaps (RELOAD + mtime poll).
+    pub reloads: AtomicU64,
+    /// Enqueue → response latency of predicted lines.
+    pub latency: Histogram,
+}
+
+impl ServerStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn bump(counter: &AtomicU64) {
+        counter.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add(counter: &AtomicU64, n: u64) {
+        counter.fetch_add(n, Ordering::Relaxed);
+    }
+
+    fn get(counter: &AtomicU64) -> u64 {
+        counter.load(Ordering::Relaxed)
+    }
+
+    /// The one-line `STATS` admin response.
+    pub fn stats_line(&self, queue_depth: usize) -> String {
+        format!(
+            "OK stats connections={} active={} lines={} skipped={} admin={} \
+             predicted={} batches={} failed={} dropped={} rejected={} reloads={} \
+             queue={queue_depth} p50_us={:.0} p99_us={:.0} mean_us={:.0}",
+            Self::get(&self.connections),
+            Self::get(&self.active),
+            Self::get(&self.lines),
+            Self::get(&self.skipped),
+            Self::get(&self.admin),
+            Self::get(&self.predicted),
+            Self::get(&self.batches),
+            Self::get(&self.failed_lines),
+            Self::get(&self.dropped_lines),
+            Self::get(&self.rejected),
+            Self::get(&self.reloads),
+            self.latency.percentile_us(0.5),
+            self.latency.percentile_us(0.99),
+            self.latency.mean_us(),
+        )
+    }
+
+    /// Shutdown banner (mirrors the stdin mode's exit line).
+    pub fn summary(&self) -> String {
+        format!(
+            "served {} predictions in {} batches ({} lines, {} failed, {} dropped, \
+             {} rejected) over {} connections",
+            Self::get(&self.predicted),
+            Self::get(&self.batches),
+            Self::get(&self.lines),
+            Self::get(&self.failed_lines),
+            Self::get(&self.dropped_lines),
+            Self::get(&self.rejected),
+            Self::get(&self.connections),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn stats_line_contains_all_counters() {
+        let s = ServerStats::new();
+        ServerStats::bump(&s.connections);
+        ServerStats::add(&s.lines, 7);
+        s.latency.record(Duration::from_micros(500));
+        let line = s.stats_line(3);
+        assert!(line.starts_with("OK stats "), "{line}");
+        for key in [
+            "connections=1",
+            "lines=7",
+            "queue=3",
+            "p50_us=",
+            "p99_us=",
+            "mean_us=",
+        ] {
+            assert!(line.contains(key), "{line} missing {key}");
+        }
+        assert!(!line.contains('\n'));
+        assert!(s.summary().contains("7 lines"));
+    }
+}

@@ -1,5 +1,6 @@
 //! Trained SVM model: support vectors, coefficients, bias.
 
+use crate::data::dataset::DEFAULT_LABEL_PAIR;
 use crate::data::sparse::Points;
 use crate::kernel::Kernel;
 
@@ -23,12 +24,38 @@ pub struct SvmModel {
     pub kernel: Kernel,
     /// Penalty C used at training time (diagnostics).
     pub c: f64,
+    /// Original dataset label pair `[negative, positive]`. Predictions
+    /// map back through it, so a model trained on a {1,2}-coded file
+    /// answers `1`/`2` instead of hardcoded `±1`. Equal to
+    /// [`DEFAULT_LABEL_PAIR`] for ±1-coded (or synthetic) training data
+    /// and for model files that predate the `labels` line.
+    pub labels: [f64; 2],
 }
 
 impl SvmModel {
     /// Number of support vectors.
     pub fn n_sv(&self) -> usize {
         self.sv.rows()
+    }
+
+    /// Map a decision value onto the model's original label pair.
+    pub fn label_of(&self, decision: f64) -> f64 {
+        if decision >= 0.0 {
+            self.labels[1]
+        } else {
+            self.labels[0]
+        }
+    }
+
+    /// The label for a decision value as output text: the default pair
+    /// keeps the historical explicit-sign `+1`/`-1` spelling, any other
+    /// pair prints the original label value.
+    pub fn label_text(&self, decision: f64) -> String {
+        if self.labels == DEFAULT_LABEL_PAIR {
+            (if decision >= 0.0 { "+1" } else { "-1" }).to_string()
+        } else {
+            format!("{}", self.label_of(decision))
+        }
     }
 
     /// Decision value for a single (dense) point.
@@ -54,13 +81,10 @@ impl SvmModel {
         f
     }
 
-    /// Predicted label (±1) for a single point.
+    /// Predicted label for a single point (in the model's original
+    /// label pair — ±1 unless trained on another encoding).
     pub fn predict_one(&self, t: &[f64]) -> f64 {
-        if self.decision_one(t) >= 0.0 {
-            1.0
-        } else {
-            -1.0
-        }
+        self.label_of(self.decision_one(t))
     }
 
     /// Model memory footprint (bytes).
@@ -100,6 +124,7 @@ mod tests {
             bias: 0.25,
             kernel: Kernel::Linear,
             c: 1.0,
+            labels: DEFAULT_LABEL_PAIR,
         };
         let f = m.decision_one(&[3.0]);
         // 1*3 − 0.5*6 + 0.25 = 0.25
@@ -123,6 +148,7 @@ mod tests {
             bias: -0.3,
             kernel: Kernel::Gaussian { h: 0.9 },
             c: 1.0,
+            labels: DEFAULT_LABEL_PAIR,
         };
         let sparse = SvmModel { sv: CsrMat::from_dense(&sv).into(), ..dense.clone() };
         assert!(sparse.sv.is_sparse());
@@ -131,5 +157,28 @@ mod tests {
             assert!((fd - fs).abs() <= 1e-12 * (1.0 + fd.abs()), "{fd} vs {fs}");
         }
         assert!(sparse.memory_bytes() < dense.memory_bytes() + 200);
+    }
+
+    #[test]
+    fn label_pair_maps_decisions_back() {
+        let sv = Mat::from_vec(1, 1, vec![1.0]);
+        let mut m = SvmModel {
+            sv: sv.into(),
+            alpha_y: vec![1.0],
+            bias: 0.0,
+            kernel: Kernel::Linear,
+            c: 1.0,
+            labels: DEFAULT_LABEL_PAIR,
+        };
+        assert_eq!(m.predict_one(&[2.0]), 1.0);
+        assert_eq!(m.predict_one(&[-2.0]), -1.0);
+        assert_eq!(m.label_text(3.0), "+1");
+        assert_eq!(m.label_text(-3.0), "-1");
+        // {1,2}-coded training data: decisions answer in the original pair
+        m.labels = [1.0, 2.0];
+        assert_eq!(m.predict_one(&[2.0]), 2.0);
+        assert_eq!(m.predict_one(&[-2.0]), 1.0);
+        assert_eq!(m.label_text(3.0), "2");
+        assert_eq!(m.label_text(-3.0), "1");
     }
 }

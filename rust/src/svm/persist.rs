@@ -7,7 +7,13 @@
 //! (CSR) models write `svsparse <rows> <cols>` with per-row
 //! `<alpha> <index>:<hexval> ...` lines (0-based ascending indices), so
 //! a rcv1-class model file stays O(nnz). The loader accepts both.
+//!
+//! Models trained on a non-±1 label encoding (e.g. a {1,2}-coded
+//! LIBSVM file) carry an optional `labels <neg-hex> <pos-hex>` line
+//! between `bias` and the SV section; files without it (all pre-v1.1
+//! files, and files for ±1-coded data) default to `[-1, +1]`.
 
+use crate::data::dataset::DEFAULT_LABEL_PAIR;
 use crate::data::sparse::{CsrMat, Points};
 use crate::kernel::Kernel;
 use crate::linalg::Mat;
@@ -31,6 +37,10 @@ pub fn save(model: &SvmModel, path: impl AsRef<Path>) -> Result<()> {
     }
     writeln!(w, "c {}", hexf(model.c))?;
     writeln!(w, "bias {}", hexf(model.bias))?;
+    if model.labels != DEFAULT_LABEL_PAIR {
+        // optional: ±1 models keep the historical byte-identical format
+        writeln!(w, "labels {} {}", hexf(model.labels[0]), hexf(model.labels[1]))?;
+    }
     match &model.sv {
         Points::Dense(sv) => {
             writeln!(w, "sv {} {}", sv.rows(), sv.cols())?;
@@ -85,7 +95,15 @@ pub fn load(path: impl AsRef<Path>) -> Result<SvmModel> {
     };
     let c = parse_kv(&next()?, "c")?;
     let bias = parse_kv(&next()?, "bias")?;
-    let svline = next()?;
+    // optional `labels` line; older files go straight to the SV section
+    let mut svline = next()?;
+    let mut labels = DEFAULT_LABEL_PAIR;
+    if let Some(rest) = svline.strip_prefix("labels ") {
+        let mut lp = rest.split_ascii_whitespace();
+        labels[0] = unhexf(lp.next().context("missing negative label")?)?;
+        labels[1] = unhexf(lp.next().context("missing positive label")?)?;
+        svline = next()?;
+    }
     let mut sp = svline.split_ascii_whitespace();
     let kind = sp.next();
     if kind != Some("sv") && kind != Some("svsparse") {
@@ -137,7 +155,7 @@ pub fn load(path: impl AsRef<Path>) -> Result<SvmModel> {
         }
         CsrMat::from_rows(cols, &sv_rows).into()
     };
-    Ok(SvmModel { sv, alpha_y, bias, kernel, c })
+    Ok(SvmModel { sv, alpha_y, bias, kernel, c, labels })
 }
 
 fn parse_kv(line: &str, key: &str) -> Result<f64> {
@@ -170,6 +188,7 @@ mod tests {
             bias: rng.gauss(),
             kernel: Kernel::Gaussian { h: 0.37 },
             c: 2.5,
+            labels: DEFAULT_LABEL_PAIR,
         }
     }
 
@@ -207,6 +226,7 @@ mod tests {
             bias: rng.gauss(),
             kernel: Kernel::Gaussian { h: 1.2 },
             c: 0.5,
+            labels: DEFAULT_LABEL_PAIR,
         };
         let dir = std::env::temp_dir()
             .join(format!("hss_svm_persist_sp_{}", std::process::id()));
@@ -241,6 +261,31 @@ mod tests {
             save(&model, &p).unwrap();
             assert_eq!(load(&p).unwrap().kernel, kernel);
         }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn label_pair_roundtrips_and_defaults() {
+        let mut rng = Rng::new(604);
+        let dir = std::env::temp_dir()
+            .join(format!("hss_svm_persist_lbl_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        // non-default pair survives the round-trip bit-exactly
+        let model = SvmModel { labels: [1.0, 2.0], ..toy_model(&mut rng) };
+        let p = dir.join("lbl.model");
+        save(&model, &p).unwrap();
+        let back = load(&p).unwrap();
+        assert_eq!(back.labels, [1.0, 2.0]);
+        assert_eq!(back.sv, model.sv);
+        assert_eq!(back.bias.to_bits(), model.bias.to_bits());
+        // a ±1 model writes no labels line (old readers keep working)
+        // and an old file without one loads with the default pair
+        let dflt = toy_model(&mut rng);
+        let p2 = dir.join("dflt.model");
+        save(&dflt, &p2).unwrap();
+        let text = std::fs::read_to_string(&p2).unwrap();
+        assert!(!text.contains("labels "), "{text}");
+        assert_eq!(load(&p2).unwrap().labels, DEFAULT_LABEL_PAIR);
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -43,30 +43,33 @@ pub fn decision_function(model: &SvmModel, x: &Points, threads: usize) -> Vec<f6
     tiles.concat()
 }
 
-/// Predicted labels (±1).
+/// Predicted labels, mapped back through the model's original label
+/// pair (±1 unless the training data used another encoding).
 pub fn predict(model: &SvmModel, x: &Points, threads: usize) -> Vec<f64> {
     decision_function(model, x, threads)
         .into_iter()
-        .map(|f| if f >= 0.0 { 1.0 } else { -1.0 })
+        .map(|f| model.label_of(f))
         .collect()
 }
 
-/// Classification accuracy on a labelled dataset.
+/// Classification accuracy on a labelled dataset. Compares decision
+/// signs against the dataset's ±1 labels, so it is independent of the
+/// model's output label pair.
 pub fn accuracy(model: &SvmModel, ds: &Dataset, threads: usize) -> f64 {
     if ds.is_empty() {
         return 1.0;
     }
-    let pred = predict(model, &ds.x, threads);
-    let hits = pred.iter().zip(ds.y.iter()).filter(|(p, y)| p == y).count();
+    let f = decision_function(model, &ds.x, threads);
+    let hits = f.iter().zip(ds.y.iter()).filter(|(f, y)| (**f >= 0.0) == (**y > 0.0)).count();
     hits as f64 / ds.len() as f64
 }
 
-/// Confusion counts (tp, fp, tn, fn).
+/// Confusion counts (tp, fp, tn, fn), by decision sign vs ±1 labels.
 pub fn confusion(model: &SvmModel, ds: &Dataset, threads: usize) -> (usize, usize, usize, usize) {
-    let pred = predict(model, &ds.x, threads);
+    let f = decision_function(model, &ds.x, threads);
     let (mut tp, mut fp, mut tn, mut fneg) = (0, 0, 0, 0);
-    for (p, &y) in pred.iter().zip(ds.y.iter()) {
-        match (*p > 0.0, y > 0.0) {
+    for (fi, &y) in f.iter().zip(ds.y.iter()) {
+        match (*fi >= 0.0, y > 0.0) {
             (true, true) => tp += 1,
             (true, false) => fp += 1,
             (false, false) => tn += 1,
@@ -92,6 +95,7 @@ mod tests {
             bias: rng.gauss(),
             kernel: Kernel::Gaussian { h: 0.9 },
             c: 1.0,
+            labels: crate::data::DEFAULT_LABEL_PAIR,
         }
     }
 
@@ -129,6 +133,23 @@ mod tests {
         let p = predict(&model, &x, 1);
         for i in 0..50 {
             assert_eq!(p[i], if f[i] >= 0.0 { 1.0 } else { -1.0 });
+        }
+    }
+
+    #[test]
+    fn nondefault_label_pair_keeps_accuracy_and_maps_predictions() {
+        let mut rng = Rng::new(75);
+        let base = toy_model(&mut rng, 12, 3);
+        let remapped = SvmModel { labels: [1.0, 2.0], ..base.clone() };
+        let ds = crate::data::synth::blobs(90, 3, 3, 0.4, &mut rng);
+        // accuracy/confusion are label-pair independent (decision signs)
+        assert_eq!(accuracy(&base, &ds, 1), accuracy(&remapped, &ds, 1));
+        assert_eq!(confusion(&base, &ds, 1), confusion(&remapped, &ds, 1));
+        // predictions answer in the original encoding
+        let f = decision_function(&remapped, &ds.x, 1);
+        let p = predict(&remapped, &ds.x, 1);
+        for i in 0..ds.len() {
+            assert_eq!(p[i], if f[i] >= 0.0 { 2.0 } else { 1.0 });
         }
     }
 

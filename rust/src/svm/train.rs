@@ -175,7 +175,14 @@ impl HssSvmTrainer {
         let sv = self.compressed.pds.x.select_rows(&sv_idx);
         let alpha_y: Vec<f64> = sv_idx.iter().map(|&i| zy[i]).collect();
 
-        SvmModel { sv, alpha_y, bias, kernel: self.kernel, c }
+        SvmModel {
+            sv,
+            alpha_y,
+            bias,
+            kernel: self.kernel,
+            c,
+            labels: self.compressed.pds.labels,
+        }
     }
 }
 

@@ -1,10 +1,13 @@
-//! Micro/macro benchmark harness (offline substitute for criterion).
+//! Micro/macro benchmark harness (offline substitute for criterion)
+//! plus a lock-free latency [`Histogram`] shared by the serving stats
+//! (`server::stats`, the `STATS` admin command) and `bench_serve`.
 //!
 //! `cargo bench` targets use `harness = false` and drive this: warmup,
 //! adaptive iteration count targeting a wall-time budget, then report
 //! median / p10 / p90 per-iteration times.
 
 use crate::util::timer::Timer;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
 
 /// One measured benchmark result.
@@ -38,6 +41,86 @@ fn fmt_dur(d: Duration) -> String {
         format!("{:.3} ms", s * 1e3)
     } else {
         format!("{:.3} us", s * 1e6)
+    }
+}
+
+/// Quarter-octave histogram buckets: enough range for 1 µs .. ~2 h.
+const HIST_BUCKETS: usize = 256;
+
+/// Concurrent latency histogram: quarter-octave (≈ +19% wide)
+/// log-spaced buckets over microseconds, one atomic add per `record`,
+/// no locks on the hot path. Percentiles resolve to the geometric
+/// midpoint of the containing bucket — well within the fidelity needed
+/// for p50/p99 serving latency and throughput reports.
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_us: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram {
+            buckets: (0..HIST_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+        }
+    }
+
+    fn bucket_of(us: f64) -> usize {
+        if us <= 1.0 {
+            return 0;
+        }
+        ((us.log2() * 4.0) as usize).min(HIST_BUCKETS - 1)
+    }
+
+    /// Record one latency sample.
+    pub fn record(&self, d: Duration) {
+        let us = d.as_secs_f64() * 1e6;
+        self.buckets[Self::bucket_of(us)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us as u64, Ordering::Relaxed);
+    }
+
+    /// Number of recorded samples.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Mean latency in microseconds (0 when empty).
+    pub fn mean_us(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        self.sum_us.load(Ordering::Relaxed) as f64 / n as f64
+    }
+
+    /// `q`-quantile (`0 < q ≤ 1`) in microseconds, resolved to the
+    /// geometric midpoint of the containing bucket; 0 when empty.
+    pub fn percentile_us(&self, q: f64) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        let target = ((q * n as f64).ceil() as u64).clamp(1, n);
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                if i == 0 {
+                    return 1.0;
+                }
+                return ((i as f64 + 0.5) / 4.0).exp2();
+            }
+        }
+        ((HIST_BUCKETS as f64 - 0.5) / 4.0).exp2()
     }
 }
 
@@ -118,6 +201,35 @@ mod tests {
         assert!(r.p10 <= r.median && r.median <= r.p90);
         b.record_once("macro", Duration::from_secs(1));
         assert_eq!(b.results().len(), 2);
+    }
+
+    #[test]
+    fn histogram_percentiles_are_log_accurate() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.percentile_us(0.5), 0.0);
+        // 99 samples at ~1 ms, 1 at ~100 ms: p50 near 1e3 µs, p99+ near 1e5
+        for _ in 0..99 {
+            h.record(Duration::from_micros(1000));
+        }
+        h.record(Duration::from_micros(100_000));
+        assert_eq!(h.count(), 100);
+        let p50 = h.percentile_us(0.5);
+        assert!((800.0..1300.0).contains(&p50), "{p50}");
+        let p999 = h.percentile_us(0.999);
+        assert!((80_000.0..130_000.0).contains(&p999), "{p999}");
+        assert!(h.mean_us() > 1000.0 && h.mean_us() < 3000.0, "{}", h.mean_us());
+        // concurrent recording is just atomic adds
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    for _ in 0..1000 {
+                        h.record(Duration::from_micros(10));
+                    }
+                });
+            }
+        });
+        assert_eq!(h.count(), 4100);
     }
 
     #[test]

@@ -55,6 +55,7 @@ fn decision_tile_matches_native_model() {
             bias: rng.gauss(),
             kernel: Kernel::Gaussian { h: 1.0 },
             c: 1.0,
+            labels: hss_svm::data::DEFAULT_LABEL_PAIR,
         };
         let x = Points::Dense(Mat::gauss(t, f, &mut rng));
         let native = predict::decision_function(&model, &x, 1);

@@ -184,6 +184,7 @@ fn predict_on_mismatched_dims_panics() {
         bias: 0.0,
         kernel: Kernel::Gaussian { h: 1.0 },
         c: 1.0,
+        labels: hss_svm::data::DEFAULT_LABEL_PAIR,
     };
     let bad = hss_svm::data::Points::Dense(Mat::gauss(4, 7, &mut rng));
     let result = std::panic::catch_unwind(|| predict::decision_function(&model, &bad, 1));

@@ -18,6 +18,7 @@ fn toy_model(rng: &mut Rng, n_sv: usize, dim: usize) -> SvmModel {
         bias: rng.gauss(),
         kernel: Kernel::Gaussian { h: 0.8 },
         c: 1.0,
+        labels: hss_svm::data::DEFAULT_LABEL_PAIR,
     }
 }
 

@@ -1,0 +1,396 @@
+//! TCP server integration tests over real sockets: N concurrent
+//! connections must get in-order, offline-bitwise-identical
+//! predictions; a malformed line must fail only its issuer's lines in
+//! the shared tile; MODEL/RELOAD hot swaps must never mix models within
+//! a connection's pre/post-command windows; the mtime poll must pick up
+//! overwritten model files; backpressure must answer (not drop or
+//! block) overflow lines; and shutdown under load must drain cleanly.
+
+use hss_svm::data::{libsvm, DEFAULT_LABEL_PAIR};
+use hss_svm::kernel::Kernel;
+use hss_svm::linalg::Mat;
+use hss_svm::serve;
+use hss_svm::server::{ModelRegistry, Server, ServerConfig, ServerHandle};
+use hss_svm::svm::{persist, predict, SvmModel};
+use hss_svm::util::prng::Rng;
+use std::io::{BufRead, BufReader, Cursor, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+const DIM: usize = 6; // < 32 so Repr::Auto stays dense on every path
+
+fn toy_model(seed: u64, n_sv: usize, bias_shift: f64) -> SvmModel {
+    let mut rng = Rng::new(seed);
+    SvmModel {
+        sv: Mat::gauss(n_sv, DIM, &mut rng).into(),
+        alpha_y: (0..n_sv).map(|_| rng.gauss()).collect(),
+        bias: rng.gauss() + bias_shift,
+        kernel: Kernel::Gaussian { h: 0.8 },
+        c: 1.0,
+        labels: DEFAULT_LABEL_PAIR,
+    }
+}
+
+fn feature_line(rng: &mut Rng) -> String {
+    let a = 1 + rng.below(DIM / 2);
+    let b = a + 1 + rng.below(DIM - a);
+    format!("{a}:{:.3} {b}:{:.3}", rng.gauss(), rng.gauss())
+}
+
+/// What `cmd_predict` would answer for these exact lines: label-agnostic
+/// parse, native decision function, label-mapped formatting.
+fn offline(model: &SvmModel, lines: &[String]) -> Vec<String> {
+    let (x, _) =
+        libsvm::read_features(Cursor::new(lines.join("\n")), Some(model.sv.cols())).unwrap();
+    predict::decision_function(model, &x, 1)
+        .into_iter()
+        .map(|v| serve::format_prediction(model, v))
+        .collect()
+}
+
+fn start(
+    registry: ModelRegistry,
+    cfg: ServerConfig,
+) -> (ServerHandle, std::thread::JoinHandle<anyhow::Result<()>>) {
+    let server = Server::bind("127.0.0.1:0", registry, cfg).expect("bind");
+    let handle = server.handle();
+    let jh = std::thread::spawn(move || server.run());
+    (handle, jh)
+}
+
+fn connect(handle: &ServerHandle) -> (BufReader<TcpStream>, TcpStream) {
+    let s = TcpStream::connect(handle.local_addr()).expect("connect");
+    (BufReader::new(s.try_clone().expect("clone")), s)
+}
+
+fn send_line(w: &mut TcpStream, line: &str) {
+    writeln!(w, "{line}").expect("send");
+}
+
+fn read_line(r: &mut BufReader<TcpStream>) -> String {
+    let mut s = String::new();
+    let n = r.read_line(&mut s).expect("read");
+    assert!(n > 0, "unexpected EOF");
+    s.trim_end().to_string()
+}
+
+#[test]
+fn concurrent_connections_get_in_order_offline_identical_predictions() {
+    let model = toy_model(50, 9, 0.0);
+    let cfg = ServerConfig {
+        threads: 2,
+        batch_wait: Duration::from_millis(2),
+        ..Default::default()
+    };
+    let (handle, server) = start(ModelRegistry::single(model.clone()), cfg);
+
+    const CONNS: usize = 8;
+    const LINES: usize = 120;
+    std::thread::scope(|s| {
+        for c in 0..CONNS {
+            let model = &model;
+            let handle = &handle;
+            s.spawn(move || {
+                let mut rng = Rng::new(100 + c as u64);
+                let lines: Vec<String> = (0..LINES).map(|_| feature_line(&mut rng)).collect();
+                let want = offline(model, &lines);
+                let (mut r, mut w) = connect(handle);
+                for l in &lines {
+                    send_line(&mut w, l);
+                }
+                for (i, want_line) in want.iter().enumerate() {
+                    let got = read_line(&mut r);
+                    assert_eq!(
+                        &got, want_line,
+                        "conn {c} line {i}: server differs from offline predict"
+                    );
+                }
+            });
+        }
+    });
+    handle.shutdown();
+    server.join().unwrap().unwrap();
+}
+
+#[test]
+fn malformed_line_fails_only_its_issuers_lines() {
+    let model = toy_model(51, 7, 0.0);
+    // long batch wait so both connections' lines share one tile
+    let cfg = ServerConfig {
+        threads: 2,
+        batch_wait: Duration::from_millis(60),
+        ..Default::default()
+    };
+    let (handle, server) = start(ModelRegistry::single(model.clone()), cfg);
+
+    const LINES: usize = 50;
+    const BAD_AT: usize = 24; // 0-based index of the malformed line
+    std::thread::scope(|s| {
+        // connection A: one malformed line in the middle
+        let ha = &handle;
+        let ma = &model;
+        s.spawn(move || {
+            let mut rng = Rng::new(200);
+            let mut lines: Vec<String> = (0..LINES).map(|_| feature_line(&mut rng)).collect();
+            lines[BAD_AT] = "+1 2:1 2:2".to_string(); // duplicate index
+            let want = {
+                let mut good = lines.clone();
+                good.remove(BAD_AT);
+                offline(ma, &good)
+            };
+            let (mut r, mut w) = connect(ha);
+            for l in &lines {
+                send_line(&mut w, l);
+            }
+            let mut good_i = 0usize;
+            for i in 0..LINES {
+                let got = read_line(&mut r);
+                if i == BAD_AT {
+                    assert!(
+                        got.starts_with("ERR") && got.contains(&format!("line {}", BAD_AT + 1)),
+                        "bad line answer: {got}"
+                    );
+                    continue;
+                }
+                if got.starts_with("ERR") {
+                    // collateral of sharing a tile with the bad line
+                    assert!(got.contains("dropped"), "{got}");
+                } else {
+                    // in-order: a served line must match ITS offline value
+                    assert_eq!(got, want[good_i], "conn A line {i}");
+                }
+                good_i += 1;
+            }
+        });
+        // connection B: all good lines, all must be served bitwise
+        let hb = &handle;
+        let mb = &model;
+        s.spawn(move || {
+            let mut rng = Rng::new(201);
+            let lines: Vec<String> = (0..LINES).map(|_| feature_line(&mut rng)).collect();
+            let want = offline(mb, &lines);
+            let (mut r, mut w) = connect(hb);
+            for l in &lines {
+                send_line(&mut w, l);
+            }
+            for (i, want_line) in want.iter().enumerate() {
+                let got = read_line(&mut r);
+                assert_eq!(&got, want_line, "conn B line {i} must be unaffected");
+            }
+        });
+    });
+    handle.shutdown();
+    server.join().unwrap().unwrap();
+}
+
+#[test]
+fn model_command_reload_and_hot_swap_never_mix_within_a_window() {
+    let dir = std::env::temp_dir().join(format!("hss_svm_server_swap_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let pa = dir.join("a.model");
+    let pb = dir.join("b.model");
+    let model_a = toy_model(60, 6, 50.0); // biases far apart: decisions
+    let model_b = toy_model(61, 8, -50.0); // are unambiguously attributable
+    persist::save(&model_a, &pa).unwrap();
+    persist::save(&model_b, &pb).unwrap();
+
+    let registry = ModelRegistry::from_paths(&[
+        ("default".to_string(), pa.clone()),
+        ("alt".to_string(), pb.clone()),
+    ])
+    .unwrap();
+    let (handle, server) = start(registry, ServerConfig { threads: 2, ..Default::default() });
+
+    let mut rng = Rng::new(300);
+    let lines: Vec<String> = (0..40).map(|_| feature_line(&mut rng)).collect();
+    let want_a = offline(&model_a, &lines);
+    let want_b = offline(&model_b, &lines);
+
+    let (mut r, mut w) = connect(&handle);
+    // window 1: default model, every line answers as A — bitwise
+    for l in &lines {
+        send_line(&mut w, l);
+    }
+    for want in &want_a {
+        assert_eq!(&read_line(&mut r), want);
+    }
+    // switch to "alt": responses flip to B, never a mix
+    send_line(&mut w, "MODEL alt");
+    assert_eq!(read_line(&mut r), "OK model alt gen 1");
+    for l in &lines {
+        send_line(&mut w, l);
+    }
+    for want in &want_b {
+        assert_eq!(&read_line(&mut r), want);
+    }
+    send_line(&mut w, "MODEL nope");
+    assert!(read_line(&mut r).starts_with("ERR unknown model"));
+
+    // hot swap: overwrite a.model (different SV count => different
+    // size) and RELOAD; in-flight window stays A, next window is the
+    // new model — bitwise, with no blending inside either window
+    let model_c = toy_model(62, 10, 200.0);
+    persist::save(&model_c, &pa).unwrap();
+    let want_c = offline(&model_c, &lines);
+    send_line(&mut w, "MODEL default");
+    assert_eq!(read_line(&mut r), "OK model default gen 1");
+    send_line(&mut w, "RELOAD default");
+    assert_eq!(read_line(&mut r), "OK reloaded default gen 2");
+    // the MODEL command snapshot is per-request, so post-RELOAD lines
+    // pick up generation 2 immediately
+    for l in &lines {
+        send_line(&mut w, l);
+    }
+    for want in &want_c {
+        assert_eq!(&read_line(&mut r), want);
+    }
+
+    send_line(&mut w, "QUIT");
+    assert_eq!(read_line(&mut r), "OK bye");
+    handle.shutdown();
+    server.join().unwrap().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn changed_mtime_is_picked_up_without_reload_command() {
+    let dir = std::env::temp_dir().join(format!("hss_svm_server_mtime_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let p = dir.join("m.model");
+    let model_a = toy_model(70, 5, 100.0);
+    persist::save(&model_a, &p).unwrap();
+
+    let registry = ModelRegistry::from_paths(&[("default".to_string(), p.clone())]).unwrap();
+    let cfg = ServerConfig {
+        threads: 1,
+        poll_interval: Duration::from_millis(20),
+        ..Default::default()
+    };
+    let (handle, server) = start(registry, cfg);
+
+    let mut rng = Rng::new(301);
+    let probe = feature_line(&mut rng);
+    let probe_a = offline(&model_a, std::slice::from_ref(&probe));
+    let (mut r, mut w) = connect(&handle);
+    send_line(&mut w, &probe);
+    assert_eq!(read_line(&mut r), probe_a[0]);
+
+    // overwrite the file (different SV count => size change guarantees
+    // a staleness hit even with coarse mtimes) and wait for the poll
+    let model_b = toy_model(71, 9, -100.0);
+    persist::save(&model_b, &p).unwrap();
+    let probe_b = offline(&model_b, std::slice::from_ref(&probe));
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    loop {
+        std::thread::sleep(Duration::from_millis(30));
+        send_line(&mut w, &probe);
+        let got = read_line(&mut r);
+        if got == probe_b[0] {
+            break; // hot-swapped
+        }
+        assert_eq!(got, probe_a[0], "must be exactly old or new, never a blend");
+        assert!(std::time::Instant::now() < deadline, "mtime poll never swapped");
+    }
+    handle.shutdown();
+    server.join().unwrap().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn overload_answers_with_backpressure_errors_not_hangs() {
+    let model = toy_model(80, 6, 0.0);
+    let cfg = ServerConfig {
+        threads: 1,
+        max_inflight: 4,
+        batch_wait: Duration::from_millis(250),
+        ..Default::default()
+    };
+    let (handle, server) = start(ModelRegistry::single(model.clone()), cfg);
+
+    let mut rng = Rng::new(400);
+    let lines: Vec<String> = (0..120).map(|_| feature_line(&mut rng)).collect();
+    let want = offline(&model, &lines);
+    let (mut r, mut w) = connect(&handle);
+    for l in &lines {
+        send_line(&mut w, l);
+    }
+    let (mut served, mut rejected) = (0usize, 0usize);
+    for i in 0..lines.len() {
+        let got = read_line(&mut r);
+        if got.starts_with("ERR") {
+            assert!(
+                got.contains("overloaded") && got.contains(&format!("line {}", i + 1)),
+                "{got}"
+            );
+            rejected += 1;
+        } else {
+            // responses stay in order and bitwise-correct under pressure
+            assert_eq!(got, want[i], "line {i}");
+            served += 1;
+        }
+    }
+    assert_eq!(served + rejected, lines.len());
+    assert!(rejected > 0, "queue of 4 cannot absorb 120 instant lines");
+    assert!(served >= 4, "queued lines must still be answered");
+    handle.shutdown();
+    server.join().unwrap().unwrap();
+}
+
+#[test]
+fn stats_report_and_clean_shutdown_under_load() {
+    let model = toy_model(90, 7, 0.0);
+    let cfg = ServerConfig {
+        threads: 2,
+        batch_wait: Duration::from_millis(1),
+        ..Default::default()
+    };
+    let (handle, server) = start(ModelRegistry::single(model.clone()), cfg);
+
+    // lock-step load clients: serve until the server goes away
+    let load = |seed: u64, handle: ServerHandle, model: SvmModel| {
+        std::thread::spawn(move || {
+            let mut rng = Rng::new(seed);
+            let (mut r, mut w) = connect(&handle);
+            let mut ok = 0usize;
+            loop {
+                let line = feature_line(&mut rng);
+                if writeln!(w, "{line}").is_err() {
+                    break;
+                }
+                let mut resp = String::new();
+                match r.read_line(&mut resp) {
+                    Ok(n) if n > 0 => {
+                        let want = offline(&model, std::slice::from_ref(&line));
+                        assert_eq!(resp.trim_end(), want[0]);
+                        ok += 1;
+                    }
+                    _ => break, // server drained and closed
+                }
+            }
+            ok
+        })
+    };
+    let clients: Vec<_> = (0..4).map(|i| load(500 + i, handle.clone(), model.clone())).collect();
+    std::thread::sleep(Duration::from_millis(150));
+
+    // a control connection inspects STATS and then shuts the server down
+    let (mut r, mut w) = connect(&handle);
+    send_line(&mut w, "# comment lines are skipped, not answered");
+    send_line(&mut w, "STATS");
+    let stats = read_line(&mut r);
+    assert!(stats.starts_with("OK stats "), "{stats}");
+    for key in ["connections=", "predicted=", "p50_us=", "p99_us=", "queue="] {
+        assert!(stats.contains(key), "{stats} missing {key}");
+    }
+    send_line(&mut w, "SHUTDOWN");
+    assert_eq!(read_line(&mut r), "OK shutting down");
+
+    server.join().unwrap().expect("clean shutdown under load");
+    let mut total = 0usize;
+    for c in clients {
+        total += c.join().unwrap();
+    }
+    assert!(total > 0, "load clients must have been served before shutdown");
+    let summary = handle.summary();
+    assert!(summary.contains("predictions"), "{summary}");
+}

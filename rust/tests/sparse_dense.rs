@@ -59,6 +59,7 @@ fn decision_function_agrees_across_representations() {
             bias: rng_free_bias(&alpha_y),
             kernel: Kernel::Gaussian { h: 0.9 },
             c: 1.0,
+            labels: hss_svm::data::DEFAULT_LABEL_PAIR,
         };
         let dense_model = mk(Points::Dense(sv.to_dense()));
         let sparse_model = mk(Points::Sparse(sv));
@@ -170,6 +171,7 @@ fn sparse_model_persists_and_reloads() {
         bias: 0.125,
         kernel: Kernel::Gaussian { h: 1.5 },
         c: 2.0,
+        labels: hss_svm::data::DEFAULT_LABEL_PAIR,
     };
     let dir = std::env::temp_dir().join(format!("hss_svm_sp_model_{}", std::process::id()));
     std::fs::create_dir_all(&dir).unwrap();
