@@ -277,6 +277,58 @@ fn main() {
          memory        {sparse_mem_ratio:.1}x smaller in CSR"
     );
 
+    // --- OvO multiclass: shared-SV engine vs naive per-pair predict ---
+    // A 5-class blob set → 10 pairwise models whose SVs overlap heavily
+    // (every training point sits in 4 subproblems). The naive path pays
+    // one kernel block per pair per tile; the engine dedups the SVs
+    // into one pool and pays ONE block per tile, reducing each pair as
+    // a sparse gather. The gate keeps that structural advantage from
+    // regressing (engine falling to or below naive speed).
+    let (n_ovo, n_ovo_test) = if opts.smoke { (600, 1200) } else { (1500, 6000) };
+    println!(
+        "\n-- OvO multiclass: shared-SV engine vs naive per-pair \
+         (5 classes, train {n_ovo}, test {n_ovo_test}) --"
+    );
+    let mut ovo_rng = Rng::new(13);
+    let ds_ovo = synth::multiclass_blobs(n_ovo, 4, 5, 0.45, &mut ovo_rng);
+    let test_ovo = synth::multiclass_blobs(n_ovo_test, 4, 5, 0.45, &mut ovo_rng);
+    let mut hp_ovo = HssParams::near_exact();
+    hp_ovo.leaf_size = 64;
+    let admm_ovo = AdmmParams { beta: 10.0, max_it: 10, relax: 1.0, tol: 0.0 };
+    let t = Timer::start();
+    let (ovo_model, _) = hss_svm::svm::multiclass::train_ovo(
+        &ds_ovo,
+        kernel,
+        &hp_ovo,
+        &admm_ovo,
+        5.0,
+        threads,
+    )
+    .expect("ovo training");
+    b.record_once("ovo: train 10 pairs", t.elapsed());
+    let sv_ratio = ovo_model.n_sv_total() as f64 / ovo_model.n_sv_unique().max(1) as f64;
+    let t = Timer::start();
+    let f_naive = ovo_model.decisions_naive(&test_ovo.x, threads);
+    let naive_predict_secs = t.secs();
+    let t = Timer::start();
+    let f_shared = ovo_model.decisions(&test_ovo.x, threads);
+    let shared_predict_secs = t.secs();
+    let mut ovo_dev = 0.0f64;
+    for (a, bb) in f_shared.data().iter().zip(f_naive.data().iter()) {
+        ovo_dev = ovo_dev.max((a - bb).abs() / (1.0 + bb.abs()));
+    }
+    assert!(ovo_dev <= 1e-12, "shared-SV engine deviates from per-pair path: {ovo_dev:.3e}");
+    let ovo_shared_sv_speedup = naive_predict_secs / shared_predict_secs.max(1e-12);
+    b.record_once("ovo: naive per-pair predict", Duration::from_secs_f64(naive_predict_secs));
+    b.record_once("ovo: shared-SV predict", Duration::from_secs_f64(shared_predict_secs));
+    println!(
+        "    SVs           {} total → {} unique ({sv_ratio:.2}x shared)\n    \
+         predict       {naive_predict_secs:>8.3} s → {shared_predict_secs:>8.3} s \
+         ({ovo_shared_sv_speedup:.2}x, max rel |Δ| = {ovo_dev:.1e})",
+        ovo_model.n_sv_total(),
+        ovo_model.n_sv_unique()
+    );
+
     if !opts.smoke {
         // --- ablation: ANN sampling vs pure random ---
         println!("\n-- ablation: column sampling strategy (n=3000) --");
@@ -334,6 +386,14 @@ fn main() {
         json.push_str(&format!("  \"sparse_block_speedup\": {sparse_block_speedup:.4},\n"));
         json.push_str(&format!("  \"sparse_predict_speedup\": {sparse_predict_speedup:.4},\n"));
         json.push_str(&format!("  \"sparse_mem_ratio\": {sparse_mem_ratio:.2},\n"));
+        json.push_str(&format!("  \"ovo_n_train\": {n_ovo},\n"));
+        json.push_str(&format!("  \"ovo_n_test\": {n_ovo_test},\n"));
+        json.push_str(&format!("  \"ovo_sv_total\": {},\n", ovo_model.n_sv_total()));
+        json.push_str(&format!("  \"ovo_sv_unique\": {},\n", ovo_model.n_sv_unique()));
+        json.push_str(&format!("  \"ovo_naive_predict_secs\": {naive_predict_secs:.6},\n"));
+        json.push_str(&format!("  \"ovo_shared_predict_secs\": {shared_predict_secs:.6},\n"));
+        json.push_str(&format!("  \"ovo_shared_sv_speedup\": {ovo_shared_sv_speedup:.4},\n"));
+        json.push_str(&format!("  \"ovo_max_rel_dev\": {ovo_dev:.3e},\n"));
         json.push_str(&format!("  \"max_dev\": {max_dev:.3e}\n"));
         json.push_str("}\n");
         let out = from_repo_root(path);
@@ -351,12 +411,21 @@ fn main() {
         let floor_batched = 0.75 * baseline_key("batched_speedup");
         let floor_parallel = 0.75 * baseline_key("parallel_speedup");
         let floor_sparse = 0.75 * baseline_key("sparse_block_speedup");
+        let floor_ovo = 0.75 * baseline_key("ovo_shared_sv_speedup");
         println!(
             "\n[hss] baseline gate: batched {batched_speedup:.2}x (floor {floor_batched:.2}x), \
              parallel {parallel_speedup:.2}x (floor {floor_parallel:.2}x), \
-             sparse block {sparse_block_speedup:.2}x (floor {floor_sparse:.2}x)"
+             sparse block {sparse_block_speedup:.2}x (floor {floor_sparse:.2}x), \
+             ovo shared-SV {ovo_shared_sv_speedup:.2}x (floor {floor_ovo:.2}x)"
         );
         let mut failed = false;
+        if ovo_shared_sv_speedup < floor_ovo {
+            eprintln!(
+                "[hss] REGRESSION: OvO shared-SV predict speedup {ovo_shared_sv_speedup:.2}x \
+                 fell >25% below the committed baseline"
+            );
+            failed = true;
+        }
         if sparse_block_speedup < floor_sparse {
             eprintln!(
                 "[hss] REGRESSION: CSR kernel-block speedup {sparse_block_speedup:.2}x fell >25% \

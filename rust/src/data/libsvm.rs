@@ -30,6 +30,7 @@
 
 use crate::data::dataset::Dataset;
 use crate::data::sparse::{CsrMat, Points};
+use crate::svm::MulticlassDataset;
 use anyhow::{bail, Context, Result};
 use std::io::{BufRead, BufWriter, Write};
 use std::path::Path;
@@ -189,6 +190,87 @@ pub fn read(r: impl BufRead, dim: Option<usize>) -> Result<Dataset> {
 /// [`read`] with an explicit representation request.
 pub fn read_with(r: impl BufRead, dim: Option<usize>, repr: Repr) -> Result<Dataset> {
     let parsed = parse_stream(r, false, 0)?;
+    binary_from_parsed(parsed, dim, repr)
+}
+
+/// A parsed LIBSVM file of either arity ([`read_any`]).
+pub enum LibsvmData {
+    /// ≤ 2 distinct labels: the historical binary path (±1-normalized
+    /// labels, original pair recorded).
+    Binary(Dataset),
+    /// > 2 distinct labels: a multiclass dataset with integer classes.
+    Multi(MulticlassDataset),
+}
+
+/// Parse LIBSVM text, auto-detecting the label arity: files with more
+/// than two distinct (rounded) labels load as a [`MulticlassDataset`]
+/// whose classes are the rounded integer labels; everything else goes
+/// through the binary path exactly as [`read_with`] (same ±1
+/// normalization, same recorded label pair). The `train`/`grid` CLI
+/// front-ends use this to route multiclass files onto the one-vs-one
+/// trainer (`--binary` forces the old strict path).
+pub fn read_any(r: impl BufRead, dim: Option<usize>, repr: Repr) -> Result<LibsvmData> {
+    let parsed = parse_stream(r, false, 0)?;
+    let distinct: std::collections::BTreeSet<i64> =
+        parsed.labels.iter().map(|&l| l.round() as i64).collect();
+    if distinct.len() > 2 {
+        Ok(LibsvmData::Multi(multiclass_from_parsed(parsed, dim, repr)?))
+    } else {
+        Ok(LibsvmData::Binary(binary_from_parsed(parsed, dim, repr)?))
+    }
+}
+
+/// [`read_any`] from a file path (the dataset name is the file stem).
+pub fn read_file_any(path: impl AsRef<Path>, dim: Option<usize>, repr: Repr) -> Result<LibsvmData> {
+    let f = std::fs::File::open(path.as_ref())
+        .with_context(|| format!("cannot open {}", path.as_ref().display()))?;
+    let mut data = read_any(std::io::BufReader::new(f), dim, repr)?;
+    if let Some(stem) = path.as_ref().file_stem().and_then(|s| s.to_str()) {
+        match &mut data {
+            LibsvmData::Binary(ds) => ds.name = stem.to_string(),
+            LibsvmData::Multi(ds) => ds.name = stem.to_string(),
+        }
+    }
+    Ok(data)
+}
+
+/// Strict multiclass parse: labels are required on every line (no bare
+/// feature lists) and become rounded integer classes verbatim — no
+/// ±1 normalization, any number of classes ≥ 1. Used for multiclass
+/// TEST files, whose arity must follow the training file rather than
+/// be re-detected from whichever classes happen to appear.
+pub fn read_multiclass(r: impl BufRead, dim: Option<usize>, repr: Repr) -> Result<MulticlassDataset> {
+    let parsed = parse_stream(r, false, 0)?;
+    multiclass_from_parsed(parsed, dim, repr)
+}
+
+/// [`read_multiclass`] from a file path.
+pub fn read_multiclass_file(
+    path: impl AsRef<Path>,
+    dim: Option<usize>,
+    repr: Repr,
+) -> Result<MulticlassDataset> {
+    let f = std::fs::File::open(path.as_ref())
+        .with_context(|| format!("cannot open {}", path.as_ref().display()))?;
+    let mut ds = read_multiclass(std::io::BufReader::new(f), dim, repr)?;
+    if let Some(stem) = path.as_ref().file_stem().and_then(|s| s.to_str()) {
+        ds.name = stem.to_string();
+    }
+    Ok(ds)
+}
+
+fn multiclass_from_parsed(
+    parsed: Parsed,
+    dim: Option<usize>,
+    repr: Repr,
+) -> Result<MulticlassDataset> {
+    let dim = resolve_dim(&parsed, dim)?;
+    let (x, labels) = build_points(parsed, dim, repr);
+    let classes: Vec<i64> = labels.iter().map(|&l| l.round() as i64).collect();
+    Ok(MulticlassDataset::new("libsvm", x, classes))
+}
+
+fn binary_from_parsed(parsed: Parsed, dim: Option<usize>, repr: Repr) -> Result<Dataset> {
     let dim = resolve_dim(&parsed, dim)?;
 
     // Map labels to ±1. Convention (applies to every two-label
@@ -567,6 +649,46 @@ mod tests {
         assert_eq!(n[0], -1.0);
         assert!(n[1].is_nan());
         assert_eq!(n[2], 1.0);
+    }
+
+    #[test]
+    fn read_any_detects_label_arity() {
+        // > 2 distinct labels → multiclass, classes sorted on query
+        let text = "3 1:1.0\n1 2:2.0\n7 1:0.5 3:1.5\n1 3:1.0\n";
+        let LibsvmData::Multi(ds) = read_any(Cursor::new(text), None, Repr::Auto).unwrap() else {
+            panic!("4-line 3-class file must detect as multiclass");
+        };
+        assert_eq!(ds.classes(), vec![1, 3, 7]);
+        assert_eq!(ds.labels, vec![3, 1, 7, 1]);
+        assert_eq!(ds.dim(), 3);
+        // ≤ 2 labels keeps the exact binary behavior (pair recorded)
+        let LibsvmData::Binary(ds) =
+            read_any(Cursor::new("1 1:1\n2 1:2\n"), None, Repr::Auto).unwrap()
+        else {
+            panic!("2-class file must stay binary");
+        };
+        assert_eq!(ds.y, vec![-1.0, 1.0]);
+        assert_eq!(ds.labels, [1.0, 2.0]);
+        // strict multiclass read keeps any arity, including 2 classes
+        let m = read_multiclass(Cursor::new("1 1:1\n2 1:2\n"), None, Repr::Auto).unwrap();
+        assert_eq!(m.labels, vec![1, 2]);
+        // bare feature lines are rejected on the strict paths
+        assert!(read_multiclass(Cursor::new("1:0.5\n"), None, Repr::Auto).is_err());
+        assert!(read_any(Cursor::new("1:0.5\n"), None, Repr::Auto).is_err());
+    }
+
+    #[test]
+    fn multiclass_respects_representation_request() {
+        let text = "0 1:1 100:2\n1 50:1\n2 7:3\n";
+        let LibsvmData::Multi(auto) = read_any(Cursor::new(text), None, Repr::Auto).unwrap()
+        else {
+            panic!("multiclass expected");
+        };
+        assert!(auto.is_sparse(), "wide sparse multiclass stays CSR under Auto");
+        let dense = read_multiclass(Cursor::new(text), None, Repr::Dense).unwrap();
+        assert!(!dense.is_sparse());
+        assert_eq!(auto.x.to_dense(), dense.x.to_dense());
+        assert_eq!(auto.labels, dense.labels);
     }
 
     #[test]

@@ -62,8 +62,15 @@ fn minmax(x: &Points) -> (Vec<f64>, Vec<f64>) {
 impl Scaler {
     /// Fit a min-max scaler mapping each feature to [lo, hi].
     pub fn fit_minmax(ds: &Dataset, lo: f64, hi: f64) -> Scaler {
-        let dim = ds.dim();
-        let (min, max) = minmax(&ds.x);
+        Self::fit_minmax_points(&ds.x, lo, hi)
+    }
+
+    /// [`Scaler::fit_minmax`] over a bare [`Points`] container — the
+    /// multiclass path fits here (a [`Dataset`] carries ±1 labels the
+    /// scaler never looks at).
+    pub fn fit_minmax_points(x: &Points, lo: f64, hi: f64) -> Scaler {
+        let dim = x.cols();
+        let (min, max) = minmax(x);
         let mut shift = vec![0.0; dim];
         let mut factor = vec![1.0; dim];
         for j in 0..dim {
@@ -147,8 +154,13 @@ impl Scaler {
     /// Apply in place. Sparse rows scale their stored entries only
     /// (implicit zeros stay zero — the `svm-scale` convention).
     pub fn apply(&self, ds: &mut Dataset) {
-        assert_eq!(ds.dim(), self.shift.len(), "scaler dimension mismatch");
-        match &mut ds.x {
+        self.apply_points(&mut ds.x)
+    }
+
+    /// [`Scaler::apply`] over a bare [`Points`] container.
+    pub fn apply_points(&self, x: &mut Points) {
+        assert_eq!(x.cols(), self.shift.len(), "scaler dimension mismatch");
+        match x {
             Points::Dense(m) => {
                 for i in 0..m.rows() {
                     let row = m.row_mut(i);
@@ -174,6 +186,14 @@ pub fn scale_pair(train: &mut Dataset, test: &mut Dataset) {
     let sc = Scaler::fit_minmax(train, -1.0, 1.0);
     sc.apply(train);
     sc.apply(test);
+}
+
+/// [`scale_pair`] over bare feature containers — the multiclass
+/// train/test path (fit on train only, like the binary path).
+pub fn scale_points_pair(train: &mut Points, test: &mut Points) {
+    let sc = Scaler::fit_minmax_points(train, -1.0, 1.0);
+    sc.apply_points(train);
+    sc.apply_points(test);
 }
 
 #[cfg(test)]

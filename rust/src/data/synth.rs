@@ -17,6 +17,7 @@
 
 use crate::data::dataset::Dataset;
 use crate::linalg::Mat;
+use crate::svm::MulticlassDataset;
 use crate::util::prng::Rng;
 
 /// Gaussian blobs: `clusters` centers in [-1,1]^dim, alternating labels.
@@ -36,6 +37,35 @@ pub fn blobs(n: usize, dim: usize, clusters: usize, std: f64, rng: &mut Rng) -> 
         y[i] = if c % 2 == 0 { 1.0 } else { -1.0 };
     }
     Dataset::new("blobs", x, y)
+}
+
+/// Multiclass Gaussian blobs: `classes` well-separated centers (one per
+/// class, labels `0..classes`), points assigned round-robin so every
+/// class is populated. Centers sit on scaled coordinate axes (center c
+/// at `4·(1 + c/dim)` along axis `c % dim`), which keeps them pairwise
+/// separated for any `classes`/`dim` combination — the one-vs-one
+/// tests and the `ovo_shared_sv_speedup` bench both generate here.
+pub fn multiclass_blobs(
+    n: usize,
+    dim: usize,
+    classes: usize,
+    std: f64,
+    rng: &mut Rng,
+) -> MulticlassDataset {
+    assert!(classes >= 2 && dim >= 1);
+    let mut x = Mat::zeros(n, dim);
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        let c = i % classes;
+        let axis = c % dim;
+        let radius = 4.0 * (1.0 + (c / dim) as f64);
+        let row = x.row_mut(i);
+        for (j, v) in row.iter_mut().enumerate() {
+            *v = if j == axis { radius } else { 0.0 } + rng.gauss() * std;
+        }
+        labels.push(c as i64);
+    }
+    MulticlassDataset::new("multiclass_blobs", x, labels)
 }
 
 /// The two-moons toy (2-D, intrinsically nonlinear boundary).

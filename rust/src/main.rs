@@ -14,14 +14,15 @@ use hss_svm::admm::AdmmParams;
 use hss_svm::cli::Args;
 use hss_svm::cluster::SplitMethod;
 use hss_svm::coordinator::{run_suite, GridSearch, SuiteConfig};
+use hss_svm::data::libsvm::{LibsvmData, Repr};
 use hss_svm::data::synth::Table1Spec;
 use hss_svm::data::{libsvm, scale, synth, Dataset};
-use hss_svm::data::libsvm::Repr;
 use hss_svm::eval::{figures, report, tables};
 use hss_svm::hss::HssParams;
 use hss_svm::kernel::Kernel;
 use hss_svm::runtime::PjrtRuntime;
-use hss_svm::svm::{predict, train::train_hss_svm};
+use hss_svm::svm::multiclass::{train_ovo, MulticlassDataset};
+use hss_svm::svm::{predict, train::train_hss_svm, AnyModel};
 use hss_svm::util::threadpool;
 use hss_svm::util::timer::Timer;
 use std::path::PathBuf;
@@ -67,9 +68,17 @@ USAGE:
                      [--beta F] [--iters N] [--hss low|high|exact]
                      [--threads N] [--pjrt]
   hss-svm train      --train-file f.libsvm --test-file g.libsvm [...same]
-                     [--save-model m.model] [--sparse|--dense]
+                     [--save-model m.model] [--sparse|--dense] [--binary]
+                                         # >2 distinct labels auto-train
+                                         # one-vs-one multiclass (pairs
+                                         # in parallel, C grid batched);
+                                         # --binary forces the strict
+                                         # 2-class reader
   hss-svm predict    --model m.model --test-file g.libsvm [--out pred.txt]
                      [--pjrt] [--sparse|--dense]
+                                         # OvO model files predict via
+                                         # the shared-SV engine and
+                                         # answer original class labels
   hss-svm serve      --model m.model [--stdin]
                                          # LIBSVM lines on stdin ->
                                          # "<label> <decision>" per line;
@@ -99,6 +108,12 @@ Datasets: synthetic workloads matched to the paper's Table 1
 LIBSVM files load without densifying: wide sparse data (dim >= 32,
 density <= 25%) stays in CSR form end-to-end (memory ~ nnz, not
 rows x dim); --sparse / --dense force the representation.
+
+Multiclass: a training file with more than two distinct labels trains
+LIBSVM-style one-vs-one (k(k-1)/2 pairwise classifiers, trained in
+parallel, each reusing one HSS factorization across the whole C grid).
+Saved OvO models store a shared support-vector pool; predict and both
+serve modes answer the file's original integer class labels.
 "#;
 
 fn hss_params_from(args: &Args) -> Result<HssParams> {
@@ -131,33 +146,43 @@ fn repr_from(args: &Args) -> Result<Repr> {
     }
 }
 
+/// The test file (or held-out split) must land in the SAME
+/// representation as train: the scaler's zero handling differs per
+/// representation (dense shifts zeros, CSR keeps them — svm-scale
+/// convention), so an Auto split decision would put train and test in
+/// different feature spaces.
+fn test_repr_for(repr: Repr, train_sparse: bool) -> Repr {
+    match repr {
+        Repr::Auto if train_sparse => Repr::Sparse,
+        Repr::Auto => Repr::Dense,
+        forced => forced,
+    }
+}
+
+/// Binary tail of the loading pipeline: resolve the test set (file or
+/// 70/30 split) and fit-on-train scaling.
+fn finish_binary_pair(args: &Args, mut train: Dataset, repr: Repr) -> Result<(Dataset, Dataset)> {
+    let dim = train.dim();
+    let test_repr = test_repr_for(repr, train.is_sparse());
+    let mut test = match args.str_opt("test-file") {
+        Some(f) => libsvm::read_file_with(f, Some(dim), test_repr)?,
+        None => {
+            // 70/30 split
+            let n = train.len();
+            let (tr, te) = train.split_at(n * 7 / 10);
+            train = tr;
+            te
+        }
+    };
+    scale::scale_pair(&mut train, &mut test);
+    Ok((train, test))
+}
+
 fn load_pair(args: &Args) -> Result<(Dataset, Dataset)> {
     if let Some(train_file) = args.str_opt("train-file") {
         let repr = repr_from(args)?;
-        let mut train = libsvm::read_file_with(train_file, None, repr)?;
-        let dim = train.dim();
-        // the test file must land in the SAME representation as train:
-        // the scaler's zero handling differs per representation (dense
-        // shifts zeros, CSR keeps them — svm-scale convention), so an
-        // Auto split decision would put train and test in different
-        // feature spaces
-        let test_repr = match repr {
-            Repr::Auto if train.is_sparse() => Repr::Sparse,
-            Repr::Auto => Repr::Dense,
-            forced => forced,
-        };
-        let mut test = match args.str_opt("test-file") {
-            Some(f) => libsvm::read_file_with(f, Some(dim), test_repr)?,
-            None => {
-                // 70/30 split
-                let n = train.len();
-                let (tr, te) = train.split_at(n * 7 / 10);
-                train = tr;
-                te
-            }
-        };
-        scale::scale_pair(&mut train, &mut test);
-        Ok((train, test))
+        let train = libsvm::read_file_with(train_file, None, repr)?;
+        finish_binary_pair(args, train, repr)
     } else {
         let name = args.str_or("dataset", "ijcnn1");
         let spec = synth::table1_spec(&name)
@@ -168,9 +193,129 @@ fn load_pair(args: &Args) -> Result<(Dataset, Dataset)> {
     }
 }
 
+/// A loaded (train, test) pair of either arity.
+enum LoadedPair {
+    Binary(Dataset, Dataset),
+    Multi(MulticlassDataset, MulticlassDataset),
+}
+
+/// Arity-detecting loader for `train`/`grid`: a `--train-file` with
+/// more than two distinct labels routes onto the one-vs-one multiclass
+/// path (`--binary` forces the strict binary reader, which rejects > 2
+/// classes); synthetic datasets are binary by construction. Multiclass
+/// test sets are read strictly (labels required, same classes space as
+/// train is NOT enforced — unseen test classes just never match) and
+/// scaled with train-fitted min-max like the binary path.
+fn load_pair_auto(args: &Args) -> Result<LoadedPair> {
+    let Some(train_file) = args.str_opt("train-file") else {
+        let (train, test) = load_pair(args)?;
+        return Ok(LoadedPair::Binary(train, test));
+    };
+    if args.has("binary") {
+        let (train, test) = load_pair(args)?;
+        return Ok(LoadedPair::Binary(train, test));
+    }
+    let repr = repr_from(args)?;
+    match libsvm::read_file_any(train_file, None, repr)? {
+        LibsvmData::Binary(train) => {
+            let (train, test) = finish_binary_pair(args, train, repr)?;
+            Ok(LoadedPair::Binary(train, test))
+        }
+        LibsvmData::Multi(mut train) => {
+            let dim = train.dim();
+            let test_repr = test_repr_for(repr, train.is_sparse());
+            let mut test = match args.str_opt("test-file") {
+                Some(f) => libsvm::read_multiclass_file(f, Some(dim), test_repr)?,
+                None => {
+                    // deterministic 70/30 INTERLEAVED split (i % 10):
+                    // multiclass LIBSVM files are commonly sorted by
+                    // class, so a contiguous cut would strand the later
+                    // classes entirely in the test set
+                    let tr_idx: Vec<usize> = (0..train.len()).filter(|i| i % 10 < 7).collect();
+                    let te_idx: Vec<usize> = (0..train.len()).filter(|i| i % 10 >= 7).collect();
+                    let te = train.select(&te_idx);
+                    train = train.select(&tr_idx);
+                    te
+                }
+            };
+            scale::scale_points_pair(&mut train.x, &mut test.x);
+            Ok(LoadedPair::Multi(train, test))
+        }
+    }
+}
+
 fn cmd_train(args: &Args) -> Result<()> {
+    match load_pair_auto(args)? {
+        LoadedPair::Binary(train, test) => cmd_train_binary(args, train, test),
+        LoadedPair::Multi(train, test) => cmd_train_multiclass(args, train, test),
+    }
+}
+
+/// One-vs-one multiclass training: parallel pairwise subproblems over
+/// the thread budget, shared-SV engine accuracy, OvO model file.
+fn cmd_train_multiclass(
+    args: &Args,
+    train: MulticlassDataset,
+    test: MulticlassDataset,
+) -> Result<()> {
     let threads = args.usize_or("threads", threadpool::default_threads())?;
-    let (train, test) = load_pair(args)?;
+    let beta = args.f64_or("beta", Table1Spec::beta_for(train.len()))?;
+    let h = args.f64_or("h", 1.0)?;
+    let c = args.f64_or("c", 1.0)?;
+    let iters = args.usize_or("iters", 10)?;
+    let hss = hss_params_from(args)?;
+    let classes = train.classes();
+    println!(
+        "training OvO on {} ({} pts x {} feats, {} classes {:?}{}; test {})",
+        train.name,
+        train.len(),
+        train.dim(),
+        classes.len(),
+        classes,
+        if train.is_sparse() {
+            format!(", CSR {} nnz", train.x.nnz())
+        } else {
+            String::new()
+        },
+        test.len()
+    );
+    if args.has("pjrt") {
+        eprintln!("train: --pjrt ignored for multiclass (shared-SV engine is native-only)");
+    }
+    let (model, stats) = train_ovo(
+        &train,
+        Kernel::Gaussian { h },
+        &hss,
+        &AdmmParams { beta, max_it: iters, relax: 1.0, tol: 0.0 },
+        c,
+        threads,
+    )?;
+    let t = Timer::start();
+    let acc = model.accuracy(&test, threads);
+    let predict_secs = t.secs();
+    println!(
+        "  {} pairwise subproblems (CPU-seconds summed over pairs):",
+        stats.pairs
+    );
+    println!("  compression   {:>9.3} s", stats.compress_secs);
+    println!("  factorization {:>9.3} s", stats.factor_secs);
+    println!("  ADMM ({iters} it)  {:>9.3} s", stats.admm_secs);
+    println!("  prediction    {predict_secs:>9.3} s   (shared-SV engine)");
+    println!(
+        "  support vectors: {} ({} unique in the shared pool)",
+        model.n_sv_total(),
+        model.n_sv_unique()
+    );
+    println!("  test accuracy:   {:.3}%", acc * 100.0);
+    if let Some(path) = args.str_opt("save-model") {
+        hss_svm::svm::persist::save_ovo(&model, path)?;
+        println!("  model saved to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_train_binary(args: &Args, train: Dataset, test: Dataset) -> Result<()> {
+    let threads = args.usize_or("threads", threadpool::default_threads())?;
     let beta = args.f64_or("beta", Table1Spec::beta_for(train.len()))?;
     let h = args.f64_or("h", 1.0)?;
     let c = args.f64_or("c", 1.0)?;
@@ -235,9 +380,69 @@ fn cmd_train(args: &Args) -> Result<()> {
 }
 
 fn cmd_predict(args: &Args) -> Result<()> {
-    let threads = args.usize_or("threads", threadpool::default_threads())?;
     let model_path = args.str_opt("model").context("--model is required")?;
-    let model = hss_svm::svm::persist::load(model_path)?;
+    match hss_svm::svm::persist::load_any(model_path)? {
+        AnyModel::Binary(model) => cmd_predict_binary(args, model),
+        AnyModel::Ovo(model) => cmd_predict_multiclass(args, model),
+    }
+}
+
+/// Multiclass prediction: label-agnostic feature read, shared-SV
+/// engine, accuracy over the labeled lines by integer class match,
+/// `--out` answering the ORIGINAL class labels of the training file.
+fn cmd_predict_multiclass(args: &Args, model: hss_svm::svm::OvoModel) -> Result<()> {
+    let threads = args.usize_or("threads", threadpool::default_threads())?;
+    let test_path = args.str_opt("test-file").context("--test-file is required")?;
+    // Auto follows the MODEL's representation (like serve::parse_batch
+    // pins tiles), so offline predict is bitwise-identical to serving
+    // the same lines; --sparse/--dense still override explicitly
+    let repr = test_repr_for(repr_from(args)?, model.is_sparse());
+    let (x, raw_labels) = libsvm::read_features_file(test_path, Some(model.dim()), repr)?;
+    if args.has("pjrt") {
+        eprintln!("predict: --pjrt ignored for multiclass (shared-SV engine is native-only)");
+    }
+    let t = Timer::start();
+    let preds = model.engine().predict_with_scores(&x, threads);
+    let secs = t.secs();
+    // the serving convention (see `serve`): a literal `0` label is the
+    // "no label" placeholder, excluded from accuracy — UNLESS 0 is one
+    // of the model's actual classes (a 0-labeled multiclass corpus)
+    let zero_is_class = model.classes().contains(&0);
+    let is_labeled = |l: f64| l.is_finite() && (zero_is_class || l != 0.0);
+    let labeled = raw_labels.iter().filter(|&&l| is_labeled(l)).count();
+    let hits = preds
+        .iter()
+        .zip(raw_labels.iter())
+        .filter(|((p, _), l)| is_labeled(**l) && *p == l.round() as i64)
+        .count();
+    if labeled > 0 {
+        println!(
+            "predicted {} points in {secs:.3}s (shared-SV engine, {} pairs): accuracy \
+             {:.3}% over {labeled} labeled lines",
+            x.rows(),
+            model.pairs().len(),
+            100.0 * hits as f64 / labeled as f64
+        );
+    } else {
+        println!(
+            "predicted {} points in {secs:.3}s (shared-SV engine, {} pairs); no labeled lines",
+            x.rows(),
+            model.pairs().len()
+        );
+    }
+    if let Some(out) = args.str_opt("out") {
+        use std::io::Write;
+        let mut w = std::io::BufWriter::new(std::fs::File::create(out)?);
+        for (class, _) in &preds {
+            writeln!(w, "{class}")?;
+        }
+        println!("predictions written to {out}");
+    }
+    Ok(())
+}
+
+fn cmd_predict_binary(args: &Args, model: hss_svm::svm::SvmModel) -> Result<()> {
+    let threads = args.usize_or("threads", threadpool::default_threads())?;
     let test_path = args.str_opt("test-file").context("--test-file is required")?;
     // label-agnostic read: unlabeled / partially labeled files predict
     // fine; accuracy is reported over the labeled lines only
@@ -309,18 +514,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     let threads = args.usize_or("threads", threadpool::default_threads())?;
     let model_path = args.str_opt("model").context("--model is required")?;
-    let model = hss_svm::svm::persist::load(model_path)?;
+    let model = hss_svm::svm::persist::load_any(model_path)?;
     let mut rt = if args.has("pjrt") { PjrtRuntime::try_default() } else { None };
-    if rt.is_some() && model.sv.is_sparse() {
+    if rt.is_some() && model.is_sparse() {
         eprintln!("serve: CSR model — PJRT artifacts need dense SVs, using the native path");
         rt = None;
     }
+    if rt.is_some() && model.as_binary().is_none() {
+        eprintln!("serve: OvO model — PJRT artifacts are binary tiles, using the native engine");
+        rt = None;
+    }
     eprintln!(
-        "serving {} ({} SVs, dim {}{}), {} path; send LIBSVM lines, EOF to stop",
+        "serving {} ({}), {} path; send LIBSVM lines, EOF to stop",
         model_path,
-        model.n_sv(),
-        model.sv.cols(),
-        if model.sv.is_sparse() { ", CSR" } else { "" },
+        model.describe(),
         if rt.is_some() { "PJRT" } else { "native" }
     );
     let stdin = std::io::stdin();
@@ -394,8 +601,12 @@ fn cmd_serve_tcp(args: &Args) -> Result<()> {
 
 fn cmd_grid(args: &Args) -> Result<()> {
     let threads = args.usize_or("threads", threadpool::default_threads())?;
-    let (train, test) = load_pair(args)?;
-    let beta = args.f64_or("beta", Table1Spec::beta_for(train.len()))?;
+    let pair = load_pair_auto(args)?;
+    let (name, n) = match &pair {
+        LoadedPair::Binary(train, _) => (train.name.clone(), train.len()),
+        LoadedPair::Multi(train, _) => (train.name.clone(), train.len()),
+    };
+    let beta = args.f64_or("beta", Table1Spec::beta_for(n))?;
     let h_values = args.f64_list_or("h", &[0.1, 1.0, 10.0])?;
     let c_values = args.f64_list_or("c", &[0.1, 1.0, 10.0])?;
     let grid = GridSearch {
@@ -405,8 +616,19 @@ fn cmd_grid(args: &Args) -> Result<()> {
         admm: AdmmParams { beta, max_it: args.usize_or("iters", 10)?, relax: 1.0, tol: 0.0 },
         threads,
     };
-    println!("grid search on {} ({} pts), beta = {beta}", train.name, train.len());
-    let res = grid.run(&train, &test)?;
+    let res = match &pair {
+        LoadedPair::Binary(train, test) => {
+            println!("grid search on {name} ({n} pts), beta = {beta}");
+            grid.run(train, test)?
+        }
+        LoadedPair::Multi(train, test) => {
+            println!(
+                "OvO grid search on {name} ({n} pts, {} classes), beta = {beta}",
+                train.classes().len()
+            );
+            grid.run_multiclass(train, test)?
+        }
+    };
     println!("{}", hss_svm::coordinator::grid::ascii_heatmap(&res, &h_values, &c_values));
     println!(
         "compression {:.3}s ({} h values) | factorization {:.3}s | total ADMM {:.3}s ({} cells)",

@@ -13,12 +13,15 @@
 //! SV chunks are padded with αy = 0 rows (exactly no contribution).
 
 // The real client references an external `xla` crate that the offline
-// build environment does not provide, so it is feature-gated; the stub
-// serves the same API (load errors, try_default → None) and every call
-// site falls back to the native prediction path.
-#[cfg(feature = "pjrt")]
+// build environment does not provide, so it needs BOTH features:
+// `pjrt` (the runtime surface, checkable everywhere — the CI
+// feature-matrix builds it against the stub) and `xla-client` (the
+// vendored dependency is actually wired in). With either feature
+// missing, the stub serves the same API (load errors, try_default →
+// None) and every call site falls back to the native prediction path.
+#[cfg(all(feature = "pjrt", feature = "xla-client"))]
 pub mod pjrt;
-#[cfg(not(feature = "pjrt"))]
+#[cfg(not(all(feature = "pjrt", feature = "xla-client")))]
 #[path = "pjrt_stub.rs"]
 pub mod pjrt;
 

@@ -9,10 +9,14 @@
 //! output. Lines may be labeled (`+1 1:0.5 ...` — the label is ignored),
 //! carry the `0` placeholder label, or be bare feature lists
 //! (`1:0.5 3:2 ...`). Requests are micro-batched ([`BATCH`] lines, one
-//! prediction tile) for tile efficiency. Predicted labels come from the
-//! model's original label pair ([`SvmModel::label_text`]): `±1` for
-//! ±1-coded training data, the original encoding (e.g. `1`/`2`)
-//! otherwise.
+//! prediction tile) for tile efficiency. Binary models answer in their
+//! original label pair ([`SvmModel::label_text`]): `±1` for ±1-coded
+//! training data, the original encoding (e.g. `1`/`2`) otherwise.
+//! One-vs-one multiclass models ([`AnyModel::Ovo`]) answer
+//! `"<class> <decision sum>"` — the original integer class label from
+//! the training file plus the winning class's accumulated signed
+//! decision-value sum (the vote tie-break key), computed through the
+//! shared-SV engine: one kernel block per tile serves all pairs.
 //!
 //! Parsing goes through [`libsvm::read_features`], which skips binary-
 //! label normalization entirely — a batch mixing `±1` labels with
@@ -28,7 +32,7 @@
 use crate::data::libsvm::{self, Repr};
 use crate::data::sparse::Points;
 use crate::runtime::PjrtRuntime;
-use crate::svm::{predict, SvmModel};
+use crate::svm::{predict, AnyModel, SvmModel};
 use anyhow::{Context, Result};
 use std::io::{BufRead, Write};
 
@@ -52,8 +56,9 @@ pub struct ServeStats {
 }
 
 /// Parse one micro-batch of request lines (`(global 1-based line
-/// number, text)`) into a feature block matching `model`'s dimension
-/// and representation.
+/// number, text)`) into a feature block of dimension `dim`, CSR when
+/// `sparse` (callers pass the model's dimension and representation —
+/// [`AnyModel::dim`] / [`AnyModel::is_sparse`]).
 ///
 /// The tile representation follows the MODEL, not the tile's own
 /// density: `Repr::Auto` would let the (interleaving-dependent) batch
@@ -70,10 +75,10 @@ pub struct ServeStats {
 /// offset `number − 1`), so callers never rewrite parser output.
 pub fn parse_batch(
     lines: &[(usize, &str)],
-    model: &SvmModel,
+    dim: usize,
+    sparse: bool,
 ) -> std::result::Result<Points, Vec<(usize, String)>> {
-    let dim = model.sv.cols();
-    let repr = if model.sv.is_sparse() { Repr::Sparse } else { Repr::Dense };
+    let repr = if sparse { Repr::Sparse } else { Repr::Dense };
     let text = lines.iter().map(|(_, l)| *l).collect::<Vec<_>>().join("\n");
     if let Ok((x, _labels)) =
         libsvm::read_features_with(std::io::Cursor::new(text), Some(dim), repr)
@@ -123,10 +128,40 @@ pub fn format_prediction(model: &SvmModel, v: f64) -> String {
     format!("{} {v:.6}", model.label_text(v))
 }
 
+/// Response lines for one parsed tile, generic over model arity — the
+/// single prediction core behind both serving front-ends (stdin loop
+/// and the TCP batcher):
+///
+/// * binary — [`batch_decisions`] (PJRT tile path with native fallback
+///   when a runtime is passed) formatted by [`format_prediction`];
+/// * one-vs-one — the shared-SV engine's class label + winning
+///   decision sum, `"<class> <sum>"`. The PJRT artifacts are binary
+///   tiles, so `rt` is ignored for OvO models (native engine path).
+pub fn predict_lines(
+    model: &AnyModel,
+    rt: Option<&PjrtRuntime>,
+    x: &Points,
+    threads: usize,
+    err: &mut impl Write,
+) -> Result<Vec<String>> {
+    Ok(match model {
+        AnyModel::Binary(m) => batch_decisions(m, rt, x, threads, err)?
+            .into_iter()
+            .map(|v| format_prediction(m, v))
+            .collect(),
+        AnyModel::Ovo(m) => m
+            .engine()
+            .predict_with_scores(x, threads)
+            .into_iter()
+            .map(|(class, sum)| format!("{class} {sum:.6}"))
+            .collect(),
+    })
+}
+
 /// Run the request loop until EOF. Returns the counters; parse failures
 /// are per-batch (reported on `err`), only I/O failures abort the loop.
 pub fn serve_loop(
-    model: &SvmModel,
+    model: &AnyModel,
     rt: Option<&PjrtRuntime>,
     input: impl BufRead,
     mut out: impl Write,
@@ -162,14 +197,14 @@ pub fn serve_loop(
         stats.batches += 1;
         stats.lines += batch.len();
         let refs: Vec<(usize, &str)> = batch.iter().map(|(no, l)| (*no, l.as_str())).collect();
-        match parse_batch(&refs, model) {
+        match parse_batch(&refs, model.dim(), model.is_sparse()) {
             Ok(x) => {
-                let f = batch_decisions(model, rt, &x, threads, &mut err)?;
-                for v in &f {
-                    writeln!(out, "{}", format_prediction(model, *v))?;
+                let responses = predict_lines(model, rt, &x, threads, &mut err)?;
+                for line in &responses {
+                    writeln!(out, "{line}")?;
                 }
                 out.flush()?;
-                stats.predicted += f.len();
+                stats.predicted += responses.len();
             }
             Err(bad) => {
                 // fail this batch only: every bad line is reported with
@@ -211,7 +246,7 @@ mod tests {
     #[test]
     fn skipped_lines_are_counted_separately() {
         let mut rng = Rng::new(21);
-        let model = toy(&mut rng, 4);
+        let model = AnyModel::Binary(toy(&mut rng, 4));
         let input = "# ping\n\n1:0.5\n   \n2:0.25\n# pong\n";
         let mut out = Vec::new();
         let stats = serve_loop(
@@ -230,14 +265,12 @@ mod tests {
 
     #[test]
     fn parse_batch_attributes_errors_by_index_with_global_numbers() {
-        let mut rng = Rng::new(23);
-        let model = toy(&mut rng, 4);
         let lines: Vec<(usize, &str)> = vec![
             (7, "1:0.5 2:1.0"),
             (9, "+1 2:2 2:3"), // duplicate index
             (12, "1:abc"),     // bad value
         ];
-        let bad = parse_batch(&lines, &model).unwrap_err();
+        let bad = parse_batch(&lines, 4, false).unwrap_err();
         assert_eq!(bad.len(), 2);
         assert_eq!(bad[0].0, 1);
         assert!(bad[0].1.contains("line 9"), "{}", bad[0].1);
@@ -245,14 +278,59 @@ mod tests {
         assert!(bad[1].1.contains("line 12"), "{}", bad[1].1);
         // clean batch parses to the right shape, in the MODEL's
         // representation (dense model => dense tile, sparse => CSR)
-        let x = parse_batch(&lines[..1], &model).unwrap();
+        let x = parse_batch(&lines[..1], 4, false).unwrap();
         assert_eq!((x.rows(), x.cols()), (1, 4));
         assert!(!x.is_sparse());
-        let sparse_model = SvmModel {
-            sv: crate::data::CsrMat::from_dense(model.sv.dense()).into(),
-            ..model.clone()
+        assert!(parse_batch(&lines[..1], 4, true).unwrap().is_sparse());
+    }
+
+    #[test]
+    fn predict_lines_serves_ovo_models_with_original_labels() {
+        use crate::svm::OvoModel;
+        // constant-decision pairs over classes {2, 5, 9}: f25 = +1,
+        // f29 = +1, f59 = −1 → class 2 gets 2 votes everywhere
+        let pair = |a: i64, b: i64, bias: f64| {
+            (
+                a,
+                b,
+                SvmModel {
+                    sv: Mat::from_vec(1, 3, vec![1.0, 0.0, -1.0]).into(),
+                    alpha_y: vec![0.0],
+                    bias,
+                    kernel: Kernel::Linear,
+                    c: 1.0,
+                    labels: DEFAULT_LABEL_PAIR,
+                },
+            )
         };
-        assert!(parse_batch(&lines[..1], &sparse_model).unwrap().is_sparse());
+        let ovo = AnyModel::Ovo(OvoModel::new(
+            vec![pair(2, 5, 1.0), pair(2, 9, 1.0), pair(5, 9, -1.0)],
+            1.0,
+        ));
+        assert_eq!(ovo.dim(), 3);
+        let x = parse_batch(&[(1, "1:0.5"), (2, "+1 2:1.0 3:2.0")], ovo.dim(), ovo.is_sparse())
+            .unwrap();
+        let lines = predict_lines(&ovo, None, &x, 1, &mut std::io::sink()).unwrap();
+        assert_eq!(lines.len(), 2);
+        for l in &lines {
+            // sums: class 2 = f25 + f29 = 2.0 (the winner's sum)
+            assert_eq!(l, "2 2.000000");
+        }
+        // the stdin loop carries the same payload end-to-end
+        let mut out = Vec::new();
+        let stats = serve_loop(
+            &ovo,
+            None,
+            std::io::Cursor::new("1:0.5\n# skip\n2:1.0\n"),
+            &mut out,
+            std::io::sink(),
+            1,
+        )
+        .unwrap();
+        assert_eq!(stats.predicted, 2);
+        let text = String::from_utf8(out).unwrap();
+        assert_eq!(text.lines().count(), 2);
+        assert!(text.lines().all(|l| l.starts_with("2 ")), "{text}");
     }
 
     #[test]

@@ -6,12 +6,12 @@
 //! reaches `batch_max` lines, when the oldest request has waited
 //! `batch_wait`, or when a different-model request is queued right
 //! behind it (waiting could not grow the run). The tile goes through
-//! the same [`serve::parse_batch`] / [`serve::format_prediction`] core
-//! as the stdin loop, decisions come from
-//! [`predict::decision_function`] on the shared `util::threadpool`
-//! workers, and responses are routed back to each request's connection
-//! through its `(seq, line)` channel — the per-connection writer
-//! restores input order.
+//! the same [`serve::parse_batch`] / [`serve::predict_lines`] core as
+//! the stdin loop — generic over model arity, so binary decision tiles
+//! and one-vs-one shared-SV tiles batch identically on the shared
+//! `util::threadpool` workers — and responses are routed back to each
+//! request's connection through its `(seq, line)` channel; the
+//! per-connection writer restores input order.
 //!
 //! Error semantics are per **issuer**: a malformed line fails every
 //! line of *its* connection in the tile (mirroring the stdin mode's
@@ -24,7 +24,6 @@
 use crate::serve;
 use crate::server::registry::{LoadedModel, ModelRegistry};
 use crate::server::stats::ServerStats;
-use crate::svm::predict;
 use std::collections::{BTreeMap, BTreeSet, VecDeque};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::Sender;
@@ -160,7 +159,7 @@ impl Batcher {
         ServerStats::bump(&stats.batches);
         let model = &batch[0].model.model;
         let refs: Vec<(usize, &str)> = batch.iter().map(|r| (r.lineno, r.text.as_str())).collect();
-        match serve::parse_batch(&refs, model) {
+        match serve::parse_batch(&refs, model.dim(), model.is_sparse()) {
             Ok(x) => {
                 let all: Vec<&Request> = batch.iter().collect();
                 Self::respond(&all, &x, stats, threads);
@@ -197,7 +196,7 @@ impl Batcher {
                 }
                 let refs: Vec<(usize, &str)> =
                     keep.iter().map(|r| (r.lineno, r.text.as_str())).collect();
-                match serve::parse_batch(&refs, model) {
+                match serve::parse_batch(&refs, model.dim(), model.is_sparse()) {
                     Ok(x) => Self::respond(&keep, &x, stats, threads),
                     Err(_) => {
                         // unreachable: every kept line parsed alone above
@@ -216,13 +215,25 @@ impl Batcher {
     fn respond(reqs: &[&Request], x: &crate::data::Points, stats: &ServerStats, threads: usize) {
         // the exact offline path: bitwise-identical to `cmd_predict` on
         // the same lines regardless of how connections were interleaved
-        // (per-row independence contract of `blas::gemm`)
+        // (per-row independence contract of `blas::gemm`, and of the
+        // shared-SV engine's per-row gathers for OvO models)
         let model = &reqs[0].model.model;
-        let f = predict::decision_function(model, x, threads);
-        debug_assert_eq!(f.len(), reqs.len());
+        let lines = match serve::predict_lines(model, None, x, threads, &mut std::io::sink()) {
+            Ok(lines) => lines,
+            Err(e) => {
+                // native-path prediction cannot fail today (no PJRT in
+                // the batcher), but a future error must answer every
+                // request rather than silently dropping the tile
+                for r in reqs {
+                    let _ = r.tx.send((r.seq, format!("ERR line {}: {e:#}", r.lineno)));
+                }
+                return;
+            }
+        };
+        debug_assert_eq!(lines.len(), reqs.len());
         let now = Instant::now();
-        for (r, v) in reqs.iter().zip(f) {
-            let _ = r.tx.send((r.seq, serve::format_prediction(model, v)));
+        for (r, line) in reqs.iter().zip(lines) {
+            let _ = r.tx.send((r.seq, line));
             stats.latency.record(now.duration_since(r.enqueued));
         }
         ServerStats::add(&stats.predicted, reqs.len() as u64);
@@ -250,7 +261,8 @@ mod tests {
                 kernel: Kernel::Gaussian { h: 1.0 },
                 c: 1.0,
                 labels: DEFAULT_LABEL_PAIR,
-            },
+            }
+            .into(),
         })
     }
 

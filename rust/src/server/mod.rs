@@ -14,9 +14,11 @@
 //!
 //! Predictions are bitwise-identical to the offline `predict`
 //! subcommand on the same lines: tiles go through the same
-//! `serve::parse_batch` → `predict::decision_function` →
-//! `serve::format_prediction` pipeline, and per-row results are
-//! independent of tile composition (the `blas::gemm` invariant).
+//! `serve::parse_batch` → `serve::predict_lines` pipeline — generic
+//! over `svm::AnyModel`, so binary decision tiles and one-vs-one
+//! shared-SV tiles serve identically — and per-row results are
+//! independent of tile composition (the `blas::gemm` invariant, and
+//! the OvO engine's per-row gathers).
 //!
 //! Graceful shutdown (`SHUTDOWN` admin command or
 //! [`ServerHandle::shutdown`]): stop accepting, half-close every client

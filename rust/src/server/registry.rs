@@ -11,7 +11,7 @@
 //! flushes (implicit — overwrite the model file and the server picks it
 //! up).
 
-use crate::svm::{persist, SvmModel};
+use crate::svm::{persist, AnyModel, SvmModel};
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
 use std::path::PathBuf;
@@ -26,7 +26,10 @@ pub struct LoadedModel {
     pub name: String,
     /// Monotonic per-entry reload counter (1 = initial load).
     pub generation: u64,
-    pub model: SvmModel,
+    /// Binary or one-vs-one multiclass — the serving pipeline
+    /// ([`crate::serve::parse_batch`] / [`crate::serve::predict_lines`])
+    /// is generic over the arity.
+    pub model: AnyModel,
 }
 
 /// On-disk identity of a loaded file; a change in either field marks
@@ -68,7 +71,7 @@ impl ModelRegistry {
         }
         let mut map = BTreeMap::new();
         for (name, path) in entries {
-            let model = persist::load(path)
+            let model = persist::load_any(path)
                 .with_context(|| format!("loading model {name:?} from {}", path.display()))?;
             let loaded = Arc::new(LoadedModel { name: name.clone(), generation: 1, model });
             let prev = map.insert(
@@ -93,6 +96,11 @@ impl ModelRegistry {
 
     /// In-memory registry (tests / benches); first entry is the default.
     pub fn from_models(models: Vec<(String, SvmModel)>) -> ModelRegistry {
+        Self::from_any_models(models.into_iter().map(|(n, m)| (n, AnyModel::Binary(m))).collect())
+    }
+
+    /// In-memory registry over models of either arity.
+    pub fn from_any_models(models: Vec<(String, AnyModel)>) -> ModelRegistry {
         assert!(!models.is_empty(), "model registry needs at least one model");
         let default_name = models[0].0.clone();
         let entries = models
@@ -155,7 +163,7 @@ impl ModelRegistry {
         };
         let mut stamp_guard = entry.stamp.lock().unwrap();
         let pre = stamp(path);
-        let model = persist::load(path)
+        let model = persist::load_any(path)
             .with_context(|| format!("reloading model {name:?} from {}", path.display()))?;
         let generation = entry.generation.fetch_add(1, Ordering::Relaxed) + 1;
         let loaded = Arc::new(LoadedModel { name: name.to_string(), generation, model });
@@ -224,6 +232,10 @@ mod tests {
     use crate::linalg::Mat;
     use crate::util::prng::Rng;
 
+    fn bias_of(m: &AnyModel) -> f64 {
+        m.as_binary().expect("binary test model").bias
+    }
+
     fn toy(rng: &mut Rng, bias: f64) -> SvmModel {
         SvmModel {
             sv: Mat::gauss(3, 4, rng).into(),
@@ -243,8 +255,8 @@ mod tests {
             ("b".into(), toy(&mut rng, 2.0)),
         ]);
         assert_eq!(reg.default_name(), "a");
-        assert_eq!(reg.get("a").unwrap().model.bias, 1.0);
-        assert_eq!(reg.get("b").unwrap().model.bias, 2.0);
+        assert_eq!(bias_of(&reg.get("a").unwrap().model), 1.0);
+        assert_eq!(bias_of(&reg.get("b").unwrap().model), 2.0);
         assert!(reg.get("c").is_none());
         assert!(reg.reload("a").is_err(), "in-memory entries cannot reload");
         let (swapped, failed) = reg.reload_all();
@@ -264,7 +276,7 @@ mod tests {
 
         let old = reg.get("default").unwrap();
         assert_eq!(old.generation, 1);
-        assert_eq!(old.model.bias, 10.0);
+        assert_eq!(bias_of(&old.model), 10.0);
 
         // different SV count => different file size, so the staleness
         // stamp changes even on coarse-mtime filesystems
@@ -276,15 +288,15 @@ mod tests {
         // explicit reload bumps the generation; the old Arc still holds
         // the old model (in-flight batch semantics)
         assert_eq!(reg.reload("default").unwrap(), 2);
-        assert_eq!(reg.get("default").unwrap().model.bias, 20.0);
-        assert_eq!(old.model.bias, 10.0);
+        assert_eq!(bias_of(&reg.get("default").unwrap().model), 20.0);
+        assert_eq!(bias_of(&old.model), 10.0);
 
         // mtime/size poll: overwrite again, rate limit respected
         persist::save(&toy(&mut rng, 30.0), &p).unwrap();
         assert_eq!(reg.poll_stale(Duration::from_secs(3600)), 0, "rate-limited");
         std::thread::sleep(Duration::from_millis(5));
         assert_eq!(reg.poll_stale(Duration::from_millis(1)), 1);
-        assert_eq!(reg.get("default").unwrap().model.bias, 30.0);
+        assert_eq!(bias_of(&reg.get("default").unwrap().model), 30.0);
         assert_eq!(reg.get("default").unwrap().generation, 3);
         std::fs::remove_dir_all(&dir).ok();
     }

@@ -13,4 +13,82 @@ pub mod svr;
 pub mod train;
 
 pub use model::SvmModel;
+pub use multiclass::{MulticlassDataset, OvoModel};
 pub use train::{train_hss_svm, HssSvmTrainer, TrainStats};
+
+/// A loaded model of either arity: the serving stack (stdin loop, TCP
+/// registry/batcher) and `cmd_predict` are generic over this, so binary
+/// and one-vs-one multiclass models flow through the same pipelines.
+/// [`persist::load_any`] auto-detects the file kind by its magic line.
+#[derive(Clone)]
+pub enum AnyModel {
+    Binary(SvmModel),
+    Ovo(OvoModel),
+}
+
+impl AnyModel {
+    /// Feature dimension expected of request lines.
+    pub fn dim(&self) -> usize {
+        match self {
+            AnyModel::Binary(m) => m.sv.cols(),
+            AnyModel::Ovo(m) => m.dim(),
+        }
+    }
+
+    /// True when the SVs (and therefore request tiles — the tile
+    /// representation follows the model) are CSR-stored.
+    pub fn is_sparse(&self) -> bool {
+        match self {
+            AnyModel::Binary(m) => m.sv.is_sparse(),
+            AnyModel::Ovo(m) => m.is_sparse(),
+        }
+    }
+
+    pub fn as_binary(&self) -> Option<&SvmModel> {
+        match self {
+            AnyModel::Binary(m) => Some(m),
+            AnyModel::Ovo(_) => None,
+        }
+    }
+
+    /// One-line banner description (serve front-ends).
+    pub fn describe(&self) -> String {
+        match self {
+            AnyModel::Binary(m) => format!(
+                "{} SVs, dim {}{}",
+                m.n_sv(),
+                m.sv.cols(),
+                if m.sv.is_sparse() { ", CSR" } else { "" }
+            ),
+            AnyModel::Ovo(m) => format!(
+                "OvO {} classes / {} pairs, {} unique SVs, dim {}{}",
+                m.classes().len(),
+                m.pairs().len(),
+                m.n_sv_unique(),
+                m.dim(),
+                if m.is_sparse() { ", CSR" } else { "" }
+            ),
+        }
+    }
+}
+
+impl From<SvmModel> for AnyModel {
+    fn from(m: SvmModel) -> Self {
+        AnyModel::Binary(m)
+    }
+}
+
+impl From<OvoModel> for AnyModel {
+    fn from(m: OvoModel) -> Self {
+        AnyModel::Ovo(m)
+    }
+}
+
+impl std::fmt::Debug for AnyModel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AnyModel::Binary(m) => write!(f, "{m:?}"),
+            AnyModel::Ovo(m) => write!(f, "{m:?}"),
+        }
+    }
+}

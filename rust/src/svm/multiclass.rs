@@ -1,101 +1,431 @@
 //! One-vs-one multiclass SVM on top of the binary ADMM + HSS trainer
-//! (LIBSVM's multiclass strategy). Each pair of classes gets its own
-//! binary classifier; prediction is majority vote.
+//! (LIBSVM's multiclass strategy), productionized end-to-end.
 //!
-//! The kernel-reuse story survives: every pairwise subproblem compresses
-//! only its own points, and the compressions across pairs are
-//! independent, so a C grid per pair still reuses its factorization.
+//! Training ([`train_ovo_grid`]): the k(k−1)/2 pairwise subproblems are
+//! independent, so they run in *outer* parallelism across the worker
+//! budget while each subproblem keeps the usual *inner* parallelism for
+//! its compression/factorization/ADMM stages. The split is a pure
+//! function of `(threads, n_pairs)` and every stage is bit-for-bit
+//! thread-invariant (the level-scheduled engine contract), so trained
+//! models are bitwise identical for any thread count. Each pair routes
+//! its whole C grid through [`HssSvmTrainer::train_grid_with_solver`]:
+//! one compression + one ULV factorization per pair serve every C value
+//! in one lockstep multi-RHS ADMM sweep.
+//!
+//! Prediction ([`OvoEngine`]): pairwise models share support vectors
+//! heavily (every training point sits in k−1 subproblems), so the
+//! engine dedups the SVs of all pairs into one unique-SV pool,
+//! evaluates ONE kernel block `K(test tile, pool)` per tile (gemm / CSR
+//! dispatch via [`kernel_block_pts_with_norms`]) and reduces each
+//! pair's decision as a sparse weighted gather over that block —
+//! instead of k(k−1)/2 full kernel blocks per tile. Results agree with
+//! the naive per-pair path to ≤ 1e-12 ([`OvoModel::decisions_naive`] is
+//! the oracle).
+//!
+//! Voting follows LIBSVM's deterministic rule: most votes wins; vote
+//! ties fall back to the accumulated signed decision-value sums; a full
+//! tie goes to the **lowest class index** (classes are kept sorted
+//! ascending). The old `max_by_key` tie-break silently preferred the
+//! *last* maximal class.
 
-use crate::admm::AdmmParams;
-use crate::data::sparse::Points;
+use crate::admm::{AdmmParams, AdmmSolver};
+use crate::data::sparse::{CsrMat, Points};
 use crate::data::Dataset;
 use crate::hss::HssParams;
+use crate::kernel::block::kernel_block_pts_with_norms;
 use crate::kernel::Kernel;
-#[cfg(test)]
 use crate::linalg::Mat;
-use crate::svm::{predict, train::train_hss_svm, SvmModel};
-use anyhow::{bail, Result};
+use crate::svm::{predict, train::HssSvmTrainer, SvmModel};
+use crate::util::threadpool;
+use crate::util::timer::Timer;
+use anyhow::{bail, Context, Result};
 
 /// A labelled multiclass dataset (labels are arbitrary integers).
+#[derive(Clone)]
 pub struct MulticlassDataset {
+    pub name: String,
     pub x: Points,
     pub labels: Vec<i64>,
 }
 
 impl MulticlassDataset {
+    pub fn new(name: impl Into<String>, x: impl Into<Points>, labels: Vec<i64>) -> Self {
+        let x = x.into();
+        assert_eq!(x.rows(), labels.len(), "points/labels length mismatch");
+        MulticlassDataset { name: name.into(), x, labels }
+    }
+
+    /// Distinct class labels, sorted ascending.
     pub fn classes(&self) -> Vec<i64> {
         let mut c: Vec<i64> = self.labels.clone();
         c.sort_unstable();
         c.dedup();
         c
     }
-}
 
-/// One-vs-one multiclass model.
-pub struct OvoModel {
-    /// (class_a, class_b, binary model voting a (+1) vs b (−1)).
-    pub pairs: Vec<(i64, i64, SvmModel)>,
-    pub classes: Vec<i64>,
-}
-
-/// Train all k(k−1)/2 pairwise classifiers.
-pub fn train_ovo(
-    ds: &MulticlassDataset,
-    kernel: Kernel,
-    hss: &HssParams,
-    admm: &AdmmParams,
-    c: f64,
-    threads: usize,
-) -> Result<OvoModel> {
-    let classes = ds.classes();
-    if classes.len() < 2 {
-        bail!("need at least 2 classes, got {:?}", classes);
+    pub fn len(&self) -> usize {
+        self.x.rows()
     }
-    let mut pairs = Vec::new();
-    for (i, &a) in classes.iter().enumerate() {
-        for &b in &classes[i + 1..] {
-            let idx: Vec<usize> = (0..ds.labels.len())
-                .filter(|&t| ds.labels[t] == a || ds.labels[t] == b)
-                .collect();
-            let x = ds.x.select_rows(&idx);
-            let y: Vec<f64> =
-                idx.iter().map(|&t| if ds.labels[t] == a { 1.0 } else { -1.0 }).collect();
-            let sub = Dataset::new(format!("{a}-vs-{b}"), x, y);
-            let (model, _) = train_hss_svm(&sub, kernel, hss, admm, c, threads)?;
-            pairs.push((a, b, model));
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dim(&self) -> usize {
+        self.x.cols()
+    }
+
+    pub fn is_sparse(&self) -> bool {
+        self.x.is_sparse()
+    }
+
+    /// Subset by index list (in that order).
+    pub fn select(&self, idx: &[usize]) -> MulticlassDataset {
+        MulticlassDataset {
+            name: self.name.clone(),
+            x: self.x.select_rows(idx),
+            labels: idx.iter().map(|&i| self.labels[i]).collect(),
         }
     }
-    Ok(OvoModel { pairs, classes })
+
+    /// Split into (train, test) at `train_len` (no shuffling).
+    pub fn split_at(&self, train_len: usize) -> (MulticlassDataset, MulticlassDataset) {
+        assert!(train_len <= self.len());
+        let tr: Vec<usize> = (0..train_len).collect();
+        let te: Vec<usize> = (train_len..self.len()).collect();
+        (self.select(&tr), self.select(&te))
+    }
+}
+
+impl std::fmt::Debug for MulticlassDataset {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "MulticlassDataset({}: {} pts × {} feats, {} classes{})",
+            self.name,
+            self.len(),
+            self.dim(),
+            self.classes().len(),
+            if self.is_sparse() { ", sparse" } else { "" }
+        )
+    }
+}
+
+/// One pair's reduction inside the shared-SV engine: decision =
+/// `bias + Σ entries (alpha · K(test, pool[row]))`, votes going to
+/// class position `a_pos` (decision ≥ 0) or `b_pos` (< 0).
+#[derive(Clone)]
+struct PairReduce {
+    a_pos: usize,
+    b_pos: usize,
+    bias: f64,
+    /// `(pool row, αy)` in the pair model's own SV order, so the gather
+    /// accumulates in exactly the per-pair order.
+    entries: Vec<(usize, f64)>,
+}
+
+/// Shared-SV prediction engine: the unique-SV pool of all pairwise
+/// models plus one sparse gather per pair. One kernel block of
+/// test-tile × pool per tile serves every pair.
+#[derive(Clone)]
+pub struct OvoEngine {
+    kernel: Kernel,
+    classes: Vec<i64>,
+    pool: Points,
+    pool_norms: Vec<f64>,
+    pairs: Vec<PairReduce>,
+}
+
+/// Bit-pattern key of one SV row (dense: the f64 bits of every slot;
+/// CSR: interleaved column index / value bits). Two rows get the same
+/// key iff they are bitwise-identical points, which is exactly the
+/// dedup the pool needs (kernels depend on the feature bits only).
+fn pool_row_key(x: &Points, i: usize) -> Vec<u64> {
+    match x {
+        Points::Dense(m) => m.row(i).iter().map(|v| v.to_bits()).collect(),
+        Points::Sparse(s) => {
+            let (ci, vi) = s.row(i);
+            let mut k = Vec::with_capacity(2 * ci.len());
+            for (&c, &v) in ci.iter().zip(vi.iter()) {
+                k.push(c as u64);
+                k.push(v.to_bits());
+            }
+            k
+        }
+    }
+}
+
+/// LIBSVM-style deterministic vote over one row of pairwise decisions:
+/// most votes first, signed decision-value sums second, lowest class
+/// index last (strict `>` comparisons walking positions in ascending
+/// class order). Returns `(winning class position, its decision sum)`.
+fn vote_row(k: usize, pair_pos: &[(usize, usize)], f: &[f64]) -> (usize, f64) {
+    debug_assert_eq!(pair_pos.len(), f.len());
+    let mut votes = vec![0u32; k];
+    let mut sums = vec![0.0f64; k];
+    for (p, &(pa, pb)) in pair_pos.iter().enumerate() {
+        if f[p] >= 0.0 {
+            votes[pa] += 1;
+        } else {
+            votes[pb] += 1;
+        }
+        sums[pa] += f[p];
+        sums[pb] -= f[p];
+    }
+    let mut best = 0usize;
+    for c in 1..k {
+        if votes[c] > votes[best] || (votes[c] == votes[best] && sums[c] > sums[best]) {
+            best = c;
+        }
+    }
+    (best, sums[best])
+}
+
+impl OvoEngine {
+    /// Build the engine from pairwise models (all sharing one kernel
+    /// and one SV representation — guaranteed by training/persistence).
+    fn build(classes: &[i64], pairs: &[(i64, i64, SvmModel)]) -> OvoEngine {
+        let kernel = pairs[0].2.kernel;
+        let sparse = pairs[0].2.sv.is_sparse();
+        let dim = pairs[0].2.sv.cols();
+        for (_, _, m) in pairs {
+            assert_eq!(m.kernel, kernel, "OvO pairs must share one kernel");
+            assert_eq!(m.sv.is_sparse(), sparse, "OvO pairs must share one SV representation");
+            assert_eq!(m.sv.cols(), dim, "OvO pairs must share one feature dimension");
+        }
+        let pos = |c: i64| classes.iter().position(|&x| x == c).expect("class present");
+
+        // dedup pass: first occurrence (pairs in order, SVs in order)
+        // defines the pool row — deterministic and order-preserving
+        let mut index: std::collections::HashMap<Vec<u64>, usize> = std::collections::HashMap::new();
+        let mut sources: Vec<(usize, usize)> = Vec::new(); // (pair, sv row) of each pool row
+        let mut reduces = Vec::with_capacity(pairs.len());
+        for (p, (a, b, m)) in pairs.iter().enumerate() {
+            let mut entries = Vec::with_capacity(m.n_sv());
+            for i in 0..m.n_sv() {
+                let key = pool_row_key(&m.sv, i);
+                // (first-occurrence order: persistence serializes this
+                // exact pool through `pool_points`/`gather`)
+                let row = *index.entry(key).or_insert_with(|| {
+                    sources.push((p, i));
+                    sources.len() - 1
+                });
+                entries.push((row, m.alpha_y[i]));
+            }
+            reduces.push(PairReduce { a_pos: pos(*a), b_pos: pos(*b), bias: m.bias, entries });
+        }
+
+        // materialize the pool in the pairs' representation
+        let pool: Points = if sparse {
+            let rows: Vec<Vec<(usize, f64)>> = sources
+                .iter()
+                .map(|&(p, i)| {
+                    let Points::Sparse(s) = &pairs[p].2.sv else { unreachable!() };
+                    let (ci, vi) = s.row(i);
+                    ci.iter().zip(vi.iter()).map(|(&c, &v)| (c, v)).collect()
+                })
+                .collect();
+            CsrMat::from_rows(dim, &rows).into()
+        } else {
+            let mut m = Mat::zeros(sources.len(), dim);
+            for (r, &(p, i)) in sources.iter().enumerate() {
+                m.row_mut(r).copy_from_slice(pairs[p].2.sv.dense_row(i));
+            }
+            m.into()
+        };
+        let pool_norms = pool.self_norms();
+        OvoEngine { kernel, classes: classes.to_vec(), pool, pool_norms, pairs: reduces }
+    }
+
+    /// Unique SVs in the pool.
+    pub fn pool_size(&self) -> usize {
+        self.pool.rows()
+    }
+
+    /// The unique-SV pool itself — persistence writes this verbatim as
+    /// the shared-pool file section (so the on-disk layout is always
+    /// the layout the engine actually serves).
+    pub(crate) fn pool_points(&self) -> &Points {
+        &self.pool
+    }
+
+    /// Pair `p`'s `(pool row, αy)` gather, in the pair model's own SV
+    /// order — the persistence counterpart of [`Self::pool_points`].
+    pub(crate) fn gather(&self, p: usize) -> &[(usize, f64)] {
+        &self.pairs[p].entries
+    }
+
+    pub fn dim(&self) -> usize {
+        self.pool.cols()
+    }
+
+    pub fn is_sparse(&self) -> bool {
+        self.pool.is_sparse()
+    }
+
+    /// All pairwise decision values: row i of the result holds
+    /// `f_p(x_i)` for every pair p (column order = pair order). One
+    /// kernel block per 128-row tile, shared by all pairs; tiles are
+    /// farmed across `threads` workers like
+    /// [`predict::decision_function`].
+    pub fn decisions(&self, x: &Points, threads: usize) -> Mat {
+        assert_eq!(x.cols(), self.dim(), "feature dimension mismatch");
+        let n = x.rows();
+        let np = self.pairs.len();
+        let n_tiles = n.div_ceil(predict::TILE);
+        let tiles: Vec<Vec<f64>> = threadpool::parallel_map(threads, n_tiles, 1, |t| {
+            let lo = t * predict::TILE;
+            let hi = (lo + predict::TILE).min(n);
+            let rows: Vec<usize> = (lo..hi).collect();
+            let xb = x.select_rows(&rows);
+            let xb_norms = xb.self_norms();
+            let kb = kernel_block_pts_with_norms(
+                &self.kernel,
+                &xb,
+                &xb_norms,
+                &self.pool,
+                &self.pool_norms,
+            );
+            let mut f = vec![0.0; (hi - lo) * np];
+            for (p, pr) in self.pairs.iter().enumerate() {
+                for i in 0..(hi - lo) {
+                    let krow = kb.row(i);
+                    let mut acc = 0.0;
+                    for &(j, a) in &pr.entries {
+                        acc += a * krow[j];
+                    }
+                    f[i * np + p] = acc + pr.bias;
+                }
+            }
+            f
+        });
+        Mat::from_vec(n, np, tiles.concat())
+    }
+
+    /// Predicted class labels plus the winning class's decision sum
+    /// (the serving payload).
+    pub fn predict_with_scores(&self, x: &Points, threads: usize) -> Vec<(i64, f64)> {
+        let f = self.decisions(x, threads);
+        let pair_pos: Vec<(usize, usize)> =
+            self.pairs.iter().map(|p| (p.a_pos, p.b_pos)).collect();
+        (0..f.rows())
+            .map(|i| {
+                let (best, sum) = vote_row(self.classes.len(), &pair_pos, f.row(i));
+                (self.classes[best], sum)
+            })
+            .collect()
+    }
+}
+
+/// One-vs-one multiclass model: the pairwise binary models plus the
+/// shared-SV prediction engine built over them. Construct through
+/// [`OvoModel::new`] (training and persistence both do) so the engine
+/// always matches the pairs; the fields are private, so a clone's
+/// field-copied engine stays consistent with its pairs.
+#[derive(Clone)]
+pub struct OvoModel {
+    /// `(class_a, class_b, binary model voting a (+1) vs b (−1))`,
+    /// ordered `(i, j)` with `i < j` over ascending classes.
+    pairs: Vec<(i64, i64, SvmModel)>,
+    /// Distinct class labels, sorted ascending.
+    classes: Vec<i64>,
+    /// Penalty C shared by every pair (diagnostics).
+    c: f64,
+    engine: OvoEngine,
 }
 
 impl OvoModel {
-    /// Majority-vote prediction for each row of `x`.
+    /// Assemble from pairwise models; derives the class set and builds
+    /// the shared-SV engine.
+    pub fn new(pairs: Vec<(i64, i64, SvmModel)>, c: f64) -> OvoModel {
+        assert!(!pairs.is_empty(), "OvO model needs at least one pair");
+        let mut classes: Vec<i64> = pairs.iter().flat_map(|&(a, b, _)| [a, b]).collect();
+        classes.sort_unstable();
+        classes.dedup();
+        let engine = OvoEngine::build(&classes, &pairs);
+        OvoModel { pairs, classes, c, engine }
+    }
+
+    pub fn pairs(&self) -> &[(i64, i64, SvmModel)] {
+        &self.pairs
+    }
+
+    pub fn classes(&self) -> &[i64] {
+        &self.classes
+    }
+
+    pub fn c(&self) -> f64 {
+        self.c
+    }
+
+    pub fn kernel(&self) -> Kernel {
+        self.pairs[0].2.kernel
+    }
+
+    pub fn engine(&self) -> &OvoEngine {
+        &self.engine
+    }
+
+    pub fn dim(&self) -> usize {
+        self.engine.dim()
+    }
+
+    pub fn is_sparse(&self) -> bool {
+        self.engine.is_sparse()
+    }
+
+    /// Total SV rows across all pairs (what the naive path evaluates).
+    pub fn n_sv_total(&self) -> usize {
+        self.pairs.iter().map(|(_, _, m)| m.n_sv()).sum()
+    }
+
+    /// Unique SVs in the shared pool (what the engine evaluates).
+    pub fn n_sv_unique(&self) -> usize {
+        self.engine.pool_size()
+    }
+
+    /// Predicted class label for each row of `x` (shared-SV engine).
     pub fn predict(&self, x: &Points, threads: usize) -> Vec<i64> {
+        self.engine.predict_with_scores(x, threads).into_iter().map(|(c, _)| c).collect()
+    }
+
+    /// Pairwise decisions through the engine (n × n_pairs).
+    pub fn decisions(&self, x: &Points, threads: usize) -> Mat {
+        self.engine.decisions(x, threads)
+    }
+
+    /// Pairwise decisions through the naive per-pair path — one full
+    /// kernel block per pair per tile. The correctness oracle the
+    /// engine is pinned against (≤ 1e-12), and the baseline of the
+    /// `ovo_shared_sv_speedup` bench gate.
+    pub fn decisions_naive(&self, x: &Points, threads: usize) -> Mat {
         let n = x.rows();
-        let k = self.classes.len();
-        let mut votes = vec![vec![0u32; k]; n];
-        let class_pos = |c: i64| self.classes.iter().position(|&x| x == c).unwrap();
-        for (a, b, model) in &self.pairs {
-            let f = predict::decision_function(model, x, threads);
-            let (pa, pb) = (class_pos(*a), class_pos(*b));
-            for (i, &fi) in f.iter().enumerate() {
-                if fi >= 0.0 {
-                    votes[i][pa] += 1;
-                } else {
-                    votes[i][pb] += 1;
-                }
+        let np = self.pairs.len();
+        let mut out = Mat::zeros(n, np);
+        for (p, (_, _, m)) in self.pairs.iter().enumerate() {
+            let f = predict::decision_function(m, x, threads);
+            for (i, v) in f.into_iter().enumerate() {
+                out[(i, p)] = v;
             }
         }
-        votes
-            .into_iter()
-            .map(|v| {
-                let best = v.iter().enumerate().max_by_key(|&(_, &c)| c).unwrap().0;
+        out
+    }
+
+    /// Majority-vote prediction through the naive per-pair path.
+    pub fn predict_naive(&self, x: &Points, threads: usize) -> Vec<i64> {
+        let f = self.decisions_naive(x, threads);
+        let pos = |c: i64| self.classes.iter().position(|&x| x == c).expect("class present");
+        let pair_pos: Vec<(usize, usize)> =
+            self.pairs.iter().map(|&(a, b, _)| (pos(a), pos(b))).collect();
+        (0..f.rows())
+            .map(|i| {
+                let (best, _) = vote_row(self.classes.len(), &pair_pos, f.row(i));
                 self.classes[best]
             })
             .collect()
     }
 
-    /// Accuracy against integer labels.
+    /// Accuracy against integer labels (shared-SV engine path).
     pub fn accuracy(&self, ds: &MulticlassDataset, threads: usize) -> f64 {
         let pred = self.predict(&ds.x, threads);
         let hits = pred.iter().zip(ds.labels.iter()).filter(|(p, l)| p == l).count();
@@ -103,10 +433,205 @@ impl OvoModel {
     }
 }
 
+impl std::fmt::Debug for OvoModel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "OvoModel({} classes, {} pairs, {} SVs ({} unique), dim {}, {}{}, C={})",
+            self.classes.len(),
+            self.pairs.len(),
+            self.n_sv_total(),
+            self.n_sv_unique(),
+            self.dim(),
+            self.kernel().label(),
+            if self.is_sparse() { ", sparse" } else { "" },
+            self.c
+        )
+    }
+}
+
+/// Aggregated per-stage wall time across all pairwise subproblems
+/// (CPU-seconds summed over pairs — pairs overlap in wall clock).
+/// `compress_secs` includes the h-independent preprocessing when it was
+/// paid (the one-shot [`train_ovo_grid`] path; a reused
+/// [`OvoPairSet`] amortizes it across h values instead).
+#[derive(Clone, Debug, Default)]
+pub struct OvoTrainStats {
+    pub pairs: usize,
+    pub compress_secs: f64,
+    pub factor_secs: f64,
+    pub admm_secs: f64,
+}
+
+struct OvoPairPre {
+    a: i64,
+    b: i64,
+    /// Preprocessing carries the (permuted) pair subset itself in
+    /// `pre.pds`, so nothing else needs retaining.
+    pre: crate::hss::compress::Preprocessed,
+}
+
+/// Per-pair subsets plus their h-INDEPENDENT preprocessing (cluster
+/// tree + ANN), built once per dataset — the multiclass counterpart of
+/// [`crate::coordinator::cache::KernelCache`]'s preprocessing reuse: a
+/// grid over h calls [`OvoPairSet::train_grid`] per h and pays the
+/// tree/ANN passes only once per pair instead of once per (pair, h).
+pub struct OvoPairSet {
+    pairs: Vec<OvoPairPre>,
+    prepare_secs: f64,
+    outer: usize,
+    inner: usize,
+}
+
+impl OvoPairSet {
+    /// Build the pair subsets and preprocess each (pairs in outer
+    /// parallelism; `outer`/`inner` are a pure function of
+    /// `(threads, n_pairs)`, reused by every `train_grid` call).
+    pub fn prepare(ds: &MulticlassDataset, hss: &HssParams, threads: usize) -> Result<OvoPairSet> {
+        let classes = ds.classes();
+        if classes.len() < 2 {
+            bail!("need at least 2 classes, got {:?}", classes);
+        }
+        let mut specs: Vec<(i64, i64)> = Vec::new();
+        for (i, &a) in classes.iter().enumerate() {
+            for &b in &classes[i + 1..] {
+                specs.push((a, b));
+            }
+        }
+        let n_pairs = specs.len();
+        let outer = threads.max(1).min(n_pairs);
+        let inner = (threads.max(1) / outer).max(1);
+        let built: Vec<(OvoPairPre, f64)> = threadpool::parallel_map(outer, n_pairs, 1, |p| {
+            let (a, b) = specs[p];
+            let idx: Vec<usize> = (0..ds.labels.len())
+                .filter(|&t| ds.labels[t] == a || ds.labels[t] == b)
+                .collect();
+            let x = ds.x.select_rows(&idx);
+            let y: Vec<f64> =
+                idx.iter().map(|&t| if ds.labels[t] == a { 1.0 } else { -1.0 }).collect();
+            let sub = Dataset::new(format!("{a}-vs-{b}"), x, y);
+            let t = Timer::start();
+            let pre = crate::hss::compress::preprocess(&sub, hss, inner);
+            (OvoPairPre { a, b, pre }, t.secs())
+        });
+        let prepare_secs = built.iter().map(|(_, s)| *s).sum();
+        let pairs = built.into_iter().map(|(p, _)| p).collect();
+        Ok(OvoPairSet { pairs, prepare_secs, outer, inner })
+    }
+
+    /// Preprocessing wall time (CPU-seconds summed over pairs).
+    pub fn prepare_secs(&self) -> f64 {
+        self.prepare_secs
+    }
+
+    /// Train every pair for every C at one kernel width: pairs in outer
+    /// parallelism, each compressing from its cached preprocessing and
+    /// reusing one ULV factorization across the whole C grid through
+    /// the batched multi-RHS solver. Returns one [`OvoModel`] per C
+    /// (same order as `cs`). Since every stage is bit-for-bit
+    /// thread-invariant and the outer/inner split depends only on
+    /// `(threads, n_pairs)`, the models are bitwise identical for
+    /// every `threads` value.
+    pub fn train_grid(
+        &self,
+        kernel: Kernel,
+        hss: &HssParams,
+        admm: &AdmmParams,
+        cs: &[f64],
+    ) -> Result<(Vec<OvoModel>, OvoTrainStats)> {
+        if cs.is_empty() {
+            bail!("need at least one C value");
+        }
+        let n_pairs = self.pairs.len();
+        type PairOut = Result<(Vec<SvmModel>, [f64; 3])>;
+        let results: Vec<PairOut> =
+            threadpool::parallel_map(self.outer, n_pairs, 1, |p| {
+                let pp = &self.pairs[p];
+                let t = Timer::start();
+                let trainer =
+                    HssSvmTrainer::compress_preprocessed(&pp.pre, kernel, hss, self.inner);
+                let compress_secs = t.secs();
+                let t = Timer::start();
+                let ulv = trainer.factor(admm.beta).with_context(|| {
+                    format!("factorization failed for pair {}-vs-{}", pp.a, pp.b)
+                })?;
+                let factor_secs = t.secs();
+                let t = Timer::start();
+                let solver = AdmmSolver::new(&ulv, &trainer.y, *admm).with_threads(self.inner);
+                let models: Vec<SvmModel> = trainer
+                    .train_grid_with_solver(&solver, cs)
+                    .into_iter()
+                    .map(|(m, _)| m)
+                    .collect();
+                let admm_secs = t.secs();
+                Ok((models, [compress_secs, factor_secs, admm_secs]))
+            });
+
+        let mut per_pair: Vec<Vec<SvmModel>> = Vec::with_capacity(n_pairs);
+        let mut stats = OvoTrainStats { pairs: n_pairs, ..Default::default() };
+        for r in results {
+            let (models, [cs_, fs_, as_]) = r?;
+            stats.compress_secs += cs_;
+            stats.factor_secs += fs_;
+            stats.admm_secs += as_;
+            per_pair.push(models);
+        }
+        // regroup: one OvoModel per C, pairs in spec order — transpose
+        // by value, the trained models are moved (never cloned)
+        let mut grouped: Vec<Vec<(i64, i64, SvmModel)>> =
+            (0..cs.len()).map(|_| Vec::with_capacity(n_pairs)).collect();
+        for (pp, ms) in self.pairs.iter().zip(per_pair.into_iter()) {
+            for (ci, m) in ms.into_iter().enumerate() {
+                grouped[ci].push((pp.a, pp.b, m));
+            }
+        }
+        let models = grouped
+            .into_iter()
+            .zip(cs.iter())
+            .map(|(pairs, &c)| OvoModel::new(pairs, c))
+            .collect();
+        Ok((models, stats))
+    }
+}
+
+/// Train all k(k−1)/2 pairwise classifiers for every C in `cs` at once
+/// (one-shot: prepare + train at a single kernel width — identical,
+/// bit for bit, to the pre-split `compress` path, since `compress` IS
+/// `preprocess` + `compress_preprocessed`). Grid searches over h keep
+/// the [`OvoPairSet`] and call [`OvoPairSet::train_grid`] per width.
+pub fn train_ovo_grid(
+    ds: &MulticlassDataset,
+    kernel: Kernel,
+    hss: &HssParams,
+    admm: &AdmmParams,
+    cs: &[f64],
+    threads: usize,
+) -> Result<(Vec<OvoModel>, OvoTrainStats)> {
+    let set = OvoPairSet::prepare(ds, hss, threads)?;
+    let (models, mut stats) = set.train_grid(kernel, hss, admm, cs)?;
+    stats.compress_secs += set.prepare_secs();
+    Ok((models, stats))
+}
+
+/// Train all pairwise classifiers for a single C.
+pub fn train_ovo(
+    ds: &MulticlassDataset,
+    kernel: Kernel,
+    hss: &HssParams,
+    admm: &AdmmParams,
+    c: f64,
+    threads: usize,
+) -> Result<(OvoModel, OvoTrainStats)> {
+    let (mut models, stats) = train_ovo_grid(ds, kernel, hss, admm, &[c], threads)?;
+    Ok((models.pop().expect("one model per C"), stats))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::data::DEFAULT_LABEL_PAIR;
     use crate::util::prng::Rng;
+    use crate::util::testkit;
 
     /// Three well-separated Gaussian blobs labelled 0/1/2.
     fn three_blobs(n: usize, rng: &mut Rng) -> MulticlassDataset {
@@ -119,7 +644,7 @@ mod tests {
             x[(i, 1)] = centers[c][1] + rng.gauss() * 0.4;
             labels.push(c as i64);
         }
-        MulticlassDataset { x: x.into(), labels }
+        MulticlassDataset::new("blobs3", x, labels)
     }
 
     #[test]
@@ -127,7 +652,7 @@ mod tests {
         let mut rng = Rng::new(501);
         let train = three_blobs(300, &mut rng);
         let test = three_blobs(150, &mut rng);
-        let model = train_ovo(
+        let (model, stats) = train_ovo(
             &train,
             Kernel::Gaussian { h: 1.0 },
             &HssParams::near_exact(),
@@ -136,15 +661,19 @@ mod tests {
             1,
         )
         .unwrap();
-        assert_eq!(model.pairs.len(), 3);
-        assert_eq!(model.classes, vec![0, 1, 2]);
+        assert_eq!(model.pairs().len(), 3);
+        assert_eq!(model.classes(), &[0, 1, 2]);
+        assert_eq!(stats.pairs, 3);
         let acc = model.accuracy(&test, 1);
         assert!(acc > 0.95, "ovo accuracy {acc}");
+        // pairs share SVs: the pool must be strictly smaller than the
+        // concatenation (every point sits in 2 of the 3 pairs)
+        assert!(model.n_sv_unique() <= model.n_sv_total());
     }
 
     #[test]
     fn single_class_is_an_error() {
-        let ds = MulticlassDataset { x: Mat::zeros(5, 2).into(), labels: vec![3; 5] };
+        let ds = MulticlassDataset::new("one", Mat::zeros(5, 2), vec![3; 5]);
         assert!(train_ovo(
             &ds,
             Kernel::Linear,
@@ -154,5 +683,161 @@ mod tests {
             1
         )
         .is_err());
+    }
+
+    #[test]
+    fn engine_matches_naive_per_pair_path() {
+        let mut rng = Rng::new(502);
+        let train = three_blobs(240, &mut rng);
+        let test = three_blobs(predict::TILE + 40, &mut rng); // crosses a tile boundary
+        let (model, _) = train_ovo(
+            &train,
+            Kernel::Gaussian { h: 1.0 },
+            &HssParams::near_exact(),
+            &AdmmParams { beta: 10.0, max_it: 12, relax: 1.0, tol: 0.0 },
+            5.0,
+            2,
+        )
+        .unwrap();
+        let fast = model.decisions(&test.x, 2);
+        let naive = model.decisions_naive(&test.x, 2);
+        assert_eq!(fast.shape(), naive.shape());
+        for (a, b) in fast.data().iter().zip(naive.data().iter()) {
+            assert!(
+                (a - b).abs() <= 1e-12 * (1.0 + b.abs()),
+                "engine {a} vs naive {b}"
+            );
+        }
+        assert_eq!(model.predict(&test.x, 2), model.predict_naive(&test.x, 2));
+    }
+
+    #[test]
+    fn grid_models_match_single_c_training() {
+        let mut rng = Rng::new(503);
+        let train = three_blobs(150, &mut rng);
+        let cs = [0.5, 5.0];
+        let (grid, _) = train_ovo_grid(
+            &train,
+            Kernel::Gaussian { h: 1.0 },
+            &HssParams::near_exact(),
+            &AdmmParams { beta: 10.0, max_it: 10, relax: 1.0, tol: 0.0 },
+            &cs,
+            2,
+        )
+        .unwrap();
+        assert_eq!(grid.len(), 2);
+        for (gi, &c) in grid.iter().zip(cs.iter()) {
+            assert_eq!(gi.c(), c);
+            let (single, _) = train_ovo(
+                &train,
+                Kernel::Gaussian { h: 1.0 },
+                &HssParams::near_exact(),
+                &AdmmParams { beta: 10.0, max_it: 10, relax: 1.0, tol: 0.0 },
+                c,
+                2,
+            )
+            .unwrap();
+            for ((a1, b1, m1), (a2, b2, m2)) in gi.pairs().iter().zip(single.pairs().iter()) {
+                assert_eq!((a1, b1), (a2, b2));
+                assert_eq!(m1.alpha_y, m2.alpha_y, "grid vs single-C at C={c}");
+                assert_eq!(m1.bias.to_bits(), m2.bias.to_bits());
+                assert_eq!(m1.sv, m2.sv);
+            }
+        }
+    }
+
+    /// A pair model with one zero-weight SV: its decision is exactly
+    /// `bias` everywhere (α·K = 0·K = 0.0), so vote patterns can be
+    /// constructed precisely — and all pairs share the single pool row.
+    fn const_pair(a: i64, b: i64, bias: f64) -> (i64, i64, SvmModel) {
+        (
+            a,
+            b,
+            SvmModel {
+                sv: Mat::from_vec(1, 2, vec![0.5, -0.25]).into(),
+                alpha_y: vec![0.0],
+                bias,
+                kernel: Kernel::Gaussian { h: 1.0 },
+                c: 1.0,
+                labels: DEFAULT_LABEL_PAIR,
+            },
+        )
+    }
+
+    #[test]
+    fn tie_break_is_libsvm_deterministic() {
+        let x: Points = Mat::zeros(1, 2).into();
+        // all three classes get exactly one vote, all decision sums are
+        // exactly 0 → lowest class index must win (the old max_by_key
+        // picked the LAST maximal class, i.e. 2)
+        let full_tie = OvoModel::new(
+            vec![const_pair(0, 1, 1.0), const_pair(0, 2, -1.0), const_pair(1, 2, 1.0)],
+            1.0,
+        );
+        assert_eq!(full_tie.predict(&x, 1), vec![0]);
+        assert_eq!(full_tie.predict_naive(&x, 1), vec![0]);
+        // one vote each, but the sums favor the MIDDLE class:
+        // f01 = −2 (vote 1), f02 = +0.5 (vote 0), f12 = −0.5 (vote 2)
+        // sums: c0 = −2 + 0.5 = −1.5, c1 = 2 − 0.5 = 1.5, c2 = 0
+        let sum_tie = OvoModel::new(
+            vec![const_pair(0, 1, -2.0), const_pair(0, 2, 0.5), const_pair(1, 2, -0.5)],
+            1.0,
+        );
+        assert_eq!(sum_tie.predict(&x, 1), vec![1]);
+        assert_eq!(sum_tie.predict_naive(&x, 1), vec![1]);
+        // clear majority is untouched by the tie-break machinery
+        let majority = OvoModel::new(
+            vec![const_pair(0, 1, -1.0), const_pair(0, 2, -1.0), const_pair(1, 2, 1.0)],
+            1.0,
+        );
+        assert_eq!(majority.predict(&x, 1), vec![1]);
+        // identical SV row across pairs → one pool row
+        assert_eq!(majority.n_sv_unique(), 1);
+        assert_eq!(majority.n_sv_total(), 3);
+    }
+
+    #[test]
+    fn parallel_pairwise_training_is_thread_invariant() {
+        let mut rng = Rng::new(504);
+        let train = three_blobs(180, &mut rng);
+        let kernel = Kernel::Gaussian { h: 1.0 };
+        let ap = AdmmParams { beta: 10.0, max_it: 8, relax: 1.0, tol: 0.0 };
+        let (base, _) = train_ovo(&train, kernel, &HssParams::near_exact(), &ap, 2.0, 1).unwrap();
+        for threads in [2, 8] {
+            let (other, _) =
+                train_ovo(&train, kernel, &HssParams::near_exact(), &ap, 2.0, threads).unwrap();
+            for ((a1, b1, m1), (a2, b2, m2)) in base.pairs().iter().zip(other.pairs().iter()) {
+                assert_eq!((a1, b1), (a2, b2), "pair order changed at threads={threads}");
+                assert_eq!(m1.alpha_y, m2.alpha_y, "alpha differs at threads={threads}");
+                assert_eq!(m1.bias.to_bits(), m2.bias.to_bits(), "bias at threads={threads}");
+                assert_eq!(m1.sv, m2.sv, "SVs differ at threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_engine_matches_dense() {
+        // CSR training data end-to-end: engine and naive paths agree
+        // with each other and with the dense twin
+        let mut rng = Rng::new(505);
+        let dense = three_blobs(160, &mut rng);
+        let test = three_blobs(60, &mut rng);
+        let sparse = MulticlassDataset::new(
+            "blobs3-csr",
+            CsrMat::from_dense(dense.x.dense()),
+            dense.labels.clone(),
+        );
+        let kernel = Kernel::Gaussian { h: 1.0 };
+        let ap = AdmmParams { beta: 10.0, max_it: 10, relax: 1.0, tol: 0.0 };
+        let (md, _) = train_ovo(&dense, kernel, &HssParams::near_exact(), &ap, 5.0, 2).unwrap();
+        let (ms, _) = train_ovo(&sparse, kernel, &HssParams::near_exact(), &ap, 5.0, 2).unwrap();
+        assert!(ms.is_sparse());
+        let xs: Points = CsrMat::from_dense(test.x.dense()).into();
+        let fd = md.decisions(&test.x, 2);
+        let fs = ms.decisions(&xs, 2);
+        testkit::assert_allclose(fs.data(), fd.data(), 1e-10);
+        for (a, b) in ms.decisions(&xs, 2).data().iter().zip(ms.decisions_naive(&xs, 2).data()) {
+            assert!((a - b).abs() <= 1e-12 * (1.0 + b.abs()), "sparse engine {a} vs naive {b}");
+        }
     }
 }

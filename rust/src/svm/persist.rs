@@ -12,17 +12,53 @@
 //! LIBSVM file) carry an optional `labels <neg-hex> <pos-hex>` line
 //! between `bias` and the SV section; files without it (all pre-v1.1
 //! files, and files for ±1-coded data) default to `[-1, +1]`.
+//!
+//! One-vs-one multiclass models use a separate magic (`hss-svm-ovo v1`)
+//! and a **shared SV pool** layout: the unique support vectors of all
+//! pairwise models are written once (`pool` / `poolsparse` section,
+//! same row encodings as `sv` / `svsparse` minus the alpha prefix), and
+//! each pair is two lines — a `pair <a> <b> <bias-hex> <nsv>` header
+//! and its `<pool-row>:<alpha-hex>` gather. [`load_any`] dispatches on
+//! the magic, so every binary v1/v1.1 file keeps loading unchanged.
 
 use crate::data::dataset::DEFAULT_LABEL_PAIR;
 use crate::data::sparse::{CsrMat, Points};
 use crate::kernel::Kernel;
 use crate::linalg::Mat;
-use crate::svm::SvmModel;
+use crate::svm::{AnyModel, OvoModel, SvmModel};
 use anyhow::{bail, Context, Result};
 use std::io::{BufRead, BufWriter, Write};
 use std::path::Path;
 
 const MAGIC: &str = "hss-svm-model v1";
+const MAGIC_OVO: &str = "hss-svm-ovo v1";
+
+fn write_kernel(w: &mut impl Write, kernel: &Kernel) -> Result<()> {
+    match kernel {
+        Kernel::Gaussian { h } => writeln!(w, "kernel gaussian {}", hexf(*h))?,
+        Kernel::Polynomial { degree, c } => {
+            writeln!(w, "kernel polynomial {degree} {}", hexf(*c))?
+        }
+        Kernel::Linear => writeln!(w, "kernel linear")?,
+    }
+    Ok(())
+}
+
+fn parse_kernel(kline: &str) -> Result<Kernel> {
+    let mut kp = kline.split_ascii_whitespace();
+    if kp.next() != Some("kernel") {
+        bail!("expected kernel line, got {kline:?}");
+    }
+    Ok(match kp.next() {
+        Some("gaussian") => Kernel::Gaussian { h: unhexf(kp.next().context("missing h")?)? },
+        Some("polynomial") => Kernel::Polynomial {
+            degree: kp.next().context("missing degree")?.parse()?,
+            c: unhexf(kp.next().context("missing c")?)?,
+        },
+        Some("linear") => Kernel::Linear,
+        other => bail!("unknown kernel {other:?}"),
+    })
+}
 
 /// Write a model to a file.
 pub fn save(model: &SvmModel, path: impl AsRef<Path>) -> Result<()> {
@@ -30,11 +66,7 @@ pub fn save(model: &SvmModel, path: impl AsRef<Path>) -> Result<()> {
         .with_context(|| format!("cannot create {}", path.as_ref().display()))?;
     let mut w = BufWriter::new(f);
     writeln!(w, "{MAGIC}")?;
-    match model.kernel {
-        Kernel::Gaussian { h } => writeln!(w, "kernel gaussian {}", hexf(h))?,
-        Kernel::Polynomial { degree, c } => writeln!(w, "kernel polynomial {degree} {}", hexf(c))?,
-        Kernel::Linear => writeln!(w, "kernel linear")?,
-    }
+    write_kernel(&mut w, &model.kernel)?;
     writeln!(w, "c {}", hexf(model.c))?;
     writeln!(w, "bias {}", hexf(model.bias))?;
     if model.labels != DEFAULT_LABEL_PAIR {
@@ -79,20 +111,7 @@ pub fn load(path: impl AsRef<Path>) -> Result<SvmModel> {
     if magic.trim() != MAGIC {
         bail!("not a hss-svm model file (got header {magic:?})");
     }
-    let kline = next()?;
-    let mut kp = kline.split_ascii_whitespace();
-    if kp.next() != Some("kernel") {
-        bail!("expected kernel line, got {kline:?}");
-    }
-    let kernel = match kp.next() {
-        Some("gaussian") => Kernel::Gaussian { h: unhexf(kp.next().context("missing h")?)? },
-        Some("polynomial") => Kernel::Polynomial {
-            degree: kp.next().context("missing degree")?.parse()?,
-            c: unhexf(kp.next().context("missing c")?)?,
-        },
-        Some("linear") => Kernel::Linear,
-        other => bail!("unknown kernel {other:?}"),
-    };
+    let kernel = parse_kernel(&next()?)?;
     let c = parse_kv(&next()?, "c")?;
     let bias = parse_kv(&next()?, "bias")?;
     // optional `labels` line; older files go straight to the SV section
@@ -156,6 +175,226 @@ pub fn load(path: impl AsRef<Path>) -> Result<SvmModel> {
         CsrMat::from_rows(cols, &sv_rows).into()
     };
     Ok(SvmModel { sv, alpha_y, bias, kernel, c, labels })
+}
+
+/// Write a one-vs-one multiclass model: shared SV pool once, then one
+/// sparse gather per pair. The pool and the gathers are serialized
+/// STRAIGHT from the model's engine (`pool_points`/`gather`) — the
+/// on-disk layout is by construction the layout the engine serves, so
+/// the dedup logic lives in exactly one place.
+pub fn save_ovo(model: &OvoModel, path: impl AsRef<Path>) -> Result<()> {
+    let f = std::fs::File::create(path.as_ref())
+        .with_context(|| format!("cannot create {}", path.as_ref().display()))?;
+    let mut w = BufWriter::new(f);
+    writeln!(w, "{MAGIC_OVO}")?;
+    write_kernel(&mut w, &model.kernel())?;
+    writeln!(w, "c {}", hexf(model.c()))?;
+    write!(w, "classes {}", model.classes().len())?;
+    for c in model.classes() {
+        write!(w, " {c}")?;
+    }
+    writeln!(w)?;
+
+    let engine = model.engine();
+    match engine.pool_points() {
+        Points::Sparse(pool) => {
+            writeln!(w, "poolsparse {} {}", pool.rows(), pool.cols())?;
+            for i in 0..pool.rows() {
+                let (ci, vi) = pool.row(i);
+                for (j, (&c, &v)) in ci.iter().zip(vi.iter()).enumerate() {
+                    if j > 0 {
+                        write!(w, " ")?;
+                    }
+                    write!(w, "{}:{}", c, hexf(v))?;
+                }
+                writeln!(w)?;
+            }
+        }
+        Points::Dense(pool) => {
+            writeln!(w, "pool {} {}", pool.rows(), pool.cols())?;
+            for i in 0..pool.rows() {
+                for (j, &v) in pool.row(i).iter().enumerate() {
+                    if j > 0 {
+                        write!(w, " ")?;
+                    }
+                    write!(w, "{}", hexf(v))?;
+                }
+                writeln!(w)?;
+            }
+        }
+    }
+    writeln!(w, "pairs {}", model.pairs().len())?;
+    for (p, (a, b, m)) in model.pairs().iter().enumerate() {
+        let gather = engine.gather(p);
+        writeln!(w, "pair {a} {b} {} {}", hexf(m.bias), gather.len())?;
+        for (j, &(row, alpha)) in gather.iter().enumerate() {
+            if j > 0 {
+                write!(w, " ")?;
+            }
+            write!(w, "{}:{}", row, hexf(alpha))?;
+        }
+        writeln!(w)?;
+    }
+    Ok(())
+}
+
+/// Load a one-vs-one multiclass model (shared-pool layout). Each pair's
+/// [`SvmModel`] is reconstructed by gathering its rows out of the pool,
+/// so the per-pair SVs keep the pool's representation.
+pub fn load_ovo(path: impl AsRef<Path>) -> Result<OvoModel> {
+    let f = std::fs::File::open(path.as_ref())
+        .with_context(|| format!("cannot open {}", path.as_ref().display()))?;
+    let mut lines = std::io::BufReader::new(f).lines();
+    let mut next = || -> Result<String> {
+        lines.next().context("unexpected end of model file")?.context("I/O error")
+    };
+    let magic = next()?;
+    if magic.trim() != MAGIC_OVO {
+        bail!("not a hss-svm OvO model file (got header {magic:?})");
+    }
+    let kernel = parse_kernel(&next()?)?;
+    let c = parse_kv(&next()?, "c")?;
+    let cline = next()?;
+    let mut cp = cline.split_ascii_whitespace();
+    if cp.next() != Some("classes") {
+        bail!("expected classes line, got {cline:?}");
+    }
+    let n_classes: usize = cp.next().context("missing class count")?.parse()?;
+    let classes: Vec<i64> = cp
+        .map(|t| t.parse::<i64>().with_context(|| format!("bad class label {t:?}")))
+        .collect::<Result<_>>()?;
+    if classes.len() != n_classes || n_classes < 2 {
+        bail!("classes line announces {n_classes} labels but lists {}", classes.len());
+    }
+
+    let pline = next()?;
+    let mut pp = pline.split_ascii_whitespace();
+    let kind = pp.next();
+    if kind != Some("pool") && kind != Some("poolsparse") {
+        bail!("expected pool/poolsparse line, got {pline:?}");
+    }
+    let rows: usize = pp.next().context("missing pool rows")?.parse()?;
+    let cols: usize = pp.next().context("missing pool cols")?.parse()?;
+    let pool: Points = if kind == Some("pool") {
+        let mut m = Mat::zeros(rows, cols);
+        for i in 0..rows {
+            let line = next()?;
+            let mut parts = line.split_ascii_whitespace();
+            for j in 0..cols {
+                m[(i, j)] = unhexf(
+                    parts.next().with_context(|| format!("pool row {i}: missing value {j}"))?,
+                )?;
+            }
+        }
+        m.into()
+    } else {
+        let mut sv_rows: Vec<Vec<(usize, f64)>> = Vec::with_capacity(rows);
+        for i in 0..rows {
+            let line = next()?;
+            let mut row: Vec<(usize, f64)> = Vec::new();
+            for tok in line.split_ascii_whitespace() {
+                let (c_str, v_str) = tok
+                    .split_once(':')
+                    .with_context(|| format!("pool row {i}: bad sparse pair {tok:?}"))?;
+                let col: usize = c_str
+                    .parse()
+                    .with_context(|| format!("pool row {i}: bad sparse index {c_str:?}"))?;
+                if col >= cols {
+                    bail!("pool row {i}: sparse index {col} out of range {cols}");
+                }
+                if let Some(&(prev, _)) = row.last() {
+                    if col <= prev {
+                        bail!("pool row {i}: sparse index {col} not strictly ascending after {prev}");
+                    }
+                }
+                row.push((col, unhexf(v_str)?));
+            }
+            sv_rows.push(row);
+        }
+        CsrMat::from_rows(cols, &sv_rows).into()
+    };
+
+    let npline = next()?;
+    let mut np = npline.split_ascii_whitespace();
+    if np.next() != Some("pairs") {
+        bail!("expected pairs line, got {npline:?}");
+    }
+    let n_pairs: usize = np.next().context("missing pair count")?.parse()?;
+    let mut pairs = Vec::with_capacity(n_pairs);
+    for p in 0..n_pairs {
+        let hline = next()?;
+        let mut hp = hline.split_ascii_whitespace();
+        if hp.next() != Some("pair") {
+            bail!("pair {p}: expected pair line, got {hline:?}");
+        }
+        let a: i64 = hp.next().context("missing class a")?.parse()?;
+        let b: i64 = hp.next().context("missing class b")?.parse()?;
+        let bias = unhexf(hp.next().context("missing pair bias")?)?;
+        let nsv: usize = hp.next().context("missing pair SV count")?.parse()?;
+        if !classes.contains(&a) || !classes.contains(&b) {
+            bail!("pair {p}: classes {a}/{b} not in the classes line");
+        }
+        let gline = next()?;
+        let mut idx = Vec::with_capacity(nsv);
+        let mut alpha_y = Vec::with_capacity(nsv);
+        for tok in gline.split_ascii_whitespace() {
+            let (r_str, a_str) = tok
+                .split_once(':')
+                .with_context(|| format!("pair {p}: bad gather token {tok:?}"))?;
+            let row: usize =
+                r_str.parse().with_context(|| format!("pair {p}: bad pool row {r_str:?}"))?;
+            if row >= pool.rows() {
+                bail!("pair {p}: pool row {row} out of range {}", pool.rows());
+            }
+            idx.push(row);
+            alpha_y.push(unhexf(a_str)?);
+        }
+        if idx.len() != nsv {
+            bail!("pair {p}: header announces {nsv} SVs but the gather lists {}", idx.len());
+        }
+        let sv = pool.select_rows(&idx);
+        pairs.push((
+            a,
+            b,
+            SvmModel { sv, alpha_y, bias, kernel, c, labels: DEFAULT_LABEL_PAIR },
+        ));
+    }
+    if pairs.is_empty() {
+        bail!("OvO model file has no pairs");
+    }
+    let model = OvoModel::new(pairs, c);
+    if model.classes() != classes {
+        bail!(
+            "classes line {:?} disagrees with the pair set {:?}",
+            classes,
+            model.classes()
+        );
+    }
+    Ok(model)
+}
+
+/// Load a model file of either kind, dispatching on the magic line:
+/// binary (`hss-svm-model v1`, including pre-`labels` files) or
+/// one-vs-one multiclass (`hss-svm-ovo v1`).
+pub fn load_any(path: impl AsRef<Path>) -> Result<AnyModel> {
+    let path = path.as_ref();
+    let f = std::fs::File::open(path)
+        .with_context(|| format!("cannot open {}", path.display()))?;
+    let mut first = String::new();
+    std::io::BufReader::new(f).read_line(&mut first).context("I/O error")?;
+    if first.trim() == MAGIC_OVO {
+        Ok(AnyModel::Ovo(load_ovo(path)?))
+    } else {
+        Ok(AnyModel::Binary(load(path)?))
+    }
+}
+
+/// Save a model of either kind (binary or OvO layout by variant).
+pub fn save_any(model: &AnyModel, path: impl AsRef<Path>) -> Result<()> {
+    match model {
+        AnyModel::Binary(m) => save(m, path),
+        AnyModel::Ovo(m) => save_ovo(m, path),
+    }
 }
 
 fn parse_kv(line: &str, key: &str) -> Result<f64> {
@@ -286,6 +525,95 @@ mod tests {
         let text = std::fs::read_to_string(&p2).unwrap();
         assert!(!text.contains("labels "), "{text}");
         assert_eq!(load(&p2).unwrap().labels, DEFAULT_LABEL_PAIR);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    fn toy_ovo(rng: &mut Rng, sparse: bool) -> OvoModel {
+        // three pairs over classes {1, 3, 7} sharing rows of one SV set
+        // (the realistic case: each training point sits in k−1 pairs)
+        let base = Mat::gauss(6, 4, rng);
+        let shared: Points = if sparse {
+            let mut thin = base.clone();
+            for i in 0..thin.rows() {
+                let r = thin.row_mut(i);
+                r[(i * 2 + 1) % 4] = 0.0;
+            }
+            CsrMat::from_dense(&thin).into()
+        } else {
+            base.into()
+        };
+        let pair = |a: i64, b: i64, idx: &[usize], rng: &mut Rng| {
+            (
+                a,
+                b,
+                SvmModel {
+                    sv: shared.select_rows(idx),
+                    alpha_y: idx.iter().map(|_| rng.gauss()).collect(),
+                    bias: rng.gauss(),
+                    kernel: Kernel::Gaussian { h: 0.6 },
+                    c: 1.5,
+                    labels: DEFAULT_LABEL_PAIR,
+                },
+            )
+        };
+        let pairs = vec![
+            pair(1, 3, &[0, 1, 2, 3], rng),
+            pair(1, 7, &[1, 2, 4], rng),
+            pair(3, 7, &[0, 3, 4, 5], rng),
+        ];
+        OvoModel::new(pairs, 1.5)
+    }
+
+    #[test]
+    fn ovo_roundtrip_is_bit_exact() {
+        for sparse in [false, true] {
+            let mut rng = Rng::new(if sparse { 606 } else { 605 });
+            let model = toy_ovo(&mut rng, sparse);
+            assert!(model.n_sv_unique() < model.n_sv_total(), "pairs must share SVs");
+            let dir = std::env::temp_dir()
+                .join(format!("hss_svm_persist_ovo_{}_{sparse}", std::process::id()));
+            std::fs::create_dir_all(&dir).unwrap();
+            let p = dir.join("m.ovo");
+            save_ovo(&model, &p).unwrap();
+            let back = load_ovo(&p).unwrap();
+            assert_eq!(back.classes(), model.classes());
+            assert_eq!(back.c(), model.c());
+            assert_eq!(back.is_sparse(), sparse);
+            assert_eq!(back.n_sv_unique(), model.n_sv_unique());
+            for ((a1, b1, m1), (a2, b2, m2)) in model.pairs().iter().zip(back.pairs().iter()) {
+                assert_eq!((a1, b1), (a2, b2));
+                assert_eq!(m1.sv, m2.sv);
+                assert_eq!(m1.alpha_y, m2.alpha_y);
+                assert_eq!(m1.bias.to_bits(), m2.bias.to_bits());
+                assert_eq!(m1.kernel, m2.kernel);
+            }
+            // identical predictions through the shared-SV engine
+            let x: Points = Mat::gauss(9, 4, &mut rng).into();
+            let f1 = model.decisions(&x, 1);
+            let f2 = back.decisions(&x, 1);
+            assert_eq!(f1.data(), f2.data(), "sparse={sparse}");
+            std::fs::remove_dir_all(&dir).ok();
+        }
+    }
+
+    #[test]
+    fn load_any_dispatches_on_magic() {
+        let mut rng = Rng::new(607);
+        let dir = std::env::temp_dir()
+            .join(format!("hss_svm_persist_any_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let pb = dir.join("bin.model");
+        save(&toy_model(&mut rng), &pb).unwrap();
+        assert!(matches!(load_any(&pb).unwrap(), AnyModel::Binary(_)));
+        let po = dir.join("ovo.model");
+        save_ovo(&toy_ovo(&mut rng, false), &po).unwrap();
+        let AnyModel::Ovo(back) = load_any(&po).unwrap() else {
+            panic!("ovo file must load as AnyModel::Ovo");
+        };
+        assert_eq!(back.classes(), &[1, 3, 7]);
+        let pg = dir.join("garbage.model");
+        std::fs::write(&pg, "what even is this\n").unwrap();
+        assert!(load_any(&pg).is_err());
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -1,0 +1,285 @@
+//! One-vs-one multiclass end-to-end: train → persist → load → predict
+//! round-trips (dense and CSR), a TCP serving session answering the
+//! training file's ORIGINAL integer class labels, shared-SV engine vs
+//! naive per-pair agreement on the loaded model, and bitwise thread
+//! invariance of the parallel pairwise trainer.
+
+use hss_svm::admm::AdmmParams;
+use hss_svm::data::sparse::CsrMat;
+use hss_svm::data::{synth, Points};
+use hss_svm::hss::HssParams;
+use hss_svm::kernel::Kernel;
+use hss_svm::server::{ModelRegistry, Server, ServerConfig};
+use hss_svm::svm::multiclass::{train_ovo, MulticlassDataset};
+use hss_svm::svm::{persist, AnyModel, OvoModel};
+use hss_svm::util::prng::Rng;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+/// 4-class blobs remapped onto non-contiguous "original" labels
+/// {2, 5, 7, 11} — the round-trips below must answer these, not 0..3.
+const LABELS: [i64; 4] = [2, 5, 7, 11];
+
+fn four_class(n: usize, rng: &mut Rng, sparse: bool) -> MulticlassDataset {
+    let base = synth::multiclass_blobs(n, 3, 4, 0.4, rng);
+    let labels: Vec<i64> = base.labels.iter().map(|&c| LABELS[c as usize]).collect();
+    if sparse {
+        MulticlassDataset::new("blobs4-csr", CsrMat::from_dense(base.x.dense()), labels)
+    } else {
+        MulticlassDataset::new("blobs4", base.x, labels)
+    }
+}
+
+fn train(ds: &MulticlassDataset, threads: usize) -> OvoModel {
+    let (model, _) = train_ovo(
+        ds,
+        Kernel::Gaussian { h: 1.0 },
+        &HssParams::near_exact(),
+        &AdmmParams { beta: 10.0, max_it: 10, relax: 1.0, tol: 0.0 },
+        5.0,
+        threads,
+    )
+    .expect("ovo training");
+    model
+}
+
+fn tmp_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("hss_svm_mc_e2e_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn train_persist_load_predict_roundtrip_dense_and_csr() {
+    for sparse in [false, true] {
+        let mut rng = Rng::new(901);
+        let tr = four_class(240, &mut rng, sparse);
+        let te = four_class(120, &mut rng, sparse);
+        let model = train(&tr, 2);
+        assert_eq!(model.classes(), &LABELS);
+        assert_eq!(model.pairs().len(), 6);
+        assert_eq!(model.is_sparse(), sparse);
+        let acc = model.accuracy(&te, 2);
+        assert!(acc > 0.95, "sparse={sparse}: accuracy {acc}");
+
+        let dir = tmp_dir(if sparse { "csr" } else { "dense" });
+        let path = dir.join("m.ovo");
+        persist::save_ovo(&model, &path).unwrap();
+        let back = persist::load_ovo(&path).unwrap();
+        assert_eq!(back.classes(), model.classes());
+        assert_eq!(back.is_sparse(), sparse);
+        // loaded model predicts IDENTICALLY (bit-exact persistence)
+        let f1 = model.decisions(&te.x, 2);
+        let f2 = back.decisions(&te.x, 2);
+        assert_eq!(f1.data(), f2.data(), "sparse={sparse}");
+        assert_eq!(model.predict(&te.x, 2), back.predict(&te.x, 2));
+        // and the engine agrees with the naive per-pair oracle ≤ 1e-12
+        let naive = back.decisions_naive(&te.x, 2);
+        for (a, b) in f2.data().iter().zip(naive.data().iter()) {
+            assert!(
+                (a - b).abs() <= 1e-12 * (1.0 + b.abs()),
+                "sparse={sparse}: engine {a} vs naive {b}"
+            );
+        }
+        assert_eq!(back.predict(&te.x, 2), back.predict_naive(&te.x, 2));
+        // answers are original labels, never 0..3 vote indices
+        assert!(back.predict(&te.x, 2).iter().all(|c| LABELS.contains(c)));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
+
+#[test]
+fn parallel_pairwise_training_is_thread_invariant_e2e() {
+    let mut rng = Rng::new(902);
+    let tr = four_class(200, &mut rng, false);
+    let base = train(&tr, 1);
+    for threads in [2, 8] {
+        let other = train(&tr, threads);
+        assert_eq!(base.classes(), other.classes());
+        for ((a1, b1, m1), (a2, b2, m2)) in base.pairs().iter().zip(other.pairs().iter()) {
+            assert_eq!((a1, b1), (a2, b2), "pair order at threads={threads}");
+            assert_eq!(m1.sv, m2.sv, "SVs differ at threads={threads}");
+            assert_eq!(m1.alpha_y, m2.alpha_y, "alphas differ at threads={threads}");
+            assert_eq!(
+                m1.bias.to_bits(),
+                m2.bias.to_bits(),
+                "bias differs at threads={threads}"
+            );
+        }
+        // bitwise-equal models ⇒ bitwise-equal decisions
+        let x = &tr.x;
+        assert_eq!(base.decisions(x, 1).data(), other.decisions(x, threads).data());
+    }
+}
+
+/// What the engine answers offline for these exact lines — the TCP
+/// session must match verbatim (`"<class> <decision sum>"`).
+fn offline(model: &OvoModel, lines: &[String]) -> Vec<String> {
+    let (x, _) = hss_svm::data::libsvm::read_features(
+        std::io::Cursor::new(lines.join("\n")),
+        Some(model.dim()),
+    )
+    .unwrap();
+    model
+        .engine()
+        .predict_with_scores(&x, 1)
+        .into_iter()
+        .map(|(class, sum)| format!("{class} {sum:.6}"))
+        .collect()
+}
+
+#[test]
+fn tcp_session_serves_original_multiclass_labels() {
+    let mut rng = Rng::new(903);
+    let tr = four_class(200, &mut rng, false);
+    let model = train(&tr, 2);
+    let dir = tmp_dir("tcp");
+    let path = dir.join("mc.ovo");
+    persist::save_ovo(&model, &path).unwrap();
+
+    // registry loads the OvO file through the auto-detecting loader
+    let registry = ModelRegistry::from_paths(&[("mc".to_string(), path.clone())]).unwrap();
+    let loaded = registry.get("mc").unwrap();
+    assert!(matches!(loaded.model, AnyModel::Ovo(_)), "registry must detect OvO files");
+
+    let cfg = ServerConfig {
+        batch_wait: Duration::from_millis(1),
+        threads: 2,
+        ..ServerConfig::default()
+    };
+    let server = Server::bind("127.0.0.1:0", registry, cfg).expect("bind");
+    let handle = server.handle();
+    let jh = std::thread::spawn(move || server.run());
+
+    // request lines drawn near all four class centers (mixed labeled /
+    // unlabeled, exercising the label-agnostic batch parser)
+    let q = synth::multiclass_blobs(40, 3, 4, 0.4, &mut rng);
+    let mut lines = Vec::new();
+    for i in 0..q.len() {
+        let p = q.x.dense_row(i);
+        let feats = format!("1:{:.4} 2:{:.4} 3:{:.4}", p[0], p[1], p[2]);
+        if i % 3 == 0 {
+            lines.push(format!("{} {feats}", LABELS[(i / 3) % 4]));
+        } else {
+            lines.push(feats);
+        }
+    }
+    let want = offline(&model, &lines);
+
+    let stream = TcpStream::connect(handle.local_addr()).expect("connect");
+    let mut reader = BufReader::new(stream.try_clone().expect("clone"));
+    let mut w = stream;
+    for l in &lines {
+        writeln!(w, "{l}").expect("send");
+    }
+    let mut got = Vec::new();
+    for _ in 0..lines.len() {
+        let mut s = String::new();
+        assert!(reader.read_line(&mut s).expect("read") > 0, "unexpected EOF");
+        got.push(s.trim_end().to_string());
+    }
+    assert_eq!(got, want, "served OvO answers must match the offline engine verbatim");
+    // every response leads with one of the ORIGINAL training labels
+    for g in &got {
+        let class: i64 = g.split_whitespace().next().unwrap().parse().unwrap();
+        assert!(LABELS.contains(&class), "served label {class} not in {LABELS:?}");
+    }
+    writeln!(w, "SHUTDOWN").expect("shutdown");
+    let mut s = String::new();
+    let _ = reader.read_line(&mut s);
+    jh.join().unwrap().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn stdin_serve_loop_handles_ovo_models() {
+    let mut rng = Rng::new(904);
+    let tr = four_class(160, &mut rng, false);
+    let model = train(&tr, 1);
+    let q = four_class(10, &mut rng, false);
+    let mut input = String::new();
+    for i in 0..q.len() {
+        let p = q.x.dense_row(i);
+        input.push_str(&format!("1:{:.4} 2:{:.4} 3:{:.4}\n", p[0], p[1], p[2]));
+    }
+    let any: AnyModel = model.into();
+    let mut out = Vec::new();
+    let stats = hss_svm::serve::serve_loop(
+        &any,
+        None,
+        std::io::Cursor::new(input),
+        &mut out,
+        std::io::sink(),
+        1,
+    )
+    .unwrap();
+    assert_eq!(stats.predicted, 10);
+    let text = String::from_utf8(out).unwrap();
+    assert_eq!(text.lines().count(), 10);
+    for l in text.lines() {
+        let class: i64 = l.split_whitespace().next().unwrap().parse().unwrap();
+        assert!(LABELS.contains(&class), "{l}");
+    }
+}
+
+#[test]
+fn sparse_tcp_tiles_follow_the_model_representation() {
+    // a CSR OvO model forces CSR request tiles (serve::parse_batch pins
+    // the tile representation to the model); answers still match the
+    // offline engine bitwise
+    let mut rng = Rng::new(905);
+    let tr = four_class(160, &mut rng, true);
+    let model = train(&tr, 2);
+    assert!(model.is_sparse());
+    let dir = tmp_dir("tcp_csr");
+    let path = dir.join("mc_sparse.ovo");
+    persist::save_ovo(&model, &path).unwrap();
+    let registry = ModelRegistry::from_paths(&[("mc".to_string(), path)]).unwrap();
+    let server = Server::bind(
+        "127.0.0.1:0",
+        registry,
+        ServerConfig { batch_wait: Duration::from_millis(1), ..ServerConfig::default() },
+    )
+    .expect("bind");
+    let handle = server.handle();
+    let jh = std::thread::spawn(move || server.run());
+
+    let q = synth::multiclass_blobs(12, 3, 4, 0.4, &mut rng);
+    let mut lines = Vec::new();
+    for i in 0..q.len() {
+        let p = q.x.dense_row(i);
+        lines.push(format!("1:{:.4} 3:{:.4}", p[0], p[2])); // sparse line (no 2:)
+    }
+    let want = {
+        let (x, _) = hss_svm::data::libsvm::read_features_with(
+            std::io::Cursor::new(lines.join("\n")),
+            Some(model.dim()),
+            hss_svm::data::libsvm::Repr::Sparse,
+        )
+        .unwrap();
+        assert!(matches!(x, Points::Sparse(_)));
+        model
+            .engine()
+            .predict_with_scores(&x, 1)
+            .into_iter()
+            .map(|(class, sum)| format!("{class} {sum:.6}"))
+            .collect::<Vec<_>>()
+    };
+    let stream = TcpStream::connect(handle.local_addr()).expect("connect");
+    let mut reader = BufReader::new(stream.try_clone().expect("clone"));
+    let mut w = stream;
+    for l in &lines {
+        writeln!(w, "{l}").expect("send");
+    }
+    let mut got = Vec::new();
+    for _ in 0..lines.len() {
+        let mut s = String::new();
+        assert!(reader.read_line(&mut s).expect("read") > 0, "unexpected EOF");
+        got.push(s.trim_end().to_string());
+    }
+    assert_eq!(got, want);
+    handle.shutdown();
+    drop(w);
+    jh.join().unwrap().unwrap();
+}

@@ -25,7 +25,8 @@ fn toy_model(rng: &mut Rng, n_sv: usize, dim: usize) -> SvmModel {
 fn run(model: &SvmModel, input: &str) -> (hss_svm::serve::ServeStats, String, String) {
     let mut out = Vec::new();
     let mut err = Vec::new();
-    let stats = serve_loop(model, None, Cursor::new(input.to_string()), &mut out, &mut err, 2)
+    let any = hss_svm::svm::AnyModel::Binary(model.clone());
+    let stats = serve_loop(&any, None, Cursor::new(input.to_string()), &mut out, &mut err, 2)
         .expect("serve loop must not abort");
     (stats, String::from_utf8(out).unwrap(), String::from_utf8(err).unwrap())
 }
