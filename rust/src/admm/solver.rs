@@ -4,6 +4,14 @@ use crate::linalg::chol::Chol;
 use crate::linalg::Mat;
 use crate::util::threadpool;
 
+/// Minimum `n * k_active` elements before the per-column grid updates go
+/// parallel: per-column updates are O(n) flops, and below ~32k total
+/// elements the two scoped-pool spawns per iteration cost more than they
+/// save (bitwise identical either way — per-column arithmetic does not
+/// depend on the schedule). Under Miri the threshold drops to 0 so the
+/// tiny `miri_*` suites cross the real multi-thread column scatter.
+const GRID_PAR_MIN_ELEMS: usize = if cfg!(miri) { 0 } else { 32_768 };
+
 /// Anything that can solve (K + βI) x = b. Implemented by the HSS ULV
 /// factorization (the paper's path) and by dense Cholesky (the exact
 /// reference used in tests and the dense-ADMM baseline).
@@ -296,12 +304,7 @@ impl<'a, S: ShiftedSolve> AdmmSolver<'a, S> {
             // independent → parallel over the active set, each column
             // writing its own strided entries of U and its own w2 slot.
             let kact = act.len();
-            // Per-column updates are O(n) flops; below ~32k total
-            // elements the two scoped-pool spawns per iteration cost
-            // more than they save, so fall back to the serial order
-            // (bitwise identical either way — per-column arithmetic
-            // does not depend on the schedule).
-            let upd_threads = if n * kact >= 32_768 { self.threads } else { 1 };
+            let upd_threads = if n * kact >= GRID_PAR_MIN_ELEMS { self.threads } else { 1 };
             let mut u = Mat::zeros(n, kact);
             {
                 let uc = threadpool::disjoint(u.data_mut());
@@ -316,6 +319,8 @@ impl<'a, S: ShiftedSolve> AdmmSolver<'a, S> {
                         unsafe { *uc.get(i * kact + col) = self.y[i] * qi };
                         w2 += self.w[i] * qi;
                     }
+                    // SAFETY: w2 slot j is owned by this task (each
+                    // active j appears once in `act`).
                     unsafe { *w2c.get(j) = w2 };
                 });
             }
@@ -577,6 +582,29 @@ mod tests {
         let one = admm.run_grid(&[1.5]);
         assert_eq!(one.len(), 1);
         assert_outputs_bitwise(&one[0], &admm.run(1.5), "singleton grid");
+    }
+
+    #[test]
+    fn miri_run_grid_parallel_columns_match_scalar() {
+        // Tiny instance for the Miri lane: GRID_PAR_MIN_ELEMS drops to 0
+        // under Miri, so with_threads(2) sends the per-column q/x/z/μ
+        // scatter through real worker threads — and each column must
+        // still be bit-for-bit the scalar run's.
+        let mut rng = Rng::new(61);
+        let (k, y) = tiny_problem(10, &mut rng);
+        let solver = DenseShifted::new(&k, 1.5).unwrap();
+        let admm = AdmmSolver::new(
+            &solver,
+            &y,
+            AdmmParams { beta: 1.5, max_it: 3, relax: 1.0, tol: 0.0 },
+        )
+        .with_threads(2);
+        let cs = [0.5, 1.0, 2.0];
+        let grid = admm.run_grid(&cs);
+        for (j, &c) in cs.iter().enumerate() {
+            let single = admm.run(c);
+            assert_outputs_bitwise(&grid[j], &single, &format!("miri C={c}"));
+        }
     }
 
     #[test]

@@ -8,6 +8,9 @@
 //! recursive bisections put near points in shared buckets, brute force
 //! inside buckets, then a neighbour-of-neighbour refinement sweep.
 
+// No raw-pointer tricks belong in this module tree (see DESIGN.md §11).
+#![forbid(unsafe_code)]
+
 use crate::data::Dataset;
 use crate::util::prng::Rng;
 use crate::util::threadpool;

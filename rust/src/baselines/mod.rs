@@ -2,6 +2,9 @@
 //! §1.1 alternatives, all built from scratch on the same substrate so the
 //! comparison isolates the algorithms, not the implementations.
 
+// No raw-pointer tricks belong in this module tree (see DESIGN.md §11).
+#![forbid(unsafe_code)]
+
 pub mod dense_admm;
 pub mod nystrom;
 pub mod racqp;

@@ -2,6 +2,9 @@
 //!
 //! Grammar: `hss-svm <subcommand> [--flag value]... [--switch]...`
 
+// No raw-pointer tricks belong in this module tree (see DESIGN.md §11).
+#![forbid(unsafe_code)]
+
 use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
 

@@ -1,6 +1,9 @@
 //! Cluster-tree preprocessing (the data-reordering step that makes
 //! off-diagonal kernel blocks compressible).
 
+// No raw-pointer tricks belong in this module tree (see DESIGN.md §11).
+#![forbid(unsafe_code)]
+
 pub mod tree;
 
 pub use tree::{ClusterTree, Node, SplitMethod};

@@ -3,6 +3,9 @@
 //! `key = value` with strings, numbers, booleans, and flat arrays, plus
 //! `#` comments.
 
+// No raw-pointer tricks belong in this module tree (see DESIGN.md §11).
+#![forbid(unsafe_code)]
+
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
 use std::path::Path;

@@ -14,6 +14,9 @@
 //! `#C × ADMM-time`; [`suite`] orchestrates whole-paper experiment runs
 //! (Tables 2–5) across datasets and solvers.
 
+// No raw-pointer tricks belong in this module tree (see DESIGN.md §11).
+#![forbid(unsafe_code)]
+
 pub mod cache;
 pub mod grid;
 pub mod suite;

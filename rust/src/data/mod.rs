@@ -1,6 +1,9 @@
 //! Dataset substrate: dense/CSR representation, LIBSVM-format I/O,
 //! synthetic Table-1-matched workload generators, and feature scaling.
 
+// No raw-pointer tricks belong in this module tree (see DESIGN.md §11).
+#![forbid(unsafe_code)]
+
 pub mod dataset;
 pub mod libsvm;
 pub mod scale;

@@ -1,6 +1,9 @@
 //! Evaluation harness: regenerates every table and figure of the paper's
 //! experimental section (see DESIGN.md §3 for the experiment index).
 
+// No raw-pointer tricks belong in this module tree (see DESIGN.md §11).
+#![forbid(unsafe_code)]
+
 pub mod figures;
 pub mod report;
 pub mod tables;

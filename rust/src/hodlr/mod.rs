@@ -8,6 +8,9 @@
 //! of the ULV's O(r²·d). DESIGN.md lists "HSS vs HODLR" as the format
 //! ablation: the bench (`bench_hss`) and the tests here quantify it.
 
+// No raw-pointer tricks belong in this module tree (see DESIGN.md §11).
+#![forbid(unsafe_code)]
+
 use crate::cluster::{ClusterTree, SplitMethod};
 use crate::data::Dataset;
 use crate::kernel::Kernel;

@@ -50,6 +50,7 @@ pub fn matvec_threads(h: &Hss, x: &[f64], threads: usize) -> Vec<f64> {
             };
             let mut out = vec![0.0; u.cols()];
             blas::gemv_t(u, &local, &mut out);
+            // SAFETY: x̂ slot i is written only by node i's task.
             unsafe { *xhc.get(i) = out };
         });
     }
@@ -106,6 +107,9 @@ pub fn matvec_threads(h: &Hss, x: &[f64], threads: usize) -> Vec<f64> {
                     gr[k] += v;
                 }
             }
+            // SAFETY: the children's g slots are written only by this
+            // parent (one parent per child) and consumed one level later,
+            // after the barrier.
             unsafe {
                 *gc.get(li) = gl;
                 *gc.get(ri) = gr;
@@ -240,6 +244,23 @@ mod tests {
         let kd = kernel.gram(&c.pds.x);
         let got = to_dense(&c.hss);
         testkit::assert_allclose(got.data(), kd.data(), 1e-10);
+    }
+
+    #[test]
+    fn miri_matvec_threaded_scatter_matches_serial() {
+        // Tiny instance for the Miri lane: both sweeps run with real
+        // worker threads (run_levels caps threads at the widest level,
+        // so leaf_size 8 over 24 points gives genuine parallelism) and
+        // must reproduce the serial order bit-for-bit.
+        let mut rng = Rng::new(34);
+        let ds = synth::blobs(24, 2, 2, 0.3, &mut rng);
+        let mut p = HssParams::near_exact();
+        p.leaf_size = 8;
+        let c = compress(&ds, &Kernel::Gaussian { h: 0.9 }, &p, 1);
+        let x: Vec<f64> = (0..24).map(|_| rng.gauss()).collect();
+        let serial = matvec_threads(&c.hss, &x, 1);
+        let par = matvec_threads(&c.hss, &x, 2);
+        assert_eq!(serial, par, "thread count must not change bits");
     }
 
     #[test]

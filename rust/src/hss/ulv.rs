@@ -35,6 +35,14 @@ use anyhow::{anyhow, bail, Result};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Mutex;
 
+/// Minimum `n * k` RHS elements before a solve sweep goes parallel:
+/// each sweep spawns (and joins) one worker pool, and below ~8k elements
+/// the two spawns cost more than the parallel node work saves, so small
+/// solves stay on the serial order (bitwise identical either way). Under
+/// Miri the threshold drops to 0 so the tiny `miri_*` suites cross the
+/// real multi-thread scatter paths.
+const SWEEP_PAR_MIN_ELEMS: usize = if cfg!(miri) { 0 } else { 8192 };
+
 /// Factorized (K̃ + shift·I) ready for repeated solves.
 pub struct UlvFactor {
     n: usize,
@@ -93,12 +101,15 @@ impl UlvFactor {
             let red_cells = threadpool::disjoint(&mut reduced);
             let bottom_up = plan.bottom_up();
             threadpool::run_levels(threads, &bottom_up, |i| {
-                // a singular block anywhere aborts the remaining levels
-                // (the level barrier publishes the flag before any
-                // parent could consume the missing reduction)
-                if failed.load(Ordering::Relaxed) {
+                // a singular block anywhere aborts the remaining levels;
+                // Acquire pairs with the Release store below so a worker
+                // observing the flag also observes the captured error
+                // (the level barrier additionally publishes both)
+                if failed.load(Ordering::Acquire) {
                     return;
                 }
+                // SAFETY: node i's reduction/slot cells are written only
+                // by node i's task (ids are unique within the schedule).
                 match factor_node(h, shift, i, i == nn - 1, &red_cells) {
                     Ok((node, red)) => unsafe {
                         *red_cells.get(i) = red;
@@ -106,12 +117,16 @@ impl UlvFactor {
                     },
                     Err(e) => {
                         *failure.lock().unwrap() = Some(e);
-                        failed.store(true, Ordering::Relaxed);
+                        // Release: publish the captured error before the
+                        // flag that announces it
+                        failed.store(true, Ordering::Release);
                     }
                 }
             });
         }
-        if failed.load(Ordering::Relaxed) {
+        // Acquire pairs with the workers' Release store (the scope join
+        // already synchronizes, but keep the flag's ordering uniform).
+        if failed.load(Ordering::Acquire) {
             let err = failure
                 .into_inner()
                 .unwrap()
@@ -178,11 +193,8 @@ impl UlvFactor {
         assert_eq!(b.rows(), self.n);
         let k = b.cols();
         let nn = self.nodes.len();
-        // Each sweep spawns (and joins) one worker pool; below ~8k RHS
-        // elements the two spawns cost more than the parallel node work
-        // saves, so small solves stay on the serial order (bitwise
-        // identical either way).
-        let sweep_threads = if self.n * k.max(1) >= 8192 { self.threads } else { 1 };
+        let sweep_threads =
+            if self.n * k.max(1) >= SWEEP_PAR_MIN_ELEMS { self.threads } else { 1 };
         // upsweep state: y1 = eliminated unknowns, bred = reduced RHS
         let mut y1: Vec<Mat> = vec![Mat::zeros(0, 0); nn];
         let mut bred: Vec<Mat> = vec![Mat::zeros(0, 0); nn];
@@ -213,6 +225,8 @@ impl UlvFactor {
                     let d21y = matmul(&nd.d21, Trans::No, &yl, Trans::No);
                     br.axpy(-1.0, &d21y);
                 }
+                // SAFETY: y1[i]/bred[i] are node i's own slots; each id
+                // runs exactly once per sweep.
                 unsafe {
                     *y1c.get(i) = yl;
                     *brc.get(i) = br;
@@ -249,14 +263,18 @@ impl UlvFactor {
                 };
                 match (nd.left, nd.right) {
                     (None, None) => {
-                        // x is row-major: rows begin..end form one
-                        // contiguous disjoint range of length rows·k
                         let rows = nd.end - nd.begin;
+                        // SAFETY: x is row-major, so leaf rows begin..end
+                        // form one contiguous range of length rows·k;
+                        // leaf ranges are disjoint across the level.
                         let dst = unsafe { xc.slice(nd.begin * k, rows * k) };
                         dst.copy_from_slice(xloc.data());
                     }
                     (Some(l), Some(r)) => {
                         let rl = self.nodes[l].rank;
+                        // SAFETY: the children's x2 slots are written
+                        // only by this parent (one parent per child) and
+                        // consumed in a later level after the barrier.
                         unsafe {
                             *x2c.get(l) = xloc.block(0, 0, rl, k);
                             *x2c.get(r) = xloc.block(rl, 0, xloc.rows() - rl, k);
@@ -498,6 +516,25 @@ mod tests {
                 assert_eq!(x.col(j), want, "column {j} of {ncols} not bitwise equal");
             }
         }
+    }
+
+    #[test]
+    fn miri_ulv_threaded_scatter_matches_serial() {
+        // Tiny instance for the Miri lane: SWEEP_PAR_MIN_ELEMS drops to 0
+        // under Miri, so both the level-parallel factorization and the
+        // up/downsweep row scatter run with real worker threads here, and
+        // the result must still be bit-for-bit the serial order's.
+        let mut rng = Rng::new(46);
+        let ds = synth::blobs(24, 2, 2, 0.3, &mut rng);
+        let mut p = HssParams::near_exact();
+        p.leaf_size = 8;
+        let c = compress(&ds, &Kernel::Gaussian { h: 0.8 }, &p, 1);
+        let f1 = UlvFactor::new_threaded(&c.hss, 0.7, 1).unwrap();
+        let f2 = UlvFactor::new_threaded(&c.hss, 0.7, 2).unwrap();
+        let b = Mat::gauss(24, 3, &mut rng);
+        let x1 = f1.solve_mat(&b);
+        let x2 = f2.solve_mat(&b);
+        assert_eq!(x1.data(), x2.data(), "thread count must not change bits");
     }
 
     #[test]

@@ -51,8 +51,10 @@ pub fn kernel_block_par(threads: usize, k: &Kernel, x: &Mat, y: &Mat) -> Mat {
     let data = g.data_mut();
     let cells = threadpool::as_send_cells(data);
     threadpool::parallel_for(threads, m, 16, |i| {
-        // SAFETY: row bands are disjoint per index i.
-        let row = unsafe { std::slice::from_raw_parts_mut(cells.get(i * n), n) };
+        // SAFETY: row ranges i*n..(i+1)*n are disjoint per index i, and
+        // each index runs exactly once (slice keeps whole-buffer
+        // provenance, unlike a raw reborrow of a single-element pointer).
+        let row = unsafe { cells.slice(i * n, n) };
         for (j, v) in row.iter_mut().enumerate() {
             *v = k.eval_from_parts(nx[i], ny[j], *v);
         }
@@ -143,8 +145,9 @@ pub fn kernel_block_pts_par(threads: usize, k: &Kernel, x: &Points, y: &Points) 
         let data = g.data_mut();
         let cells = threadpool::as_send_cells(data);
         threadpool::parallel_for(threads, m, 16, |i| {
-            // SAFETY: row bands are disjoint per index i.
-            let row = unsafe { std::slice::from_raw_parts_mut(cells.get(i * n), n) };
+            // SAFETY: row ranges i*n..(i+1)*n are disjoint per index i,
+            // and each index runs exactly once.
+            let row = unsafe { cells.slice(i * n, n) };
             x.row_dots(i, y, row);
             for (j, v) in row.iter_mut().enumerate() {
                 *v = k.eval_from_parts(nx[i], ny[j], *v);
@@ -223,6 +226,20 @@ mod tests {
         let k = Kernel::Gaussian { h: 1.3 };
         let serial = kernel_block(&k, &x, &y);
         let par = kernel_block_par(4, &k, &x, &y);
+        testkit::assert_allclose(par.data(), serial.data(), 1e-13);
+    }
+
+    #[test]
+    fn miri_kernel_block_par_row_scatter() {
+        // Tiny instance for the Miri lane: with 40 rows and chunk 16 the
+        // scatter spans multiple chunks across real worker threads, and
+        // the row-banded writes must match the serial block.
+        let mut rng = Rng::new(11);
+        let x = Mat::gauss(40, 3, &mut rng);
+        let y = Mat::gauss(7, 3, &mut rng);
+        let k = Kernel::Gaussian { h: 1.0 };
+        let serial = kernel_block(&k, &x, &y);
+        let par = kernel_block_par(2, &k, &x, &y);
         testkit::assert_allclose(par.data(), serial.data(), 1e-13);
     }
 

@@ -5,6 +5,16 @@
 //! Reproduction of Cipolla & Gondzio (2021). See `DESIGN.md` at the
 //! repository root for the module inventory, the reuse structure and the
 //! batched multi-RHS solve API that runs the whole C-grid in lockstep.
+//!
+//! Memory-safety contract (DESIGN.md §11): every `unsafe` site carries a
+//! `// SAFETY:` comment and is budgeted in `ci/unsafe_budget.toml`
+//! (enforced by `cargo xtask audit`); modules with no legitimate need
+//! carry `#![forbid(unsafe_code)]`.
+
+// Make the safety obligation of every `unsafe fn` body explicit: inner
+// operations must sit in their own `unsafe { }` blocks with their own
+// SAFETY justification.
+#![deny(unsafe_op_in_unsafe_fn)]
 
 pub mod ann;
 pub mod admm;

@@ -38,8 +38,12 @@ struct Inner {
     decision_tiles: BTreeMap<usize, xla::PjRtLoadedExecutable>,
 }
 
-// SAFETY: all raw PJRT access is guarded by the Mutex above; the handles
-// themselves are only ever used from one thread at a time.
+// SAFETY: `Inner` is not auto-Send because the FFI handle types wrap
+// raw pointers into the PJRT C API. Moving it across threads is sound:
+// PJRT CPU clients/executables have no thread-affine state (the C API
+// permits use from any thread under external synchronization), and every
+// access after construction goes through `PjrtRuntime::inner: Mutex`,
+// which serializes and orders all handle use. Deliberately NOT `Sync`.
 unsafe impl Send for Inner {}
 
 impl PjrtRuntime {
@@ -133,6 +137,7 @@ impl PjrtRuntime {
         let xl = mat_to_literal(x, TILE_M, fdim)?;
         let yl = mat_to_literal(y, TILE_N, fdim)?;
         let gl = xla::Literal::scalar(gamma as f32);
+        // ORDERING: Relaxed — pure observability counter.
         self.stats.kernel_tile_calls.fetch_add(1, Ordering::Relaxed);
 
         let inner = self.inner.lock().unwrap();
@@ -178,6 +183,7 @@ impl PjrtRuntime {
                 av[k] = alpha_y[r] as f32;
             }
             let al = xla::Literal::vec1(&av);
+            // ORDERING: Relaxed — pure observability counter.
             self.stats.decision_tile_calls.fetch_add(1, Ordering::Relaxed);
 
             let inner = self.inner.lock().unwrap();

@@ -29,6 +29,9 @@
 //! predictions are emitted for that batch, and the loop continues with
 //! the next one.
 
+// No raw-pointer tricks belong in this module tree (see DESIGN.md §11).
+#![forbid(unsafe_code)]
+
 use crate::data::libsvm::{self, Repr};
 use crate::data::sparse::Points;
 use crate::runtime::PjrtRuntime;

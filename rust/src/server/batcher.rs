@@ -76,7 +76,10 @@ impl Batcher {
     /// (backpressure) or the server is draining.
     pub fn try_push(&self, req: Request) -> Result<(), Request> {
         let mut q = self.queue.lock().unwrap();
-        if q.len() >= self.max_inflight || self.draining.load(Ordering::Relaxed) {
+        // Acquire pairs with the Release in `shutdown`: the drain flag is
+        // a state transition, not a counter, and rejecting readers must
+        // happen-after whatever shutdown published before flipping it.
+        if q.len() >= self.max_inflight || self.draining.load(Ordering::Acquire) {
             return Err(req);
         }
         q.push_back(req);
@@ -93,7 +96,10 @@ impl Batcher {
     /// Begin draining: no new requests are accepted, `run` flushes what
     /// is queued and returns.
     pub fn shutdown(&self) {
-        self.draining.store(true, Ordering::Relaxed);
+        // Release: publishes the caller's pre-shutdown writes to every
+        // thread that observes the flag with Acquire (try_push rejections
+        // and the batcher's final drain both consume this transition).
+        self.draining.store(true, Ordering::Release);
         self.ready.notify_all();
     }
 
@@ -116,14 +122,18 @@ impl Batcher {
                 if run >= self.batch_max
                     || run < q.len()
                     || now >= deadline
-                    || self.draining.load(Ordering::Relaxed)
+                    // Acquire pairs with shutdown's Release store.
+                    || self.draining.load(Ordering::Acquire)
                 {
                     return Some(q.drain(..run).collect());
                 }
                 let (guard, _) = self.ready.wait_timeout(q, deadline - now).unwrap();
                 q = guard;
             } else {
-                if self.draining.load(Ordering::Relaxed) {
+                // Acquire pairs with shutdown's Release store: an empty
+                // queue plus an observed drain flag means every accepted
+                // request was already flushed.
+                if self.draining.load(Ordering::Acquire) {
                     return None;
                 }
                 let (guard, timeout) = self.ready.wait_timeout(q, IDLE_TICK).unwrap();
@@ -319,5 +329,56 @@ mod tests {
         b.shutdown();
         assert!(b.try_push(req(1, 3, &m, &tx)).is_err());
         assert!(b.next_batch().is_none());
+    }
+
+    /// TSan-exercised drain race: concurrent producers push while a
+    /// consumer pops tiles and `shutdown` fires mid-stream. Every request
+    /// the queue *accepted* must come back out of `next_batch` exactly
+    /// once (no tile lost to the Release/Acquire drain handoff), and the
+    /// queue must be empty once `next_batch` reports drained.
+    #[test]
+    fn shutdown_drains_queued_requests_under_load() {
+        let mut rng = Rng::new(43);
+        let m = loaded(&mut rng);
+        let (tx, _rx) = mpsc::channel();
+        let b = Arc::new(Batcher::new(4, Duration::from_millis(1), 1024));
+        let producers: usize = 4;
+        let per_producer: u64 = if cfg!(miri) { 8 } else { 50 };
+        let accepted = std::thread::scope(|scope| {
+            let consumer = {
+                let b = Arc::clone(&b);
+                scope.spawn(move || {
+                    let mut popped = 0u64;
+                    while let Some(tile) = b.next_batch() {
+                        popped += tile.len() as u64;
+                    }
+                    popped
+                })
+            };
+            let mut handles = Vec::new();
+            for p in 0..producers {
+                let b = Arc::clone(&b);
+                let tx = tx.clone();
+                let m = Arc::clone(&m);
+                handles.push(scope.spawn(move || {
+                    let mut ok = 0u64;
+                    for s in 0..per_producer {
+                        if b.try_push(req(p as u64, s, &m, &tx)).is_ok() {
+                            ok += 1;
+                        }
+                    }
+                    ok
+                }));
+            }
+            let accepted: u64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+            b.shutdown();
+            let consumed = consumer.join().unwrap();
+            assert_eq!(consumed, accepted, "accepted requests must all be flushed");
+            accepted
+        });
+        assert!(accepted > 0, "the queue should have accepted some load");
+        assert_eq!(b.depth(), 0, "drained batcher must leave an empty queue");
+        // post-drain pushes are rejected
+        assert!(b.try_push(req(9, 0, &m, &tx)).is_err());
     }
 }

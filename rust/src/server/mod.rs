@@ -25,6 +25,10 @@
 //! socket for reading, let readers finish, drain the batcher (queued
 //! requests are still answered), then join everything.
 
+// The server coordinates purely through channels, locks and atomics —
+// it has no business forming raw pointers.
+#![forbid(unsafe_code)]
+
 pub mod batcher;
 pub mod protocol;
 pub mod registry;
@@ -241,7 +245,7 @@ fn handle_conn(conn: u64, stream: TcpStream, shared: &Shared) {
         Ok(s) => BufReader::new(s),
         Err(_) => {
             shared.conns.lock().unwrap().remove(&conn);
-            shared.stats.active.fetch_sub(1, Ordering::Relaxed);
+            ServerStats::dec(&shared.stats.active);
             return;
         }
     };
@@ -315,7 +319,7 @@ fn handle_conn(conn: u64, stream: TcpStream, shared: &Shared) {
     }
     // reap this connection's read-half clone (fd) from the shutdown set
     shared.conns.lock().unwrap().remove(&conn);
-    shared.stats.active.fetch_sub(1, Ordering::Relaxed);
+    ServerStats::dec(&shared.stats.active);
 }
 
 fn run_admin(cmd: Admin, cur_model: &mut String, shared: &Shared) -> (String, bool) {

@@ -131,10 +131,17 @@ impl ModelRegistry {
     }
 
     /// `name -> generation` inventory (for banners / STATS).
+    ///
+    /// The generation is read from the *visible snapshot*, not the
+    /// atomic counter: `reload` bumps the counter before swapping the
+    /// `RwLock`, so the counter can briefly run ahead of the model a
+    /// reader would actually get. Reporting the snapshot's own stamped
+    /// generation keeps the inventory consistent with `get` by
+    /// construction.
     pub fn names(&self) -> Vec<(String, u64)> {
         self.entries
             .iter()
-            .map(|(n, e)| (n.clone(), e.generation.load(Ordering::Relaxed)))
+            .map(|(n, e)| (n.clone(), e.current.read().unwrap().generation))
             .collect()
     }
 
@@ -165,7 +172,12 @@ impl ModelRegistry {
         let pre = stamp(path);
         let model = persist::load_any(path)
             .with_context(|| format!("reloading model {name:?} from {}", path.display()))?;
-        let generation = entry.generation.fetch_add(1, Ordering::Relaxed) + 1;
+        // AcqRel: the bump is a publication event paired with the swap
+        // below, not a pure counter — a thread that observes generation
+        // g must also observe every write that led to g (the Acquire
+        // half orders racing reload attempts against each other; the
+        // Release half pairs with any Acquire load of the counter).
+        let generation = entry.generation.fetch_add(1, Ordering::AcqRel) + 1;
         let loaded = Arc::new(LoadedModel { name: name.to_string(), generation, model });
         *stamp_guard = pre;
         *entry.current.write().unwrap() = loaded;
@@ -298,6 +310,52 @@ mod tests {
         assert_eq!(reg.poll_stale(Duration::from_millis(1)), 1);
         assert_eq!(bias_of(&reg.get("default").unwrap().model), 30.0);
         assert_eq!(reg.get("default").unwrap().generation, 3);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Generation/snapshot consistency under racing readers: `names()`
+    /// must never report a generation outside the window of visible
+    /// snapshots around it. With the old counter-based `names()` the
+    /// generation was bumped *before* the `RwLock` swap, so a reader
+    /// could see `names()` claim gen g while `get` still returned g-1;
+    /// reading the stamped generation off the snapshot closes that gap.
+    #[test]
+    fn reload_generation_matches_visible_snapshot_under_races() {
+        let mut rng = Rng::new(33);
+        let dir = std::env::temp_dir()
+            .join(format!("hss_svm_registry_gen_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("g.model");
+        persist::save(&toy(&mut rng, 1.0), &p).unwrap();
+        let reg = ModelRegistry::from_paths(&[("default".to_string(), p)]).unwrap();
+        let reloads: u64 = 20;
+        std::thread::scope(|scope| {
+            for _ in 0..3 {
+                let reg = &reg;
+                scope.spawn(move || {
+                    let mut last = 0u64;
+                    loop {
+                        let g1 = reg.get("default").unwrap().generation;
+                        let n = reg.names()[0].1;
+                        let g2 = reg.get("default").unwrap().generation;
+                        assert!(g1 >= last, "generation went backwards: {g1} < {last}");
+                        assert!(
+                            g1 <= n && n <= g2,
+                            "names() gen {n} outside visible snapshot window {g1}..{g2}"
+                        );
+                        last = g2;
+                        if g2 >= reloads + 1 {
+                            break;
+                        }
+                    }
+                });
+            }
+            for i in 0..reloads {
+                assert_eq!(reg.reload("default").unwrap(), i + 2);
+            }
+        });
+        assert_eq!(reg.get("default").unwrap().generation, reloads + 1);
+        assert_eq!(reg.names(), vec![("default".to_string(), reloads + 1)]);
         std::fs::remove_dir_all(&dir).ok();
     }
 }

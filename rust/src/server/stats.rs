@@ -53,6 +53,12 @@ impl ServerStats {
         counter.fetch_add(n, Ordering::Relaxed);
     }
 
+    /// Decrement a gauge-style counter (e.g. `active` on disconnect).
+    #[inline]
+    pub fn dec(counter: &AtomicU64) {
+        counter.fetch_sub(1, Ordering::Relaxed);
+    }
+
     fn get(counter: &AtomicU64) -> u64 {
         counter.load(Ordering::Relaxed)
     }

@@ -5,6 +5,9 @@
 //! implement the KKT-consistent version b = yⱼ − Σᵢyᵢx̄ᵢK(fᵢ,fⱼ)
 //! (averaged over margin SVs per eq. (7)), which is what LIBSVM computes.
 
+// No raw-pointer tricks belong in this module tree (see DESIGN.md §11).
+#![forbid(unsafe_code)]
+
 pub mod model;
 pub mod multiclass;
 pub mod persist;

@@ -6,6 +6,7 @@
 //! shared atomic work counter covers everything we need while staying
 //! deterministic when `threads == 1`.
 
+use std::cell::UnsafeCell;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Barrier, Mutex};
 
@@ -35,6 +36,9 @@ pub fn parallel_for(threads: usize, n: usize, chunk: usize, f: impl Fn(usize) + 
     std::thread::scope(|scope| {
         for _ in 0..threads {
             scope.spawn(|| loop {
+                // ORDERING: Relaxed — pure index-claiming counter; it only
+                // partitions 0..n among workers. Data written by the tasks
+                // is published by the scope join, not by this counter.
                 let start = counter.fetch_add(chunk, Ordering::Relaxed);
                 if start >= n {
                     break;
@@ -101,7 +105,13 @@ pub fn run_levels(threads: usize, levels: &[&[usize]], f: impl Fn(usize) + Sync)
         for _ in 0..threads {
             scope.spawn(|| {
                 for (li, level) in levels.iter().enumerate() {
-                    while !abort.load(Ordering::Relaxed) {
+                    // Acquire pairs with the Release store below: a worker
+                    // that observes the abort flag must also observe the
+                    // captured panic payload (it is re-thrown after join).
+                    while !abort.load(Ordering::Acquire) {
+                        // ORDERING: Relaxed — pure index-claiming counter
+                        // partitioning this level's nodes among workers;
+                        // cross-level data is published by the barrier.
                         let t = counters[li].fetch_add(1, Ordering::Relaxed);
                         if t >= level.len() {
                             break;
@@ -111,7 +121,7 @@ pub fn run_levels(threads: usize, levels: &[&[usize]], f: impl Fn(usize) + Sync)
                             std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(id)))
                         {
                             *payload.lock().unwrap() = Some(p);
-                            abort.store(true, Ordering::Relaxed);
+                            abort.store(true, Ordering::Release);
                         }
                     }
                     // barrier publishes this level's writes to the next
@@ -126,46 +136,101 @@ pub fn run_levels(threads: usize, levels: &[&[usize]], f: impl Fn(usize) + Sync)
 }
 
 /// Helper: expose disjoint-index mutable access to a slice across threads.
+///
+/// The buffer is held as `&[UnsafeCell<T>]` rather than a raw base pointer
+/// so every write keeps aliasing-model provenance routed through
+/// `UnsafeCell` (shared-read-write under Stacked/Tree Borrows — the form
+/// Miri accepts for cross-thread scatter into one allocation). In debug
+/// builds, [`SendCells::slice`] additionally records every claimed range
+/// in a ledger and panics on overlap; ranges are never released, so each
+/// range must be claimed at most once per `SendCells` lifetime (all tree
+/// sweeps rebuild the wrapper per pass, so this holds by construction).
 pub struct SendCells<'a, T> {
-    ptr: *mut T,
-    len: usize,
-    _marker: std::marker::PhantomData<&'a mut T>,
+    cells: &'a [UnsafeCell<T>],
+    #[cfg(debug_assertions)]
+    claims: Mutex<Vec<(usize, usize)>>,
 }
 
+// SAFETY: SendCells only hands out raw pointers / `&mut` ranges under the
+// documented disjointness contract of `get`/`slice`; with disjoint indices
+// per thread there is no shared mutable state, so sharing the wrapper
+// across threads is sound whenever `T: Send` (values are mutated from
+// whichever thread claims the index).
 unsafe impl<T: Send> Sync for SendCells<'_, T> {}
+// SAFETY: same argument as `Sync`; the wrapper owns no thread-affine
+// state, it only borrows the buffer, and `T: Send` lets the borrowed
+// values be written from another thread.
 unsafe impl<T: Send> Send for SendCells<'_, T> {}
 
 impl<'a, T> SendCells<'a, T> {
-    /// # Safety contract (enforced by callers)
-    /// Concurrent callers must access disjoint indices.
+    /// Pointer to element `i` (bounds-checked). Writing through it is
+    /// `unsafe`; concurrent callers must access disjoint indices.
     pub fn get(&self, i: usize) -> *mut T {
-        assert!(i < self.len);
-        unsafe { self.ptr.add(i) }
+        self.cells[i].get()
     }
 
     pub fn len(&self) -> usize {
-        self.len
+        self.cells.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.len == 0
+        self.cells.is_empty()
     }
 
     /// Mutable view of `start..start + len`.
     ///
     /// # Safety
     /// Concurrent callers must access disjoint ranges, and a caller must
-    /// not hold two overlapping slices at once.
+    /// not hold two overlapping slices at once. Debug builds enforce this
+    /// with a claims ledger (claimed ranges are never released — claim
+    /// each range at most once per `SendCells` lifetime).
     #[allow(clippy::mut_from_ref)]
     pub unsafe fn slice(&self, start: usize, len: usize) -> &mut [T] {
-        assert!(start.checked_add(len).is_some_and(|end| end <= self.len));
-        std::slice::from_raw_parts_mut(self.ptr.add(start), len)
+        let end = start.checked_add(len).expect("SendCells::slice range overflows usize");
+        assert!(end <= self.cells.len(), "SendCells::slice out of bounds");
+        if len == 0 {
+            return &mut [];
+        }
+        #[cfg(debug_assertions)]
+        self.claim(start, end);
+        // Derive from the whole-slice pointer, not `self.cells[start]`:
+        // an element reference would carry single-element provenance and
+        // the `len`-wide view would be out of range under Stacked Borrows.
+        let base = self.cells.as_ptr() as *mut T;
+        // SAFETY: `start + len <= self.cells.len()` was asserted above;
+        // `UnsafeCell<T>` has the same in-memory layout as `T`, so the
+        // cast base pointer addresses the same contiguous buffer, and the
+        // caller contract guarantees no overlapping views exist.
+        unsafe { std::slice::from_raw_parts_mut(base.add(start), len) }
+    }
+
+    #[cfg(debug_assertions)]
+    fn claim(&self, start: usize, end: usize) {
+        let mut claims = self.claims.lock().unwrap();
+        for &(s, e) in claims.iter() {
+            assert!(
+                end <= s || e <= start,
+                "SendCells::slice overlap: {start}..{end} vs existing claim {s}..{e}"
+            );
+        }
+        claims.push((start, end));
     }
 }
 
 /// Wrap a mutable slice for disjoint-index parallel writes.
 pub fn as_send_cells<T>(xs: &mut [T]) -> SendCells<'_, T> {
-    SendCells { ptr: xs.as_mut_ptr(), len: xs.len(), _marker: std::marker::PhantomData }
+    let len = xs.len();
+    let ptr = xs.as_mut_ptr() as *const UnsafeCell<T>;
+    // SAFETY: `UnsafeCell<T>` has the same in-memory layout as `T`, and
+    // the exclusive borrow of `xs` is transferred into the returned
+    // wrapper's lifetime, so viewing the buffer as shared cells cannot
+    // alias any other live reference.
+    let cells = unsafe { std::slice::from_raw_parts(ptr, len) };
+    SendCells {
+        cells,
+        #[cfg(debug_assertions)]
+        claims: Mutex::new(Vec::new()),
+    }
 }
 
 /// Alias of [`as_send_cells`] that reads better at call sites scattering
@@ -180,9 +245,15 @@ mod tests {
     use super::*;
     use std::sync::atomic::AtomicU64;
 
+    // Miri runs the same suites ~100-1000x slower; shrink the index
+    // spaces so the lane stays fast while still crossing the parallel
+    // (multi-chunk, multi-thread) code paths.
+    const N_LARGE: usize = if cfg!(miri) { 128 } else { 10_000 };
+    const N_MAP: usize = if cfg!(miri) { 96 } else { 1000 };
+
     #[test]
     fn parallel_for_covers_all_indices_once() {
-        let n = 10_000;
+        let n = N_LARGE;
         let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
         parallel_for(4, n, 64, |i| {
             hits[i].fetch_add(1, Ordering::Relaxed);
@@ -203,7 +274,7 @@ mod tests {
     #[test]
     fn parallel_map_ordered() {
         for chunk in [1, 16, 64] {
-            let out = parallel_map(4, 1000, chunk, |i| i * i);
+            let out = parallel_map(4, N_MAP, chunk, |i| i * i);
             for (i, v) in out.iter().enumerate() {
                 assert_eq!(*v, i * i);
             }
@@ -291,6 +362,93 @@ mod tests {
         for (i, v) in xs.iter().enumerate() {
             assert_eq!(*v, i as u64);
         }
+    }
+
+    #[test]
+    fn miri_sendcells_disjoint_get_across_threads() {
+        // Every index written through a raw `get` pointer by exactly one
+        // task, from multiple real threads — the core scatter primitive
+        // Miri checks for provenance/data-race violations.
+        let n = if cfg!(miri) { 64 } else { 4096 };
+        let mut xs = vec![0usize; n];
+        {
+            let cells = as_send_cells(&mut xs);
+            parallel_for(4, n, 8, |i| {
+                // SAFETY: each index is written by exactly one task.
+                unsafe { *cells.get(i) = i + 1 };
+            });
+        }
+        for (i, v) in xs.iter().enumerate() {
+            assert_eq!(*v, i + 1);
+        }
+    }
+
+    #[test]
+    fn miri_sendcells_adjacent_slices_disjoint() {
+        // Adjacent (touching, non-overlapping) ranges must coexist across
+        // threads: this is the exact shape of the HSS row scatters.
+        let mut xs = vec![0u32; 48];
+        {
+            let cells = disjoint(&mut xs);
+            parallel_for(3, 3, 1, |t| {
+                // SAFETY: tasks claim disjoint adjacent ranges 16t..16t+16.
+                let range = unsafe { cells.slice(t * 16, 16) };
+                for v in range.iter_mut() {
+                    *v = t as u32 + 1;
+                }
+            });
+        }
+        for (i, v) in xs.iter().enumerate() {
+            assert_eq!(*v, (i / 16) as u32 + 1);
+        }
+    }
+
+    #[test]
+    fn miri_sendcells_zero_len_slice() {
+        let mut xs = vec![0u8; 4];
+        let cells = as_send_cells(&mut xs);
+        // SAFETY: zero-length views alias nothing; the end-of-buffer
+        // start position is in bounds for an empty range.
+        let empty = unsafe { cells.slice(4, 0) };
+        assert!(empty.is_empty());
+        // SAFETY: zero-length view, then a full-width disjoint claim.
+        let empty2 = unsafe { cells.slice(2, 0) };
+        assert!(empty2.is_empty());
+        // SAFETY: sole non-empty claim over the whole buffer.
+        let all = unsafe { cells.slice(0, 4) };
+        all.fill(7);
+        drop(cells);
+        assert_eq!(xs, vec![7u8; 4]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn sendcells_get_out_of_bounds_panics() {
+        let mut xs = vec![0u8; 3];
+        let cells = as_send_cells(&mut xs);
+        let _ = cells.get(3);
+    }
+
+    #[test]
+    #[should_panic]
+    fn sendcells_slice_out_of_bounds_panics() {
+        let mut xs = vec![0u8; 3];
+        let cells = as_send_cells(&mut xs);
+        // SAFETY: trips the bounds assert before any pointer is formed.
+        let _ = unsafe { cells.slice(1, 3) };
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "SendCells::slice overlap")]
+    fn sendcells_overlapping_slices_debug_panic() {
+        let mut xs = vec![0u8; 8];
+        let cells = as_send_cells(&mut xs);
+        // SAFETY: first claim is the sole live view when created; the
+        // second, overlapping claim is the contract violation under test
+        // and must be caught by the debug ledger before a view is formed.
+        let _a = unsafe { cells.slice(0, 5) };
+        let _b = unsafe { cells.slice(4, 2) };
     }
 
     #[test]

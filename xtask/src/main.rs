@@ -1,0 +1,621 @@
+//! Repo-local task runner (`cargo xtask <command>`): machine-enforced
+//! soundness contracts for the unsafe/atomics surface of `rust/src`.
+//!
+//! Commands:
+//!
+//! - `audit-unsafe`: every `unsafe` site (block, `unsafe impl`,
+//!   `unsafe fn`) must carry a written contract — a `// SAFETY:` comment
+//!   within [`SAFETY_WINDOW`] lines above (or on the same line), or a
+//!   `# Safety` doc section for `unsafe fn` declarations — and the
+//!   per-file site counts must match `ci/unsafe_budget.toml` exactly.
+//!   A file with unsafe that is not in the budget fails (unsafe stays
+//!   confined to the reviewed module set); a budget entry whose file
+//!   lost its sites also fails (dead budget = dead unsafe somewhere).
+//! - `audit-atomics`: `Ordering::Relaxed` is allowed wholesale only in
+//!   the pure-counter files listed under `[atomics].allow_relaxed_files`.
+//!   Everywhere else each `Relaxed` site needs an `// ORDERING:`
+//!   justification comment within the same window plus an exact
+//!   per-file count in the `[relaxed]` budget table. Publication flags
+//!   (drain/abort/generation handoffs) must use Release/Acquire — those
+//!   never qualify for a Relaxed waiver.
+//! - `audit`: both, in order. `audit --write-budget` regenerates the
+//!   budget tables from the current tree (for intentional, reviewed
+//!   changes; CI only ever reads).
+//!
+//! The scanner is deliberately textual (no syn/proc-macro deps in the
+//! offline crate set): it strips `//` line comments and tracks string
+//! literals per line, skips each file's trailing `#[cfg(test)] mod …`
+//! block (the repo convention keeps unit tests last), and matches the
+//! `unsafe` / `Relaxed` keywords on word boundaries. That is exact for
+//! this codebase's idioms; the budget tables keep it honest if an idiom
+//! ever drifts.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+/// A SAFETY/ORDERING comment must sit within this many lines above the
+/// site it documents (same-line trailing comments also count).
+const SAFETY_WINDOW: usize = 6;
+
+/// Budget file, relative to the repository root.
+const BUDGET_PATH: &str = "ci/unsafe_budget.toml";
+
+/// Audited source root, relative to the repository root.
+const SRC_ROOT: &str = "rust/src";
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let write_budget = args.iter().any(|a| a == "--write-budget");
+    let cmd = args.iter().find(|a| !a.starts_with("--")).map(String::as_str);
+    let root = repo_root();
+    let result = match cmd {
+        Some("audit-unsafe") => audit(&root, true, false, write_budget),
+        Some("audit-atomics") => audit(&root, false, true, write_budget),
+        Some("audit") | None => audit(&root, true, true, write_budget),
+        Some(other) => {
+            eprintln!("unknown command {other:?}");
+            eprintln!("usage: cargo xtask [audit|audit-unsafe|audit-atomics] [--write-budget]");
+            return ExitCode::from(2);
+        }
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(violations) => {
+            for v in &violations {
+                eprintln!("{v}");
+            }
+            eprintln!(
+                "\naudit failed with {} violation(s). New or moved unsafe/Relaxed sites need \
+                 a written SAFETY/ORDERING contract and a reviewed budget bump in {BUDGET_PATH} \
+                 (regenerate counts with `cargo xtask audit --write-budget` after review).",
+                violations.len()
+            );
+            ExitCode::FAILURE
+        }
+    }
+}
+
+/// Repository root: the parent of this crate's manifest directory.
+fn repo_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("xtask lives one level below the repo root")
+        .to_path_buf()
+}
+
+// ---------------------------------------------------------------------
+// Budget file
+// ---------------------------------------------------------------------
+
+#[derive(Default)]
+struct Budget {
+    /// Files where `Ordering::Relaxed` is allowed without per-site
+    /// justification (pure counter/histogram modules).
+    allow_relaxed_files: Vec<String>,
+    /// Exact per-file `unsafe` site counts (non-test code).
+    unsafe_counts: BTreeMap<String, usize>,
+    /// Exact per-file `Relaxed` site counts outside the allowlist.
+    relaxed_counts: BTreeMap<String, usize>,
+}
+
+fn parse_budget(text: &str) -> Result<Budget, String> {
+    let mut budget = Budget::default();
+    let mut section = String::new();
+    let mut pending = String::new();
+    for (ln, raw) in text.lines().enumerate() {
+        let line = strip_hash_comment(raw);
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        if pending.is_empty() && line.starts_with('[') {
+            section = line.trim_matches(|c| c == '[' || c == ']').to_string();
+            continue;
+        }
+        pending.push_str(line);
+        pending.push(' ');
+        // arrays may span lines; wait for the brackets to balance
+        let opens = pending.matches('[').count();
+        let closes = pending.matches(']').count();
+        if opens > closes {
+            continue;
+        }
+        let kv = std::mem::take(&mut pending);
+        let (key, value) = kv
+            .split_once('=')
+            .ok_or_else(|| format!("{BUDGET_PATH}:{}: expected `key = value`", ln + 1))?;
+        let key = key.trim().trim_matches('"').to_string();
+        let value = value.trim();
+        match section.as_str() {
+            "atomics" if key == "allow_relaxed_files" => {
+                budget.allow_relaxed_files = parse_string_array(value)
+                    .ok_or_else(|| format!("{BUDGET_PATH}:{}: bad string array", ln + 1))?;
+            }
+            "unsafe" | "relaxed" => {
+                let n: usize = value
+                    .parse()
+                    .map_err(|_| format!("{BUDGET_PATH}:{}: bad count {value:?}", ln + 1))?;
+                let table = if section == "unsafe" {
+                    &mut budget.unsafe_counts
+                } else {
+                    &mut budget.relaxed_counts
+                };
+                if table.insert(key.clone(), n).is_some() {
+                    return Err(format!("{BUDGET_PATH}:{}: duplicate key {key:?}", ln + 1));
+                }
+            }
+            _ => {
+                return Err(format!(
+                    "{BUDGET_PATH}:{}: unexpected key {key:?} in section [{section}]",
+                    ln + 1
+                ));
+            }
+        }
+    }
+    Ok(budget)
+}
+
+/// Drop a `#`-to-EOL comment, respecting double-quoted strings.
+fn strip_hash_comment(line: &str) -> String {
+    let mut out = String::new();
+    let mut in_str = false;
+    for c in line.chars() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => break,
+            _ => {}
+        }
+        out.push(c);
+    }
+    out
+}
+
+fn parse_string_array(value: &str) -> Option<Vec<String>> {
+    let inner = value.trim().strip_prefix('[')?.strip_suffix(']')?;
+    let mut out = Vec::new();
+    for part in inner.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        out.push(part.strip_prefix('"')?.strip_suffix('"')?.to_string());
+    }
+    Some(out)
+}
+
+fn render_budget(budget: &Budget) -> String {
+    let mut out = String::new();
+    out.push_str(
+        "# ci/unsafe_budget.toml — the machine-enforced unsafe/atomics budget.\n\
+         #\n\
+         # Checked by `cargo xtask audit` (CI lint job): the per-file counts\n\
+         # below must EXACTLY match the non-test `unsafe` / `Ordering::Relaxed`\n\
+         # sites in rust/src. Adding a site without bumping its budget fails\n\
+         # the build, as does a stale entry after removing one — the budget is\n\
+         # a two-sided ratchet, not a ceiling. Regenerate the counts after a\n\
+         # reviewed change with `cargo xtask audit --write-budget`.\n\
+         #\n\
+         # Policy (DESIGN.md §11): unsafe stays confined to the scatter/pool\n\
+         # modules listed here; Relaxed is for pure counters only — state\n\
+         # handoffs (drain flags, abort flags, generations) use\n\
+         # Release/Acquire and never get a Relaxed waiver.\n\n",
+    );
+    out.push_str("[atomics]\n");
+    out.push_str("# Pure-counter files: Relaxed allowed wholesale, no per-site waivers.\n");
+    out.push_str("allow_relaxed_files = [\n");
+    for f in &budget.allow_relaxed_files {
+        out.push_str(&format!("    \"{f}\",\n"));
+    }
+    out.push_str("]\n\n[unsafe]\n");
+    out.push_str("# file = exact count of non-test `unsafe` sites (blocks, impls, fns).\n");
+    for (f, n) in &budget.unsafe_counts {
+        out.push_str(&format!("\"{f}\" = {n}\n"));
+    }
+    out.push_str("\n[relaxed]\n");
+    out.push_str("# file = exact count of ORDERING-justified Relaxed sites outside the\n");
+    out.push_str("# allowlist (each site also needs its `// ORDERING:` comment).\n");
+    for (f, n) in &budget.relaxed_counts {
+        out.push_str(&format!("\"{f}\" = {n}\n"));
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// Source scanning
+// ---------------------------------------------------------------------
+
+#[derive(Default)]
+struct FileScan {
+    /// Non-test `unsafe` sites (keyword occurrences).
+    unsafe_count: usize,
+    /// Non-test `Relaxed` sites.
+    relaxed_count: usize,
+    /// Undocumented-unsafe violations (missing SAFETY contract).
+    unsafe_violations: Vec<String>,
+    /// Unjustified-Relaxed violations (missing ORDERING contract).
+    relaxed_violations: Vec<String>,
+}
+
+fn scan_file(rel: &str, text: &str, relaxed_allowlisted: bool) -> FileScan {
+    let lines: Vec<&str> = text.lines().collect();
+    let cut = test_mod_start(&lines).unwrap_or(lines.len());
+    let mut scan = FileScan::default();
+    for (i, raw) in lines.iter().enumerate().take(cut) {
+        let code = strip_rust_comment(raw);
+        for _ in word_occurrences(&code, "unsafe") {
+            let is_unsafe_fn = code.contains("unsafe fn");
+            let documented = if is_unsafe_fn {
+                has_safety_doc(&lines, i) || has_marker_comment(&lines, i, "SAFETY:")
+            } else {
+                has_marker_comment(&lines, i, "SAFETY:")
+            };
+            if !documented {
+                let want =
+                    if is_unsafe_fn { "`# Safety` doc section" } else { "// SAFETY: comment" };
+                scan.unsafe_violations.push(format!(
+                    "{rel}:{}: unsafe site without a {want} within {SAFETY_WINDOW} lines",
+                    i + 1
+                ));
+            }
+            scan.unsafe_count += 1;
+        }
+        for _ in word_occurrences(&code, "Relaxed") {
+            if !relaxed_allowlisted && !has_marker_comment(&lines, i, "ORDERING:") {
+                scan.relaxed_violations.push(format!(
+                    "{rel}:{}: Ordering::Relaxed outside the pure-counter allowlist without an \
+                     // ORDERING: justification within {SAFETY_WINDOW} lines — if this atomic \
+                     publishes state (not a counter), use Release/Acquire instead",
+                    i + 1
+                ));
+            }
+            scan.relaxed_count += 1;
+        }
+    }
+    scan
+}
+
+/// Start of the trailing `#[cfg(test)] mod …` block, if any. Repo
+/// convention (checked by eye, enforced by review): unit tests are the
+/// last item of a file, so everything from that attribute on is test
+/// code and exempt from the budget (Miri runs it instead).
+fn test_mod_start(lines: &[&str]) -> Option<usize> {
+    for (i, l) in lines.iter().enumerate() {
+        if l.trim() == "#[cfg(test)]" {
+            let next = lines[i + 1..].iter().find(|n| !n.trim().is_empty());
+            if next.is_some_and(|n| n.trim_start().starts_with("mod ")) {
+                return Some(i);
+            }
+        }
+    }
+    None
+}
+
+/// Strip a `//` comment (respecting string literals) so commented-out
+/// code and prose mentioning `unsafe` are not counted as sites.
+fn strip_rust_comment(line: &str) -> String {
+    let mut out = String::new();
+    let mut chars = line.chars().peekable();
+    let mut in_str = false;
+    let mut escaped = false;
+    while let Some(c) = chars.next() {
+        if in_str {
+            if escaped {
+                escaped = false;
+            } else if c == '\\' {
+                escaped = true;
+            } else if c == '"' {
+                in_str = false;
+            }
+            out.push(c);
+            continue;
+        }
+        match c {
+            '"' => {
+                in_str = true;
+                out.push(c);
+            }
+            '/' if chars.peek() == Some(&'/') => break,
+            _ => out.push(c),
+        }
+    }
+    out
+}
+
+/// Word-boundary occurrences of `word` in `haystack` (so
+/// `unsafe_op_in_unsafe_fn` and `unsafe_code` never match `unsafe`).
+fn word_occurrences(haystack: &str, word: &str) -> Vec<usize> {
+    let bytes = haystack.as_bytes();
+    let is_word = |b: u8| b.is_ascii_alphanumeric() || b == b'_';
+    let mut out = Vec::new();
+    let mut from = 0;
+    while let Some(pos) = haystack[from..].find(word) {
+        let start = from + pos;
+        let end = start + word.len();
+        let left_ok = start == 0 || !is_word(bytes[start - 1]);
+        let right_ok = end == bytes.len() || !is_word(bytes[end]);
+        if left_ok && right_ok {
+            out.push(start);
+        }
+        from = end;
+    }
+    out
+}
+
+/// A `// <marker> …` comment on the site's line or within the window
+/// above it (multi-line contract comments count via their lead line).
+fn has_marker_comment(lines: &[&str], i: usize, marker: &str) -> bool {
+    let lo = i.saturating_sub(SAFETY_WINDOW);
+    lines[lo..=i].iter().any(|l| {
+        l.find("//").is_some_and(|pos| l[pos..].contains(marker))
+    })
+}
+
+/// `# Safety` section in the doc comment directly above an `unsafe fn`
+/// declaration (attributes and visibility lines may intervene).
+fn has_safety_doc(lines: &[&str], i: usize) -> bool {
+    let mut j = i;
+    while j > 0 {
+        j -= 1;
+        let t = lines[j].trim_start();
+        if t.starts_with("///") {
+            if t.contains("# Safety") {
+                return true;
+            }
+        } else if !(t.starts_with("#[") || t.is_empty()) {
+            break;
+        }
+    }
+    false
+}
+
+fn walk_rs_files(dir: &Path, out: &mut Vec<PathBuf>) {
+    let Ok(entries) = std::fs::read_dir(dir) else { return };
+    let mut entries: Vec<PathBuf> = entries.filter_map(|e| e.ok().map(|e| e.path())).collect();
+    entries.sort();
+    for path in entries {
+        if path.is_dir() {
+            walk_rs_files(&path, out);
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// The audits
+// ---------------------------------------------------------------------
+
+fn audit(
+    root: &Path,
+    check_unsafe: bool,
+    check_atomics: bool,
+    write_budget: bool,
+) -> Result<(), Vec<String>> {
+    let budget_path = root.join(BUDGET_PATH);
+    let budget_text = std::fs::read_to_string(&budget_path)
+        .map_err(|e| vec![format!("cannot read {BUDGET_PATH}: {e}")])?;
+    let mut budget = parse_budget(&budget_text).map_err(|e| vec![e])?;
+
+    let src = root.join(SRC_ROOT);
+    let mut files = Vec::new();
+    walk_rs_files(&src, &mut files);
+    if files.is_empty() {
+        return Err(vec![format!("no .rs files under {SRC_ROOT} — wrong working directory?")]);
+    }
+
+    let mut violations = Vec::new();
+    let mut actual_unsafe: BTreeMap<String, usize> = BTreeMap::new();
+    let mut actual_relaxed: BTreeMap<String, usize> = BTreeMap::new();
+    let mut n_unsafe = 0usize;
+    let mut n_relaxed = 0usize;
+
+    for path in &files {
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| vec![format!("cannot read {rel}: {e}")])?;
+        let allowlisted = budget.allow_relaxed_files.iter().any(|f| f == &rel);
+        let scan = scan_file(&rel, &text, allowlisted);
+        if check_unsafe {
+            violations.extend(scan.unsafe_violations);
+            if scan.unsafe_count > 0 {
+                n_unsafe += scan.unsafe_count;
+                actual_unsafe.insert(rel.clone(), scan.unsafe_count);
+            }
+        }
+        if check_atomics {
+            violations.extend(scan.relaxed_violations);
+            if scan.relaxed_count > 0 && !allowlisted {
+                n_relaxed += scan.relaxed_count;
+                actual_relaxed.insert(rel.clone(), scan.relaxed_count);
+            }
+        }
+    }
+
+    if write_budget {
+        if check_unsafe {
+            budget.unsafe_counts = actual_unsafe.clone();
+        }
+        if check_atomics {
+            budget.relaxed_counts = actual_relaxed.clone();
+        }
+        std::fs::write(&budget_path, render_budget(&budget))
+            .map_err(|e| vec![format!("cannot write {BUDGET_PATH}: {e}")])?;
+        println!("wrote {BUDGET_PATH}");
+    }
+
+    if check_unsafe {
+        diff_counts(&actual_unsafe, &budget.unsafe_counts, "unsafe", "[unsafe]", &mut violations);
+    }
+    if check_atomics {
+        diff_counts(&actual_relaxed, &budget.relaxed_counts, "Relaxed", "[relaxed]", &mut violations);
+    }
+
+    if violations.is_empty() {
+        if check_unsafe {
+            println!(
+                "audit-unsafe: {} site(s) across {} file(s) — all documented, budget exact.",
+                n_unsafe,
+                actual_unsafe.len()
+            );
+        }
+        if check_atomics {
+            println!(
+                "audit-atomics: {} justified Relaxed site(s) across {} file(s) outside the \
+                 {}-file counter allowlist — budget exact.",
+                n_relaxed,
+                actual_relaxed.len(),
+                budget.allow_relaxed_files.len()
+            );
+        }
+        Ok(())
+    } else {
+        Err(violations)
+    }
+}
+
+fn diff_counts(
+    actual: &BTreeMap<String, usize>,
+    budgeted: &BTreeMap<String, usize>,
+    what: &str,
+    table: &str,
+    violations: &mut Vec<String>,
+) {
+    for (file, &n) in actual {
+        match budgeted.get(file) {
+            None => violations.push(format!(
+                "{file}: {n} {what} site(s) but the file is not in {BUDGET_PATH} {table} — \
+                 {what} is confined to the reviewed module set"
+            )),
+            Some(&b) if b != n => violations.push(format!(
+                "{file}: {n} {what} site(s) but {BUDGET_PATH} {table} budgets {b} — \
+                 review the change and update the budget"
+            )),
+            Some(_) => {}
+        }
+    }
+    for (file, &b) in budgeted {
+        if !actual.contains_key(file) {
+            violations.push(format!(
+                "{BUDGET_PATH}: {table} entry \"{file}\" = {b} is stale (no {what} sites remain) \
+                 — remove it so the budget ratchets down"
+            ));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn word_boundaries_exclude_lint_names() {
+        assert_eq!(word_occurrences("#![deny(unsafe_op_in_unsafe_fn)]", "unsafe").len(), 0);
+        assert_eq!(word_occurrences("#![forbid(unsafe_code)]", "unsafe").len(), 0);
+        assert_eq!(word_occurrences("unsafe { x() }", "unsafe").len(), 1);
+        assert_eq!(word_occurrences("unsafe impl Send for T {}", "unsafe").len(), 1);
+        assert_eq!(word_occurrences("Ordering::Relaxed", "Relaxed").len(), 1);
+    }
+
+    #[test]
+    fn comments_and_strings_are_stripped() {
+        assert_eq!(strip_rust_comment("let x = 1; // unsafe prose"), "let x = 1; ");
+        assert_eq!(strip_rust_comment("// SAFETY: all of it"), "");
+        let kept = strip_rust_comment("let s = \"a // b\"; call()");
+        assert!(kept.contains("call()"));
+    }
+
+    #[test]
+    fn safety_window_accepts_lead_line_of_multiline_comment() {
+        let lines = vec![
+            "// SAFETY: children were reduced in a completed deeper level and",
+            "// have exactly one consumer (this parent), so taking ownership",
+            "// here is race-free.",
+            "let a = unsafe { take(l) };",
+            "let b = unsafe { take(r) };",
+        ];
+        assert!(has_marker_comment(&lines, 3, "SAFETY:"));
+        assert!(has_marker_comment(&lines, 4, "SAFETY:"));
+        assert!(!has_marker_comment(&["let a = unsafe { f() };"], 0, "SAFETY:"));
+    }
+
+    #[test]
+    fn unsafe_fn_doc_section_detected() {
+        let lines = vec![
+            "/// Mutable view.",
+            "///",
+            "/// # Safety",
+            "/// Callers claim disjoint ranges.",
+            "#[allow(clippy::mut_from_ref)]",
+            "pub unsafe fn slice(&self) {}",
+        ];
+        assert!(has_safety_doc(&lines, 5));
+        assert!(!has_safety_doc(&["/// docs without section", "pub unsafe fn f() {}"], 1));
+    }
+
+    #[test]
+    fn trailing_test_mod_is_exempt() {
+        let lines = vec![
+            "fn real() {}",
+            "",
+            "#[cfg(test)]",
+            "mod tests {",
+            "    fn t() { unsafe { x() } }",
+            "}",
+        ];
+        assert_eq!(test_mod_start(&lines), Some(2));
+        // mid-file cfg(test) on a use item does not cut the file
+        let mid = vec!["#[cfg(test)]", "use crate::linalg::Mat;", "fn real() {}"];
+        assert_eq!(test_mod_start(&mid), None);
+    }
+
+    #[test]
+    fn budget_roundtrip() {
+        let b = Budget {
+            allow_relaxed_files: vec!["rust/src/server/stats.rs".into()],
+            unsafe_counts: BTreeMap::from([("rust/src/a.rs".to_string(), 3usize)]),
+            relaxed_counts: BTreeMap::from([("rust/src/b.rs".to_string(), 2usize)]),
+        };
+        let rendered = render_budget(&b);
+        let parsed = parse_budget(&rendered).unwrap();
+        assert_eq!(parsed.allow_relaxed_files, b.allow_relaxed_files);
+        assert_eq!(parsed.unsafe_counts, b.unsafe_counts);
+        assert_eq!(parsed.relaxed_counts, b.relaxed_counts);
+    }
+
+    #[test]
+    fn scan_flags_undocumented_and_counts_documented() {
+        let text = "\
+fn f() {
+    // SAFETY: disjoint indices.
+    unsafe { g() };
+    unsafe { h() };
+}
+";
+        let scan = scan_file("x.rs", text, false);
+        assert_eq!(scan.unsafe_count, 2);
+        // the second site still sits within the window of the first
+        // comment (line 2 of 4) — move it further to lose coverage
+        assert!(scan.unsafe_violations.is_empty());
+        let far = format!(
+            "fn f() {{\n    // SAFETY: ok.\n    unsafe {{ g() }};\n{}    unsafe {{ h() }};\n}}\n",
+            "    g();\n".repeat(SAFETY_WINDOW)
+        );
+        let scan = scan_file("x.rs", &far, false);
+        assert_eq!(scan.unsafe_violations.len(), 1);
+    }
+
+    #[test]
+    fn relaxed_needs_justification_unless_allowlisted() {
+        let text = "fn f(c: &AtomicU64) { c.fetch_add(1, Ordering::Relaxed); }\n";
+        assert_eq!(scan_file("x.rs", text, false).relaxed_violations.len(), 1);
+        assert!(scan_file("x.rs", text, true).relaxed_violations.is_empty());
+        let ok = "fn f(c: &AtomicU64) {\n    // ORDERING: Relaxed — pure counter.\n    \
+                  c.fetch_add(1, Ordering::Relaxed);\n}\n";
+        assert!(scan_file("x.rs", ok, false).relaxed_violations.is_empty());
+    }
+}
