@@ -367,6 +367,7 @@ fn main() {
     // --- machine-readable artifact + committed-baseline regression gate ---
     if let Some(path) = &opts.json {
         let mut json = String::from("{\n");
+        json.push_str(&hss_svm::util::bench::provenance_json("  "));
         json.push_str(&format!("  \"smoke\": {},\n", opts.smoke));
         json.push_str(&format!("  \"threads\": {par_threads},\n"));
         json.push_str(&format!("  \"n_grid\": {n_grid},\n"));

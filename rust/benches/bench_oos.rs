@@ -1,0 +1,263 @@
+//! Out-of-core consensus-ADMM benchmark and contract check — the
+//! `oos-smoke` CI lane drives this. It proves three things about
+//! `hss_svm::admm::consensus` on one synthetic workload:
+//!
+//! 1. **Memory**: peak RSS (`VmHWM`) of the sharded training phase
+//!    stays under half the dense-kernel footprint n²·8 bytes (the
+//!    sharded phase runs FIRST, before anything else can inflate the
+//!    high-water mark).
+//! 2. **Determinism**: the persisted model is bitwise identical across
+//!    thread counts {1, 2} and across a full re-shard + re-train of
+//!    the same source file (the FNV-64 `model_hash` in the JSON lets
+//!    CI also compare across separate processes).
+//! 3. **Speed**: `consensus_shard_speedup` = in-memory train time /
+//!    sharded train time, gated against `ci/bench_baseline.toml` with
+//!    the house −25% tolerance.
+//!
+//! Flags (same conventions as bench_hss):
+//!   --smoke              reduced problem size for PR gating
+//!   --json <path>        write headline metrics as JSON (artifact)
+//!   --baseline <path>    TOML with committed floors; exit nonzero on
+//!                        a >25% regression
+
+use hss_svm::admm::{AdmmParams, ConsensusTrainer};
+use hss_svm::config::Config;
+use hss_svm::data::libsvm::{self, Repr};
+use hss_svm::data::{synth, ShardSet};
+use hss_svm::hss::HssParams;
+use hss_svm::kernel::Kernel;
+use hss_svm::svm::{persist, predict, train::train_hss_svm};
+use hss_svm::util::bench;
+use hss_svm::util::prng::Rng;
+use hss_svm::util::threadpool;
+use hss_svm::util::timer::Timer;
+use std::path::{Path, PathBuf};
+
+struct Opts {
+    smoke: bool,
+    json: Option<String>,
+    baseline: Option<String>,
+}
+
+/// Cargo runs bench binaries with cwd = the package dir (`rust/`), not
+/// the workspace root; resolve relative paths against the repository
+/// root so CI and the README can both say `ci/bench_baseline.toml`.
+fn from_repo_root(p: &str) -> PathBuf {
+    let path = Path::new(p);
+    if path.is_absolute() {
+        path.to_path_buf()
+    } else {
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join(path)
+    }
+}
+
+fn parse_opts() -> Opts {
+    let mut opts = Opts { smoke: false, json: None, baseline: None };
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--smoke" => opts.smoke = true,
+            "--json" => opts.json = args.next(),
+            "--baseline" => opts.baseline = args.next(),
+            other => eprintln!("[oos] ignoring unknown flag {other:?}"),
+        }
+    }
+    opts
+}
+
+/// FNV-1a 64 over a byte slice — a stable fingerprint for the model
+/// file that CI can compare across runs without uploading the file.
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// One full sharded train: build engines (one shard resident at a
+/// time), run the consensus ADMM, assemble, persist. Returns the
+/// persisted model bytes and the wall time.
+fn train_sharded(
+    shards: &ShardSet,
+    hss: &HssParams,
+    admm: AdmmParams,
+    c: f64,
+    threads: usize,
+    out: &Path,
+) -> (Vec<u8>, f64) {
+    let t = Timer::start();
+    let (trainer, _stats) = ConsensusTrainer::build(
+        shards,
+        Repr::Auto,
+        Kernel::Gaussian { h: 1.5 },
+        hss,
+        admm,
+        threads,
+    )
+    .expect("consensus build");
+    let (model, _) = trainer.train_c(shards, c).expect("consensus train");
+    let secs = t.secs();
+    persist::save(&model, out).expect("persist sharded model");
+    (std::fs::read(out).expect("read model bytes"), secs)
+}
+
+fn main() {
+    let opts = parse_opts();
+    let (n, shards_k) = if opts.smoke { (4000, 4) } else { (8000, 4) };
+    let dim = 8;
+    // ambient count (honors HSS_SVM_THREADS): the oos-smoke CI lane
+    // runs the whole binary at 1 and 2 and compares model hashes, so
+    // the primary train must follow the env
+    let threads = threadpool::default_threads();
+    let work = std::env::temp_dir().join(format!("hss_svm_bench_oos_{}", std::process::id()));
+    std::fs::create_dir_all(&work).expect("create work dir");
+    println!(
+        "[oos] n = {n}, dim = {dim}, shards = {shards_k}, threads = {threads}, smoke = {}",
+        opts.smoke
+    );
+
+    // ---- stage the source file (small: n rows of dim features) ----
+    let mut rng = Rng::new(2021);
+    let ds = synth::blobs(n + n / 4, dim, 6, 0.4, &mut rng);
+    let (train, test) = ds.split_at(n);
+    let src = work.join("train.libsvm");
+    libsvm::write_file(&train, &src).expect("write source file");
+    drop(ds);
+    drop(train);
+
+    let mut hss = HssParams::low_accuracy();
+    hss.leaf_size = 128;
+    let admm = AdmmParams { beta: 100.0, max_it: 10, relax: 1.0, tol: 0.0 };
+    let c = 1.0;
+
+    // ---- sharded training FIRST: VmHWM is a high-water mark, so the
+    //      phase under the memory contract must run before anything
+    //      bigger touches the heap ----
+    let shard_dir = work.join("shards");
+    let t = Timer::start();
+    let set = ShardSet::open_or_create(&src, &shard_dir, shards_k).expect("shard source");
+    let shard_secs = t.secs();
+    let (bytes_main, sharded_secs) =
+        train_sharded(&set, &hss, admm, c, threads, &work.join("oos_main.model"));
+    let model_hash = fnv1a(&bytes_main);
+    println!(
+        "[oos] shard pass {shard_secs:.3} s, sharded train ({threads} threads) \
+         {sharded_secs:.3} s, model hash {model_hash:016x}"
+    );
+
+    // ---- memory contract: peak RSS < 1/2 of the dense footprint ----
+    let dense_bytes = (n as u64) * (n as u64) * 8;
+    let rss_bound = dense_bytes / 2;
+    let peak = bench::peak_rss_bytes();
+    let rss_fraction = match peak {
+        Some(p) => {
+            println!(
+                "[oos] peak RSS {:.1} MB vs dense kernel {:.1} MB (bound {:.1} MB)",
+                p as f64 / 1e6,
+                dense_bytes as f64 / 1e6,
+                rss_bound as f64 / 1e6
+            );
+            assert!(
+                p < rss_bound,
+                "[oos] MEMORY CONTRACT VIOLATED: peak RSS {p} B >= {rss_bound} B \
+                 (half the dense kernel footprint)"
+            );
+            p as f64 / dense_bytes as f64
+        }
+        None => {
+            eprintln!("[oos] no /proc/self/status — peak-RSS contract skipped (non-Linux)");
+            f64::NAN
+        }
+    };
+
+    // ---- determinism: bitwise-equal model across thread counts ----
+    let (bytes_t1, _) = train_sharded(&set, &hss, admm, c, 1, &work.join("oos_t1.model"));
+    assert_eq!(
+        bytes_t1, bytes_main,
+        "[oos] DETERMINISM VIOLATED: 1-thread and {threads}-thread sharded models differ"
+    );
+    println!("[oos] thread invariance: 1-thread model is bitwise identical");
+
+    // ---- determinism: re-shard the same source, retrain ----
+    std::fs::remove_dir_all(&shard_dir).expect("drop shard dir");
+    let set2 = ShardSet::open_or_create(&src, &shard_dir, shards_k).expect("re-shard source");
+    let (bytes_rerun, _) =
+        train_sharded(&set2, &hss, admm, c, threads, &work.join("oos_rerun.model"));
+    assert_eq!(
+        bytes_rerun, bytes_main,
+        "[oos] DETERMINISM VIOLATED: re-shard + re-train changed the model"
+    );
+    println!("[oos] re-shard invariance: re-run model is bitwise identical");
+
+    // ---- speed: in-memory trainer on the same (raw) data ----
+    let inmem_ds = libsvm::read_file_with(&src, None, Repr::Auto).expect("read source");
+    let t = Timer::start();
+    let (inmem_model, _) =
+        train_hss_svm(&inmem_ds, Kernel::Gaussian { h: 1.5 }, &hss, &admm, c, threads)
+            .expect("in-memory train");
+    let inmem_secs = t.secs();
+    let consensus_shard_speedup = inmem_secs / sharded_secs.max(1e-12);
+    println!(
+        "[oos] in-memory train {inmem_secs:.3} s -> consensus_shard_speedup \
+         {consensus_shard_speedup:.2}x"
+    );
+
+    // sanity: both models actually classify (block-diagonal drop is an
+    // approximation, not a lobotomy)
+    let sharded_model = persist::load(work.join("oos_main.model")).expect("reload model");
+    let acc_sharded = predict::accuracy(&sharded_model, &test, threads);
+    let acc_inmem = predict::accuracy(&inmem_model, &test, threads);
+    println!("[oos] accuracy: sharded {acc_sharded:.3}, in-memory {acc_inmem:.3}");
+    assert!(acc_sharded > 0.75, "[oos] sharded accuracy collapsed: {acc_sharded}");
+
+    if let Some(path) = &opts.json {
+        let mut json = String::from("{\n");
+        json.push_str(&bench::provenance_json("  "));
+        json.push_str(&format!("  \"smoke\": {},\n", opts.smoke));
+        json.push_str(&format!("  \"n\": {n},\n"));
+        json.push_str(&format!("  \"dim\": {dim},\n"));
+        json.push_str(&format!("  \"shards\": {shards_k},\n"));
+        json.push_str(&format!("  \"shard_secs\": {shard_secs:.6},\n"));
+        json.push_str(&format!("  \"sharded_train_secs\": {sharded_secs:.6},\n"));
+        json.push_str(&format!("  \"inmem_train_secs\": {inmem_secs:.6},\n"));
+        json.push_str(&format!(
+            "  \"consensus_shard_speedup\": {consensus_shard_speedup:.4},\n"
+        ));
+        json.push_str(&format!("  \"dense_bytes\": {dense_bytes},\n"));
+        json.push_str(&format!("  \"peak_rss_bytes\": {},\n", peak.unwrap_or(0)));
+        json.push_str(&format!("  \"rss_fraction\": {rss_fraction:.4},\n"));
+        json.push_str(&format!("  \"acc_sharded\": {acc_sharded:.4},\n"));
+        json.push_str(&format!("  \"acc_inmem\": {acc_inmem:.4},\n"));
+        json.push_str(&format!("  \"model_hash\": \"{model_hash:016x}\"\n"));
+        json.push_str("}\n");
+        let out = from_repo_root(path);
+        std::fs::write(&out, json).expect("write bench JSON");
+        println!("[oos] wrote {}", out.display());
+    }
+
+    if let Some(path) = &opts.baseline {
+        let base = Config::load(from_repo_root(path)).expect("read bench baseline");
+        // a typoed/missing key must fail loudly, not quietly weaken the gate
+        let baseline_key = |key: &str| -> f64 {
+            base.get("", key)
+                .and_then(|v| v.as_f64())
+                .unwrap_or_else(|| panic!("baseline {path} is missing numeric key {key:?}"))
+        };
+        let floor = 0.75 * baseline_key("consensus_shard_speedup");
+        println!(
+            "[oos] baseline gate: consensus_shard_speedup {consensus_shard_speedup:.2}x \
+             (floor {floor:.2}x)"
+        );
+        if consensus_shard_speedup < floor {
+            eprintln!(
+                "[oos] REGRESSION: consensus_shard_speedup {consensus_shard_speedup:.2}x \
+                 fell >25% below the committed baseline"
+            );
+            std::process::exit(1);
+        }
+    }
+
+    std::fs::remove_dir_all(&work).ok();
+}

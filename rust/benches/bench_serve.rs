@@ -196,6 +196,7 @@ fn main() {
 
     if let Some(path) = &opts.json {
         let mut json = String::from("{\n");
+        json.push_str(&hss_svm::util::bench::provenance_json("  "));
         json.push_str(&format!("  \"smoke\": {},\n", opts.smoke));
         json.push_str(&format!("  \"threads\": {threads},\n"));
         json.push_str(&format!("  \"connections\": {CONNS},\n"));

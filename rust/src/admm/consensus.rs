@@ -1,0 +1,754 @@
+//! Sample-partitioned consensus ADMM over on-disk shards — the
+//! out-of-core training path (Boyd et al. 2011 §8.2.3 adapted to the
+//! kernel dual).
+//!
+//! # Formulation
+//!
+//! The in-memory path approximates the full kernel matrix K by one HSS
+//! matrix. Out of core we take the partition one structural level
+//! higher: rows are split round-robin into K shards
+//! ([`crate::data::shard`]), and the kernel is approximated
+//! **block-diagonally** — K̃ = diag(K̃₁, …, K̃_K) with one HSS
+//! compression per shard and the shard-level off-diagonal blocks
+//! dropped (exactly as HSS itself compresses — rather than drops — its
+//! own off-diagonal blocks; K = 1 degenerates to the in-memory
+//! algorithm, bit-for-bit). Under that approximation the dual
+//!
+//! ```text
+//!   min ½ xᵀY K̃ Y x − eᵀx   s.t.  yᵀx = 0,  0 ≤ x ≤ C
+//! ```
+//!
+//! separates per shard except for the single scalar coupling yᵀx = 0.
+//! Each ADMM iteration therefore runs the closed-form x/z/μ updates of
+//! [`super::solver`] independently inside every shard, with the global
+//! equality multiplier — the scalar `ratio = (Σ_j w₂ⱼ) / (Σ_j w₁ⱼ)` —
+//! reduced across shards in **fixed shard-major order** each iteration
+//! (the "averaged consensus step": it is what makes the per-shard x
+//! iterates agree on yᵀx = 0 globally). Per-shard duals μⱼ persist
+//! across iterations (warm-started, never reset), and
+//! [`crate::admm::solver::admm_zmu_step`] is shared verbatim with the
+//! in-memory path so the per-element arithmetic cannot diverge.
+//!
+//! # Determinism
+//!
+//! The trained model is a pure function of (shard count, shard
+//! content) — independent of the thread count:
+//!
+//! * shard-major deterministic RNG forks: shard 0 compresses with the
+//!   base [`HssParams::seed`] (so K = 1 IS the in-memory trainer),
+//!   shard s > 0 with the s-th fork of a base stream, drawn in
+//!   ascending shard order;
+//! * every cross-shard reduction (w₁, w₂, residual norms, bias terms,
+//!   SV concatenation) folds in ascending shard order, starting from
+//!   the first part (not 0.0, which could flip a −0.0 sign bit on the
+//!   K = 1 path);
+//! * within a shard, compression/ULV/matvec inherit PR 2's bitwise
+//!   thread-invariance contract.
+//!
+//! # Memory model
+//!
+//! Raw shard points are resident **one shard at a time**: the build
+//! phase loads shard s, compresses it, keeps only the O(nⱼ·r) HSS +
+//! ULV state (plus O(nⱼ) labels/vectors) and drops the points before
+//! loading shard s+1. The ADMM phase touches no raw data at all; model
+//! assembly re-reads each shard's points from disk (bit-exact hex
+//! round-trip) one at a time to extract support vectors. Peak RSS is
+//! therefore O(max_j nnzⱼ + Σⱼ nⱼ·r), never O(n·d) dense — the
+//! contract the `oos-smoke` CI lane enforces with a VmHWM bound.
+
+use crate::admm::solver::{admm_zmu_step, AdmmParams, DenseShifted, ShiftedSolve};
+use crate::data::libsvm::Repr;
+use crate::data::shard::ShardSet;
+use crate::data::{Dataset, Points};
+use crate::hss::compress::{compress, Compressed};
+use crate::hss::matvec;
+use crate::hss::ulv::UlvFactor;
+use crate::hss::{Hss, HssParams};
+use crate::kernel::Kernel;
+use crate::linalg::Mat;
+use crate::svm::model::SvmModel;
+use crate::util::prng::Rng;
+use crate::util::timer::Timer;
+use anyhow::{bail, Result};
+
+/// Shard-major reduction: ascending shard order, fold seeded with the
+/// first part so a single-shard reduction returns its part verbatim
+/// (`0.0 + x` is not the identity for `x = −0.0`; bitwise K = 1
+/// equality with the in-memory trainer requires the verbatim value).
+fn fold_sum(parts: &[f64]) -> f64 {
+    let mut acc = parts[0];
+    for p in &parts[1..] {
+        acc += p;
+    }
+    acc
+}
+
+/// Per-shard solve/matvec backend. Shards with ≥ 2 rows go through the
+/// standard HSS pipeline; a single-row shard (K close to n) falls back
+/// to the exact 1×1 dense kernel — the HSS cluster tree needs n ≥ 2.
+enum ShardBackend {
+    Hss { hss: Hss, ulv: UlvFactor },
+    Dense { gram: Mat, chol: DenseShifted },
+}
+
+impl ShardBackend {
+    fn solve(&self, b: &[f64]) -> Vec<f64> {
+        match self {
+            ShardBackend::Hss { ulv, .. } => ulv.solve(b),
+            ShardBackend::Dense { chol, .. } => chol.solve_shifted(b),
+        }
+    }
+
+    fn solve_multi(&self, b: &Mat) -> Mat {
+        match self {
+            ShardBackend::Hss { ulv, .. } => ulv.solve_mat(b),
+            ShardBackend::Dense { chol, .. } => chol.solve_shifted_multi(b),
+        }
+    }
+
+    /// K̃ⱼ v (unshifted) — the bias assembly matvec.
+    fn matvec(&self, v: &[f64], threads: usize) -> Vec<f64> {
+        match self {
+            ShardBackend::Hss { hss, .. } => matvec::matvec_threads(hss, v, threads),
+            ShardBackend::Dense { gram, .. } => {
+                let n = gram.rows();
+                let mut out = vec![0.0; n];
+                for (i, oi) in out.iter_mut().enumerate() {
+                    let mut acc = 0.0;
+                    for j in 0..n {
+                        acc += gram[(i, j)] * v[j];
+                    }
+                    *oi = acc;
+                }
+                out
+            }
+        }
+    }
+}
+
+/// One resident shard: compressed kernel + precomputed ADMM vectors.
+/// The raw points are NOT here — they were dropped after compression.
+struct ShardEngine {
+    /// Original shard id (ascending across `engines`; empty shards of
+    /// the set are skipped).
+    shard: usize,
+    backend: ShardBackend,
+    /// Tree-order → shard-row permutation (identity for the dense
+    /// fallback), used to re-extract SV rows from the reloaded shard.
+    perm: Vec<usize>,
+    /// Labels in tree order.
+    y: Vec<f64>,
+    /// wⱼ = Yⱼ K_{β,j}⁻¹ e.
+    w: Vec<f64>,
+    /// w₁ⱼ = eᵀ K_{β,j}⁻¹ e (shard partial of the global w₁).
+    w1: f64,
+    n: usize,
+}
+
+/// Build/run statistics (the sharded analog of
+/// [`crate::svm::TrainStats`], with per-shard totals).
+#[derive(Clone, Debug, Default)]
+pub struct ConsensusStats {
+    /// Shard count K (including empty shards).
+    pub shards: usize,
+    /// Shards that actually hold rows (= engine count).
+    pub resident_shards: usize,
+    /// Total training rows across shards.
+    pub rows: usize,
+    pub compress_secs: f64,
+    pub factor_secs: f64,
+    /// Total compressed memory across all shard engines, bytes.
+    pub hss_memory_bytes: usize,
+    /// Max HSS rank over all shards.
+    pub hss_max_rank: usize,
+    /// Total kernel evaluations across shard compressions.
+    pub kernel_evals: usize,
+}
+
+/// Result of a consensus ADMM run for one C: per-shard iterates (tree
+/// order within each shard, shards ascending) plus the global
+/// per-iteration residual norms (root-sum-square over shards).
+#[derive(Clone, Debug)]
+pub struct ConsensusOutput {
+    pub z: Vec<Vec<f64>>,
+    pub x: Vec<Vec<f64>>,
+    pub mu: Vec<Vec<f64>>,
+    pub primal: Vec<f64>,
+    pub dual: Vec<f64>,
+}
+
+/// The out-of-core trainer: one [`ShardEngine`] per non-empty shard,
+/// built one shard at a time (see the module docs for the memory
+/// model), then consensus ADMM over all of them with the C-grid in
+/// lockstep per shard (the same multi-RHS machinery as
+/// [`crate::admm::AdmmSolver::run_grid`]).
+pub struct ConsensusTrainer {
+    pub kernel: Kernel,
+    admm: AdmmParams,
+    threads: usize,
+    repr: Repr,
+    engines: Vec<ShardEngine>,
+    /// Global w₁ = Σⱼ w₁ⱼ (shard-major fold).
+    w1: f64,
+    /// Original label encoding (manifest), stamped into models.
+    labels: [f64; 2],
+    /// Total rows.
+    n: usize,
+}
+
+/// Per-shard compression seed: shard 0 keeps the base seed (K = 1 must
+/// BE the in-memory trainer), shard s > 0 draws the s-th value of a
+/// deterministic fork stream in ascending shard order — so the seed of
+/// a given shard depends only on (base seed, shard id), not on K or
+/// the thread count.
+fn shard_seed(base: u64, shard: usize) -> u64 {
+    if shard == 0 {
+        return base;
+    }
+    let mut rng = Rng::new(base);
+    let mut seed = base;
+    for s in 1..=shard {
+        seed = rng.fork(s as u64).next_u64();
+    }
+    seed
+}
+
+fn build_engine(
+    ds: &Dataset,
+    shard: usize,
+    kernel: Kernel,
+    params: &HssParams,
+    beta: f64,
+    threads: usize,
+    stats: &mut ConsensusStats,
+) -> Result<ShardEngine> {
+    let n = ds.len();
+    let t = Timer::start();
+    let (backend, perm, y) = if n >= 2 {
+        let Compressed { hss, pds, stats: cs } = compress(ds, &kernel, params, threads);
+        stats.compress_secs += t.secs();
+        stats.hss_max_rank = stats.hss_max_rank.max(cs.max_rank);
+        stats.kernel_evals += cs.kernel_evals;
+        let t = Timer::start();
+        let ulv = UlvFactor::new_threaded(&hss, beta, threads)?;
+        stats.factor_secs += t.secs();
+        stats.hss_memory_bytes += hss.memory_bytes() + ulv.memory_bytes();
+        let perm = hss.perm.clone();
+        let y = pds.y.clone();
+        // pds (the shard's points) drops here — only the compressed
+        // representation stays resident
+        (ShardBackend::Hss { hss, ulv }, perm, y)
+    } else {
+        let gram = kernel.gram(&ds.x);
+        stats.compress_secs += t.secs();
+        let t = Timer::start();
+        let chol = DenseShifted::new(&gram, beta)?;
+        stats.factor_secs += t.secs();
+        stats.hss_memory_bytes += 2 * n * n * std::mem::size_of::<f64>();
+        (ShardBackend::Dense { gram, chol }, (0..n).collect(), ds.y.clone())
+    };
+
+    // wⱼ = Yⱼ K_β⁻¹ e, w₁ⱼ = Σᵢ (K_β⁻¹ e)ᵢ — the exact arithmetic of
+    // AdmmSolver::new, per shard
+    let e = vec![1.0; n];
+    let mut w = backend.solve(&e);
+    let w1: f64 = w.iter().sum();
+    for (wi, yi) in w.iter_mut().zip(y.iter()) {
+        *wi *= yi;
+    }
+    Ok(ShardEngine { shard, backend, perm, y, w, w1, n })
+}
+
+impl ConsensusTrainer {
+    /// Build one engine per non-empty shard, ascending, loading raw
+    /// points one shard at a time. `repr` is resolved globally by the
+    /// manifest (every shard shares one representation).
+    pub fn build(
+        shards: &ShardSet,
+        repr: Repr,
+        kernel: Kernel,
+        params: &HssParams,
+        admm: AdmmParams,
+        threads: usize,
+    ) -> Result<(ConsensusTrainer, ConsensusStats)> {
+        let threads = threads.max(1);
+        let m = shards.manifest();
+        if m.rows == 0 {
+            bail!("cannot train on an empty shard set");
+        }
+        let mut stats = ConsensusStats {
+            shards: m.shards,
+            rows: m.rows,
+            ..ConsensusStats::default()
+        };
+        let mut engines = Vec::new();
+        for s in 0..m.shards {
+            if m.shard_rows[s] == 0 {
+                continue;
+            }
+            let ds = shards.load_shard(s, repr)?;
+            let sp = params.with_seed(shard_seed(params.seed, s));
+            engines.push(build_engine(&ds, s, kernel, &sp, admm.beta, threads, &mut stats)?);
+            // ds (raw points) drops before the next shard loads
+        }
+        stats.resident_shards = engines.len();
+        let w1_parts: Vec<f64> = engines.iter().map(|e| e.w1).collect();
+        let w1 = fold_sum(&w1_parts);
+        Ok((
+            ConsensusTrainer {
+                kernel,
+                admm,
+                threads,
+                repr,
+                engines,
+                w1,
+                labels: m.label_pair,
+                n: m.rows,
+            },
+            stats,
+        ))
+    }
+
+    /// Total training rows.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Non-empty shard count.
+    pub fn resident_shards(&self) -> usize {
+        self.engines.len()
+    }
+
+    /// Global w₁ = eᵀ K̃_β⁻¹ e (positive for SPD shard blocks).
+    pub fn w1(&self) -> f64 {
+        self.w1
+    }
+
+    /// Run the consensus ADMM for every C in lockstep (cold start).
+    pub fn train_grid(&self, cs: &[f64]) -> Vec<ConsensusOutput> {
+        self.train_grid_warm(cs, None)
+    }
+
+    /// [`Self::train_grid`] with an optional warm start: every column
+    /// seeds z (projected into its [0, C] box) and μ from a previous
+    /// run's per-shard iterates — the cross-C extension of the
+    /// warm-started per-shard duals that already persist across
+    /// iterations within a run.
+    pub fn train_grid_warm(
+        &self,
+        cs: &[f64],
+        warm: Option<&ConsensusOutput>,
+    ) -> Vec<ConsensusOutput> {
+        let k = cs.len();
+        if k == 0 {
+            return Vec::new();
+        }
+        let ne = self.engines.len();
+        let beta = self.admm.beta;
+        let relax = self.admm.relax.clamp(1.0, 1.9);
+
+        // state[engine][column]
+        let mut xs: Vec<Vec<Vec<f64>>> =
+            self.engines.iter().map(|e| vec![vec![0.0; e.n]; k]).collect();
+        let mut zs: Vec<Vec<Vec<f64>>> = match warm {
+            Some(w) => self
+                .engines
+                .iter()
+                .enumerate()
+                .map(|(ei, e)| {
+                    assert_eq!(w.z[ei].len(), e.n, "warm start shard size mismatch");
+                    cs.iter()
+                        .map(|&c| w.z[ei].iter().map(|&v| v.clamp(0.0, c)).collect())
+                        .collect()
+                })
+                .collect(),
+            None => self.engines.iter().map(|e| vec![vec![0.0; e.n]; k]).collect(),
+        };
+        let mut mus: Vec<Vec<Vec<f64>>> = match warm {
+            Some(w) => self
+                .engines
+                .iter()
+                .enumerate()
+                .map(|(ei, _)| vec![w.mu[ei].clone(); k])
+                .collect(),
+            None => self.engines.iter().map(|e| vec![vec![0.0; e.n]; k]).collect(),
+        };
+        let mut primals: Vec<Vec<f64>> = vec![Vec::with_capacity(self.admm.max_it); k];
+        let mut duals: Vec<Vec<f64>> = vec![Vec::with_capacity(self.admm.max_it); k];
+        let mut active = vec![true; k];
+
+        for _it in 0..self.admm.max_it {
+            let act: Vec<usize> = (0..k).filter(|&j| active[j]).collect();
+            if act.is_empty() {
+                break;
+            }
+            let kact = act.len();
+
+            // Pass A — consensus reduction: per-column w₂ partials in
+            // fixed shard-major order (qᵢ is recomputed cheaply in pass
+            // B; the i-order fold per shard is exactly run_grid's)
+            let mut ratios = vec![0.0; kact];
+            {
+                let mut w2_parts = vec![vec![0.0; ne]; kact];
+                for (ei, eng) in self.engines.iter().enumerate() {
+                    for (ci, &j) in act.iter().enumerate() {
+                        let (z, mu) = (&zs[ei][j], &mus[ei][j]);
+                        let mut w2 = 0.0;
+                        for i in 0..eng.n {
+                            let qi = 1.0 + mu[i] + beta * z[i];
+                            w2 += eng.w[i] * qi;
+                        }
+                        w2_parts[ci][ei] = w2;
+                    }
+                }
+                for (ci, parts) in w2_parts.iter().enumerate() {
+                    ratios[ci] = fold_sum(parts) / self.w1;
+                }
+            }
+
+            // Pass B — per shard: rebuild the active-column RHS block,
+            // one blocked multi-RHS solve, then the shared x/z/μ
+            // updates per column
+            let mut pr2 = vec![vec![0.0; ne]; kact];
+            let mut du2 = vec![vec![0.0; ne]; kact];
+            for (ei, eng) in self.engines.iter().enumerate() {
+                let mut u = Mat::zeros(eng.n, kact);
+                for (ci, &j) in act.iter().enumerate() {
+                    let (z, mu) = (&zs[ei][j], &mus[ei][j]);
+                    for i in 0..eng.n {
+                        let qi = 1.0 + mu[i] + beta * z[i];
+                        u[(i, ci)] = eng.y[i] * qi;
+                    }
+                }
+                let v = eng.backend.solve_multi(&u);
+                for (ci, &j) in act.iter().enumerate() {
+                    let x = &mut xs[ei][j];
+                    let ratio = ratios[ci];
+                    for i in 0..eng.n {
+                        x[i] = eng.y[i] * v[(i, ci)] - ratio * eng.w[i];
+                    }
+                    let (pr, du) =
+                        admm_zmu_step(x, &mut zs[ei][j], &mut mus[ei][j], cs[j], beta, relax);
+                    pr2[ci][ei] = pr * pr;
+                    du2[ci][ei] = du * du;
+                }
+            }
+
+            // Global residuals: root-sum-square over shards, fixed
+            // shard-major fold. (For K = 1 this is sqrt(pr²) — equal to
+            // the in-memory residual up to the last ulp; the bitwise
+            // K = 1 model contract therefore holds at tol = 0, the
+            // default and the paper's setting, where residuals are
+            // reporting-only.)
+            for (ci, &j) in act.iter().enumerate() {
+                let pr = fold_sum(&pr2[ci]).sqrt();
+                let du = fold_sum(&du2[ci]).sqrt();
+                primals[j].push(pr);
+                duals[j].push(du);
+                if self.admm.tol > 0.0 && pr.max(du) < self.admm.tol {
+                    active[j] = false;
+                }
+            }
+        }
+
+        (0..k)
+            .map(|j| ConsensusOutput {
+                z: self.engines.iter().enumerate().map(|(ei, _)| std::mem::take(&mut zs[ei][j])).collect(),
+                x: self.engines.iter().enumerate().map(|(ei, _)| std::mem::take(&mut xs[ei][j])).collect(),
+                mu: self.engines.iter().enumerate().map(|(ei, _)| std::mem::take(&mut mus[ei][j])).collect(),
+                primal: std::mem::take(&mut primals[j]),
+                dual: std::mem::take(&mut duals[j]),
+            })
+            .collect()
+    }
+
+    /// One-C convenience: run + assemble.
+    pub fn train_c(&self, shards: &ShardSet, c: f64) -> Result<(SvmModel, ConsensusOutput)> {
+        let mut outs = self.train_grid(&[c]);
+        let out = outs.pop().expect("one column");
+        let model = self.assemble_model(shards, &out, c)?;
+        Ok((model, out))
+    }
+
+    /// Assemble the model from per-shard z: the exact arithmetic of the
+    /// in-memory `assemble_model`, with every global sum folded
+    /// shard-major and the bias matvec going through each shard's K̃ⱼ
+    /// (consistent with the block-diagonal training objective). Raw
+    /// shard points are re-read from disk one shard at a time to
+    /// extract SV rows (bit-exact hex round-trip); SVs concatenate
+    /// shard-major in tree order. The persisted result is a plain
+    /// [`SvmModel`] — predict/serve paths are unchanged.
+    pub fn assemble_model(
+        &self,
+        shards: &ShardSet,
+        out: &ConsensusOutput,
+        c: f64,
+    ) -> Result<SvmModel> {
+        let ne = self.engines.len();
+        assert_eq!(out.z.len(), ne, "output/engine shard count mismatch");
+        let sv_tol = 1e-8 * c.max(1.0);
+        let margin_lo = 1e-6 * c;
+        let margin_hi = c * (1.0 - 1e-6);
+
+        let mut zys: Vec<Vec<f64>> = Vec::with_capacity(ne);
+        let mut ebars: Vec<Vec<f64>> = Vec::with_capacity(ne);
+        let mut m_parts = Vec::with_capacity(ne);
+        for (ei, eng) in self.engines.iter().enumerate() {
+            let z = &out.z[ei];
+            let zy: Vec<f64> = z.iter().zip(eng.y.iter()).map(|(zi, yi)| zi * yi).collect();
+            let ebar: Vec<f64> = z
+                .iter()
+                .map(|&zi| if zi > margin_lo && zi < margin_hi { 1.0 } else { 0.0 })
+                .collect();
+            m_parts.push(ebar.iter().sum::<f64>());
+            zys.push(zy);
+            ebars.push(ebar);
+        }
+        let m_count = fold_sum(&m_parts);
+
+        // same 8k matvec-threads threshold as the in-memory assembly,
+        // applied per shard (thread count never changes bits anyway)
+        let mv = |n: usize| if n >= 8192 { self.threads } else { 1 };
+        let bias = if m_count > 0.0 {
+            let mut zky_parts = Vec::with_capacity(ne);
+            let mut ysum_parts = Vec::with_capacity(ne);
+            for (ei, eng) in self.engines.iter().enumerate() {
+                let ke = eng.backend.matvec(&ebars[ei], mv(eng.n));
+                zky_parts.push(zys[ei].iter().zip(ke.iter()).map(|(a, b)| a * b).sum::<f64>());
+                ysum_parts
+                    .push(eng.y.iter().zip(ebars[ei].iter()).map(|(yi, e)| yi * e).sum::<f64>());
+            }
+            -(fold_sum(&zky_parts) - fold_sum(&ysum_parts)) / m_count
+        } else {
+            // no margin SVs anywhere: average y − f over the SVs
+            let mut acc_parts = Vec::with_capacity(ne);
+            let mut cnt_parts = Vec::with_capacity(ne);
+            for (ei, eng) in self.engines.iter().enumerate() {
+                let f = eng.backend.matvec(&zys[ei], mv(eng.n));
+                let mut acc = 0.0;
+                let mut cnt = 0.0;
+                for i in 0..eng.n {
+                    if out.z[ei][i] > sv_tol {
+                        acc += eng.y[i] - f[i];
+                        cnt += 1.0;
+                    }
+                }
+                acc_parts.push(acc);
+                cnt_parts.push(cnt);
+            }
+            let cnt = fold_sum(&cnt_parts);
+            if cnt > 0.0 {
+                fold_sum(&acc_parts) / cnt
+            } else {
+                0.0
+            }
+        };
+
+        // SVs: reload each shard's raw rows, select tree-order SV rows
+        // through the composed (perm ∘ sv_idx) index in one pass
+        let mut sv_parts: Vec<Points> = Vec::with_capacity(ne);
+        let mut alpha_y = Vec::new();
+        for (ei, eng) in self.engines.iter().enumerate() {
+            let sv_idx: Vec<usize> =
+                (0..eng.n).filter(|&i| out.z[ei][i] > sv_tol).collect();
+            let ds = shards.load_shard(eng.shard, self.repr)?;
+            let composed: Vec<usize> = sv_idx.iter().map(|&i| eng.perm[i]).collect();
+            sv_parts.push(ds.x.select_rows(&composed));
+            alpha_y.extend(sv_idx.iter().map(|&i| zys[ei][i]));
+        }
+        let sv = concat_points(sv_parts);
+
+        Ok(SvmModel { sv, alpha_y, bias, kernel: self.kernel, c, labels: self.labels })
+    }
+}
+
+/// Row-concatenate shard SV blocks. All parts share one representation
+/// (the manifest's global Repr decision); a single part is returned
+/// verbatim so the K = 1 path stays bit-identical.
+fn concat_points(mut parts: Vec<Points>) -> Points {
+    if parts.len() == 1 {
+        return parts.pop().expect("one part");
+    }
+    let cols = parts.first().map(|p| p.cols()).unwrap_or(0);
+    let rows: usize = parts.iter().map(|p| p.rows()).sum();
+    let sparse = parts.first().map(|p| p.is_sparse()).unwrap_or(false);
+    debug_assert!(parts.iter().all(|p| p.is_sparse() == sparse && p.cols() == cols));
+    if sparse {
+        let nnz: usize = parts.iter().map(|p| p.nnz()).sum();
+        let mut indptr = Vec::with_capacity(rows + 1);
+        indptr.push(0usize);
+        let mut indices = Vec::with_capacity(nnz);
+        let mut vals = Vec::with_capacity(nnz);
+        for p in &parts {
+            let Points::Sparse(s) = p else { unreachable!("repr is uniform across shards") };
+            for i in 0..s.rows() {
+                let (ci, vi) = s.row(i);
+                indices.extend_from_slice(ci);
+                vals.extend_from_slice(vi);
+                indptr.push(indices.len());
+            }
+        }
+        Points::Sparse(crate::data::CsrMat::new(rows, cols, indptr, indices, vals))
+    } else {
+        let mut m = Mat::zeros(rows, cols);
+        let mut r = 0;
+        for p in &parts {
+            let Points::Dense(d) = p else { unreachable!("repr is uniform across shards") };
+            for i in 0..d.rows() {
+                m.row_mut(r).copy_from_slice(d.row(i));
+                r += 1;
+            }
+        }
+        Points::Dense(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::libsvm::write_file;
+    use crate::data::shard::write_shards;
+    use crate::data::synth;
+    use crate::svm::predict;
+    use crate::util::prng::Rng;
+    use std::path::PathBuf;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("hss_svm_consensus_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn setup(dir: &std::path::Path, n: usize, k: usize) -> (ShardSet, Dataset) {
+        let mut rng = Rng::new(41);
+        let ds = synth::blobs(n + n / 2, 4, 4, 0.5, &mut rng);
+        let (train, test) = ds.split_at(n);
+        let src = dir.join("train.libsvm");
+        write_file(&train, &src).unwrap();
+        write_shards(&src, dir.join(format!("s{k}")), k).unwrap();
+        let set = ShardSet::open(dir.join(format!("s{k}"))).unwrap();
+        (set, test)
+    }
+
+    fn params() -> (HssParams, AdmmParams) {
+        let mut hp = HssParams::low_accuracy();
+        hp.leaf_size = 32;
+        (hp, AdmmParams { beta: 100.0, max_it: 10, relax: 1.0, tol: 0.0 })
+    }
+
+    #[test]
+    fn consensus_classifies_blobs() {
+        let dir = tmpdir("acc");
+        let (set, test) = setup(&dir, 400, 4);
+        let (hp, ap) = params();
+        let kernel = Kernel::Gaussian { h: 1.5 };
+        let (tr, stats) = ConsensusTrainer::build(&set, Repr::Auto, kernel, &hp, ap, 2).unwrap();
+        assert_eq!(stats.resident_shards, 4);
+        assert_eq!(stats.rows, 400);
+        assert!(stats.hss_memory_bytes > 0);
+        let (model, out) = tr.train_c(&set, 1.0).unwrap();
+        assert_eq!(out.z.len(), 4);
+        assert!(out.primal.len() == 10 && out.dual.len() == 10);
+        let acc = predict::accuracy(&model, &test, 2);
+        assert!(acc > 0.8, "consensus blobs accuracy {acc}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn per_shard_x_satisfies_global_equality() {
+        // the consensus step exists to enforce yᵀx = 0 GLOBALLY: the
+        // concatenated x must satisfy it even though no shard's local
+        // block does on its own
+        let dir = tmpdir("eq");
+        let (set, _) = setup(&dir, 300, 3);
+        let (hp, ap) = params();
+        let (tr, _) =
+            ConsensusTrainer::build(&set, Repr::Auto, Kernel::Gaussian { h: 1.5 }, &hp, ap, 1)
+                .unwrap();
+        let out = tr.train_grid(&[1.0]).pop().unwrap();
+        let mut ytx = 0.0;
+        for (ei, eng) in tr.engines.iter().enumerate() {
+            for i in 0..eng.n {
+                ytx += eng.y[i] * out.x[ei][i];
+            }
+        }
+        assert!(ytx.abs() < 1e-8, "global yᵀx = {ytx}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn grid_lockstep_matches_single_c_runs() {
+        let dir = tmpdir("grid");
+        let (set, _) = setup(&dir, 240, 3);
+        let (hp, ap) = params();
+        let (tr, _) =
+            ConsensusTrainer::build(&set, Repr::Auto, Kernel::Gaussian { h: 1.5 }, &hp, ap, 2)
+                .unwrap();
+        let cs = [0.1, 1.0, 10.0];
+        let grid = tr.train_grid(&cs);
+        for (j, &c) in cs.iter().enumerate() {
+            let single = tr.train_grid(&[c]).pop().unwrap();
+            assert_eq!(grid[j].z, single.z, "z mismatch at C={c}");
+            assert_eq!(grid[j].mu, single.mu, "mu mismatch at C={c}");
+            assert_eq!(grid[j].primal, single.primal, "primal mismatch at C={c}");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn warm_start_reaches_similar_iterates_faster() {
+        let dir = tmpdir("warm");
+        let (set, _) = setup(&dir, 200, 2);
+        let (hp, mut ap) = params();
+        ap.max_it = 30;
+        let (tr, _) =
+            ConsensusTrainer::build(&set, Repr::Auto, Kernel::Gaussian { h: 1.5 }, &hp, ap, 1)
+                .unwrap();
+        let cold = tr.train_grid(&[1.0]).pop().unwrap();
+        // warm-started from the converged state, the first-iteration
+        // primal residual must be far below the cold run's peak
+        let warm = tr.train_grid_warm(&[1.0], Some(&cold)).pop().unwrap();
+        let cold_peak = cold.primal.iter().cloned().fold(0.0f64, f64::max);
+        assert!(cold_peak > 0.0);
+        assert!(
+            warm.primal[0] < cold_peak * 0.5,
+            "warm first residual {} vs cold peak {cold_peak}",
+            warm.primal[0]
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn single_row_shards_use_dense_fallback() {
+        let dir = tmpdir("tiny");
+        let mut rng = Rng::new(43);
+        let ds = synth::blobs(9, 3, 2, 0.4, &mut rng);
+        let src = dir.join("tiny.libsvm");
+        write_file(&ds, &src).unwrap();
+        // K = 8 over 9 rows: shard 0 has 2 rows, shards 1..8 have 1
+        write_shards(&src, dir.join("s8"), 8).unwrap();
+        let set = ShardSet::open(dir.join("s8")).unwrap();
+        let (hp, ap) = params();
+        let (tr, stats) =
+            ConsensusTrainer::build(&set, Repr::Auto, Kernel::Gaussian { h: 1.0 }, &hp, ap, 1)
+                .unwrap();
+        assert_eq!(stats.resident_shards, 8);
+        let (model, _) = tr.train_c(&set, 1.0).unwrap();
+        assert!(model.bias.is_finite());
+        assert!(model.n_sv() <= 9);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn shard_seeds_are_shard_major_and_stable() {
+        let base = 0xB10C;
+        assert_eq!(shard_seed(base, 0), base, "shard 0 keeps the base seed");
+        let s1 = shard_seed(base, 1);
+        let s2 = shard_seed(base, 2);
+        assert_ne!(s1, base);
+        assert_ne!(s1, s2);
+        // pure function of (base, shard): recomputing gives the same
+        assert_eq!(shard_seed(base, 2), s2);
+    }
+}

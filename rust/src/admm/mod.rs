@@ -11,6 +11,8 @@
 //! `w = Y K_β⁻¹ e` and `w₁ = eᵀK_β⁻¹e` are precomputed once per (h, β)
 //! and shared by every C of the grid search.
 
+pub mod consensus;
 pub mod solver;
 
+pub use consensus::{ConsensusOutput, ConsensusStats, ConsensusTrainer};
 pub use solver::{AdmmOutput, AdmmParams, AdmmSolver, ShiftedSolve};

@@ -131,10 +131,11 @@ pub struct AdmmOutput {
 
 /// One ADMM half-iteration after the x-update: project z into [0, C],
 /// update μ, and return the (primal, dual) residual norms. Shared by the
-/// scalar and batched paths so their per-column arithmetic cannot
-/// diverge — the bit-for-bit `run` == `run_grid` contract depends on
-/// both calling exactly this code.
-fn admm_zmu_step(
+/// scalar and batched paths — and by the sharded consensus trainer
+/// (`admm::consensus`) — so their per-element arithmetic cannot
+/// diverge: the bit-for-bit `run` == `run_grid` == `K=1 consensus`
+/// contracts depend on all three calling exactly this code.
+pub(crate) fn admm_zmu_step(
     x: &[f64],
     z: &mut [f64],
     mu: &mut [f64],

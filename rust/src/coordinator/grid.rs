@@ -3,9 +3,10 @@
 //! performed by a simple grid-search through the parameter space"),
 //! made cheap by the reuse structure.
 
-use crate::admm::{AdmmParams, AdmmSolver};
+use crate::admm::{AdmmParams, AdmmSolver, ConsensusTrainer};
 use crate::coordinator::cache::KernelCache;
-use crate::data::Dataset;
+use crate::data::libsvm::Repr;
+use crate::data::{Dataset, ShardSet};
 use crate::hss::HssParams;
 use crate::kernel::Kernel;
 use crate::svm::multiclass::{MulticlassDataset, OvoModel, OvoPairSet};
@@ -123,6 +124,45 @@ impl GridSearch {
                     admm_secs: per_cell,
                     n_sv: model.n_sv_unique(),
                 });
+            }
+        }
+        Ok(Self::summarize(cells, compress_secs, factor_secs, total_admm))
+    }
+
+    /// Sharded out-of-core grid: one [`ConsensusTrainer`] build per h
+    /// (compress + factor every shard once, loading raw points one
+    /// shard at a time), then ONE consensus ADMM per h advancing every
+    /// C in lockstep — the out-of-core analog of [`Self::run`], with
+    /// the same reuse structure. `test` is an ordinary in-memory
+    /// dataset (evaluation sets are small; only training is sharded).
+    pub fn run_sharded(
+        &self,
+        shards: &ShardSet,
+        repr: Repr,
+        test: &Dataset,
+    ) -> Result<GridResult> {
+        let mut cells = Vec::new();
+        let (mut compress_secs, mut factor_secs, mut total_admm) = (0.0, 0.0, 0.0);
+        for &h in &self.h_values {
+            let (trainer, stats) = ConsensusTrainer::build(
+                shards,
+                repr,
+                Kernel::Gaussian { h },
+                &self.hss,
+                self.admm,
+                self.threads,
+            )?;
+            compress_secs += stats.compress_secs;
+            factor_secs += stats.factor_secs;
+            let t = Timer::start();
+            let outs = trainer.train_grid(&self.c_values);
+            let batch_secs = t.secs();
+            total_admm += batch_secs;
+            let per_cell = batch_secs / self.c_values.len().max(1) as f64;
+            for (&c, out) in self.c_values.iter().zip(outs.iter()) {
+                let model = trainer.assemble_model(shards, out, c)?;
+                let accuracy = predict::accuracy(&model, test, self.threads);
+                cells.push(GridCell { h, c, accuracy, admm_secs: per_cell, n_sv: model.n_sv() });
             }
         }
         Ok(Self::summarize(cells, compress_secs, factor_secs, total_admm))

@@ -46,9 +46,12 @@ pub enum Repr {
     Sparse,
 }
 
-/// Auto-representation thresholds (see [`Repr::Auto`]).
-const AUTO_MIN_DIM: usize = 32;
-const AUTO_MAX_DENSITY: f64 = 0.25;
+/// Auto-representation thresholds (see [`Repr::Auto`]). Shared with the
+/// shard loader (`data/shard`), which applies the same rule using the
+/// *global* manifest counts so every shard of a dataset picks the same
+/// representation the in-memory reader would.
+pub(crate) const AUTO_MIN_DIM: usize = 32;
+pub(crate) const AUTO_MAX_DENSITY: f64 = 0.25;
 
 /// Streaming parse result: CSR triplets + raw labels (NaN = unlabeled).
 struct Parsed {
@@ -60,6 +63,85 @@ struct Parsed {
     /// 1-based (offset-adjusted) number of the line where `max_idx` was
     /// seen — so a forced-dimension overflow names the offending line.
     max_idx_line: usize,
+}
+
+/// One validated LIBSVM data line ([`parse_data_line`]): the raw label,
+/// the **nonzero** entries in 0-based column order, and the largest
+/// 1-based index seen on the line (zero-valued entries included — the
+/// dimension of a dataset counts explicit zeros).
+pub(crate) struct ParsedLine {
+    pub label: f64,
+    pub entries: Vec<(usize, f64)>,
+    pub max_idx: usize,
+}
+
+/// Validate and split a single LIBSVM line; `Ok(None)` for blank lines
+/// and `#` comments. This is the one copy of the format contract
+/// (1-based strictly ascending indices, finite values, zeros dropped):
+/// the in-memory reader below and the out-of-core shard writer
+/// (`data/shard`) both go through it, so a file either parses
+/// identically on both paths or fails with the same line-numbered error.
+/// `allow_bare` accepts label-less lines whose first token is an
+/// `index:value` pair (label recorded as NaN); `lineno` is the 0-based
+/// line number used in error messages.
+pub(crate) fn parse_data_line(
+    line: &str,
+    lineno: usize,
+    allow_bare: bool,
+) -> Result<Option<ParsedLine>> {
+    let line = line.trim();
+    if line.is_empty() || line.starts_with('#') {
+        return Ok(None);
+    }
+    let mut parts = line.split_ascii_whitespace().peekable();
+    let first = *parts.peek().unwrap();
+    let label = if allow_bare && first.contains(':') {
+        // bare feature line: no label token to consume
+        f64::NAN
+    } else {
+        let lab_tok = parts.next().unwrap();
+        let label: f64 = lab_tok
+            .parse()
+            .with_context(|| format!("line {}: bad label {lab_tok:?}", lineno + 1))?;
+        if !label.is_finite() {
+            bail!("line {}: non-finite label {lab_tok:?}", lineno + 1);
+        }
+        label
+    };
+    let mut out = ParsedLine { label, entries: Vec::new(), max_idx: 0 };
+    let mut last_idx: Option<usize> = None;
+    for tok in parts {
+        let (i_str, v_str) = tok
+            .split_once(':')
+            .with_context(|| format!("line {}: bad pair {tok:?}", lineno + 1))?;
+        let idx: usize = i_str
+            .parse()
+            .with_context(|| format!("line {}: bad index {i_str:?}", lineno + 1))?;
+        if idx == 0 {
+            bail!("line {}: libsvm indices are 1-based, got 0", lineno + 1);
+        }
+        if let Some(prev) = last_idx {
+            if idx <= prev {
+                bail!(
+                    "line {}: feature index {idx} is not strictly ascending \
+                     (previous index {prev}; libsvm requires ascending, duplicate-free indices)",
+                    lineno + 1
+                );
+            }
+        }
+        last_idx = Some(idx);
+        let val: f64 = v_str
+            .parse()
+            .with_context(|| format!("line {}: bad value {v_str:?}", lineno + 1))?;
+        if !val.is_finite() {
+            bail!("line {}: non-finite value {v_str:?} for index {idx}", lineno + 1);
+        }
+        out.max_idx = out.max_idx.max(idx);
+        if val != 0.0 {
+            out.entries.push((idx - 1, val));
+        }
+    }
+    Ok(Some(out))
 }
 
 /// Parse LIBSVM lines into CSR arrays without ever building a dense
@@ -80,62 +162,18 @@ fn parse_stream(r: impl BufRead, allow_bare: bool, line_offset: usize) -> Result
     for (rel, line) in r.lines().enumerate() {
         let lineno = rel + line_offset;
         let line = line.context("I/O error reading libsvm data")?;
-        let line = line.trim();
-        if line.is_empty() || line.starts_with('#') {
+        let Some(row) = parse_data_line(&line, lineno, allow_bare)? else {
             continue;
-        }
-        let mut parts = line.split_ascii_whitespace().peekable();
-        let first = *parts.peek().unwrap();
-        let label = if allow_bare && first.contains(':') {
-            // bare feature line: no label token to consume
-            f64::NAN
-        } else {
-            let lab_tok = parts.next().unwrap();
-            let label: f64 = lab_tok
-                .parse()
-                .with_context(|| format!("line {}: bad label {lab_tok:?}", lineno + 1))?;
-            if !label.is_finite() {
-                bail!("line {}: non-finite label {lab_tok:?}", lineno + 1);
-            }
-            label
         };
-        let mut last_idx: Option<usize> = None;
-        for tok in parts {
-            let (i_str, v_str) = tok
-                .split_once(':')
-                .with_context(|| format!("line {}: bad pair {tok:?}", lineno + 1))?;
-            let idx: usize = i_str
-                .parse()
-                .with_context(|| format!("line {}: bad index {i_str:?}", lineno + 1))?;
-            if idx == 0 {
-                bail!("line {}: libsvm indices are 1-based, got 0", lineno + 1);
-            }
-            if let Some(prev) = last_idx {
-                if idx <= prev {
-                    bail!(
-                        "line {}: feature index {idx} is not strictly ascending \
-                         (previous index {prev}; libsvm requires ascending, duplicate-free indices)",
-                        lineno + 1
-                    );
-                }
-            }
-            last_idx = Some(idx);
-            let val: f64 = v_str
-                .parse()
-                .with_context(|| format!("line {}: bad value {v_str:?}", lineno + 1))?;
-            if !val.is_finite() {
-                bail!("line {}: non-finite value {v_str:?} for index {idx}", lineno + 1);
-            }
-            if idx > p.max_idx {
-                p.max_idx = idx;
-                p.max_idx_line = lineno + 1;
-            }
-            if val != 0.0 {
-                p.indices.push(idx - 1);
-                p.vals.push(val);
-            }
+        if row.max_idx > p.max_idx {
+            p.max_idx = row.max_idx;
+            p.max_idx_line = lineno + 1;
         }
-        p.labels.push(label);
+        for (col, val) in row.entries {
+            p.indices.push(col);
+            p.vals.push(val);
+        }
+        p.labels.push(row.label);
         p.indptr.push(p.indices.len());
     }
     Ok(p)

@@ -7,8 +7,10 @@
 pub mod dataset;
 pub mod libsvm;
 pub mod scale;
+pub mod shard;
 pub mod sparse;
 pub mod synth;
 
 pub use dataset::{Dataset, DEFAULT_LABEL_PAIR};
+pub use shard::{ShardManifest, ShardSet};
 pub use sparse::{CsrMat, Points};

@@ -1,0 +1,626 @@
+//! On-disk CSR shards for out-of-core consensus training.
+//!
+//! [`write_shards`] splits a LIBSVM file into `K` shard files in ONE
+//! streaming pass: each data line is validated with the same
+//! [`libsvm`](crate::data::libsvm) line parser as the in-memory reader,
+//! assigned round-robin (row `i` → shard `i mod K`, so class balance and
+//! a ragged last shard fall out naturally) and appended to that shard's
+//! file immediately — no dense matrix, no full CSR, O(K) open writers
+//! and O(1) rows resident. Shard rows store the raw label and nonzero
+//! values as 16-digit hex f64 bit patterns (the model-persistence
+//! encoding, [`svm::persist`](crate::svm::persist)), so a
+//! write→[`ShardSet::load_shard`] round-trip is bit-exact — the
+//! foundation of the "sharded training is a pure function of (K,
+//! content)" contract.
+//!
+//! Global facts a shard cannot know locally — the feature dimension
+//! (max index over ALL rows), the total nnz (the [`Repr::Auto`]
+//! density rule must pick ONE representation for every shard), and the
+//! binary label mapping (the greater-label-is-positive convention needs
+//! the global label set) — are accumulated during the pass and written
+//! to a `manifest` file at the end. [`ShardSet::load_shard`] applies
+//! them so that, for `K = 1`, the loaded shard is bitwise identical to
+//! what [`libsvm::read_file`](crate::data::libsvm::read_file) returns.
+//!
+//! Disk layout under the shard directory:
+//!
+//! ```text
+//!   manifest        header: counts, dim, label mapping, per-shard rows
+//!   shard-0.csr     "<label-hex> <col>:<val-hex> ..." per row (0-based cols)
+//!   ...
+//!   shard-<K-1>.csr
+//! ```
+
+use crate::data::dataset::{Dataset, DEFAULT_LABEL_PAIR};
+use crate::data::libsvm::{self, Repr};
+use crate::data::sparse::{CsrMat, Points};
+use crate::svm::persist::{hexf, unhexf};
+use anyhow::{bail, Context, Result};
+use std::collections::{BTreeMap, BTreeSet};
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::{Path, PathBuf};
+
+/// Magic first line of the manifest; bump on format changes.
+const MANIFEST_MAGIC: &str = "hss-svm-shards v1";
+
+/// How raw labels map to ±1 — the global binary-label rule of
+/// [`libsvm::read`](crate::data::libsvm::read), decided once over the
+/// whole file and applied identically by every shard load.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LabelMap {
+    /// File had literal {−1, +1} labels: kept verbatim.
+    Pm1,
+    /// Single-class file: positive raw labels ↦ +1, others ↦ −1.
+    Single,
+    /// Two classes: rounded labels greater than `lo` ↦ +1.
+    Greater {
+        /// The smaller rounded class (the negative one).
+        lo: i64,
+    },
+    /// Empty file: nothing to map.
+    Empty,
+}
+
+impl LabelMap {
+    fn apply(self, raw: f64) -> f64 {
+        match self {
+            LabelMap::Pm1 | LabelMap::Empty => raw,
+            LabelMap::Single => {
+                if raw > 0.0 {
+                    1.0
+                } else {
+                    -1.0
+                }
+            }
+            LabelMap::Greater { lo } => {
+                if (raw.round() as i64) > lo {
+                    1.0
+                } else {
+                    -1.0
+                }
+            }
+        }
+    }
+
+    fn tag(self) -> String {
+        match self {
+            LabelMap::Pm1 => "pm1".to_string(),
+            LabelMap::Single => "single".to_string(),
+            LabelMap::Greater { lo } => format!("greater {lo}"),
+            LabelMap::Empty => "empty".to_string(),
+        }
+    }
+
+    fn from_tag(s: &str) -> Result<LabelMap> {
+        let mut p = s.split_ascii_whitespace();
+        match p.next() {
+            Some("pm1") => Ok(LabelMap::Pm1),
+            Some("single") => Ok(LabelMap::Single),
+            Some("greater") => {
+                let lo = p
+                    .next()
+                    .context("manifest: mapping 'greater' missing class")?
+                    .parse()
+                    .context("manifest: bad 'greater' class")?;
+                Ok(LabelMap::Greater { lo })
+            }
+            Some("empty") => Ok(LabelMap::Empty),
+            other => bail!("manifest: unknown label mapping {other:?}"),
+        }
+    }
+}
+
+/// Global metadata for a shard directory, written at the end of the
+/// single streaming pass and required to load any shard.
+#[derive(Clone, Debug)]
+pub struct ShardManifest {
+    /// Source dataset name (file stem of the sharded libsvm file).
+    pub name: String,
+    /// Number of shards `K`.
+    pub shards: usize,
+    /// Total data rows across all shards.
+    pub rows: usize,
+    /// Feature dimension = max 1-based index over the whole file.
+    pub dim: usize,
+    /// Total nonzero entries (explicit zeros dropped, as in-memory).
+    pub nnz: usize,
+    /// Raw→±1 label rule (global, see [`LabelMap`]).
+    pub mapping: LabelMap,
+    /// Original label encoding, `[negative, positive]` — what trained
+    /// models answer in (same convention as `Dataset::labels`).
+    pub label_pair: [f64; 2],
+    /// Rows per shard, indexed by shard id.
+    pub shard_rows: Vec<usize>,
+    /// Nonzeros per shard, indexed by shard id.
+    pub shard_nnz: Vec<usize>,
+}
+
+impl ShardManifest {
+    /// The shared [`Repr::Auto`] decision, made from GLOBAL counts so
+    /// all shards agree with each other and with the in-memory reader.
+    pub fn is_sparse_under(&self, repr: Repr) -> bool {
+        match repr {
+            Repr::Sparse => true,
+            Repr::Dense => false,
+            Repr::Auto => {
+                let slots = (self.rows * self.dim).max(1);
+                self.dim >= libsvm::AUTO_MIN_DIM
+                    && (self.nnz as f64) <= libsvm::AUTO_MAX_DENSITY * slots as f64
+            }
+        }
+    }
+
+    fn save(&self, path: &Path) -> Result<()> {
+        let f = std::fs::File::create(path)
+            .with_context(|| format!("cannot create {}", path.display()))?;
+        let mut w = BufWriter::new(f);
+        writeln!(w, "{MANIFEST_MAGIC}")?;
+        writeln!(w, "name {}", self.name)?;
+        writeln!(w, "shards {}", self.shards)?;
+        writeln!(w, "rows {}", self.rows)?;
+        writeln!(w, "dim {}", self.dim)?;
+        writeln!(w, "nnz {}", self.nnz)?;
+        writeln!(w, "mapping {}", self.mapping.tag())?;
+        writeln!(w, "pair {} {}", hexf(self.label_pair[0]), hexf(self.label_pair[1]))?;
+        for k in 0..self.shards {
+            writeln!(w, "shard {k} {} {}", self.shard_rows[k], self.shard_nnz[k])?;
+        }
+        w.flush()?;
+        Ok(())
+    }
+
+    fn load(path: &Path) -> Result<ShardManifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("cannot open {}", path.display()))?;
+        let mut lines = text.lines();
+        let magic = lines.next().unwrap_or("");
+        if magic != MANIFEST_MAGIC {
+            bail!("{}: not a shard manifest (got {magic:?})", path.display());
+        }
+        let mut name = String::new();
+        let mut shards = None;
+        let mut rows = None;
+        let mut dim = None;
+        let mut nnz = None;
+        let mut mapping = None;
+        let mut pair = DEFAULT_LABEL_PAIR;
+        let mut shard_rows = Vec::new();
+        let mut shard_nnz = Vec::new();
+        for line in lines {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (key, rest) = line.split_once(' ').unwrap_or((line, ""));
+            match key {
+                "name" => name = rest.to_string(),
+                "shards" => shards = Some(rest.parse().context("manifest: bad shards")?),
+                "rows" => rows = Some(rest.parse().context("manifest: bad rows")?),
+                "dim" => dim = Some(rest.parse().context("manifest: bad dim")?),
+                "nnz" => nnz = Some(rest.parse().context("manifest: bad nnz")?),
+                "mapping" => mapping = Some(LabelMap::from_tag(rest)?),
+                "pair" => {
+                    let mut p = rest.split_ascii_whitespace();
+                    let lo = unhexf(p.next().context("manifest: pair missing lo")?)?;
+                    let hi = unhexf(p.next().context("manifest: pair missing hi")?)?;
+                    pair = [lo, hi];
+                }
+                "shard" => {
+                    let mut p = rest.split_ascii_whitespace();
+                    let k: usize =
+                        p.next().context("manifest: shard id")?.parse().context("shard id")?;
+                    if k != shard_rows.len() {
+                        bail!("manifest: shard lines out of order at {k}");
+                    }
+                    shard_rows
+                        .push(p.next().context("manifest: shard rows")?.parse().context("rows")?);
+                    shard_nnz
+                        .push(p.next().context("manifest: shard nnz")?.parse().context("nnz")?);
+                }
+                other => bail!("manifest: unknown key {other:?}"),
+            }
+        }
+        let m = ShardManifest {
+            name,
+            shards: shards.context("manifest: missing shards")?,
+            rows: rows.context("manifest: missing rows")?,
+            dim: dim.context("manifest: missing dim")?,
+            nnz: nnz.context("manifest: missing nnz")?,
+            mapping: mapping.context("manifest: missing mapping")?,
+            label_pair: pair,
+            shard_rows,
+            shard_nnz,
+        };
+        if m.shard_rows.len() != m.shards {
+            bail!(
+                "manifest: {} shard lines for {} shards",
+                m.shard_rows.len(),
+                m.shards
+            );
+        }
+        if m.shard_rows.iter().sum::<usize>() != m.rows
+            || m.shard_nnz.iter().sum::<usize>() != m.nnz
+        {
+            bail!("manifest: per-shard counts do not sum to totals");
+        }
+        Ok(m)
+    }
+}
+
+fn shard_path(dir: &Path, k: usize) -> PathBuf {
+    dir.join(format!("shard-{k}.csr"))
+}
+
+fn manifest_path(dir: &Path) -> PathBuf {
+    dir.join("manifest")
+}
+
+/// Split a LIBSVM file into `k` on-disk shards in one streaming pass
+/// (see the module docs for the format and invariants). Returns the
+/// manifest it wrote. Existing shard files in `dir` are overwritten.
+pub fn write_shards(
+    src: impl AsRef<Path>,
+    dir: impl AsRef<Path>,
+    k: usize,
+) -> Result<ShardManifest> {
+    let (src, dir) = (src.as_ref(), dir.as_ref());
+    if k == 0 {
+        bail!("--shards must be at least 1");
+    }
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("cannot create shard dir {}", dir.display()))?;
+    let f = std::fs::File::open(src).with_context(|| format!("cannot open {}", src.display()))?;
+    let reader = BufReader::new(f);
+    let mut writers: Vec<BufWriter<std::fs::File>> = (0..k)
+        .map(|i| {
+            let p = shard_path(dir, i);
+            let f = std::fs::File::create(&p)
+                .with_context(|| format!("cannot create {}", p.display()))?;
+            Ok(BufWriter::new(f))
+        })
+        .collect::<Result<_>>()?;
+
+    let mut rows = 0usize;
+    let mut dim = 0usize;
+    let mut nnz = 0usize;
+    let mut shard_rows = vec![0usize; k];
+    let mut shard_nnz = vec![0usize; k];
+    // label statistics for the end-of-pass global mapping, mirroring
+    // the in-memory reader: rounded classes with the FIRST raw value of
+    // each (so non-integer encodings round-trip verbatim), plus whether
+    // every raw label is literally ±1 (the verbatim branch)
+    let mut first_raw: BTreeMap<i64, f64> = BTreeMap::new();
+    let mut all_pm1 = true;
+
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line.context("I/O error reading libsvm data")?;
+        let Some(row) = libsvm::parse_data_line(&line, lineno, false)? else {
+            continue;
+        };
+        let s = rows % k;
+        let w = &mut writers[s];
+        write!(w, "{}", hexf(row.label)).context("shard write")?;
+        for &(col, val) in &row.entries {
+            write!(w, " {col}:{}", hexf(val)).context("shard write")?;
+        }
+        writeln!(w).context("shard write")?;
+        dim = dim.max(row.max_idx);
+        nnz += row.entries.len();
+        shard_nnz[s] += row.entries.len();
+        shard_rows[s] += 1;
+        rows += 1;
+        all_pm1 &= row.label == 1.0 || row.label == -1.0;
+        first_raw.entry(row.label.round() as i64).or_insert(row.label);
+    }
+    for w in &mut writers {
+        w.flush().context("shard flush")?;
+    }
+
+    let distinct: BTreeSet<i64> = first_raw.keys().copied().collect();
+    let verbatim_pm1 = rows > 0 && all_pm1 && distinct.len() == 2;
+    let mapping = if rows == 0 {
+        LabelMap::Empty
+    } else if verbatim_pm1 {
+        LabelMap::Pm1
+    } else if distinct.len() == 1 {
+        LabelMap::Single
+    } else if distinct.len() == 2 {
+        LabelMap::Greater { lo: *distinct.iter().next().expect("two labels") }
+    } else {
+        bail!("not a binary dataset: labels {distinct:?}");
+    };
+    let label_pair = if distinct.len() == 2 && !verbatim_pm1 {
+        let mut it = distinct.iter();
+        let (lo, hi) = (*it.next().expect("two labels"), *it.next().expect("two labels"));
+        [first_raw[&lo], first_raw[&hi]]
+    } else {
+        DEFAULT_LABEL_PAIR
+    };
+
+    let name = src
+        .file_stem()
+        .and_then(|s| s.to_str())
+        .unwrap_or("shards")
+        .to_string();
+    let manifest = ShardManifest {
+        name,
+        shards: k,
+        rows,
+        dim,
+        nnz,
+        mapping,
+        label_pair,
+        shard_rows,
+        shard_nnz,
+    };
+    manifest.save(&manifest_path(dir))?;
+    Ok(manifest)
+}
+
+/// An opened shard directory: the manifest plus the ability to load any
+/// single shard as an in-memory [`Dataset`] (the only part of the
+/// training set ever resident at once on the out-of-core path).
+#[derive(Clone, Debug)]
+pub struct ShardSet {
+    dir: PathBuf,
+    manifest: ShardManifest,
+}
+
+impl ShardSet {
+    /// Open an existing shard directory (validates the manifest and the
+    /// presence of every shard file).
+    pub fn open(dir: impl AsRef<Path>) -> Result<ShardSet> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = ShardManifest::load(&manifest_path(&dir))?;
+        for k in 0..manifest.shards {
+            let p = shard_path(&dir, k);
+            if !p.is_file() {
+                bail!("shard dir {}: missing {}", dir.display(), p.display());
+            }
+        }
+        Ok(ShardSet { dir, manifest })
+    }
+
+    /// Open `dir` if it already holds a valid manifest for `k` shards of
+    /// `src` (same file stem), else (re)shard `src` into it. Reuse keys
+    /// on (name, K) only — point `--shard-dir` at a dedicated directory
+    /// per dataset, or delete it after changing the file in place.
+    pub fn open_or_create(
+        src: impl AsRef<Path>,
+        dir: impl AsRef<Path>,
+        k: usize,
+    ) -> Result<ShardSet> {
+        let stem = src.as_ref().file_stem().and_then(|s| s.to_str()).unwrap_or("shards");
+        if let Ok(set) = ShardSet::open(dir.as_ref()) {
+            if set.manifest.shards == k && set.manifest.name == stem {
+                return Ok(set);
+            }
+        }
+        let manifest = write_shards(src, dir.as_ref(), k)?;
+        Ok(ShardSet { dir: dir.as_ref().to_path_buf(), manifest })
+    }
+
+    /// Global metadata (counts, dimension, label rule).
+    pub fn manifest(&self) -> &ShardManifest {
+        &self.manifest
+    }
+
+    /// Number of shards `K`.
+    pub fn shards(&self) -> usize {
+        self.manifest.shards
+    }
+
+    /// The shard directory.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Load shard `k` as a Dataset: hex rows decoded bit-exactly, the
+    /// manifest's global label mapping and the global [`Repr`] decision
+    /// applied (every shard of a set shares one representation).
+    pub fn load_shard(&self, k: usize, repr: Repr) -> Result<Dataset> {
+        let m = &self.manifest;
+        if k >= m.shards {
+            bail!("shard {k} out of range (K = {})", m.shards);
+        }
+        let p = shard_path(&self.dir, k);
+        let f =
+            std::fs::File::open(&p).with_context(|| format!("cannot open {}", p.display()))?;
+        let rows = m.shard_rows[k];
+        let mut labels = Vec::with_capacity(rows);
+        let mut indptr = Vec::with_capacity(rows + 1);
+        indptr.push(0usize);
+        let mut indices = Vec::with_capacity(m.shard_nnz[k]);
+        let mut vals = Vec::with_capacity(m.shard_nnz[k]);
+        for (i, line) in BufReader::new(f).lines().enumerate() {
+            let line = line.with_context(|| format!("I/O error reading {}", p.display()))?;
+            let mut toks = line.split_ascii_whitespace();
+            let raw = unhexf(toks.next().with_context(|| {
+                format!("{} row {}: empty shard row", p.display(), i + 1)
+            })?)?;
+            labels.push(m.mapping.apply(raw));
+            for tok in toks {
+                let (c, v) = tok.split_once(':').with_context(|| {
+                    format!("{} row {}: bad entry {tok:?}", p.display(), i + 1)
+                })?;
+                let col: usize = c
+                    .parse()
+                    .with_context(|| format!("{} row {}: bad column {c:?}", p.display(), i + 1))?;
+                if col >= m.dim {
+                    bail!("{} row {}: column {col} ≥ dim {}", p.display(), i + 1, m.dim);
+                }
+                indices.push(col);
+                vals.push(unhexf(v)?);
+            }
+            indptr.push(indices.len());
+        }
+        if labels.len() != rows {
+            bail!("{}: {} rows, manifest says {rows}", p.display(), labels.len());
+        }
+        let csr = CsrMat::new(rows, m.dim, indptr, indices, vals);
+        let x = if m.is_sparse_under(repr) {
+            Points::Sparse(csr)
+        } else {
+            Points::Dense(csr.to_dense())
+        };
+        let name = format!("{}-s{k}", m.name);
+        Ok(Dataset::new(name, x, labels).with_labels(m.label_pair))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::libsvm::{read_file_with, write_file};
+    use crate::data::synth;
+    use crate::util::prng::Rng;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("hss_svm_shard_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    /// Write a small synthetic dataset to a libsvm file; returns paths.
+    fn synth_file(dir: &Path, n: usize, dim: usize) -> PathBuf {
+        let mut rng = Rng::new(7);
+        let ds = synth::blobs(n, dim, 4, 0.6, &mut rng);
+        let path = dir.join("ds.libsvm");
+        write_file(&ds, &path).unwrap();
+        path
+    }
+
+    #[test]
+    fn round_robin_split_and_exact_reload() {
+        let dir = tmpdir("rr");
+        let src = synth_file(&dir, 53, 5);
+        let full = read_file_with(&src, None, Repr::Auto).unwrap();
+        let m = write_shards(&src, dir.join("s4"), 4).unwrap();
+        assert_eq!(m.rows, 53);
+        assert_eq!(m.shard_rows, vec![14, 13, 13, 13], "ragged last shards");
+        assert_eq!(m.dim, full.dim());
+        let set = ShardSet::open(dir.join("s4")).unwrap();
+        // row i of the file lands in shard i % 4 at position i / 4, with
+        // bit-exact values and the same ±1 labels as the in-memory read
+        for k in 0..4 {
+            let sh = set.load_shard(k, Repr::Auto).unwrap();
+            assert_eq!(sh.len(), m.shard_rows[k]);
+            for i in 0..sh.len() {
+                let gi = i * 4 + k;
+                assert_eq!(sh.y[i], full.y[gi], "label row {gi}");
+                assert_eq!(sh.point(i), full.point(gi), "features row {gi}");
+            }
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn k1_shard_equals_in_memory_read() {
+        let dir = tmpdir("k1");
+        let src = synth_file(&dir, 31, 4);
+        let full = read_file_with(&src, None, Repr::Auto).unwrap();
+        write_shards(&src, dir.join("s1"), 1).unwrap();
+        let set = ShardSet::open(dir.join("s1")).unwrap();
+        let sh = set.load_shard(0, Repr::Auto).unwrap();
+        assert_eq!(sh.y, full.y);
+        assert_eq!(sh.labels, full.labels);
+        assert_eq!(sh.is_sparse(), full.is_sparse());
+        for i in 0..full.len() {
+            assert_eq!(sh.point(i), full.point(i));
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn label_mappings_match_reader() {
+        let dir = tmpdir("lab");
+        for (tag, text, want_y, want_pair) in [
+            ("zero_one", "0 1:1.0\n1 1:2.0\n", vec![-1.0, 1.0], [0.0, 1.0]),
+            ("one_two", "1 1:1.0\n2 1:2.0\n", vec![-1.0, 1.0], [1.0, 2.0]),
+            ("pm1", "-1 1:1.0\n+1 1:2.0\n", vec![-1.0, 1.0], DEFAULT_LABEL_PAIR),
+            ("single", "2 1:1.0\n2 1:2.0\n", vec![1.0, 1.0], DEFAULT_LABEL_PAIR),
+            ("halves", "-0.5 1:1.0\n0.5 1:2.0\n", vec![-1.0, 1.0], [-0.5, 0.5]),
+        ] {
+            let src = dir.join(format!("{tag}.libsvm"));
+            std::fs::write(&src, text).unwrap();
+            let sdir = dir.join(format!("{tag}.shards"));
+            write_shards(&src, &sdir, 2).unwrap();
+            let set = ShardSet::open(&sdir).unwrap();
+            let a = set.load_shard(0, Repr::Auto).unwrap();
+            let b = set.load_shard(1, Repr::Auto).unwrap();
+            assert_eq!(vec![a.y[0], b.y[0]], want_y, "{tag}");
+            assert_eq!(a.labels, want_pair, "{tag}");
+            assert_eq!(b.labels, want_pair, "{tag}");
+        }
+        // three classes is rejected at shard time, like the reader
+        let src = dir.join("tri.libsvm");
+        std::fs::write(&src, "1 1:1\n2 1:1\n3 1:1\n").unwrap();
+        assert!(write_shards(&src, dir.join("tri.shards"), 2).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn global_auto_repr_rule() {
+        let dir = tmpdir("repr");
+        // wide + sparse globally → every shard CSR, even a shard whose
+        // local density would round the other way
+        let text = "+1 1:1 100:2\n-1 50:1\n+1 7:3\n-1 99:1\n";
+        let src = dir.join("wide.libsvm");
+        std::fs::write(&src, text).unwrap();
+        write_shards(&src, dir.join("w"), 2).unwrap();
+        let set = ShardSet::open(dir.join("w")).unwrap();
+        assert!(set.manifest().is_sparse_under(Repr::Auto));
+        assert!(set.load_shard(0, Repr::Auto).unwrap().is_sparse());
+        assert!(set.load_shard(1, Repr::Auto).unwrap().is_sparse());
+        assert!(!set.load_shard(0, Repr::Dense).unwrap().is_sparse());
+        // narrow data stays dense under Auto
+        let src2 = dir.join("narrow.libsvm");
+        std::fs::write(&src2, "+1 8:1\n-1 2:1\n").unwrap();
+        write_shards(&src2, dir.join("n"), 2).unwrap();
+        let set2 = ShardSet::open(dir.join("n")).unwrap();
+        assert!(!set2.load_shard(0, Repr::Auto).unwrap().is_sparse());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn empty_shards_when_k_exceeds_rows() {
+        let dir = tmpdir("empty");
+        let src = dir.join("two.libsvm");
+        std::fs::write(&src, "+1 1:1.0\n-1 2:1.0\n").unwrap();
+        let m = write_shards(&src, dir.join("s5"), 5).unwrap();
+        assert_eq!(m.shard_rows, vec![1, 1, 0, 0, 0]);
+        let set = ShardSet::open(dir.join("s5")).unwrap();
+        let e = set.load_shard(4, Repr::Auto).unwrap();
+        assert_eq!(e.len(), 0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn open_or_create_reuses_matching_manifest() {
+        let dir = tmpdir("reuse");
+        let src = synth_file(&dir, 20, 3);
+        let sdir = dir.join("s");
+        let a = ShardSet::open_or_create(&src, &sdir, 3).unwrap();
+        let stamp = std::fs::metadata(manifest_path(&sdir)).unwrap().modified().unwrap();
+        // same K: reused, manifest untouched
+        let b = ShardSet::open_or_create(&src, &sdir, 3).unwrap();
+        assert_eq!(stamp, std::fs::metadata(manifest_path(&sdir)).unwrap().modified().unwrap());
+        assert_eq!(a.manifest().rows, b.manifest().rows);
+        // different K: re-sharded
+        let c = ShardSet::open_or_create(&src, &sdir, 2).unwrap();
+        assert_eq!(c.shards(), 2);
+        assert_eq!(c.manifest().rows, 20);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn validation_errors_carry_line_numbers() {
+        let dir = tmpdir("err");
+        let src = dir.join("bad.libsvm");
+        std::fs::write(&src, "+1 1:1.0\n-1 5:1 3:2\n").unwrap();
+        let e = write_shards(&src, dir.join("s"), 2).unwrap_err();
+        let msg = format!("{e:#}");
+        assert!(msg.contains("line 2") && msg.contains("ascending"), "{msg}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -82,6 +82,15 @@ impl HssParams {
         }
     }
 
+    /// Same parameters, different sampling/clustering seed. The sharded
+    /// consensus trainer (`admm::consensus`) derives one seed per shard
+    /// with this (shard-major deterministic forks; shard 0 keeps the
+    /// base seed so a K = 1 run IS the in-memory trainer bit-for-bit).
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
     /// Tight tolerances for validation tests (near-exact compression).
     pub fn near_exact() -> Self {
         HssParams {

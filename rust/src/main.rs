@@ -10,13 +10,13 @@
 //!   help        this text
 
 use anyhow::{bail, Context, Result};
-use hss_svm::admm::AdmmParams;
+use hss_svm::admm::{AdmmParams, ConsensusTrainer};
 use hss_svm::cli::Args;
 use hss_svm::cluster::SplitMethod;
 use hss_svm::coordinator::{run_suite, GridSearch, SuiteConfig};
 use hss_svm::data::libsvm::{LibsvmData, Repr};
 use hss_svm::data::synth::Table1Spec;
-use hss_svm::data::{libsvm, scale, synth, Dataset};
+use hss_svm::data::{libsvm, scale, synth, Dataset, ShardSet};
 use hss_svm::eval::{figures, report, tables};
 use hss_svm::hss::HssParams;
 use hss_svm::kernel::Kernel;
@@ -69,11 +69,23 @@ USAGE:
                      [--threads N] [--pjrt]
   hss-svm train      --train-file f.libsvm --test-file g.libsvm [...same]
                      [--save-model m.model] [--sparse|--dense] [--binary]
+                     [--raw]
                                          # >2 distinct labels auto-train
                                          # one-vs-one multiclass (pairs
                                          # in parallel, C grid batched);
                                          # --binary forces the strict
-                                         # 2-class reader
+                                         # 2-class reader; --raw skips
+                                         # the min-max feature scaling
+  hss-svm train      --train-file f.libsvm --shards K [--shard-dir D]
+                     [--test-file g.libsvm] [...same]
+                                         # out-of-core: split f into K
+                                         # on-disk CSR shards (one
+                                         # streaming pass, reused when D
+                                         # matches), train block-diagonal
+                                         # consensus ADMM with one shard
+                                         # resident at a time; features
+                                         # stay raw (unscaled); result is
+                                         # a plain .model file
   hss-svm predict    --model m.model --test-file g.libsvm [--out pred.txt]
                      [--pjrt] [--sparse|--dense]
                                          # OvO model files predict via
@@ -96,6 +108,10 @@ USAGE:
                                          # STATS | SHUTDOWN | QUIT
   hss-svm grid       --dataset <name> [--scale F] [--h 0.1,1,10]
                      [--c 0.1,1,10] [--hss low|high] [--threads N]
+  hss-svm grid       --train-file f.libsvm --shards K --test-file g.libsvm
+                     [--shard-dir D] [...same]
+                                         # out-of-core grid: one consensus
+                                         # build per h, all C batched
   hss-svm experiment --id table1|table2|table3|table4|table5|fig1|fig2|reuse|all
                      [--scale F] [--datasets a,b,...] [--out results/]
                      [--baseline-cap N] [--threads N]
@@ -174,7 +190,12 @@ fn finish_binary_pair(args: &Args, mut train: Dataset, repr: Repr) -> Result<(Da
             te
         }
     };
-    scale::scale_pair(&mut train, &mut test);
+    // --raw skips the fit-on-train min-max scaling: needed to compare
+    // against the sharded path, which streams raw features (a global
+    // min/max would need a second pass over the file)
+    if !args.has("raw") {
+        scale::scale_pair(&mut train, &mut test);
+    }
     Ok((train, test))
 }
 
@@ -245,10 +266,89 @@ fn load_pair_auto(args: &Args) -> Result<LoadedPair> {
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
+    // the sharded route never loads the full training set — it must
+    // branch BEFORE load_pair_auto touches the file
+    if args.usize_or("shards", 0)? > 0 {
+        return cmd_train_sharded(args);
+    }
     match load_pair_auto(args)? {
         LoadedPair::Binary(train, test) => cmd_train_binary(args, train, test),
         LoadedPair::Multi(train, test) => cmd_train_multiclass(args, train, test),
     }
+}
+
+/// Resolve the shard set for `--shards K`: reuse `--shard-dir` (or the
+/// `<train-file>.shards` default) when its manifest matches, re-shard
+/// the source file in one streaming pass otherwise. The raw features
+/// are NOT min-max scaled on this path (that would need a second pass);
+/// compare with the in-memory trainer via `--raw`.
+fn open_shards(args: &Args, k: usize) -> Result<ShardSet> {
+    let train_file = args
+        .str_opt("train-file")
+        .context("--shards requires --train-file (synthetic datasets fit in memory)")?;
+    let dir = match args.str_opt("shard-dir") {
+        Some(d) => PathBuf::from(d),
+        None => PathBuf::from(format!("{train_file}.shards")),
+    };
+    ShardSet::open_or_create(train_file, &dir, k)
+}
+
+/// Out-of-core binary training over on-disk CSR shards: block-diagonal
+/// consensus ADMM (`hss_svm::admm::consensus`), raw points resident one
+/// shard at a time. The test set (if any) is an ordinary in-memory
+/// read — evaluation data is small; only training is sharded.
+fn cmd_train_sharded(args: &Args) -> Result<()> {
+    let k = args.usize_or("shards", 0)?;
+    let shards = open_shards(args, k)?;
+    let m = shards.manifest().clone();
+    let repr = repr_from(args)?;
+    let threads = args.usize_or("threads", threadpool::default_threads())?;
+    let beta = args.f64_or("beta", Table1Spec::beta_for(m.rows))?;
+    let h = args.f64_or("h", 1.0)?;
+    let c = args.f64_or("c", 1.0)?;
+    let iters = args.usize_or("iters", 10)?;
+    let hss = hss_params_from(args)?;
+    println!(
+        "training out-of-core on {} ({} pts x {} feats, {} nnz, {} shards under {}; raw features)",
+        m.name,
+        m.rows,
+        m.dim,
+        m.nnz,
+        m.shards,
+        shards.dir().display()
+    );
+    if args.has("pjrt") {
+        eprintln!("train: --pjrt ignored for sharded training (prediction only)");
+    }
+    let admm = AdmmParams { beta, max_it: iters, relax: 1.0, tol: 0.0 };
+    let (trainer, stats) = ConsensusTrainer::build(&shards, repr, Kernel::Gaussian { h }, &hss, admm, threads)?;
+    let t = Timer::start();
+    let (model, _out) = trainer.train_c(&shards, c)?;
+    let admm_secs = t.secs();
+    println!(
+        "  compression   {:>9.3} s   (HSS max rank {}, {:.3} MB across {} resident shards, {} kernel evals)",
+        stats.compress_secs,
+        stats.hss_max_rank,
+        stats.hss_memory_bytes as f64 / 1e6,
+        stats.resident_shards,
+        stats.kernel_evals
+    );
+    println!("  factorization {:>9.3} s", stats.factor_secs);
+    println!("  ADMM ({iters} it)  {admm_secs:>9.3} s   (consensus across {k} shards)");
+    println!("  support vectors: {}", model.n_sv());
+    if let Some(f) = args.str_opt("test-file") {
+        let test_repr = test_repr_for(repr, m.is_sparse_under(repr));
+        let test = libsvm::read_file_with(f, Some(m.dim), test_repr)?;
+        let t = Timer::start();
+        let acc = predict::accuracy(&model, &test, threads);
+        println!("  prediction    {:>9.3} s   (native path)", t.secs());
+        println!("  test accuracy:   {:.3}%", acc * 100.0);
+    }
+    if let Some(path) = args.str_opt("save-model") {
+        hss_svm::svm::persist::save(&model, path)?;
+        println!("  model saved to {path}");
+    }
+    Ok(())
 }
 
 /// One-vs-one multiclass training: parallel pairwise subproblems over
@@ -601,6 +701,9 @@ fn cmd_serve_tcp(args: &Args) -> Result<()> {
 
 fn cmd_grid(args: &Args) -> Result<()> {
     let threads = args.usize_or("threads", threadpool::default_threads())?;
+    if args.usize_or("shards", 0)? > 0 {
+        return cmd_grid_sharded(args, threads);
+    }
     let pair = load_pair_auto(args)?;
     let (name, n) = match &pair {
         LoadedPair::Binary(train, _) => (train.name.clone(), train.len()),
@@ -629,6 +732,52 @@ fn cmd_grid(args: &Args) -> Result<()> {
             grid.run_multiclass(train, test)?
         }
     };
+    println!("{}", hss_svm::coordinator::grid::ascii_heatmap(&res, &h_values, &c_values));
+    println!(
+        "compression {:.3}s ({} h values) | factorization {:.3}s | total ADMM {:.3}s ({} cells)",
+        res.compress_secs,
+        h_values.len(),
+        res.factor_secs,
+        res.total_admm_secs,
+        res.cells.len()
+    );
+    println!(
+        "best: h = {}, C = {} -> accuracy {:.3}%",
+        res.best_h,
+        report::c_set(&res.best_cs),
+        res.best_accuracy * 100.0
+    );
+    Ok(())
+}
+
+/// Out-of-core grid search: one consensus build per h, every C batched
+/// — the sharded analog of the in-memory reuse structure. Needs an
+/// explicit `--test-file` (there is no in-memory corpus to split).
+fn cmd_grid_sharded(args: &Args, threads: usize) -> Result<()> {
+    let k = args.usize_or("shards", 0)?;
+    let shards = open_shards(args, k)?;
+    let m = shards.manifest().clone();
+    let repr = repr_from(args)?;
+    let test_file = args
+        .str_opt("test-file")
+        .context("grid --shards requires --test-file (no in-memory corpus to split)")?;
+    let test_repr = test_repr_for(repr, m.is_sparse_under(repr));
+    let test = libsvm::read_file_with(test_file, Some(m.dim), test_repr)?;
+    let beta = args.f64_or("beta", Table1Spec::beta_for(m.rows))?;
+    let h_values = args.f64_list_or("h", &[0.1, 1.0, 10.0])?;
+    let c_values = args.f64_list_or("c", &[0.1, 1.0, 10.0])?;
+    let grid = GridSearch {
+        h_values: h_values.clone(),
+        c_values: c_values.clone(),
+        hss: hss_params_from(args)?,
+        admm: AdmmParams { beta, max_it: args.usize_or("iters", 10)?, relax: 1.0, tol: 0.0 },
+        threads,
+    };
+    println!(
+        "grid search out-of-core on {} ({} pts, {} shards), beta = {beta}",
+        m.name, m.rows, m.shards
+    );
+    let res = grid.run_sharded(&shards, repr, &test)?;
     println!("{}", hss_svm::coordinator::grid::ascii_heatmap(&res, &h_values, &c_values));
     println!(
         "compression {:.3}s ({} h values) | factorization {:.3}s | total ADMM {:.3}s ({} cells)",

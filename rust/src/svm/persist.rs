@@ -405,12 +405,15 @@ fn parse_kv(line: &str, key: &str) -> Result<f64> {
     unhexf(p.next().with_context(|| format!("missing {key} value"))?)
 }
 
-/// Exact f64 as hex bits.
-fn hexf(v: f64) -> String {
+/// Exact f64 as hex bits. Shared with the shard format (`data/shard`),
+/// which stores feature values the same way so a shard→load round-trip
+/// is bit-exact.
+pub(crate) fn hexf(v: f64) -> String {
     format!("{:016x}", v.to_bits())
 }
 
-fn unhexf(s: &str) -> Result<f64> {
+/// Inverse of [`hexf`].
+pub(crate) fn unhexf(s: &str) -> Result<f64> {
     let bits = u64::from_str_radix(s, 16).with_context(|| format!("bad f64 hex {s:?}"))?;
     Ok(f64::from_bits(bits))
 }

@@ -124,6 +124,71 @@ impl Histogram {
     }
 }
 
+/// Peak resident-set size of this process in bytes (`VmHWM` from
+/// `/proc/self/status`), `None` off Linux. This is the high-water mark
+/// since process start — measure the phase under test FIRST, before
+/// anything else inflates it. The `oos-smoke` CI lane uses it to prove
+/// the out-of-core trainer never goes near the dense-kernel footprint.
+pub fn peak_rss_bytes() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            let kb: u64 = rest.trim().trim_end_matches("kB").trim().parse().ok()?;
+            return Some(kb * 1024);
+        }
+    }
+    None
+}
+
+/// Commit SHA the benchmark binary was built from: `GITHUB_SHA` in CI,
+/// `git rev-parse HEAD` locally, `"unknown"` when neither resolves.
+pub fn git_sha() -> String {
+    if let Ok(s) = std::env::var("GITHUB_SHA") {
+        if !s.is_empty() {
+            return s;
+        }
+    }
+    std::process::Command::new("git")
+        .args(["rev-parse", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".to_string())
+}
+
+/// Comma-joined compile-time feature set (`"default"` when none).
+pub fn feature_set() -> String {
+    let mut f = Vec::new();
+    if cfg!(feature = "pjrt") {
+        f.push("pjrt");
+    }
+    if cfg!(feature = "xla-client") {
+        f.push("xla-client");
+    }
+    if f.is_empty() {
+        "default".to_string()
+    } else {
+        f.join(",")
+    }
+}
+
+/// Provenance fields every BENCH_*.json artifact carries, as pre-quoted
+/// JSON member lines (no surrounding braces): the commit, the machine's
+/// default thread count and the feature set — enough to tell two
+/// artifacts apart without the workflow-run context.
+pub fn provenance_json(indent: &str) -> String {
+    format!(
+        "{indent}\"git_sha\": \"{}\",\n{indent}\"features\": \"{}\",\n\
+         {indent}\"default_threads\": {},\n",
+        git_sha(),
+        feature_set(),
+        crate::util::threadpool::default_threads()
+    )
+}
+
 /// Benchmark runner with a per-case time budget.
 pub struct Bench {
     budget: Duration,
@@ -230,6 +295,19 @@ mod tests {
             }
         });
         assert_eq!(h.count(), 4100);
+    }
+
+    #[test]
+    fn provenance_and_rss_are_well_formed() {
+        let p = provenance_json("  ");
+        assert!(p.contains("\"git_sha\": \""));
+        assert!(p.contains("\"features\": \""));
+        assert!(p.contains("\"default_threads\": "));
+        #[cfg(target_os = "linux")]
+        {
+            let rss = peak_rss_bytes().expect("VmHWM is present on Linux");
+            assert!(rss > 1 << 20, "peak RSS {rss} implausibly small");
+        }
     }
 
     #[test]

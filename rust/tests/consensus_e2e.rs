@@ -1,0 +1,191 @@
+//! End-to-end contracts of the sharded consensus-ADMM trainer
+//! (`hss_svm::admm::consensus`):
+//!
+//! * K = 1 is the in-memory trainer, bit-for-bit (same model file);
+//! * the trained model is a pure function of the shard count — bitwise
+//!   identical across threads {1, 2, 8} for each K, and across a
+//!   re-shard + re-train of the same source;
+//! * ragged last shards and single-row shards (the dense fallback
+//!   backend) train and classify;
+//! * the sharded CLI path persists through the standard v1.1 model
+//!   format, so predict works unchanged.
+//!
+//! Sizes are kept small: this runs under tier-1 `cargo test`.
+
+use hss_svm::admm::{AdmmParams, ConsensusTrainer};
+use hss_svm::data::libsvm::{self, Repr};
+use hss_svm::data::{synth, Dataset, ShardSet};
+use hss_svm::hss::HssParams;
+use hss_svm::kernel::Kernel;
+use hss_svm::svm::train::train_hss_svm;
+use hss_svm::svm::{persist, predict};
+use hss_svm::util::prng::Rng;
+use std::path::{Path, PathBuf};
+
+fn work_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir()
+        .join(format!("hss_svm_consensus_e2e_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn stage(dir: &Path, n: usize, test_n: usize, seed: u64) -> (PathBuf, Dataset) {
+    let mut rng = Rng::new(seed);
+    let ds = synth::blobs(n + test_n, 5, 4, 0.45, &mut rng);
+    let (train, test) = ds.split_at(n);
+    let src = dir.join("train.libsvm");
+    libsvm::write_file(&train, &src).unwrap();
+    (src, test)
+}
+
+fn hss_params() -> HssParams {
+    let mut p = HssParams::low_accuracy();
+    p.leaf_size = 32;
+    p
+}
+
+fn admm_params() -> AdmmParams {
+    AdmmParams { beta: 100.0, max_it: 10, relax: 1.0, tol: 0.0 }
+}
+
+/// Shard (or reuse), train at the given thread count, persist, return
+/// the model file bytes.
+fn sharded_model_bytes(src: &Path, dir: &Path, k: usize, threads: usize) -> Vec<u8> {
+    let set = ShardSet::open_or_create(src, dir.join(format!("s{k}")), k).unwrap();
+    let (trainer, _) = ConsensusTrainer::build(
+        &set,
+        Repr::Auto,
+        Kernel::Gaussian { h: 1.5 },
+        &hss_params(),
+        admm_params(),
+        threads,
+    )
+    .unwrap();
+    let (model, _) = trainer.train_c(&set, 1.0).unwrap();
+    let path = dir.join(format!("m_k{k}_t{threads}.model"));
+    persist::save(&model, &path).unwrap();
+    std::fs::read(&path).unwrap()
+}
+
+#[test]
+fn k1_is_the_in_memory_trainer_bitwise() {
+    let dir = work_dir("k1");
+    let (src, _) = stage(&dir, 160, 40, 171);
+    let sharded = sharded_model_bytes(&src, &dir, 1, 2);
+
+    // the in-memory reference: same raw (unscaled) file, same params
+    let ds = libsvm::read_file_with(&src, None, Repr::Auto).unwrap();
+    let (model, _) = train_hss_svm(
+        &ds,
+        Kernel::Gaussian { h: 1.5 },
+        &hss_params(),
+        &admm_params(),
+        1.0,
+        2,
+    )
+    .unwrap();
+    let ref_path = dir.join("inmem.model");
+    persist::save(&model, &ref_path).unwrap();
+    let inmem = std::fs::read(&ref_path).unwrap();
+
+    assert_eq!(sharded, inmem, "K = 1 sharded model differs from the in-memory trainer");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn model_is_a_pure_function_of_shard_count() {
+    // the (shards × threads) grid: for each K the model must be
+    // bitwise-identical across thread counts — including a count
+    // exceeding the shard count
+    let dir = work_dir("grid");
+    let (src, test) = stage(&dir, 200, 60, 172);
+    for k in [2usize, 3] {
+        let reference = sharded_model_bytes(&src, &dir, k, 1);
+        for threads in [2usize, 8] {
+            let got = sharded_model_bytes(&src, &dir, k, threads);
+            assert_eq!(
+                got, reference,
+                "K = {k}: model at {threads} threads differs from 1 thread"
+            );
+        }
+        // and the model actually classifies
+        let model = persist::load(dir.join(format!("m_k{k}_t1.model"))).unwrap();
+        let acc = predict::accuracy(&model, &test, 2);
+        assert!(acc > 0.8, "K = {k} accuracy {acc}");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn reshard_and_retrain_is_bitwise_stable() {
+    let dir = work_dir("reshard");
+    let (src, _) = stage(&dir, 150, 30, 173);
+    let first = sharded_model_bytes(&src, &dir, 3, 2);
+    // drop the shard directory entirely: open_or_create must re-shard
+    // from the source and reach the exact same model
+    std::fs::remove_dir_all(dir.join("s3")).unwrap();
+    let second = sharded_model_bytes(&src, &dir, 3, 2);
+    assert_eq!(first, second, "re-shard + re-train changed the model");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn ragged_last_shards_train_and_classify() {
+    // n = 101 over K = 4: round-robin gives rows [26, 25, 25, 25]
+    let dir = work_dir("ragged");
+    let (src, test) = stage(&dir, 101, 40, 174);
+    let set = ShardSet::open_or_create(&src, dir.join("s4"), 4).unwrap();
+    let m = set.manifest();
+    assert_eq!(m.shard_rows, vec![26, 25, 25, 25]);
+    let (trainer, stats) = ConsensusTrainer::build(
+        &set,
+        Repr::Auto,
+        Kernel::Gaussian { h: 1.5 },
+        &hss_params(),
+        admm_params(),
+        2,
+    )
+    .unwrap();
+    assert_eq!(stats.resident_shards, 4);
+    assert_eq!(trainer.n(), 101);
+    let (model, _) = trainer.train_c(&set, 1.0).unwrap();
+    let acc = predict::accuracy(&model, &test, 2);
+    assert!(acc > 0.75, "ragged-shard accuracy {acc}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn single_row_shards_use_the_dense_fallback() {
+    // K = 8 over 9 rows: one 2-row shard, seven 1-row shards — the
+    // 1-row shards cannot build a cluster tree and must fall back to
+    // the exact dense backend; the run must still be thread-invariant
+    let dir = work_dir("tiny");
+    let (src, _) = stage(&dir, 9, 6, 175);
+    let b1 = sharded_model_bytes(&src, &dir, 8, 1);
+    let b2 = sharded_model_bytes(&src, &dir, 8, 2);
+    assert_eq!(b1, b2, "single-row-shard model differs across threads");
+    let model = persist::load(dir.join("m_k8_t1.model")).unwrap();
+    assert!(model.bias.is_finite());
+    assert!(model.n_sv() <= 9);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn sharded_models_predict_through_the_standard_path() {
+    // persistence rides the v1.1 format: load_any + decision_function
+    // treat a consensus model exactly like an in-memory one
+    let dir = work_dir("persist");
+    let (src, test) = stage(&dir, 120, 30, 176);
+    let bytes = sharded_model_bytes(&src, &dir, 4, 2);
+    let path = dir.join("roundtrip.model");
+    std::fs::write(&path, &bytes).unwrap();
+    match persist::load_any(&path).unwrap() {
+        hss_svm::svm::AnyModel::Binary(m) => {
+            let f = predict::decision_function(&m, &test.x, 2);
+            assert_eq!(f.len(), test.len());
+            assert!(f.iter().all(|v| v.is_finite()));
+        }
+        _ => panic!("sharded training must persist a binary v1.1 model"),
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
