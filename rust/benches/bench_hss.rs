@@ -329,6 +329,97 @@ fn main() {
         ovo_model.n_sv_unique()
     );
 
+    // --- simd-f32 backend: f32 kernel block + predict tile vs the f64
+    //     reference (DESIGN.md §13). Asserts the documented ≤1e-4
+    //     relative tolerance on every run; the speedup is gated against
+    //     the committed baseline only when the AVX2+FMA path is active
+    //     (the scalar-f32 fallback has no speed contract).
+    #[cfg(feature = "simd-f32")]
+    let simd_metrics: Option<(f64, bool, f64)> = {
+        use hss_svm::compute::{ComputeBackend, SimdF32Backend};
+        let (m_b, sv_b, d_b) = if opts.smoke { (256, 128, 64) } else { (512, 256, 128) };
+        let reps = if opts.smoke { 10 } else { 40 };
+        let simd = SimdF32Backend::new();
+        println!(
+            "\n-- simd-f32 backend: kernel block + predict tile ({m_b}x{sv_b}, dim {d_b}, \
+             avx2 {}) --",
+            simd.avx2_active()
+        );
+        let mut srng = Rng::new(17);
+        let xq = Points::Dense(hss_svm::linalg::Mat::gauss(m_b, d_b, &mut srng));
+        let svp = Points::Dense(hss_svm::linalg::Mat::gauss(sv_b, d_b, &mut srng));
+        let cpu_b = hss_svm::compute::cpu();
+        let model_f32 = hss_svm::svm::SvmModel {
+            sv: svp.clone(),
+            alpha_y: (0..sv_b).map(|_| srng.gauss()).collect(),
+            bias: 0.05,
+            kernel,
+            c: 1.0,
+            labels: hss_svm::data::DEFAULT_LABEL_PAIR,
+        };
+
+        let t = Timer::start();
+        for _ in 0..reps {
+            std::hint::black_box(cpu_b.kernel_block(&kernel, &xq, &svp));
+        }
+        let f64_block_secs = t.secs();
+        let t = Timer::start();
+        for _ in 0..reps {
+            std::hint::black_box(simd.kernel_block(&kernel, &xq, &svp));
+        }
+        let f32_block_secs = t.secs();
+
+        let t = Timer::start();
+        for _ in 0..reps {
+            std::hint::black_box(hss_svm::svm::predict::decision_function(&model_f32, &xq, 1));
+        }
+        let f64_predict_secs = t.secs();
+        let t = Timer::start();
+        for _ in 0..reps {
+            std::hint::black_box(hss_svm::svm::predict::decision_function_with(
+                &simd, &model_f32, &xq, 1,
+            ));
+        }
+        let f32_predict_secs = t.secs();
+
+        // tolerance contract, checked on the benched shapes themselves
+        let kb64 = cpu_b.kernel_block(&kernel, &xq, &svp);
+        let kb32 = simd.kernel_block(&kernel, &xq, &svp);
+        let f64_dec = hss_svm::svm::predict::decision_function(&model_f32, &xq, 1);
+        let f32_dec = hss_svm::svm::predict::decision_function_with(&simd, &model_f32, &xq, 1);
+        let mut simd_err = 0.0f64;
+        for (a, z) in kb64.data().iter().zip(kb32.data().iter()) {
+            simd_err = simd_err.max((a - z).abs() / (1.0 + z.abs()));
+        }
+        for (a, z) in f64_dec.iter().zip(f32_dec.iter()) {
+            simd_err = simd_err.max((a - z).abs() / (1.0 + z.abs()));
+        }
+        assert!(
+            simd_err <= 1e-4,
+            "simd-f32 backend deviates beyond the documented tolerance: {simd_err:.3e}"
+        );
+        let backend_simd_f32_speedup =
+            (f64_block_secs + f64_predict_secs) / (f32_block_secs + f32_predict_secs).max(1e-12);
+        b.record_once(
+            "simd-f32: f64 block+predict",
+            Duration::from_secs_f64(f64_block_secs + f64_predict_secs),
+        );
+        b.record_once(
+            "simd-f32: f32 block+predict",
+            Duration::from_secs_f64(f32_block_secs + f32_predict_secs),
+        );
+        println!(
+            "    kernel block  {f64_block_secs:>8.3} s → {f32_block_secs:>8.3} s\n    \
+             predict       {f64_predict_secs:>8.3} s → {f32_predict_secs:>8.3} s\n    \
+             combined      {backend_simd_f32_speedup:.2}x speedup \
+             (max rel |Δ| = {simd_err:.1e}, avx2 {})",
+            simd.avx2_active()
+        );
+        Some((backend_simd_f32_speedup, simd.avx2_active(), simd_err))
+    };
+    #[cfg(not(feature = "simd-f32"))]
+    let simd_metrics: Option<(f64, bool, f64)> = None;
+
     if !opts.smoke {
         // --- ablation: ANN sampling vs pure random ---
         println!("\n-- ablation: column sampling strategy (n=3000) --");
@@ -395,6 +486,11 @@ fn main() {
         json.push_str(&format!("  \"ovo_shared_predict_secs\": {shared_predict_secs:.6},\n"));
         json.push_str(&format!("  \"ovo_shared_sv_speedup\": {ovo_shared_sv_speedup:.4},\n"));
         json.push_str(&format!("  \"ovo_max_rel_dev\": {ovo_dev:.3e},\n"));
+        if let Some((sp, avx2, err)) = simd_metrics {
+            json.push_str(&format!("  \"backend_simd_f32_speedup\": {sp:.4},\n"));
+            json.push_str(&format!("  \"backend_simd_f32_avx2\": {avx2},\n"));
+            json.push_str(&format!("  \"backend_simd_f32_max_rel_err\": {err:.3e},\n"));
+        }
         json.push_str(&format!("  \"max_dev\": {max_dev:.3e}\n"));
         json.push_str("}\n");
         let out = from_repo_root(path);
@@ -447,6 +543,24 @@ fn main() {
                  the committed baseline"
             );
             failed = true;
+        }
+        if let Some((sp, avx2, _)) = simd_metrics {
+            // Enforced only on AVX2 hosts: the scalar-f32 fallback
+            // keeps the tolerance contract (asserted above) but has no
+            // speed contract over the f64 gemm path.
+            let floor_simd = 0.75 * baseline_key("backend_simd_f32_speedup");
+            if avx2 && sp < floor_simd {
+                eprintln!(
+                    "[hss] REGRESSION: simd-f32 backend speedup {sp:.2}x fell >25% below the \
+                     committed baseline"
+                );
+                failed = true;
+            } else if !avx2 {
+                println!(
+                    "[hss] simd-f32 gate skipped: AVX2+FMA not detected \
+                     (scalar fallback, speedup {sp:.2}x)"
+                );
+            }
         }
         if failed {
             std::process::exit(1);

@@ -12,10 +12,10 @@
 //! compares optimizers with everything else held fixed.
 
 use crate::admm::solver::ShiftedSolve;
+use crate::compute::ComputeBackend;
 use crate::data::Dataset;
-use crate::kernel::block::kernel_block_pts_with_norms;
 use crate::kernel::Kernel;
-use crate::linalg::blas::{self, matmul, Trans};
+use crate::linalg::blas::{self, Trans};
 use crate::linalg::chol::Chol;
 use crate::linalg::Mat;
 use crate::util::prng::Rng;
@@ -44,16 +44,29 @@ impl NystromSolver {
         beta: f64,
         rng: &mut Rng,
     ) -> Result<Self> {
+        Self::new_with(crate::compute::cpu(), ds, kernel, m, beta, rng)
+    }
+
+    /// [`Self::new`] on an explicit [`ComputeBackend`]: the landmark
+    /// kernel blocks and the CᵀC gemm run on the backend.
+    pub fn new_with(
+        backend: &dyn ComputeBackend,
+        ds: &Dataset,
+        kernel: &Kernel,
+        m: usize,
+        beta: f64,
+        rng: &mut Rng,
+    ) -> Result<Self> {
         let n = ds.len();
         let m = m.clamp(1, n);
         let landmarks = rng.sample_indices(n, m);
         let norms = ds.x.self_norms();
         let lpts = ds.x.select_rows(&landmarks);
         let lnorms: Vec<f64> = landmarks.iter().map(|&i| norms[i]).collect();
-        let c = kernel_block_pts_with_norms(kernel, &ds.x, &norms, &lpts, &lnorms); // n×m
-        let mm = kernel_block_pts_with_norms(kernel, &lpts, &lnorms, &lpts, &lnorms); // m×m
+        let c = backend.kernel_block_with_norms(kernel, &ds.x, &norms, &lpts, &lnorms); // n×m
+        let mm = backend.kernel_block_with_norms(kernel, &lpts, &lnorms, &lpts, &lnorms); // m×m
         // βM + CᵀC (SPD for β > 0)
-        let mut small = matmul(&c, Trans::Yes, &c, Trans::No);
+        let mut small = backend.gemm(&c, Trans::Yes, &c, Trans::No);
         for i in 0..m {
             for j in 0..m {
                 small[(i, j)] += beta * mm[(i, j)];

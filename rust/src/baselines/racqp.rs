@@ -12,8 +12,8 @@
 //!   K_BB + βI + β y_B y_Bᵀ), which costs O(p²·d) kernel work per sweep —
 //!   the exact-kernel cost the paper's Table 3 exposes.
 
+use crate::compute::ComputeBackend;
 use crate::data::Dataset;
-use crate::kernel::block::kernel_block_pts_with_norms;
 use crate::kernel::Kernel;
 use crate::linalg::blas;
 use crate::linalg::chol::Chol;
@@ -57,6 +57,18 @@ pub fn train_racqp(
     c: f64,
     params: &RacqpParams,
 ) -> Result<(SvmModel, RacqpStats)> {
+    train_racqp_with(crate::compute::cpu(), ds, kernel, c, params)
+}
+
+/// [`train_racqp`] on an explicit [`ComputeBackend`]: the per-block
+/// kernel columns and the bias kernel block run on the backend.
+pub fn train_racqp_with(
+    backend: &dyn ComputeBackend,
+    ds: &Dataset,
+    kernel: Kernel,
+    c: f64,
+    params: &RacqpParams,
+) -> Result<(SvmModel, RacqpStats)> {
     let n = ds.len();
     let y = &ds.y;
     let beta = params.beta;
@@ -90,7 +102,7 @@ pub fn train_racqp(
             let xb_pts = ds.x.select_rows(block);
             let nb: Vec<f64> = block.iter().map(|&i| norms[i]).collect();
             kernel_evals += n * m;
-            let k_cols = kernel_block_pts_with_norms(&kernel, &ds.x, &norms, &xb_pts, &nb); // n×m
+            let k_cols = backend.kernel_block_with_norms(&kernel, &ds.x, &norms, &xb_pts, &nb); // n×m
 
             // subproblem over x_B (others fixed):
             //   min ½ x_Bᵀ Q_BB x_B + x_Bᵀ (Q_B,rest x_rest) − e x_B·y...
@@ -183,7 +195,7 @@ pub fn train_racqp(
         let mn: Vec<f64> = margin.iter().map(|&i| norms[i]).collect();
         kernel_evals += margin.len() * sv.rows();
         let svn = sv.self_norms();
-        let kb = kernel_block_pts_with_norms(&kernel, &mpts, &mn, &sv, &svn);
+        let kb = backend.kernel_block_with_norms(&kernel, &mpts, &mn, &sv, &svn);
         let mut f = vec![0.0; margin.len()];
         blas::gemv(&kb, &alpha_y, &mut f);
         let mut acc = 0.0;

@@ -12,8 +12,8 @@
 //! needs many iterations on large/difficult data — the slowness the paper
 //! measures is a property of the algorithm, reproduced here.
 
+use crate::compute::ComputeBackend;
 use crate::data::Dataset;
-use crate::kernel::block::kernel_row_pts;
 use crate::kernel::Kernel;
 use crate::svm::SvmModel;
 use std::collections::HashMap;
@@ -90,6 +90,18 @@ pub fn train_smo(
     c: f64,
     params: &SmoParams,
 ) -> (SvmModel, SmoStats) {
+    train_smo_with(crate::compute::cpu(), ds, kernel, c, params)
+}
+
+/// [`train_smo`] on an explicit [`ComputeBackend`]: the per-iteration
+/// kernel rows (the solver's only kernel work) run on the backend.
+pub fn train_smo_with(
+    backend: &dyn ComputeBackend,
+    ds: &Dataset,
+    kernel: Kernel,
+    c: f64,
+    params: &SmoParams,
+) -> (SvmModel, SmoStats) {
     let n = ds.len();
     let y = &ds.y;
     let norms = ds.x.self_norms();
@@ -100,7 +112,7 @@ pub fn train_smo(
     let mut cache = RowCache::new(n, params.cache_bytes);
     let compute_row = |i: usize, norms: &[f64], out: &mut Vec<f64>| {
         out.resize(n, 0.0);
-        kernel_row_pts(&kernel, &ds.x, i, norms[i], &ds.x, norms, out);
+        backend.kernel_row(&kernel, &ds.x, i, norms[i], &ds.x, norms, out);
     };
 
     let mut alpha = vec![0.0f64; n];

@@ -1,0 +1,23 @@
+//! The f64 reference backend.
+//!
+//! Deliberately empty: every [`ComputeBackend`] method keeps its default
+//! body, and the defaults delegate to the exact free functions the
+//! call sites used before the trait existed. That makes the bitwise
+//! contract (`CpuBackend` output ≡ pre-refactor output) hold **by
+//! construction**, not by re-verification — the existing
+//! thread-invariance, grid-vs-sequential, multiclass and consensus
+//! suites keep pinning the same code they always pinned.
+
+#![forbid(unsafe_code)]
+
+use super::ComputeBackend;
+
+/// The reference (f64, exact pre-refactor) compute path.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CpuBackend;
+
+impl ComputeBackend for CpuBackend {
+    fn name(&self) -> &'static str {
+        "cpu"
+    }
+}

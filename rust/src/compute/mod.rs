@@ -1,0 +1,293 @@
+//! Pluggable compute backends for the hot-path primitives.
+//!
+//! The paper's cost model concentrates in four dense kernels — the
+//! kernel-block evaluation (‖x‖² + ‖y‖² − 2xᵀy with a gemm/gather/merge
+//! xᵀy term), the BLAS-3 multi-RHS ULV solve sweeps, the matvec probes
+//! used during compression, and raw gemm. [`ComputeBackend`] names those
+//! primitives once so accelerator and reduced-precision paths are
+//! drop-in implementations instead of per-call-site surgery
+//! (DESIGN.md §13).
+//!
+//! Three implementations ship today:
+//!
+//! - [`CpuBackend`] — the reference. Every method is the trait default,
+//!   which delegates to the exact pre-refactor free function, so its
+//!   output is **bit-for-bit identical** to the historical CPU path by
+//!   construction (pinned by `tests/backend_oracle.rs` and every
+//!   existing thread-invariance/bitwise suite).
+//! - [`SimdF32Backend`] (feature `simd-f32`) — opt-in f32 kernel-block /
+//!   prediction path with runtime AVX2+FMA dispatch and a scalar-f32
+//!   fallback, ≤1e-4 relative on decision values vs the f64 oracle.
+//! - [`crate::runtime::PjrtRuntime`] — the PJRT tile executor implements
+//!   the trait directly (accelerated decision tiles, CPU reference for
+//!   everything else), replacing the ad-hoc densify glue.
+//!
+//! Selection is one [`BackendChoice`] enum plumbed through
+//! `HssSvmTrainer`, `OvoEngine` entry points, the server registry and
+//! the `--backend` CLI flag.
+
+pub mod cpu;
+#[cfg(feature = "simd-f32")]
+pub mod simd_f32;
+
+pub use cpu::CpuBackend;
+#[cfg(feature = "simd-f32")]
+pub use simd_f32::SimdF32Backend;
+
+use crate::data::sparse::Points;
+use crate::hss::matvec;
+use crate::hss::ulv::UlvFactor;
+use crate::hss::Hss;
+use crate::kernel::Kernel;
+use crate::linalg::blas::{self, Trans};
+use crate::linalg::Mat;
+use anyhow::{bail, Result};
+use std::sync::Arc;
+
+/// The four hot compute primitives behind one seam.
+///
+/// Every method has a default implementation that calls the pre-refactor
+/// free function, so [`CpuBackend`] (which overrides nothing) is the
+/// bitwise reference; other backends override only the primitives they
+/// accelerate and inherit the reference path for the rest.
+pub trait ComputeBackend: Send + Sync {
+    /// Short id for logs / CLI echoes ("cpu", "simd-f32", "pjrt").
+    fn name(&self) -> &'static str;
+
+    // --- primitive 1: gemm (with transpose flags) ---
+
+    /// C = op(A)·op(B).
+    fn gemm(&self, a: &Mat, ta: Trans, b: &Mat, tb: Trans) -> Mat {
+        blas::matmul(a, ta, b, tb)
+    }
+
+    /// Row-banded parallel C = op(A)·op(B).
+    fn gemm_par(&self, threads: usize, a: &Mat, ta: Trans, b: &Mat, tb: Trans) -> Mat {
+        blas::matmul_par(threads, a, ta, b, tb)
+    }
+
+    // --- primitive 2: kernel block over `Points` pairings ---
+
+    /// K(X, Y) over any dense/CSR pairing (gemm | sparse-dense gather |
+    /// sparse-sparse merge).
+    fn kernel_block(&self, k: &Kernel, x: &Points, y: &Points) -> Mat {
+        crate::kernel::kernel_block_pts(k, x, y)
+    }
+
+    /// [`Self::kernel_block`] with caller-provided squared row norms
+    /// (the tiled-prediction hot path).
+    fn kernel_block_with_norms(
+        &self,
+        k: &Kernel,
+        x: &Points,
+        nx: &[f64],
+        y: &Points,
+        ny: &[f64],
+    ) -> Mat {
+        crate::kernel::kernel_block_pts_with_norms(k, x, nx, y, ny)
+    }
+
+    /// Parallel kernel block, banding the rows of X across threads.
+    fn kernel_block_par(&self, threads: usize, k: &Kernel, x: &Points, y: &Points) -> Mat {
+        crate::kernel::kernel_block_pts_par(threads, k, x, y)
+    }
+
+    /// Single kernel row K(x_i, Y) (SMO hot path).
+    fn kernel_row(
+        &self,
+        k: &Kernel,
+        x: &Points,
+        i: usize,
+        ni: f64,
+        y: &Points,
+        ny: &[f64],
+        out: &mut [f64],
+    ) {
+        crate::kernel::kernel_row_pts(k, x, i, ni, y, ny, out)
+    }
+
+    // --- primitive 3: shifted solve apply (blocked Chol/LU + ULV) ---
+
+    /// (K̃ + βI)⁻¹ b through the ULV up/downsweep.
+    fn ulv_solve(&self, f: &UlvFactor, b: &[f64]) -> Vec<f64> {
+        f.solve(b)
+    }
+
+    /// Multi-RHS (K̃ + βI)⁻¹ B — the blocked sweep the batched C-grid
+    /// rides on.
+    fn ulv_solve_mat(&self, f: &UlvFactor, b: &Mat) -> Mat {
+        f.solve_mat(b)
+    }
+
+    // --- primitive 4: matvec probes ---
+
+    /// K̃x through the compressed HSS form (compression probes,
+    /// residual checks, model assembly).
+    fn hss_matvec(&self, h: &Hss, x: &[f64], threads: usize) -> Vec<f64> {
+        matvec::matvec_threads(h, x, threads)
+    }
+
+    // --- fused prediction tile (composed from the primitives) ---
+
+    /// One prediction tile: K(tile, SV)·αy, bias excluded (the caller
+    /// adds it). The default composes [`Self::kernel_block_with_norms`]
+    /// with the reference gemv, so a backend that overrides the kernel
+    /// block accelerates prediction for free.
+    fn decision_tile(
+        &self,
+        k: &Kernel,
+        xb: &Points,
+        xb_norms: &[f64],
+        sv: &Points,
+        sv_norms: &[f64],
+        alpha_y: &[f64],
+    ) -> Vec<f64> {
+        let kb = self.kernel_block_with_norms(k, xb, xb_norms, sv, sv_norms);
+        let mut f = vec![0.0; xb.rows()];
+        blas::gemv(&kb, alpha_y, &mut f);
+        f
+    }
+}
+
+/// The reference (f64, CPU) prediction tile as a free function — the
+/// fallback target for accelerated backends that must degrade to the
+/// oracle path (e.g. PJRT on CSR operands or artifact failure).
+pub fn reference_decision_tile(
+    k: &Kernel,
+    xb: &Points,
+    xb_norms: &[f64],
+    sv: &Points,
+    sv_norms: &[f64],
+    alpha_y: &[f64],
+) -> Vec<f64> {
+    let kb = crate::kernel::kernel_block_pts_with_norms(k, xb, xb_norms, sv, sv_norms);
+    let mut f = vec![0.0; xb.rows()];
+    blas::gemv(&kb, alpha_y, &mut f);
+    f
+}
+
+static CPU_BACKEND: CpuBackend = CpuBackend;
+
+/// The shared reference backend (zero-sized; `&'static` so call sites
+/// can default to it without allocation).
+pub fn cpu() -> &'static CpuBackend {
+    &CPU_BACKEND
+}
+
+/// The reference backend as an owning handle (for struct fields).
+pub fn cpu_arc() -> Arc<dyn ComputeBackend> {
+    Arc::new(CpuBackend)
+}
+
+/// Backend selection — one enum plumbed from the CLI through the
+/// trainer, the OvO engine and the server registry.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendChoice {
+    /// f64 reference path (the default; bitwise-pinned).
+    Cpu,
+    /// f32 kernel-block/prediction path with runtime AVX2+FMA dispatch.
+    SimdF32,
+    /// PJRT decision-tile executor (requires compiled artifacts).
+    Pjrt,
+}
+
+impl BackendChoice {
+    /// Parse a `--backend` flag value.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "cpu" => Ok(BackendChoice::Cpu),
+            "simd-f32" | "simd_f32" => Ok(BackendChoice::SimdF32),
+            "pjrt" => Ok(BackendChoice::Pjrt),
+            other => bail!("unknown backend {other:?} (expected cpu | simd-f32 | pjrt)"),
+        }
+    }
+
+    /// The flag spelling (inverse of [`Self::parse`]).
+    pub fn label(&self) -> &'static str {
+        match self {
+            BackendChoice::Cpu => "cpu",
+            BackendChoice::SimdF32 => "simd-f32",
+            BackendChoice::Pjrt => "pjrt",
+        }
+    }
+
+    /// Instantiate the backend, failing cleanly when the build or host
+    /// cannot provide it (missing cargo feature, missing PJRT
+    /// artifacts). `Cpu` always succeeds.
+    pub fn resolve(self) -> Result<Arc<dyn ComputeBackend>> {
+        match self {
+            BackendChoice::Cpu => Ok(cpu_arc()),
+            #[cfg(feature = "simd-f32")]
+            BackendChoice::SimdF32 => Ok(Arc::new(SimdF32Backend::new())),
+            #[cfg(not(feature = "simd-f32"))]
+            BackendChoice::SimdF32 => {
+                bail!("backend simd-f32 unavailable: built without the `simd-f32` cargo feature")
+            }
+            BackendChoice::Pjrt => {
+                let dir = crate::runtime::PjrtRuntime::default_dir();
+                let rt = crate::runtime::PjrtRuntime::load(dir)?;
+                Ok(Arc::new(rt))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::sparse::CsrMat;
+    use crate::util::prng::Rng;
+
+    fn fixtures(rng: &mut Rng) -> (Kernel, Points, Points, Points, Points) {
+        let xm = Mat::gauss(40, 12, rng);
+        let ym = Mat::gauss(25, 12, rng);
+        let xs = Points::Sparse(CsrMat::from_dense(&xm));
+        let ys = Points::Sparse(CsrMat::from_dense(&ym));
+        (Kernel::Gaussian { h: 0.9 }, Points::Dense(xm), Points::Dense(ym), xs, ys)
+    }
+
+    #[test]
+    fn cpu_backend_is_bitwise_the_free_functions() {
+        let mut rng = Rng::new(42);
+        let (k, xd, yd, xs, ys) = fixtures(&mut rng);
+        let b = cpu();
+        for (x, y) in [(&xd, &yd), (&xs, &ys), (&xs, &yd), (&xd, &ys)] {
+            assert_eq!(b.kernel_block(&k, x, y), crate::kernel::kernel_block_pts(&k, x, y));
+            for threads in [1, 2, 8] {
+                assert_eq!(
+                    b.kernel_block_par(threads, &k, x, y),
+                    crate::kernel::kernel_block_pts_par(threads, &k, x, y)
+                );
+            }
+        }
+        let a = Mat::gauss(9, 7, &mut rng);
+        let c = Mat::gauss(9, 7, &mut rng);
+        assert_eq!(b.gemm(&a, Trans::No, &c, Trans::Yes), blas::matmul(&a, Trans::No, &c, Trans::Yes));
+        assert_eq!(
+            b.gemm_par(3, &a, Trans::Yes, &c, Trans::No),
+            blas::matmul_par(3, &a, Trans::Yes, &c, Trans::No)
+        );
+    }
+
+    #[test]
+    fn choice_parse_roundtrip_and_errors() {
+        for c in [BackendChoice::Cpu, BackendChoice::SimdF32, BackendChoice::Pjrt] {
+            assert_eq!(BackendChoice::parse(c.label()).unwrap(), c);
+        }
+        assert_eq!(BackendChoice::parse("simd_f32").unwrap(), BackendChoice::SimdF32);
+        assert!(BackendChoice::parse("gpu").is_err());
+        assert_eq!(BackendChoice::Cpu.resolve().unwrap().name(), "cpu");
+    }
+
+    #[test]
+    fn reference_tile_matches_default_tile() {
+        let mut rng = Rng::new(43);
+        let (k, xd, yd, _, _) = fixtures(&mut rng);
+        let (nx, ny) = (xd.self_norms(), yd.self_norms());
+        let ay: Vec<f64> = (0..yd.rows()).map(|_| rng.gauss()).collect();
+        assert_eq!(
+            cpu().decision_tile(&k, &xd, &nx, &yd, &ny, &ay),
+            reference_decision_tile(&k, &xd, &nx, &yd, &ny, &ay)
+        );
+    }
+}

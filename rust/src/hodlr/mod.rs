@@ -74,6 +74,18 @@ impl Hodlr {
     /// off-diagonal block — same partially matrix-free recipe as HSS but
     /// without nested bases).
     pub fn compress(ds: &Dataset, kernel: &Kernel, params: &HodlrParams) -> (Hodlr, Dataset) {
+        Self::compress_with(crate::compute::cpu(), ds, kernel, params)
+    }
+
+    /// [`Self::compress`] on an explicit [`crate::compute::ComputeBackend`]
+    /// (every kernel block — leaf diagonals, column samples, skeleton
+    /// rows — is evaluated through the backend).
+    pub fn compress_with(
+        backend: &dyn crate::compute::ComputeBackend,
+        ds: &Dataset,
+        kernel: &Kernel,
+        params: &HodlrParams,
+    ) -> (Hodlr, Dataset) {
         let mut rng = Rng::new(params.seed);
         let tree = ClusterTree::build(ds, params.leaf_size, SplitMethod::TwoMeans, &mut rng);
         let pds = ds.permute(&tree.perm);
@@ -93,7 +105,7 @@ impl Hodlr {
             if t.is_leaf() {
                 let rows: Vec<usize> = (t.begin..t.end).collect();
                 let pts = pds.x.select_rows(&rows);
-                node.d = Some(crate::kernel::kernel_block_pts(kernel, &pts, &pts));
+                node.d = Some(backend.kernel_block(kernel, &pts, &pts));
             } else {
                 // low-rank A(left, right): rows = left range, cols sampled
                 // from right range (plus an exact fallback for small blocks)
@@ -111,14 +123,14 @@ impl Hodlr {
                 };
                 let rpts = pds.x.select_rows(&rows);
                 let cpts = pds.x.select_rows(&cols);
-                let sample = crate::kernel::kernel_block_pts(kernel, &rpts, &cpts);
+                let sample = backend.kernel_block(kernel, &rpts, &cpts);
                 // row ID of the sample picks skeleton rows of the block
                 let (skel, u) =
                     cpqr::row_id(&sample, params.rel_tol, params.abs_tol, params.max_rank);
                 // V = A(right, skel_rows)ᵀ... i.e. vᵀ = A(skel, right)
                 let spts = pds.x.select_rows(&skel.iter().map(|&j| rows[j]).collect::<Vec<_>>());
                 let apts = pds.x.select_rows(&all_cols);
-                let vt = crate::kernel::kernel_block_pts(kernel, &spts, &apts); // r × nr
+                let vt = backend.kernel_block(kernel, &spts, &apts); // r × nr
                 node.u12 = Some(u);
                 node.v12 = Some(vt.transpose()); // nr × r
             }

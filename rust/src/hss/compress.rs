@@ -60,12 +60,36 @@ pub fn preprocess(ds: &Dataset, params: &HssParams, threads: usize) -> Preproces
 
 /// Compress the kernel matrix of `ds` into HSS form (one-call API).
 pub fn compress(ds: &Dataset, kernel: &Kernel, params: &HssParams, threads: usize) -> Compressed {
+    compress_with(crate::compute::cpu(), ds, kernel, params, threads)
+}
+
+/// [`compress`] on an explicit [`crate::compute::ComputeBackend`]: every
+/// exact kernel block (leaf diagonals, sibling couplings, ID samples)
+/// is evaluated through the backend.
+pub fn compress_with(
+    backend: &dyn crate::compute::ComputeBackend,
+    ds: &Dataset,
+    kernel: &Kernel,
+    params: &HssParams,
+    threads: usize,
+) -> Compressed {
     let pre = preprocess(ds, params, threads);
-    compress_preprocessed(&pre, kernel, params, threads)
+    compress_preprocessed_with(backend, &pre, kernel, params, threads)
 }
 
 /// Compress reusing cached preprocessing (the h-grid hot path).
 pub fn compress_preprocessed(
+    pre: &Preprocessed,
+    kernel: &Kernel,
+    params: &HssParams,
+    threads: usize,
+) -> Compressed {
+    compress_preprocessed_with(crate::compute::cpu(), pre, kernel, params, threads)
+}
+
+/// [`compress_preprocessed`] on an explicit backend.
+pub fn compress_preprocessed_with(
+    backend: &dyn crate::compute::ComputeBackend,
     pre: &Preprocessed,
     kernel: &Kernel,
     params: &HssParams,
@@ -108,6 +132,7 @@ pub fn compress_preprocessed(
                 pds,
                 kernel,
                 params,
+                backend,
                 slots: &cells,
                 ann: ann_lists,
                 kernel_evals: &kernel_evals,
@@ -144,6 +169,7 @@ struct CompressCtx<'a> {
     pds: &'a Dataset,
     kernel: &'a Kernel,
     params: &'a HssParams,
+    backend: &'a dyn crate::compute::ComputeBackend,
     /// Per-node output slots; children (built by earlier levels, the
     /// level barrier publishes them) are read through here.
     slots: &'a threadpool::SendCells<'a, Option<HssNode>>,
@@ -153,7 +179,8 @@ struct CompressCtx<'a> {
 }
 
 fn compress_node(ctx: CompressCtx<'_>) -> HssNode {
-    let CompressCtx { node_id, tree, pds, kernel, params, slots, ann, kernel_evals, rng } = ctx;
+    let CompressCtx { node_id, tree, pds, kernel, params, backend, slots, ann, kernel_evals, rng } =
+        ctx;
     let t = &tree.nodes[node_id];
     let n = pds.len();
     let is_root = t.begin == 0 && t.end == n;
@@ -164,7 +191,7 @@ fn compress_node(ctx: CompressCtx<'_>) -> HssNode {
         let pts = pds.x.select_rows(&rows);
         // ORDERING: Relaxed — pure statistics counter, read after join.
         kernel_evals.fetch_add(rows.len() * rows.len(), Ordering::Relaxed);
-        let d = crate::kernel::kernel_block_pts(kernel, &pts, &pts);
+        let d = backend.kernel_block(kernel, &pts, &pts);
         (rows, Some(d), None)
     } else {
         // SAFETY: children were built in a deeper level; no task writes
@@ -178,7 +205,7 @@ fn compress_node(ctx: CompressCtx<'_>) -> HssNode {
         let rp = pds.x.select_rows(&r.skel);
         // ORDERING: Relaxed — pure statistics counter, read after join.
         kernel_evals.fetch_add(l.skel.len() * r.skel.len(), Ordering::Relaxed);
-        let b = crate::kernel::kernel_block_pts(kernel, &lp, &rp);
+        let b = backend.kernel_block(kernel, &lp, &rp);
         (rows, None, Some(b))
     };
 
@@ -249,7 +276,7 @@ fn compress_node(ctx: CompressCtx<'_>) -> HssNode {
         let col_pts = pds.x.select_rows(&cols);
         // ORDERING: Relaxed — pure statistics counter, read after join.
         kernel_evals.fetch_add(row_pos.len() * cols.len(), Ordering::Relaxed);
-        let sample = crate::kernel::kernel_block_pts(kernel, &row_pts, &col_pts);
+        let sample = backend.kernel_block(kernel, &row_pts, &col_pts);
         let (j, x) = cpqr::row_id(&sample, params.rel_tol, params.abs_tol, params.max_rank);
         let saturated = j.len() == cols.len().min(row_pos.len()) && j.len() < params.max_rank;
         if saturated && cols.len() < complement && round < 3 {

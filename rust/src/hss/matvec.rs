@@ -159,6 +159,20 @@ pub fn rel_error_probes(
     probes: usize,
     rng: &mut crate::util::prng::Rng,
 ) -> f64 {
+    rel_error_probes_with(crate::compute::cpu(), h, kernel, pds, probes, rng)
+}
+
+/// [`rel_error_probes`] on an explicit [`crate::compute::ComputeBackend`]:
+/// both the HSS matvec probes and the exact blocked kernel rows run on
+/// the backend.
+pub fn rel_error_probes_with(
+    backend: &dyn crate::compute::ComputeBackend,
+    h: &Hss,
+    kernel: &crate::kernel::Kernel,
+    pds: &crate::data::Dataset,
+    probes: usize,
+    rng: &mut crate::util::prng::Rng,
+) -> f64 {
     let n = h.n;
     let mut num = 0.0;
     let mut den = 0.0;
@@ -166,7 +180,7 @@ pub fn rel_error_probes(
     let block = 2048.min(n);
     for _ in 0..probes {
         let x: Vec<f64> = (0..n).map(|_| rng.gauss()).collect();
-        let approx = matvec(h, &x);
+        let approx = backend.hss_matvec(h, &x, 1);
         let mut exact = vec![0.0; n];
         let ny = pds.x.self_norms();
         let mut i0 = 0;
@@ -174,7 +188,7 @@ pub fn rel_error_probes(
             let ib = block.min(n - i0);
             let rows: Vec<usize> = (i0..i0 + ib).collect();
             let xb = pds.x.select_rows(&rows);
-            let kb = crate::kernel::block::kernel_block_pts_with_norms(
+            let kb = backend.kernel_block_with_norms(
                 kernel,
                 &xb,
                 &ny[i0..i0 + ib],

@@ -6,11 +6,16 @@
 //! merge accumulation — exactly the term where sparsity pays, since the
 //! norm and exp parts are O(mn) regardless. This native path is the
 //! fallback and correctness oracle for the PJRT-executed artifact in
-//! [`crate::runtime`].
+//! [`crate::runtime`], and the reference implementation behind
+//! [`crate::compute::CpuBackend`].
 //!
-//! The `*_pts` functions are the data-plane entry points: their
-//! dense×dense arms delegate to the original `Mat` implementations, so
-//! dense results are bit-for-bit unchanged by the sparse plumbing.
+//! The `*_pts` functions are the data-plane entry points; the `Mat`
+//! variants are the dense arm of the same implementation (the `_pts`
+//! dense×dense case delegates straight to them), so dense results are
+//! bit-for-bit independent of which entry point is used. Serial and
+//! banded-parallel variants share one per-row evaluation core
+//! ([`finish_row`] / [`fill_row_pts`]) and one row-scatter helper
+//! ([`scatter_rows`]) holding the module's single `unsafe` site.
 
 use crate::data::sparse::Points;
 use crate::kernel::Kernel;
@@ -21,6 +26,49 @@ use crate::util::threadpool;
 /// Squared norms of the rows of X (dense).
 pub fn self_norms(x: &Mat) -> Vec<f64> {
     (0..x.rows()).map(|i| blas::dot(x.row(i), x.row(i))).collect()
+}
+
+/// Finish one gemm row in place: g[j] = K from (nxi, ny[j], xᵀy).
+/// The shared core of every serial and parallel finishing loop.
+#[inline]
+fn finish_row(k: &Kernel, nxi: f64, ny: &[f64], row: &mut [f64]) {
+    for (j, v) in row.iter_mut().enumerate() {
+        *v = k.eval_from_parts(nxi, ny[j], *v);
+    }
+}
+
+/// Evaluate row i of a `Points` block into `row`: xᵀy accumulation
+/// (gather/merge via [`Points::row_dots`]) then the norm expansion.
+/// Both the serial and the banded-parallel sparse paths run exactly
+/// this, so they are bitwise-equal by construction.
+#[inline]
+fn fill_row_pts(
+    k: &Kernel,
+    x: &Points,
+    nx: &[f64],
+    y: &Points,
+    ny: &[f64],
+    i: usize,
+    row: &mut [f64],
+) {
+    x.row_dots(i, y, row);
+    finish_row(k, nx[i], ny, row);
+}
+
+/// Band the rows of `g` across threads and fill each with `fill(i, row)`.
+/// The single unsafe scatter of this module — both parallel block
+/// variants funnel through it.
+fn scatter_rows(threads: usize, g: &mut Mat, fill: impl Fn(usize, &mut [f64]) + Sync) {
+    let (m, n) = g.shape();
+    let data = g.data_mut();
+    let cells = threadpool::as_send_cells(data);
+    threadpool::parallel_for(threads, m, 16, |i| {
+        // SAFETY: row ranges i*n..(i+1)*n are disjoint per index i, and
+        // each index runs exactly once (slice keeps whole-buffer
+        // provenance, unlike a raw reborrow of a single-element pointer).
+        let row = unsafe { cells.slice(i * n, n) };
+        fill(i, row);
+    });
 }
 
 /// K(X, Y): rows of X against rows of Y. O(m n f) via gemm.
@@ -45,20 +93,7 @@ pub fn kernel_block_par(threads: usize, k: &Kernel, x: &Mat, y: &Mat) -> Mat {
     let nx = self_norms(x);
     let ny = self_norms(y);
     let mut g = blas::matmul_par(threads, x, Trans::No, y, Trans::Yes);
-    // finish rows in parallel
-    let m = g.rows();
-    let n = g.cols();
-    let data = g.data_mut();
-    let cells = threadpool::as_send_cells(data);
-    threadpool::parallel_for(threads, m, 16, |i| {
-        // SAFETY: row ranges i*n..(i+1)*n are disjoint per index i, and
-        // each index runs exactly once (slice keeps whole-buffer
-        // provenance, unlike a raw reborrow of a single-element pointer).
-        let row = unsafe { cells.slice(i * n, n) };
-        for (j, v) in row.iter_mut().enumerate() {
-            *v = k.eval_from_parts(nx[i], ny[j], *v);
-        }
-    });
+    scatter_rows(threads, &mut g, |i, row| finish_row(k, nx[i], ny, row));
     g
 }
 
@@ -67,11 +102,7 @@ fn finish_block(k: &Kernel, g: &mut Mat, nx: &[f64], ny: &[f64]) {
     assert_eq!(nx.len(), m);
     assert_eq!(ny.len(), n);
     for i in 0..m {
-        let row = g.row_mut(i);
-        let nxi = nx[i];
-        for (j, v) in row.iter_mut().enumerate() {
-            *v = k.eval_from_parts(nxi, ny[j], *v);
-        }
+        finish_row(k, nx[i], ny, g.row_mut(i));
     }
 }
 
@@ -120,12 +151,7 @@ pub fn kernel_block_pts_with_norms(
     assert_eq!(ny.len(), n);
     let mut g = Mat::zeros(m, n);
     for i in 0..m {
-        let row = g.row_mut(i);
-        x.row_dots(i, y, row);
-        let nxi = nx[i];
-        for (j, v) in row.iter_mut().enumerate() {
-            *v = k.eval_from_parts(nxi, ny[j], *v);
-        }
+        fill_row_pts(k, x, nx, y, ny, i, g.row_mut(i));
     }
     g
 }
@@ -138,22 +164,8 @@ pub fn kernel_block_pts_par(threads: usize, k: &Kernel, x: &Points, y: &Points) 
     assert_eq!(x.cols(), y.cols(), "feature dimension mismatch");
     let nx = x.self_norms();
     let ny = y.self_norms();
-    let m = x.rows();
-    let n = y.rows();
-    let mut g = Mat::zeros(m, n);
-    {
-        let data = g.data_mut();
-        let cells = threadpool::as_send_cells(data);
-        threadpool::parallel_for(threads, m, 16, |i| {
-            // SAFETY: row ranges i*n..(i+1)*n are disjoint per index i,
-            // and each index runs exactly once.
-            let row = unsafe { cells.slice(i * n, n) };
-            x.row_dots(i, y, row);
-            for (j, v) in row.iter_mut().enumerate() {
-                *v = k.eval_from_parts(nx[i], ny[j], *v);
-            }
-        });
-    }
+    let mut g = Mat::zeros(x.rows(), y.rows());
+    scatter_rows(threads, &mut g, |i, row| fill_row_pts(k, x, &nx, y, &ny, i, row));
     g
 }
 

@@ -20,6 +20,7 @@ pub mod ann;
 pub mod admm;
 pub mod baselines;
 pub mod cluster;
+pub mod compute;
 pub mod config;
 pub mod coordinator;
 pub mod data;

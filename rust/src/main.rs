@@ -12,6 +12,7 @@
 use anyhow::{bail, Context, Result};
 use hss_svm::admm::{AdmmParams, ConsensusTrainer};
 use hss_svm::cli::Args;
+use hss_svm::compute::{BackendChoice, ComputeBackend};
 use hss_svm::cluster::SplitMethod;
 use hss_svm::coordinator::{run_suite, GridSearch, SuiteConfig};
 use hss_svm::data::libsvm::{LibsvmData, Repr};
@@ -87,11 +88,18 @@ USAGE:
                                          # stay raw (unscaled); result is
                                          # a plain .model file
   hss-svm predict    --model m.model --test-file g.libsvm [--out pred.txt]
-                     [--pjrt] [--sparse|--dense]
+                     [--backend cpu|simd-f32|pjrt] [--pjrt]
+                     [--sparse|--dense]
                                          # OvO model files predict via
                                          # the shared-SV engine and
-                                         # answer original class labels
+                                         # answer original class labels;
+                                         # --backend picks the compute
+                                         # backend (default cpu, the
+                                         # bitwise f64 reference) and
+                                         # fails when unavailable, unlike
+                                         # the soft --pjrt fallback
   hss-svm serve      --model m.model [--stdin]
+                     [--backend cpu|simd-f32|pjrt]
                                          # LIBSVM lines on stdin ->
                                          # "<label> <decision>" per line;
                                          # labeled, 0-labeled and bare
@@ -100,6 +108,7 @@ USAGE:
                      [--models name=a.model,name2=b.model]
                      [--batch-wait-ms N] [--max-inflight N]
                      [--batch-max N] [--threads N]
+                     [--backend cpu|simd-f32|pjrt]
                                          # concurrent TCP server: same
                                          # line protocol per connection,
                                          # requests micro-batched across
@@ -487,6 +496,21 @@ fn cmd_predict(args: &Args) -> Result<()> {
     }
 }
 
+/// Resolve the `--backend` flag. `None` when the flag is absent, so the
+/// default code paths (and their bitwise-pinned outputs) are untouched;
+/// a named backend must resolve or the command fails — unlike the
+/// legacy soft `--pjrt` fallback, a typo'd or unavailable `--backend`
+/// never silently serves a different numeric path.
+fn backend_from_args(args: &Args) -> Result<Option<std::sync::Arc<dyn ComputeBackend>>> {
+    match args.str_opt("backend") {
+        Some(spec) => {
+            let b = BackendChoice::parse(spec)?.resolve()?;
+            Ok(Some(b))
+        }
+        None => Ok(None),
+    }
+}
+
 /// Multiclass prediction: label-agnostic feature read, shared-SV
 /// engine, accuracy over the labeled lines by integer class match,
 /// `--out` answering the ORIGINAL class labels of the training file.
@@ -498,11 +522,18 @@ fn cmd_predict_multiclass(args: &Args, model: hss_svm::svm::OvoModel) -> Result<
     // the same lines; --sparse/--dense still override explicitly
     let repr = test_repr_for(repr_from(args)?, model.is_sparse());
     let (x, raw_labels) = libsvm::read_features_file(test_path, Some(model.dim()), repr)?;
-    if args.has("pjrt") {
-        eprintln!("predict: --pjrt ignored for multiclass (shared-SV engine is native-only)");
+    if args.has("pjrt") && args.str_opt("backend").is_none() {
+        eprintln!(
+            "predict: --pjrt ignored for multiclass (use --backend pjrt to run the \
+             shared-SV engine's tiles on a backend)"
+        );
     }
+    let backend = backend_from_args(args)?;
     let t = Timer::start();
-    let preds = model.engine().predict_with_scores(&x, threads);
+    let preds = match &backend {
+        Some(b) => model.engine().predict_with_scores_with(&**b, &x, threads),
+        None => model.engine().predict_with_scores(&x, threads),
+    };
     let secs = t.secs();
     // the serving convention (see `serve`): a literal `0` label is the
     // "no label" placeholder, excluded from accuracy — UNLESS 0 is one
@@ -549,7 +580,10 @@ fn cmd_predict_binary(args: &Args, model: hss_svm::svm::SvmModel) -> Result<()> 
     let (x, raw_labels) =
         libsvm::read_features_file(test_path, Some(model.sv.cols()), repr_from(args)?)?;
     let t = Timer::start();
-    let (f, path_label) = if args.has("pjrt") {
+    let backend = backend_from_args(args)?;
+    let (f, path_label) = if let Some(b) = &backend {
+        (predict::decision_function_with(&**b, &model, &x, threads), b.name())
+    } else if args.has("pjrt") {
         let rt = PjrtRuntime::load(PjrtRuntime::default_dir())
             .context("--pjrt requires artifacts (run `make artifacts`)")?;
         (hss_svm::runtime::decision_function_pjrt(&rt, &model, &x)?, "PJRT")
@@ -615,25 +649,27 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let threads = args.usize_or("threads", threadpool::default_threads())?;
     let model_path = args.str_opt("model").context("--model is required")?;
     let model = hss_svm::svm::persist::load_any(model_path)?;
-    let mut rt = if args.has("pjrt") { PjrtRuntime::try_default() } else { None };
-    if rt.is_some() && model.is_sparse() {
-        eprintln!("serve: CSR model — PJRT artifacts need dense SVs, using the native path");
-        rt = None;
-    }
-    if rt.is_some() && model.as_binary().is_none() {
-        eprintln!("serve: OvO model — PJRT artifacts are binary tiles, using the native engine");
-        rt = None;
+    // --backend resolves hard; legacy bare --pjrt keeps its soft
+    // fallback (artifacts absent → native path, with a notice). Either
+    // way the backend degrades per tile to the bitwise CPU reference
+    // on operands its accelerator cannot serve (CSR, OvO kernels).
+    let mut backend = backend_from_args(args)?;
+    if backend.is_none() && args.has("pjrt") {
+        match PjrtRuntime::try_default() {
+            Some(rt) => backend = Some(std::sync::Arc::new(rt)),
+            None => eprintln!("serve: PJRT artifacts unavailable, using the native path"),
+        }
     }
     eprintln!(
         "serving {} ({}), {} path; send LIBSVM lines, EOF to stop",
         model_path,
         model.describe(),
-        if rt.is_some() { "PJRT" } else { "native" }
+        backend.as_deref().map_or("native", |b| b.name())
     );
     let stdin = std::io::stdin();
     let stats = hss_svm::serve::serve_loop(
         &model,
-        rt.as_ref(),
+        backend.as_deref(),
         stdin.lock(),
         std::io::stdout().lock(),
         std::io::stderr().lock(),
@@ -672,7 +708,11 @@ fn cmd_serve_tcp(args: &Args) -> Result<()> {
     if entries.is_empty() {
         bail!("serve --listen needs --model <path> and/or --models name=path,...");
     }
-    let registry = ModelRegistry::from_paths(&entries)?;
+    let mut registry = ModelRegistry::from_paths(&entries)?;
+    if let Some(b) = backend_from_args(args)? {
+        eprintln!("serve: batcher predicting on the {} backend", b.name());
+        registry = registry.with_backend(b);
+    }
     let defaults = ServerConfig::default();
     let cfg = ServerConfig {
         batch_max: args.usize_or("batch-max", defaults.batch_max)?,

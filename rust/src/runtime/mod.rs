@@ -25,11 +25,56 @@ pub mod pjrt;
 #[path = "pjrt_stub.rs"]
 pub mod pjrt;
 
+/// Local API-compatible stand-in for the external `xla` crate, so the
+/// real client (`pjrt.rs`) is compile-checked in CI without vendoring
+/// the dependency (see `xla_compat.rs` for how to swap the real crate
+/// back in).
+#[cfg(all(feature = "pjrt", feature = "xla-client"))]
+pub(crate) mod xla_compat;
+
 pub use pjrt::{PjrtRuntime, RuntimeStats};
 
 use crate::data::sparse::Points;
+use crate::kernel::Kernel;
 use crate::svm::SvmModel;
 use anyhow::{Context, Result};
+
+/// [`PjrtRuntime`] as a [`crate::compute::ComputeBackend`]: the fused
+/// prediction tile runs on the compiled PJRT executable when the
+/// operands qualify (dense tile, dense SVs, Gaussian kernel — the only
+/// shape the AOT artifacts implement), and degrades **per tile** to the
+/// bitwise CPU reference on CSR operands, other kernels, or any
+/// execution error. Every other primitive inherits the reference
+/// default, so training on this backend is exactly the CPU path.
+impl crate::compute::ComputeBackend for PjrtRuntime {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn decision_tile(
+        &self,
+        k: &Kernel,
+        xb: &Points,
+        xb_norms: &[f64],
+        sv: &Points,
+        sv_norms: &[f64],
+        alpha_y: &[f64],
+    ) -> Vec<f64> {
+        if let (Points::Dense(xd), Points::Dense(svd), Kernel::Gaussian { .. }) = (xb, sv, k) {
+            if xd.rows() <= pjrt::TILE_M {
+                // Inherent method (the raw tile executor), not this
+                // trait method — the artifact pads to TILE_M rows, so
+                // truncate back to the logical tile height. On error
+                // (artifact missing/failed) fall through to the
+                // reference path.
+                if let Ok(f) = PjrtRuntime::decision_tile(self, xd, svd, alpha_y, k.gamma()) {
+                    return f.into_iter().take(xd.rows()).collect();
+                }
+            }
+        }
+        crate::compute::reference_decision_tile(k, xb, xb_norms, sv, sv_norms, alpha_y)
+    }
+}
 
 /// Decision function served by PJRT-executed fused tiles
 /// (falls back tile-by-tile is NOT done here: callers choose the native

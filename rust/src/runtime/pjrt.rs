@@ -2,6 +2,10 @@
 //! literal marshalling, tile execution.
 
 use crate::linalg::Mat;
+// The `xla` surface comes from the local API-compat shim so this module
+// is compile-checked without vendoring the crate; swap this line for the
+// real dependency to execute artifacts (see xla_compat.rs).
+use crate::runtime::xla_compat as xla;
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -221,8 +225,9 @@ fn mat_to_literal(m: &Mat, rows_pad: usize, cols_pad: usize) -> Result<xla::Lite
     let mut buf = vec![0.0f32; rows_pad * cols_pad];
     for i in 0..m.rows() {
         let src = m.row(i);
-        for (j, &v) in src.iter().enumerate() {
-            buf[i * cols_pad + j] = v as f32;
+        let dst = &mut buf[i * cols_pad..i * cols_pad + src.len()];
+        for (d, &v) in dst.iter_mut().zip(src) {
+            *d = v as f32;
         }
     }
     xla::Literal::vec1(&buf)

@@ -1,0 +1,143 @@
+//! API-compatible stand-in for the external `xla` crate.
+//!
+//! `pjrt.rs` was written against <https://github.com/LaurentMazare/xla-rs>,
+//! which the offline build environment cannot vendor. This module mirrors
+//! the exact slice of that crate's surface the client uses, so the
+//! `--features pjrt,xla-client` CI lane **compile-checks** the real
+//! client end-to-end (types, error plumbing, literal marshalling) without
+//! the dependency. Every executable-path constructor fails at runtime
+//! with a clear message — identical observable behavior to the stub
+//! (`PjrtRuntime::load` errors, `try_default` → `None`), so no fallback
+//! path changes.
+//!
+//! To wire the real crate back in: add `xla` to `Cargo.toml`, delete this
+//! module, and change `use crate::runtime::xla_compat as xla;` in
+//! `pjrt.rs` back to `use xla;`.
+
+/// Error type shaped like `xla::Error` (only `Debug` is consumed: the
+/// client formats errors with `{e:?}` before wrapping them in `anyhow`).
+pub struct XlaError(pub String);
+
+// Manual impl (not derived) so the message prints without struct noise —
+// `{e:?}` at the call sites yields the human-readable shim explanation.
+impl std::fmt::Debug for XlaError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+fn unavailable<T>(what: &str) -> Result<T, XlaError> {
+    Err(XlaError(format!(
+        "{what}: the `xla-client` feature compiles against a local API shim; \
+         vendor the real `xla` crate to execute artifacts"
+    )))
+}
+
+/// Host-side literal (shape + flat buffer in the real crate; here a
+/// marker the marshalling code can construct and thread through).
+#[derive(Clone, Debug, Default)]
+pub struct Literal;
+
+impl Literal {
+    /// Rank-0 literal from a scalar.
+    pub fn scalar<T: Copy>(_v: T) -> Literal {
+        Literal
+    }
+
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T: Copy>(_v: &[T]) -> Literal {
+        Literal
+    }
+
+    /// Reinterpret with new dimensions (element count must match).
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal, XlaError> {
+        Ok(Literal)
+    }
+
+    /// Unwrap a single-element tuple literal.
+    pub fn to_tuple1(self) -> Result<Literal, XlaError> {
+        unavailable("Literal::to_tuple1")
+    }
+
+    /// Copy the buffer out as host values.
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, XlaError> {
+        unavailable("Literal::to_vec")
+    }
+}
+
+/// Parsed HLO module proto.
+#[derive(Debug)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    /// Parse an HLO text file (`*.hlo.txt` artifact).
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto, XlaError> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+/// Computation handle wrapping a module proto.
+#[derive(Debug)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    /// Wrap a parsed proto as a compilable computation.
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// PJRT client handle.
+#[derive(Debug)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    /// CPU client — always fails in the shim (no PJRT plugin linked).
+    pub fn cpu() -> Result<PjRtClient, XlaError> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    /// Compile a computation for this client.
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, XlaError> {
+        unavailable("PjRtClient::compile")
+    }
+}
+
+/// Compiled executable handle.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    /// Execute with host-literal arguments; one buffer row per device.
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, XlaError> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+}
+
+/// Device buffer handle.
+#[derive(Debug)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    /// Fetch the buffer back to a host literal.
+    pub fn to_literal_sync(&self) -> Result<Literal, XlaError> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shim_constructors_work_and_executors_fail() {
+        let l = Literal::vec1(&[1.0f32, 2.0]).reshape(&[2, 1]).unwrap();
+        assert!(l.to_vec::<f32>().is_err());
+        assert!(PjRtClient::cpu().is_err());
+        let comp = XlaComputation::from_proto(&HloModuleProto);
+        let _ = Literal::scalar(0.5f32);
+        // Compile path is only reachable with a client; the type-level
+        // plumbing is what this shim pins down.
+        let _ = comp;
+    }
+}

@@ -32,9 +32,9 @@
 // No raw-pointer tricks belong in this module tree (see DESIGN.md §11).
 #![forbid(unsafe_code)]
 
+use crate::compute::ComputeBackend;
 use crate::data::libsvm::{self, Repr};
 use crate::data::sparse::Points;
-use crate::runtime::PjrtRuntime;
 use crate::svm::{predict, AnyModel, SvmModel};
 use anyhow::{Context, Result};
 use std::io::{BufRead, Write};
@@ -102,27 +102,21 @@ pub fn parse_batch(
     Err(bad)
 }
 
-/// Decision values for one parsed batch: the PJRT tile path when a
-/// runtime is available, with native fallback — a tile failure must not
-/// kill the server, it is reported on `err` and the batch is recomputed
-/// natively.
+/// Decision values for one parsed batch on the selected compute
+/// backend (`None` = the bitwise CPU reference path — identical to
+/// offline `predict`). A PJRT backend falls back to the CPU reference
+/// tile-by-tile on runtime errors (see [`crate::runtime`]), so a tile
+/// failure never kills the server.
 pub fn batch_decisions(
     model: &SvmModel,
-    rt: Option<&PjrtRuntime>,
+    backend: Option<&dyn ComputeBackend>,
     x: &Points,
     threads: usize,
-    err: &mut impl Write,
-) -> Result<Vec<f64>> {
-    Ok(match rt {
-        Some(rt) => match crate::runtime::decision_function_pjrt(rt, model, x) {
-            Ok(f) => f,
-            Err(e) => {
-                writeln!(err, "serve: PJRT batch failed ({e:#}); native fallback")?;
-                predict::decision_function(model, x, threads)
-            }
-        },
+) -> Vec<f64> {
+    match backend {
+        Some(b) => predict::decision_function_with(b, model, x, threads),
         None => predict::decision_function(model, x, threads),
-    })
+    }
 }
 
 /// One response line for a decision value: `"<label> <decision>"`, the
@@ -135,37 +129,37 @@ pub fn format_prediction(model: &SvmModel, v: f64) -> String {
 /// single prediction core behind both serving front-ends (stdin loop
 /// and the TCP batcher):
 ///
-/// * binary — [`batch_decisions`] (PJRT tile path with native fallback
-///   when a runtime is passed) formatted by [`format_prediction`];
+/// * binary — [`batch_decisions`] on the selected backend, formatted
+///   by [`format_prediction`];
 /// * one-vs-one — the shared-SV engine's class label + winning
-///   decision sum, `"<class> <sum>"`. The PJRT artifacts are binary
-///   tiles, so `rt` is ignored for OvO models (native engine path).
+///   decision sum, `"<class> <sum>"`, with the tile kernel block run
+///   on the selected backend.
 pub fn predict_lines(
     model: &AnyModel,
-    rt: Option<&PjrtRuntime>,
+    backend: Option<&dyn ComputeBackend>,
     x: &Points,
     threads: usize,
-    err: &mut impl Write,
-) -> Result<Vec<String>> {
-    Ok(match model {
-        AnyModel::Binary(m) => batch_decisions(m, rt, x, threads, err)?
+) -> Vec<String> {
+    match model {
+        AnyModel::Binary(m) => batch_decisions(m, backend, x, threads)
             .into_iter()
             .map(|v| format_prediction(m, v))
             .collect(),
-        AnyModel::Ovo(m) => m
-            .engine()
-            .predict_with_scores(x, threads)
-            .into_iter()
-            .map(|(class, sum)| format!("{class} {sum:.6}"))
-            .collect(),
-    })
+        AnyModel::Ovo(m) => {
+            let scores = match backend {
+                Some(b) => m.engine().predict_with_scores_with(b, x, threads),
+                None => m.engine().predict_with_scores(x, threads),
+            };
+            scores.into_iter().map(|(class, sum)| format!("{class} {sum:.6}")).collect()
+        }
+    }
 }
 
 /// Run the request loop until EOF. Returns the counters; parse failures
 /// are per-batch (reported on `err`), only I/O failures abort the loop.
 pub fn serve_loop(
     model: &AnyModel,
-    rt: Option<&PjrtRuntime>,
+    backend: Option<&dyn ComputeBackend>,
     input: impl BufRead,
     mut out: impl Write,
     mut err: impl Write,
@@ -202,7 +196,7 @@ pub fn serve_loop(
         let refs: Vec<(usize, &str)> = batch.iter().map(|(no, l)| (*no, l.as_str())).collect();
         match parse_batch(&refs, model.dim(), model.is_sparse()) {
             Ok(x) => {
-                let responses = predict_lines(model, rt, &x, threads, &mut err)?;
+                let responses = predict_lines(model, backend, &x, threads);
                 for line in &responses {
                     writeln!(out, "{line}")?;
                 }
@@ -313,7 +307,7 @@ mod tests {
         assert_eq!(ovo.dim(), 3);
         let x = parse_batch(&[(1, "1:0.5"), (2, "+1 2:1.0 3:2.0")], ovo.dim(), ovo.is_sparse())
             .unwrap();
-        let lines = predict_lines(&ovo, None, &x, 1, &mut std::io::sink()).unwrap();
+        let lines = predict_lines(&ovo, None, &x, 1);
         assert_eq!(lines.len(), 2);
         for l in &lines {
             // sums: class 2 = f25 + f29 = 2.0 (the winner's sum)

@@ -159,20 +159,25 @@ impl Batcher {
                 ServerStats::add(&stats.reloads, swapped as u64);
             }
             if !batch.is_empty() {
-                Self::process(&batch, stats, threads);
+                Self::process(&batch, registry.backend(), stats, threads);
             }
         }
     }
 
     /// Flush one tile (all requests share `batch[0]`'s model snapshot).
-    fn process(batch: &[Request], stats: &ServerStats, threads: usize) {
+    fn process(
+        batch: &[Request],
+        backend: &dyn crate::compute::ComputeBackend,
+        stats: &ServerStats,
+        threads: usize,
+    ) {
         ServerStats::bump(&stats.batches);
         let model = &batch[0].model.model;
         let refs: Vec<(usize, &str)> = batch.iter().map(|r| (r.lineno, r.text.as_str())).collect();
         match serve::parse_batch(&refs, model.dim(), model.is_sparse()) {
             Ok(x) => {
                 let all: Vec<&Request> = batch.iter().collect();
-                Self::respond(&all, &x, stats, threads);
+                Self::respond(&all, &x, backend, stats, threads);
             }
             Err(bad) => {
                 // per-issuer failure: malformed lines answer with their
@@ -207,7 +212,7 @@ impl Batcher {
                 let refs: Vec<(usize, &str)> =
                     keep.iter().map(|r| (r.lineno, r.text.as_str())).collect();
                 match serve::parse_batch(&refs, model.dim(), model.is_sparse()) {
-                    Ok(x) => Self::respond(&keep, &x, stats, threads),
+                    Ok(x) => Self::respond(&keep, &x, backend, stats, threads),
                     Err(_) => {
                         // unreachable: every kept line parsed alone above
                         for r in keep {
@@ -222,24 +227,20 @@ impl Batcher {
         }
     }
 
-    fn respond(reqs: &[&Request], x: &crate::data::Points, stats: &ServerStats, threads: usize) {
-        // the exact offline path: bitwise-identical to `cmd_predict` on
-        // the same lines regardless of how connections were interleaved
-        // (per-row independence contract of `blas::gemm`, and of the
-        // shared-SV engine's per-row gathers for OvO models)
+    fn respond(
+        reqs: &[&Request],
+        x: &crate::data::Points,
+        backend: &dyn crate::compute::ComputeBackend,
+        stats: &ServerStats,
+        threads: usize,
+    ) {
+        // on the default CPU backend this is the exact offline path:
+        // bitwise-identical to `cmd_predict` on the same lines regardless
+        // of how connections were interleaved (per-row independence
+        // contract of `blas::gemm`, and of the shared-SV engine's
+        // per-row gathers for OvO models)
         let model = &reqs[0].model.model;
-        let lines = match serve::predict_lines(model, None, x, threads, &mut std::io::sink()) {
-            Ok(lines) => lines,
-            Err(e) => {
-                // native-path prediction cannot fail today (no PJRT in
-                // the batcher), but a future error must answer every
-                // request rather than silently dropping the tile
-                for r in reqs {
-                    let _ = r.tx.send((r.seq, format!("ERR line {}: {e:#}", r.lineno)));
-                }
-                return;
-            }
-        };
+        let lines = serve::predict_lines(model, Some(backend), x, threads);
         debug_assert_eq!(lines.len(), reqs.len());
         let now = Instant::now();
         for (r, line) in reqs.iter().zip(lines) {

@@ -61,6 +61,9 @@ pub struct ModelRegistry {
     entries: BTreeMap<String, ModelEntry>,
     default_name: String,
     last_poll: Mutex<Instant>,
+    /// Compute backend the batcher predicts on (shared by every model;
+    /// defaults to the bitwise CPU reference).
+    backend: Arc<dyn crate::compute::ComputeBackend>,
 }
 
 impl ModelRegistry {
@@ -91,7 +94,20 @@ impl ModelRegistry {
             entries: map,
             default_name: entries[0].0.clone(),
             last_poll: Mutex::new(Instant::now()),
+            backend: crate::compute::cpu_arc(),
         })
+    }
+
+    /// Swap the compute backend every prediction batch runs on
+    /// (builder style; the default is the bitwise CPU reference).
+    pub fn with_backend(mut self, backend: Arc<dyn crate::compute::ComputeBackend>) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    /// The registry-wide prediction backend.
+    pub fn backend(&self) -> &dyn crate::compute::ComputeBackend {
+        &*self.backend
     }
 
     /// In-memory registry (tests / benches); first entry is the default.
@@ -118,7 +134,12 @@ impl ModelRegistry {
                 )
             })
             .collect();
-        ModelRegistry { entries, default_name, last_poll: Mutex::new(Instant::now()) }
+        ModelRegistry {
+            entries,
+            default_name,
+            last_poll: Mutex::new(Instant::now()),
+            backend: crate::compute::cpu_arc(),
+        }
     }
 
     /// Single-model convenience wrapper (name `"default"`).

@@ -16,7 +16,7 @@
 //! heavily (every training point sits in k−1 subproblems), so the
 //! engine dedups the SVs of all pairs into one unique-SV pool,
 //! evaluates ONE kernel block `K(test tile, pool)` per tile (gemm / CSR
-//! dispatch via [`kernel_block_pts_with_norms`]) and reduces each
+//! dispatch through the selected [`ComputeBackend`]) and reduces each
 //! pair's decision as a sparse weighted gather over that block —
 //! instead of k(k−1)/2 full kernel blocks per tile. Results agree with
 //! the naive per-pair path to ≤ 1e-12 ([`OvoModel::decisions_naive`] is
@@ -29,10 +29,10 @@
 //! *last* maximal class.
 
 use crate::admm::{AdmmParams, AdmmSolver};
+use crate::compute::ComputeBackend;
 use crate::data::sparse::{CsrMat, Points};
 use crate::data::Dataset;
 use crate::hss::HssParams;
-use crate::kernel::block::kernel_block_pts_with_norms;
 use crate::kernel::Kernel;
 use crate::linalg::Mat;
 use crate::svm::{predict, train::HssSvmTrainer, SvmModel};
@@ -269,6 +269,19 @@ impl OvoEngine {
     /// farmed across `threads` workers like
     /// [`predict::decision_function`].
     pub fn decisions(&self, x: &Points, threads: usize) -> Mat {
+        self.decisions_with(crate::compute::cpu(), x, threads)
+    }
+
+    /// [`Self::decisions`] on an explicit [`ComputeBackend`]: the one
+    /// kernel block per tile runs on the backend, the per-pair sparse
+    /// gathers stay in f64 here. The default backend reproduces the
+    /// historical path bit-for-bit.
+    pub fn decisions_with(
+        &self,
+        backend: &dyn ComputeBackend,
+        x: &Points,
+        threads: usize,
+    ) -> Mat {
         assert_eq!(x.cols(), self.dim(), "feature dimension mismatch");
         let n = x.rows();
         let np = self.pairs.len();
@@ -279,7 +292,7 @@ impl OvoEngine {
             let rows: Vec<usize> = (lo..hi).collect();
             let xb = x.select_rows(&rows);
             let xb_norms = xb.self_norms();
-            let kb = kernel_block_pts_with_norms(
+            let kb = backend.kernel_block_with_norms(
                 &self.kernel,
                 &xb,
                 &xb_norms,
@@ -305,7 +318,19 @@ impl OvoEngine {
     /// Predicted class labels plus the winning class's decision sum
     /// (the serving payload).
     pub fn predict_with_scores(&self, x: &Points, threads: usize) -> Vec<(i64, f64)> {
-        let f = self.decisions(x, threads);
+        self.predict_with_scores_with(crate::compute::cpu(), x, threads)
+    }
+
+    /// [`Self::predict_with_scores`] on an explicit [`ComputeBackend`].
+    /// Voting and tie-breaks are backend-independent; only the kernel
+    /// block numerics change.
+    pub fn predict_with_scores_with(
+        &self,
+        backend: &dyn ComputeBackend,
+        x: &Points,
+        threads: usize,
+    ) -> Vec<(i64, f64)> {
+        let f = self.decisions_with(backend, x, threads);
         let pair_pos: Vec<(usize, usize)> =
             self.pairs.iter().map(|p| (p.a_pos, p.b_pos)).collect();
         (0..f.rows())
@@ -387,6 +412,20 @@ impl OvoModel {
     /// Predicted class label for each row of `x` (shared-SV engine).
     pub fn predict(&self, x: &Points, threads: usize) -> Vec<i64> {
         self.engine.predict_with_scores(x, threads).into_iter().map(|(c, _)| c).collect()
+    }
+
+    /// [`Self::predict`] on an explicit [`ComputeBackend`].
+    pub fn predict_with(
+        &self,
+        backend: &dyn ComputeBackend,
+        x: &Points,
+        threads: usize,
+    ) -> Vec<i64> {
+        self.engine
+            .predict_with_scores_with(backend, x, threads)
+            .into_iter()
+            .map(|(c, _)| c)
+            .collect()
     }
 
     /// Pairwise decisions through the engine (n × n_pairs).

@@ -8,10 +8,9 @@
 //! path here is the correctness oracle for (and fallback of) the PJRT
 //! path in [`crate::runtime`].
 
+use crate::compute::{self, ComputeBackend};
 use crate::data::sparse::Points;
 use crate::data::Dataset;
-use crate::kernel::block::kernel_block_pts_with_norms;
-use crate::linalg::blas;
 use crate::svm::model::SvmModel;
 use crate::util::threadpool;
 
@@ -19,7 +18,22 @@ use crate::util::threadpool;
 pub const TILE: usize = 128;
 
 /// Decision values f(tⱼ) for every row of `x`.
+///
+/// Routes through [`compute::cpu`], the bitwise reference backend —
+/// identical to the pre-backend code path.
 pub fn decision_function(model: &SvmModel, x: &Points, threads: usize) -> Vec<f64> {
+    decision_function_with(compute::cpu(), model, x, threads)
+}
+
+/// [`decision_function`] on an explicit [`ComputeBackend`]: each tile's
+/// kernel block + gemv runs on the backend (`decision_tile`), the bias
+/// is added here.
+pub fn decision_function_with(
+    backend: &dyn ComputeBackend,
+    model: &SvmModel,
+    x: &Points,
+    threads: usize,
+) -> Vec<f64> {
     assert_eq!(x.cols(), model.sv.cols(), "feature dimension mismatch");
     let n = x.rows();
     let sv_norms = model.sv.self_norms();
@@ -32,9 +46,8 @@ pub fn decision_function(model: &SvmModel, x: &Points, threads: usize) -> Vec<f6
         let rows: Vec<usize> = (lo..hi).collect();
         let xb = x.select_rows(&rows);
         let xb_norms = xb.self_norms();
-        let kb = kernel_block_pts_with_norms(&model.kernel, &xb, &xb_norms, &model.sv, &sv_norms);
-        let mut f = vec![0.0; hi - lo];
-        blas::gemv(&kb, &model.alpha_y, &mut f);
+        let mut f =
+            backend.decision_tile(&model.kernel, &xb, &xb_norms, &model.sv, &sv_norms, &model.alpha_y);
         for v in &mut f {
             *v += model.bias;
         }
@@ -46,7 +59,17 @@ pub fn decision_function(model: &SvmModel, x: &Points, threads: usize) -> Vec<f6
 /// Predicted labels, mapped back through the model's original label
 /// pair (±1 unless the training data used another encoding).
 pub fn predict(model: &SvmModel, x: &Points, threads: usize) -> Vec<f64> {
-    decision_function(model, x, threads)
+    predict_with(compute::cpu(), model, x, threads)
+}
+
+/// [`predict`] on an explicit [`ComputeBackend`].
+pub fn predict_with(
+    backend: &dyn ComputeBackend,
+    model: &SvmModel,
+    x: &Points,
+    threads: usize,
+) -> Vec<f64> {
+    decision_function_with(backend, model, x, threads)
         .into_iter()
         .map(|f| model.label_of(f))
         .collect()

@@ -16,9 +16,9 @@
 //!
 //! One ULV factorization serves every (C, ε) pair of a grid search.
 
+use crate::compute::ComputeBackend;
 use crate::data::sparse::Points;
 use crate::data::Dataset;
-use crate::hss::matvec;
 use crate::hss::ulv::UlvFactor;
 use crate::hss::HssParams;
 use crate::kernel::Kernel;
@@ -80,6 +80,14 @@ impl SvrModel {
 
     /// Predictions for every row of x (dense or CSR).
     pub fn predict(&self, x: &Points) -> Vec<f64> {
+        self.predict_backend(crate::compute::cpu(), x)
+    }
+
+    /// [`Self::predict`] on an explicit [`ComputeBackend`]. The
+    /// all-dense pointwise fast path is backend-independent by design
+    /// (it predates the block path and is bitwise-pinned), so the
+    /// backend only drives the kernel block of mixed/sparse pairings.
+    pub fn predict_backend(&self, backend: &dyn ComputeBackend, x: &Points) -> Vec<f64> {
         if let (Points::Dense(xm), Points::Dense(_)) = (x, &self.sv) {
             // the original pointwise path — all-dense predictions stay
             // bit-for-bit unchanged (and agree with predict_one); any
@@ -88,13 +96,7 @@ impl SvrModel {
         }
         let sv_norms = self.sv.self_norms();
         let x_norms = x.self_norms();
-        let kb = crate::kernel::kernel_block_pts_with_norms(
-            &self.kernel,
-            x,
-            &x_norms,
-            &self.sv,
-            &sv_norms,
-        );
+        let kb = backend.kernel_block_with_norms(&self.kernel, x, &x_norms, &self.sv, &sv_norms);
         (0..x.rows())
             .map(|i| {
                 self.bias
@@ -171,7 +173,7 @@ pub fn train_svr(
 
     // bias from tube-interior residuals: for |z_i| ∈ (0, C),
     // y_i − f_raw(x_i) = ε·sign(z_i) ⇒ b = mean(y_i − (K z)_i − ε sign)
-    let kz = matvec::matvec(hss, &z);
+    let kz = trainer.backend.hss_matvec(hss, &z, 1);
     let mut acc = 0.0;
     let mut cnt = 0.0;
     for i in 0..n {

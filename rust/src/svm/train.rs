@@ -11,9 +11,9 @@
 //! (Tables 4/5: ADMM Time ≪ Compression Time).
 
 use crate::admm::{AdmmOutput, AdmmParams, AdmmSolver};
+use crate::compute::{self, ComputeBackend};
 use crate::data::Dataset;
 use crate::hss::compress::{compress, Compressed};
-use crate::hss::matvec;
 use crate::hss::ulv::UlvFactor;
 use crate::hss::HssParams;
 use crate::kernel::Kernel;
@@ -32,6 +32,11 @@ pub struct HssSvmTrainer {
     /// are thread-invariant: results are bit-for-bit identical for any
     /// value here.
     pub threads: usize,
+    /// Compute backend for the hot primitives (kernel blocks during any
+    /// recompression, matvec probes, model-assembly matvecs). Defaults
+    /// to the bitwise CPU reference; the consensus/sharded trainer
+    /// inherits whatever is set here.
+    pub backend: std::sync::Arc<dyn ComputeBackend>,
 }
 
 /// Per-run timing/size report (one row of Table 4/5).
@@ -51,7 +56,35 @@ impl HssSvmTrainer {
     pub fn compress(ds: &Dataset, kernel: Kernel, params: &HssParams, threads: usize) -> Self {
         let compressed = compress(ds, &kernel, params, threads);
         let y = compressed.pds.y.clone();
-        HssSvmTrainer { kernel, compressed, y, threads: threads.max(1) }
+        HssSvmTrainer {
+            kernel,
+            compressed,
+            y,
+            threads: threads.max(1),
+            backend: compute::cpu_arc(),
+        }
+    }
+
+    /// Stage 1 on an explicit backend: the compression's kernel blocks
+    /// AND all downstream stages run through `backend`.
+    pub fn compress_backend(
+        backend: std::sync::Arc<dyn ComputeBackend>,
+        ds: &Dataset,
+        kernel: Kernel,
+        params: &HssParams,
+        threads: usize,
+    ) -> Self {
+        let compressed =
+            crate::hss::compress::compress_with(&*backend, ds, &kernel, params, threads);
+        let y = compressed.pds.y.clone();
+        HssSvmTrainer { kernel, compressed, y, threads: threads.max(1), backend }
+    }
+
+    /// Swap the compute backend for the downstream stages (builder
+    /// style). The default is the bitwise CPU reference.
+    pub fn with_backend(mut self, backend: std::sync::Arc<dyn ComputeBackend>) -> Self {
+        self.backend = backend;
+        self
     }
 
     /// Stage 1 with cached h-independent preprocessing (cluster tree +
@@ -64,7 +97,13 @@ impl HssSvmTrainer {
     ) -> Self {
         let compressed = crate::hss::compress::compress_preprocessed(pre, &kernel, params, threads);
         let y = compressed.pds.y.clone();
-        HssSvmTrainer { kernel, compressed, y, threads: threads.max(1) }
+        HssSvmTrainer {
+            kernel,
+            compressed,
+            y,
+            threads: threads.max(1),
+            backend: compute::cpu_arc(),
+        }
     }
 
     /// Stage 2: ULV-factor K̃ + βI (level-parallel over the trainer's
@@ -147,14 +186,14 @@ impl HssSvmTrainer {
         // the note in `crate::svm`. Guarded by the regression test
         // `hss_bias_matches_dense_margin_bias` below.)
         let bias = if m_count > 0.0 {
-            let ke = matvec::matvec_threads(hss, &ebar, mv_threads);
+            let ke = self.backend.hss_matvec(hss, &ebar, mv_threads);
             let zky: f64 = zy.iter().zip(ke.iter()).map(|(a, b)| a * b).sum();
             let ysum: f64 =
                 y.iter().zip(ebar.iter()).map(|(yi, ei)| yi * ei).sum();
             -(zky - ysum) / m_count
         } else {
             // no margin SVs (all at bounds): average y − f over the SVs
-            let f = matvec::matvec_threads(hss, &zy, mv_threads);
+            let f = self.backend.hss_matvec(hss, &zy, mv_threads);
             let mut acc = 0.0;
             let mut cnt = 0.0;
             for i in 0..n {
