@@ -329,6 +329,56 @@ fn main() {
         ovo_model.n_sv_unique()
     );
 
+    // --- observability: traced vs untraced train (DESIGN.md §14) ---
+    // The passivity contract has a cost clause: a fully traced train
+    // (file-backed JSONL sink, every event on) must stay within the
+    // committed overhead ceiling (`obs_overhead_pct` in
+    // ci/bench_baseline.toml, a CEILING — not a speedup floor).
+    // Off/on runs interleave and each side takes its best-of, so
+    // thermal drift hits both sides equally.
+    let n_obs = if opts.smoke { 1200 } else { 4000 };
+    println!("\n-- observability: traced vs untraced train (n={n_obs}) --");
+    let ds_obs = synth::blobs(n_obs, 8, 6, 0.3, &mut rng);
+    let hp_obs = HssParams::low_accuracy();
+    let admm_obs = AdmmParams { beta: 100.0, max_it: 10, relax: 1.0, tol: 0.0 };
+    let trace_path =
+        std::env::temp_dir().join(format!("hss_bench_trace_{}.jsonl", std::process::id()));
+    let obs_reps = if opts.smoke { 3 } else { 5 };
+    let mut obs_off_secs = f64::INFINITY;
+    let mut obs_on_secs = f64::INFINITY;
+    let mut phases_obs: Vec<(String, f64, u64)> = Vec::new();
+    for _ in 0..obs_reps {
+        assert!(!hss_svm::obs::enabled());
+        let t = Timer::start();
+        let (_m, stats) =
+            hss_svm::svm::train::train_hss_svm(&ds_obs, kernel, &hp_obs, &admm_obs, 1.0, threads)
+                .expect("untraced train");
+        let secs = t.secs();
+        if secs < obs_off_secs {
+            obs_off_secs = secs;
+            phases_obs = stats.phases.clone();
+        }
+
+        hss_svm::obs::trace::init_path(trace_path.to_str().unwrap()).expect("trace sink");
+        let t = Timer::start();
+        let (_m, _stats) =
+            hss_svm::svm::train::train_hss_svm(&ds_obs, kernel, &hp_obs, &admm_obs, 1.0, threads)
+                .expect("traced train");
+        let secs = t.secs();
+        hss_svm::obs::trace::disable();
+        obs_on_secs = obs_on_secs.min(secs);
+    }
+    let trace_bytes = std::fs::metadata(&trace_path).map(|m| m.len()).unwrap_or(0);
+    std::fs::remove_file(&trace_path).ok();
+    let obs_overhead_pct = 100.0 * (obs_on_secs - obs_off_secs) / obs_off_secs.max(1e-12);
+    b.record_once("obs: untraced train", Duration::from_secs_f64(obs_off_secs));
+    b.record_once("obs: traced train", Duration::from_secs_f64(obs_on_secs));
+    println!(
+        "    untraced  {obs_off_secs:>8.3} s\n    traced    {obs_on_secs:>8.3} s   \
+         ({obs_overhead_pct:+.2}% overhead, {:.1} KB trace)",
+        trace_bytes as f64 / 1e3
+    );
+
     // --- simd-f32 backend: f32 kernel block + predict tile vs the f64
     //     reference (DESIGN.md §13). Asserts the documented ≤1e-4
     //     relative tolerance on every run; the speedup is gated against
@@ -486,6 +536,14 @@ fn main() {
         json.push_str(&format!("  \"ovo_shared_predict_secs\": {shared_predict_secs:.6},\n"));
         json.push_str(&format!("  \"ovo_shared_sv_speedup\": {ovo_shared_sv_speedup:.4},\n"));
         json.push_str(&format!("  \"ovo_max_rel_dev\": {ovo_dev:.3e},\n"));
+        json.push_str(&format!("  \"obs_untraced_secs\": {obs_off_secs:.6},\n"));
+        json.push_str(&format!("  \"obs_traced_secs\": {obs_on_secs:.6},\n"));
+        json.push_str(&format!("  \"obs_overhead_pct\": {obs_overhead_pct:.4},\n"));
+        json.push_str(&format!("  \"obs_trace_bytes\": {trace_bytes},\n"));
+        // phase breakdown of the best untraced train (PhaseTimer rows)
+        for (name, secs, _count) in &phases_obs {
+            json.push_str(&format!("  \"phase_{name}_secs\": {secs:.6},\n"));
+        }
         if let Some((sp, avx2, err)) = simd_metrics {
             json.push_str(&format!("  \"backend_simd_f32_speedup\": {sp:.4},\n"));
             json.push_str(&format!("  \"backend_simd_f32_avx2\": {avx2},\n"));
@@ -541,6 +599,21 @@ fn main() {
             eprintln!(
                 "[hss] REGRESSION: tree-parallel speedup {parallel_speedup:.2}x fell >25% below \
                  the committed baseline"
+            );
+            failed = true;
+        }
+        // `_pct`-suffixed baseline keys are CEILINGS: the measured value
+        // must not exceed the committed number (no 0.75 slack — the
+        // ceiling itself already holds the tolerance).
+        let ceil_obs = baseline_key("obs_overhead_pct");
+        println!(
+            "[hss] obs gate: tracing overhead {obs_overhead_pct:+.2}% \
+             (ceiling {ceil_obs:.2}%)"
+        );
+        if obs_overhead_pct > ceil_obs {
+            eprintln!(
+                "[hss] REGRESSION: tracing overhead {obs_overhead_pct:.2}% exceeds the \
+                 committed {ceil_obs:.2}% ceiling"
             );
             failed = true;
         }

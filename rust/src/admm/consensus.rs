@@ -66,10 +66,12 @@ use crate::hss::ulv::UlvFactor;
 use crate::hss::{Hss, HssParams};
 use crate::kernel::Kernel;
 use crate::linalg::Mat;
+use crate::obs;
 use crate::svm::model::SvmModel;
 use crate::util::prng::Rng;
-use crate::util::timer::Timer;
+use crate::util::timer::{PhaseTimer, Timer};
 use anyhow::{bail, Result};
+use std::time::Duration;
 
 /// Shard-major reduction: ascending shard order, fold seeded with the
 /// first part so a single-shard reduction returns its part verbatim
@@ -194,6 +196,10 @@ pub struct ConsensusTrainer {
     labels: [f64; 2],
     /// Total rows.
     n: usize,
+    /// Accumulating phase profile (compression/factorization seeded by
+    /// `build`, admm/sv-extract recorded as the stages run). Purely
+    /// observational — never read by the training arithmetic.
+    phases: PhaseTimer,
 }
 
 /// Per-shard compression seed: shard 0 keeps the base seed (K = 1 must
@@ -223,15 +229,17 @@ fn build_engine(
     stats: &mut ConsensusStats,
 ) -> Result<ShardEngine> {
     let n = ds.len();
+    let compress_secs;
+    let factor_secs;
     let t = Timer::start();
     let (backend, perm, y) = if n >= 2 {
         let Compressed { hss, pds, stats: cs } = compress(ds, &kernel, params, threads);
-        stats.compress_secs += t.secs();
+        compress_secs = t.secs();
         stats.hss_max_rank = stats.hss_max_rank.max(cs.max_rank);
         stats.kernel_evals += cs.kernel_evals;
         let t = Timer::start();
         let ulv = UlvFactor::new_threaded(&hss, beta, threads)?;
-        stats.factor_secs += t.secs();
+        factor_secs = t.secs();
         stats.hss_memory_bytes += hss.memory_bytes() + ulv.memory_bytes();
         let perm = hss.perm.clone();
         let y = pds.y.clone();
@@ -240,13 +248,24 @@ fn build_engine(
         (ShardBackend::Hss { hss, ulv }, perm, y)
     } else {
         let gram = kernel.gram(&ds.x);
-        stats.compress_secs += t.secs();
+        compress_secs = t.secs();
         let t = Timer::start();
         let chol = DenseShifted::new(&gram, beta)?;
-        stats.factor_secs += t.secs();
+        factor_secs = t.secs();
         stats.hss_memory_bytes += 2 * n * n * std::mem::size_of::<f64>();
         (ShardBackend::Dense { gram, chol }, (0..n).collect(), ds.y.clone())
     };
+    stats.compress_secs += compress_secs;
+    stats.factor_secs += factor_secs;
+    if obs::enabled() {
+        obs::emit(&obs::TraceEvent::ShardBuild {
+            shard,
+            rows: n,
+            compress_secs,
+            factor_secs,
+            rss_bytes: crate::util::bench::peak_rss_bytes().unwrap_or(0),
+        });
+    }
 
     // wⱼ = Yⱼ K_β⁻¹ e, w₁ⱼ = Σᵢ (K_β⁻¹ e)ᵢ — the exact arithmetic of
     // AdmmSolver::new, per shard
@@ -294,6 +313,9 @@ impl ConsensusTrainer {
         stats.resident_shards = engines.len();
         let w1_parts: Vec<f64> = engines.iter().map(|e| e.w1).collect();
         let w1 = fold_sum(&w1_parts);
+        let phases = PhaseTimer::new();
+        phases.add("compression", Duration::from_secs_f64(stats.compress_secs));
+        phases.add("factorization", Duration::from_secs_f64(stats.factor_secs));
         Ok((
             ConsensusTrainer {
                 kernel,
@@ -304,6 +326,7 @@ impl ConsensusTrainer {
                 w1,
                 labels: m.label_pair,
                 n: m.rows,
+                phases,
             },
             stats,
         ))
@@ -322,6 +345,13 @@ impl ConsensusTrainer {
     /// Global w₁ = eᵀ K̃_β⁻¹ e (positive for SPD shard blocks).
     pub fn w1(&self) -> f64 {
         self.w1
+    }
+
+    /// `(phase, secs, count)` rows in pipeline order: compression and
+    /// factorization from the build, plus every admm / sv-extract stage
+    /// run so far. Feeds `report.json`.
+    pub fn phases(&self) -> Vec<(String, f64, u64)> {
+        self.phases.report()
     }
 
     /// Run the consensus ADMM for every C in lockstep (cold start).
@@ -376,8 +406,9 @@ impl ConsensusTrainer {
         let mut primals: Vec<Vec<f64>> = vec![Vec::with_capacity(self.admm.max_it); k];
         let mut duals: Vec<Vec<f64>> = vec![Vec::with_capacity(self.admm.max_it); k];
         let mut active = vec![true; k];
+        let admm_timer = Timer::start();
 
-        for _it in 0..self.admm.max_it {
+        for it in 0..self.admm.max_it {
             let act: Vec<usize> = (0..k).filter(|&j| active[j]).collect();
             if act.is_empty() {
                 break;
@@ -448,8 +479,19 @@ impl ConsensusTrainer {
                 if self.admm.tol > 0.0 && pr.max(du) < self.admm.tol {
                     active[j] = false;
                 }
+                // Passivity: the consensus ratio and residuals are read
+                // back out AFTER they fed the update — the trace never
+                // participates in the arithmetic.
+                if obs::enabled() {
+                    obs::emit(&obs::TraceEvent::ConsensusIter {
+                        iter: it,
+                        c: cs[j],
+                        ratio: ratios[ci],
+                    });
+                }
             }
         }
+        self.phases.add("admm", admm_timer.elapsed());
 
         (0..k)
             .map(|j| ConsensusOutput {
@@ -484,6 +526,7 @@ impl ConsensusTrainer {
         out: &ConsensusOutput,
         c: f64,
     ) -> Result<SvmModel> {
+        let sv_timer = Timer::start();
         let ne = self.engines.len();
         assert_eq!(out.z.len(), ne, "output/engine shard count mismatch");
         let sv_tol = 1e-8 * c.max(1.0);
@@ -557,6 +600,7 @@ impl ConsensusTrainer {
             alpha_y.extend(sv_idx.iter().map(|&i| zys[ei][i]));
         }
         let sv = concat_points(sv_parts);
+        self.phases.add("sv-extract", sv_timer.elapsed());
 
         Ok(SvmModel { sv, alpha_y, bias, kernel: self.kernel, c, labels: self.labels })
     }

@@ -15,4 +15,4 @@ pub mod consensus;
 pub mod solver;
 
 pub use consensus::{ConsensusOutput, ConsensusStats, ConsensusTrainer};
-pub use solver::{AdmmOutput, AdmmParams, AdmmSolver, ShiftedSolve};
+pub use solver::{AdmmHistory, AdmmOutput, AdmmParams, AdmmSolver, ShiftedSolve};

@@ -2,6 +2,7 @@
 
 use crate::linalg::chol::Chol;
 use crate::linalg::Mat;
+use crate::obs;
 use crate::util::threadpool;
 
 /// Minimum `n * k_active` elements before the per-column grid updates go
@@ -40,10 +41,16 @@ pub trait ShiftedSolve {
 
 impl ShiftedSolve for crate::hss::ulv::UlvFactor {
     fn solve_shifted(&self, b: &[f64]) -> Vec<f64> {
+        if obs::enabled() {
+            obs::emit(&obs::TraceEvent::UlvSolve { n: b.len(), rhs: 1 });
+        }
         self.solve(b)
     }
 
     fn solve_shifted_multi(&self, b: &Mat) -> Mat {
+        if obs::enabled() {
+            obs::emit(&obs::TraceEvent::UlvSolve { n: b.rows(), rhs: b.cols() });
+        }
         self.solve_mat(b)
     }
 
@@ -127,6 +134,41 @@ pub struct AdmmOutput {
     /// Dual objective  ½ zᵀYKYz − eᵀz  evaluated through the solver's K̃
     /// (only filled when requested).
     pub objective: Option<f64>,
+}
+
+/// Compact convergence summary of one trained C column: the iteration
+/// count and final residuals the solver always computes (and, before
+/// DESIGN.md §14, always dropped). Surfaced in `grid` summaries and
+/// `report.json`.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct AdmmHistory {
+    /// Iterations actually run (early-stop aware: ≤ `max_it`).
+    pub iterations: usize,
+    /// Last primal residual ‖x−z‖ (0 when no iteration ran).
+    pub final_primal: f64,
+    /// Last dual residual β‖z−z_prev‖ (0 when no iteration ran).
+    pub final_dual: f64,
+}
+
+impl AdmmOutput {
+    /// ADMM iterations actually run (== `primal.len()`).
+    pub fn iterations(&self) -> usize {
+        self.primal.len()
+    }
+
+    /// Final `(primal, dual)` residuals; zeros when no iteration ran.
+    pub fn final_residuals(&self) -> (f64, f64) {
+        (
+            self.primal.last().copied().unwrap_or(0.0),
+            self.dual.last().copied().unwrap_or(0.0),
+        )
+    }
+
+    /// The per-column summary (`grid` output, `report.json`).
+    pub fn history(&self) -> AdmmHistory {
+        let (final_primal, final_dual) = self.final_residuals();
+        AdmmHistory { iterations: self.iterations(), final_primal, final_dual }
+    }
 }
 
 /// One ADMM half-iteration after the x-update: project z into [0, C],
@@ -231,7 +273,7 @@ impl<'a, S: ShiftedSolve> AdmmSolver<'a, S> {
         let mut q = vec![0.0; n];
         let mut u = vec![0.0; n];
 
-        for _k in 0..self.params.max_it {
+        for k in 0..self.params.max_it {
             // q = e + μ + βz ; u = Y q
             for i in 0..n {
                 q[i] = 1.0 + mu[i] + beta * z[i];
@@ -247,6 +289,9 @@ impl<'a, S: ShiftedSolve> AdmmSolver<'a, S> {
             let (pr, du) = admm_zmu_step(&x, &mut z, &mut mu, c, beta, relax);
             primal.push(pr);
             dual.push(du);
+            if obs::enabled() {
+                obs::emit(&obs::TraceEvent::AdmmIter { c, iter: k, primal: pr, dual: du });
+            }
             if self.params.tol > 0.0 {
                 let p = *primal.last().unwrap();
                 let d = *dual.last().unwrap();
@@ -256,7 +301,17 @@ impl<'a, S: ShiftedSolve> AdmmSolver<'a, S> {
             }
         }
 
-        AdmmOutput { z, x, mu, primal, dual, objective: None }
+        let out = AdmmOutput { z, x, mu, primal, dual, objective: None };
+        if obs::enabled() {
+            let (pr, du) = out.final_residuals();
+            obs::emit(&obs::TraceEvent::AdmmDone {
+                c,
+                iters: out.iterations(),
+                primal: pr,
+                dual: du,
+            });
+        }
+        out
     }
 
     /// Run the whole C-grid in lockstep: one blocked multi-RHS solve per
@@ -293,7 +348,7 @@ impl<'a, S: ShiftedSolve> AdmmSolver<'a, S> {
         let mut active = vec![true; k];
         let mut w2s = vec![0.0; k];
 
-        for _it in 0..self.params.max_it {
+        for it in 0..self.params.max_it {
             let act: Vec<usize> = (0..k).filter(|&j| active[j]).collect();
             if act.is_empty() {
                 break;
@@ -355,6 +410,35 @@ impl<'a, S: ShiftedSolve> AdmmSolver<'a, S> {
                             *ac.get(j) = false;
                         }
                     }
+                });
+            }
+            // Passivity contract (DESIGN.md §14): trace events are read
+            // out AFTER the parallel join, from values already written —
+            // never from inside the update closures.
+            if obs::enabled() {
+                for &j in &act {
+                    let pr = *primals[j].last().unwrap();
+                    let du = *duals[j].last().unwrap();
+                    obs::emit(&obs::TraceEvent::AdmmIter {
+                        c: cs[j],
+                        iter: it,
+                        primal: pr,
+                        dual: du,
+                    });
+                    if !active[j] {
+                        obs::emit(&obs::TraceEvent::AdmmFreeze { c: cs[j], iter: it });
+                    }
+                }
+            }
+        }
+
+        if obs::enabled() {
+            for j in 0..k {
+                obs::emit(&obs::TraceEvent::AdmmDone {
+                    c: cs[j],
+                    iters: primals[j].len(),
+                    primal: primals[j].last().copied().unwrap_or(0.0),
+                    dual: duals[j].last().copied().unwrap_or(0.0),
                 });
             }
         }

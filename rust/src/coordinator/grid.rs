@@ -9,6 +9,7 @@ use crate::data::libsvm::Repr;
 use crate::data::{Dataset, ShardSet};
 use crate::hss::HssParams;
 use crate::kernel::Kernel;
+use crate::obs;
 use crate::svm::multiclass::{MulticlassDataset, OvoModel, OvoPairSet};
 use crate::svm::{predict, SvmModel};
 use crate::util::timer::Timer;
@@ -37,6 +38,15 @@ pub struct GridCell {
     /// across the row's cells.
     pub admm_secs: f64,
     pub n_sv: usize,
+    /// ADMM iterations this column actually ran (0 where per-column
+    /// histories are not tracked — multiclass OvO cells aggregate many
+    /// pairwise subproblems).
+    pub iters: usize,
+    pub final_primal: f64,
+    pub final_dual: f64,
+    /// Per-iteration residual curves (empty for multiclass cells).
+    pub primal: Vec<f64>,
+    pub dual: Vec<f64>,
 }
 
 /// Full grid outcome.
@@ -73,9 +83,30 @@ impl GridSearch {
             let batch_secs = t.secs();
             total_admm += batch_secs;
             let per_cell = batch_secs / self.c_values.len().max(1) as f64;
-            for (&c, (model, _out)) in self.c_values.iter().zip(outs.into_iter()) {
+            for (&c, (model, out)) in self.c_values.iter().zip(outs.into_iter()) {
                 let accuracy = predict::accuracy(&model, test, self.threads);
-                cells.push(GridCell { h, c, accuracy, admm_secs: per_cell, n_sv: model.n_sv() });
+                let hist = out.history();
+                if obs::enabled() {
+                    obs::emit(&obs::TraceEvent::GridCell {
+                        h,
+                        c,
+                        accuracy,
+                        iters: hist.iterations,
+                        n_sv: model.n_sv(),
+                    });
+                }
+                cells.push(GridCell {
+                    h,
+                    c,
+                    accuracy,
+                    admm_secs: per_cell,
+                    n_sv: model.n_sv(),
+                    iters: hist.iterations,
+                    final_primal: hist.final_primal,
+                    final_dual: hist.final_dual,
+                    primal: out.primal,
+                    dual: out.dual,
+                });
             }
         }
 
@@ -117,12 +148,26 @@ impl GridSearch {
             let per_cell = stats.admm_secs / self.c_values.len().max(1) as f64;
             for (&c, model) in self.c_values.iter().zip(models.iter()) {
                 let accuracy = model.accuracy(test, self.threads);
+                if obs::enabled() {
+                    obs::emit(&obs::TraceEvent::GridCell {
+                        h,
+                        c,
+                        accuracy,
+                        iters: 0,
+                        n_sv: model.n_sv_unique(),
+                    });
+                }
                 cells.push(GridCell {
                     h,
                     c,
                     accuracy,
                     admm_secs: per_cell,
                     n_sv: model.n_sv_unique(),
+                    iters: 0,
+                    final_primal: 0.0,
+                    final_dual: 0.0,
+                    primal: Vec::new(),
+                    dual: Vec::new(),
                 });
             }
         }
@@ -162,7 +207,28 @@ impl GridSearch {
             for (&c, out) in self.c_values.iter().zip(outs.iter()) {
                 let model = trainer.assemble_model(shards, out, c)?;
                 let accuracy = predict::accuracy(&model, test, self.threads);
-                cells.push(GridCell { h, c, accuracy, admm_secs: per_cell, n_sv: model.n_sv() });
+                let iters = out.primal.len();
+                if obs::enabled() {
+                    obs::emit(&obs::TraceEvent::GridCell {
+                        h,
+                        c,
+                        accuracy,
+                        iters,
+                        n_sv: model.n_sv(),
+                    });
+                }
+                cells.push(GridCell {
+                    h,
+                    c,
+                    accuracy,
+                    admm_secs: per_cell,
+                    n_sv: model.n_sv(),
+                    iters,
+                    final_primal: out.primal.last().copied().unwrap_or(0.0),
+                    final_dual: out.dual.last().copied().unwrap_or(0.0),
+                    primal: out.primal.clone(),
+                    dual: out.dual.clone(),
+                });
             }
         }
         Ok(Self::summarize(cells, compress_secs, factor_secs, total_admm))

@@ -144,6 +144,31 @@ pub fn compress_preprocessed_with(
     }
 
     let nodes: Vec<HssNode> = slots.into_iter().map(|s| s.expect("node built")).collect();
+
+    // Passivity contract (DESIGN.md §14): trace events are emitted only
+    // AFTER the level-scheduled worker scope joined, reading the already
+    // built nodes — the sampling RNG and the parallel schedule never see
+    // the tracer.
+    if crate::obs::enabled() {
+        for (level, ids) in plan.bottom_up().iter().enumerate() {
+            crate::obs::emit(&crate::obs::TraceEvent::CompressLevel {
+                level,
+                nodes: ids.len(),
+            });
+            for &id in *ids {
+                let nd = &nodes[id];
+                crate::obs::emit(&crate::obs::TraceEvent::CompressNode {
+                    node: id,
+                    level,
+                    leaf: tree.nodes[id].is_leaf(),
+                    rank: nd.skel.len(),
+                    rows: nd.u.as_ref().map(|u| u.rows()).unwrap_or(nd.end - nd.begin),
+                    cols: nd.u.as_ref().map(|u| u.cols()).unwrap_or(0),
+                });
+            }
+        }
+    }
+
     let hss = Hss {
         nodes,
         n,
@@ -160,6 +185,14 @@ pub fn compress_preprocessed_with(
         kernel_evals: kernel_evals.load(Ordering::Relaxed),
         compress_secs: timer.secs(),
     };
+    if crate::obs::enabled() {
+        crate::obs::emit(&crate::obs::TraceEvent::CompressDone {
+            max_rank: stats.max_rank,
+            memory_bytes: stats.memory_bytes as u64,
+            kernel_evals: stats.kernel_evals as u64,
+            secs: stats.compress_secs,
+        });
+    }
     Compressed { hss, pds: pds.clone(), stats }
 }
 

@@ -30,6 +30,7 @@ pub mod hodlr;
 pub mod hss;
 pub mod kernel;
 pub mod linalg;
+pub mod obs;
 pub mod runtime;
 pub mod serve;
 pub mod server;

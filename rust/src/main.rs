@@ -21,6 +21,7 @@ use hss_svm::data::{libsvm, scale, synth, Dataset, ShardSet};
 use hss_svm::eval::{figures, report, tables};
 use hss_svm::hss::HssParams;
 use hss_svm::kernel::Kernel;
+use hss_svm::obs::{self, ConvergenceReport, ReportColumn};
 use hss_svm::runtime::PjrtRuntime;
 use hss_svm::svm::multiclass::{train_ovo, MulticlassDataset};
 use hss_svm::svm::{predict, train::train_hss_svm, AnyModel};
@@ -47,7 +48,15 @@ fn main() {
 }
 
 fn run(args: &Args) -> Result<()> {
-    match args.command.as_str() {
+    // Structured tracing (DESIGN.md §14): `--trace PATH` wins over the
+    // HSS_SVM_TRACE env var; both install the process-global JSONL sink
+    // before any work starts, so every subcommand is traceable.
+    match args.str_opt("trace") {
+        Some(path) => obs::trace::init_path(path)
+            .with_context(|| format!("--trace: cannot open {path:?}"))?,
+        None => obs::trace::init_from_env(),
+    }
+    let result = match args.command.as_str() {
         "train" => cmd_train(args),
         "predict" => cmd_predict(args),
         "serve" => cmd_serve(args),
@@ -59,7 +68,18 @@ fn run(args: &Args) -> Result<()> {
             Ok(())
         }
         other => bail!("unknown subcommand {other:?} (try `hss-svm help`)"),
+    };
+    obs::trace::flush();
+    result
+}
+
+/// Persist the convergence report when `--report PATH` was given.
+fn write_report(args: &Args, report: &ConvergenceReport) -> Result<()> {
+    if let Some(path) = args.str_opt("report") {
+        report.write(path).with_context(|| format!("--report: cannot write {path:?}"))?;
+        println!("  convergence report written to {path}");
     }
+    Ok(())
 }
 
 const HELP: &str = r#"hss-svm — nonlinear SVM training via ADMM + HSS kernel approximations
@@ -68,6 +88,7 @@ USAGE:
   hss-svm train      --dataset <table1-name> [--scale F] [--h F] [--c F]
                      [--beta F] [--iters N] [--hss low|high|exact]
                      [--threads N] [--pjrt]
+                     [--trace t.jsonl] [--report report.json]
   hss-svm train      --train-file f.libsvm --test-file g.libsvm [...same]
                      [--save-model m.model] [--sparse|--dense] [--binary]
                      [--raw]
@@ -114,9 +135,11 @@ USAGE:
                                          # requests micro-batched across
                                          # connections; admin commands
                                          # MODEL <name> | RELOAD [name] |
-                                         # STATS | SHUTDOWN | QUIT
+                                         # STATS | METRICS | SHUTDOWN |
+                                         # QUIT
   hss-svm grid       --dataset <name> [--scale F] [--h 0.1,1,10]
                      [--c 0.1,1,10] [--hss low|high] [--threads N]
+                     [--trace t.jsonl] [--report report.json]
   hss-svm grid       --train-file f.libsvm --shards K --test-file g.libsvm
                      [--shard-dir D] [...same]
                                          # out-of-core grid: one consensus
@@ -139,6 +162,15 @@ LIBSVM-style one-vs-one (k(k-1)/2 pairwise classifiers, trained in
 parallel, each reusing one HSS factorization across the whole C grid).
 Saved OvO models store a shared support-vector pool; predict and both
 serve modes answer the file's original integer class labels.
+
+Observability (see DESIGN.md section 14): --trace PATH (or the
+HSS_SVM_TRACE env var) streams structured JSONL events — compression
+ranks, ADMM residuals per iteration, server batches — on any
+subcommand; --report PATH persists a convergence report (phase
+breakdown + residual curves) from train/grid; the TCP server's METRICS
+admin command answers Prometheus text exposition terminated by a
+"# EOF" line. Tracing never perturbs results: models and predictions
+are bitwise identical with it on or off.
 "#;
 
 fn hss_params_from(args: &Args) -> Result<HssParams> {
@@ -330,10 +362,12 @@ fn cmd_train_sharded(args: &Args) -> Result<()> {
         eprintln!("train: --pjrt ignored for sharded training (prediction only)");
     }
     let admm = AdmmParams { beta, max_it: iters, relax: 1.0, tol: 0.0 };
+    let t_train = Timer::start();
     let (trainer, stats) = ConsensusTrainer::build(&shards, repr, Kernel::Gaussian { h }, &hss, admm, threads)?;
     let t = Timer::start();
-    let (model, _out) = trainer.train_c(&shards, c)?;
+    let (model, out) = trainer.train_c(&shards, c)?;
     let admm_secs = t.secs();
+    let train_wall = t_train.secs();
     println!(
         "  compression   {:>9.3} s   (HSS max rank {}, {:.3} MB across {} resident shards, {} kernel evals)",
         stats.compress_secs,
@@ -345,6 +379,29 @@ fn cmd_train_sharded(args: &Args) -> Result<()> {
     println!("  factorization {:>9.3} s", stats.factor_secs);
     println!("  ADMM ({iters} it)  {admm_secs:>9.3} s   (consensus across {k} shards)");
     println!("  support vectors: {}", model.n_sv());
+    write_report(
+        args,
+        &ConvergenceReport {
+            command: "train".to_string(),
+            dataset: m.name.clone(),
+            n: m.rows,
+            threads,
+            wall_secs: train_wall,
+            phases: trainer.phases(),
+            columns: vec![ReportColumn {
+                h,
+                c,
+                iters: out.primal.len(),
+                primal: out.primal.clone(),
+                dual: out.dual.clone(),
+            }],
+            extra: vec![
+                ("shards".to_string(), k.to_string()),
+                ("hss_max_rank".to_string(), stats.hss_max_rank.to_string()),
+                ("n_sv".to_string(), model.n_sv().to_string()),
+            ],
+        },
+    )?;
     if let Some(f) = args.str_opt("test-file") {
         let test_repr = test_repr_for(repr, m.is_sparse_under(repr));
         let test = libsvm::read_file_with(f, Some(m.dim), test_repr)?;
@@ -391,6 +448,7 @@ fn cmd_train_multiclass(
     if args.has("pjrt") {
         eprintln!("train: --pjrt ignored for multiclass (shared-SV engine is native-only)");
     }
+    let t_train = Timer::start();
     let (model, stats) = train_ovo(
         &train,
         Kernel::Gaussian { h },
@@ -399,6 +457,7 @@ fn cmd_train_multiclass(
         c,
         threads,
     )?;
+    let train_wall = t_train.secs();
     let t = Timer::start();
     let acc = model.accuracy(&test, threads);
     let predict_secs = t.secs();
@@ -416,6 +475,29 @@ fn cmd_train_multiclass(
         model.n_sv_unique()
     );
     println!("  test accuracy:   {:.3}%", acc * 100.0);
+    // OvO phase rows are CPU-seconds summed across the parallel pairwise
+    // subproblems, so their total legitimately exceeds wall_secs.
+    write_report(
+        args,
+        &ConvergenceReport {
+            command: "train".to_string(),
+            dataset: train.name.clone(),
+            n: train.len(),
+            threads,
+            wall_secs: train_wall,
+            phases: vec![
+                ("compression".to_string(), stats.compress_secs, stats.pairs as u64),
+                ("factorization".to_string(), stats.factor_secs, stats.pairs as u64),
+                ("admm".to_string(), stats.admm_secs, stats.pairs as u64),
+            ],
+            columns: Vec::new(),
+            extra: vec![
+                ("pairs".to_string(), stats.pairs.to_string()),
+                ("n_sv_unique".to_string(), model.n_sv_unique().to_string()),
+                ("accuracy".to_string(), format!("{acc:?}")),
+            ],
+        },
+    )?;
     if let Some(path) = args.str_opt("save-model") {
         hss_svm::svm::persist::save_ovo(&model, path)?;
         println!("  model saved to {path}");
@@ -443,6 +525,7 @@ fn cmd_train_binary(args: &Args, train: Dataset, test: Dataset) -> Result<()> {
         },
         test.len()
     );
+    let t_train = Timer::start();
     let (model, stats) = train_hss_svm(
         &train,
         Kernel::Gaussian { h },
@@ -451,6 +534,7 @@ fn cmd_train_binary(args: &Args, train: Dataset, test: Dataset) -> Result<()> {
         c,
         threads,
     )?;
+    let train_wall = t_train.secs();
     let t = Timer::start();
     let acc = if args.has("pjrt") {
         let rt = PjrtRuntime::load(PjrtRuntime::default_dir())
@@ -481,6 +565,29 @@ fn cmd_train_binary(args: &Args, train: Dataset, test: Dataset) -> Result<()> {
     );
     println!("  support vectors: {}", model.n_sv());
     println!("  test accuracy:   {:.3}%", acc * 100.0);
+    write_report(
+        args,
+        &ConvergenceReport {
+            command: "train".to_string(),
+            dataset: train.name.clone(),
+            n: train.len(),
+            threads,
+            wall_secs: train_wall,
+            phases: stats.phases.clone(),
+            columns: vec![ReportColumn {
+                h,
+                c,
+                iters: stats.history.iterations,
+                primal: stats.primal.clone(),
+                dual: stats.dual.clone(),
+            }],
+            extra: vec![
+                ("hss_max_rank".to_string(), stats.hss_max_rank.to_string()),
+                ("n_sv".to_string(), model.n_sv().to_string()),
+                ("accuracy".to_string(), format!("{acc:?}")),
+            ],
+        },
+    )?;
     if let Some(path) = args.str_opt("save-model") {
         hss_svm::svm::persist::save(&model, path)?;
         println!("  model saved to {path}");
@@ -640,8 +747,8 @@ fn cmd_predict_binary(args: &Args, model: hss_svm::svm::SvmModel) -> Result<()> 
 /// ([`hss_svm::server`]) — same per-connection line protocol and batch
 /// semantics, requests micro-batched **across** connections, plus a
 /// model registry (`--models name=path,...`, `MODEL`/`RELOAD` admin
-/// commands, mtime hot reload), `STATS`, backpressure and graceful
-/// `SHUTDOWN`.
+/// commands, mtime hot reload), `STATS`, Prometheus-style `METRICS`,
+/// backpressure and graceful `SHUTDOWN`.
 fn cmd_serve(args: &Args) -> Result<()> {
     if args.str_opt("listen").is_some() {
         return cmd_serve_tcp(args);
@@ -729,7 +836,7 @@ fn cmd_serve_tcp(args: &Args) -> Result<()> {
     eprintln!(
         "serving on {} (models: {}, default {:?}, {threads} threads); \
          LIBSVM lines per connection, admin: MODEL <name> | RELOAD [name] | \
-         STATS | SHUTDOWN | QUIT",
+         STATS | METRICS | SHUTDOWN | QUIT",
         server.local_addr(),
         names.join(", "),
         names[0],
@@ -737,6 +844,68 @@ fn cmd_serve_tcp(args: &Args) -> Result<()> {
     server.run()?;
     eprintln!("{}", handle.summary());
     Ok(())
+}
+
+/// Per-cell ADMM convergence lines of the grid summary: iteration
+/// counts and final residuals, where per-column histories exist (binary
+/// cells; multiclass OvO cells aggregate many pairwise subproblems and
+/// carry no per-cell curve).
+fn print_grid_convergence(res: &hss_svm::coordinator::grid::GridResult) {
+    let with_hist: Vec<_> = res.cells.iter().filter(|c| c.iters > 0).collect();
+    if with_hist.is_empty() {
+        return;
+    }
+    println!("ADMM convergence per cell:");
+    for cell in with_hist {
+        println!(
+            "  h={:<10} C={:<10} {:>3} it   primal {:.3e}   dual {:.3e}   acc {:.3}%",
+            cell.h,
+            cell.c,
+            cell.iters,
+            cell.final_primal,
+            cell.final_dual,
+            cell.accuracy * 100.0
+        );
+    }
+}
+
+/// `report.json` content of a grid run: coarse phase rows (the grid's
+/// three sequential stages) plus one residual column per evaluated cell.
+fn grid_report(
+    dataset: &str,
+    n: usize,
+    threads: usize,
+    wall_secs: f64,
+    h_count: usize,
+    res: &hss_svm::coordinator::grid::GridResult,
+) -> ConvergenceReport {
+    ConvergenceReport {
+        command: "grid".to_string(),
+        dataset: dataset.to_string(),
+        n,
+        threads,
+        wall_secs,
+        phases: vec![
+            ("compression".to_string(), res.compress_secs, h_count as u64),
+            ("factorization".to_string(), res.factor_secs, h_count as u64),
+            ("admm".to_string(), res.total_admm_secs, res.cells.len() as u64),
+        ],
+        columns: res
+            .cells
+            .iter()
+            .map(|c| ReportColumn {
+                h: c.h,
+                c: c.c,
+                iters: c.iters,
+                primal: c.primal.clone(),
+                dual: c.dual.clone(),
+            })
+            .collect(),
+        extra: vec![
+            ("best_h".to_string(), format!("{:?}", res.best_h)),
+            ("best_accuracy".to_string(), format!("{:?}", res.best_accuracy)),
+        ],
+    }
 }
 
 fn cmd_grid(args: &Args) -> Result<()> {
@@ -759,6 +928,7 @@ fn cmd_grid(args: &Args) -> Result<()> {
         admm: AdmmParams { beta, max_it: args.usize_or("iters", 10)?, relax: 1.0, tol: 0.0 },
         threads,
     };
+    let t_grid = Timer::start();
     let res = match &pair {
         LoadedPair::Binary(train, test) => {
             println!("grid search on {name} ({n} pts), beta = {beta}");
@@ -772,7 +942,9 @@ fn cmd_grid(args: &Args) -> Result<()> {
             grid.run_multiclass(train, test)?
         }
     };
+    let grid_wall = t_grid.secs();
     println!("{}", hss_svm::coordinator::grid::ascii_heatmap(&res, &h_values, &c_values));
+    print_grid_convergence(&res);
     println!(
         "compression {:.3}s ({} h values) | factorization {:.3}s | total ADMM {:.3}s ({} cells)",
         res.compress_secs,
@@ -787,6 +959,7 @@ fn cmd_grid(args: &Args) -> Result<()> {
         report::c_set(&res.best_cs),
         res.best_accuracy * 100.0
     );
+    write_report(args, &grid_report(&name, n, threads, grid_wall, h_values.len(), &res))?;
     Ok(())
 }
 
@@ -817,8 +990,11 @@ fn cmd_grid_sharded(args: &Args, threads: usize) -> Result<()> {
         "grid search out-of-core on {} ({} pts, {} shards), beta = {beta}",
         m.name, m.rows, m.shards
     );
+    let t_grid = Timer::start();
     let res = grid.run_sharded(&shards, repr, &test)?;
+    let grid_wall = t_grid.secs();
     println!("{}", hss_svm::coordinator::grid::ascii_heatmap(&res, &h_values, &c_values));
+    print_grid_convergence(&res);
     println!(
         "compression {:.3}s ({} h values) | factorization {:.3}s | total ADMM {:.3}s ({} cells)",
         res.compress_secs,
@@ -833,6 +1009,7 @@ fn cmd_grid_sharded(args: &Args, threads: usize) -> Result<()> {
         report::c_set(&res.best_cs),
         res.best_accuracy * 100.0
     );
+    write_report(args, &grid_report(&m.name, m.rows, threads, grid_wall, h_values.len(), &res))?;
     Ok(())
 }
 

@@ -1,0 +1,32 @@
+//! Observability: structured tracing, convergence reports, Prometheus
+//! text exposition (DESIGN.md §14).
+//!
+//! Everything in this module is **passive** by contract: enabling any
+//! of it must not change a single bit of any model, prediction or
+//! residual. Concretely that means no RNG draws, no float arithmetic
+//! on training data, and no reordering of reductions — events are
+//! emitted *after* parallel sections join, from already-computed
+//! values, and the only shared resource they touch is the sink mutex.
+//! `tests/obs_invariance.rs` pins the contract (bitwise model and
+//! prediction equality, tracing on vs. off, threads ∈ {1, 2, 8}) and a
+//! `bench_hss` section gates the tracing-disabled overhead at < 2%.
+//!
+//! Layout:
+//! - [`trace`]: the JSONL event sink behind a static atomic enable
+//!   gate (`--trace PATH` / `HSS_SVM_TRACE`). With tracing off, a call
+//!   site is one relaxed atomic load.
+//! - [`report`]: the `report.json` convergence report (phase
+//!   breakdown + per-column residual curves — the paper's
+//!   Compression / Factorization / ADMM tables from real runs).
+//! - [`prom`]: Prometheus text-exposition rendering (the TCP server's
+//!   `METRICS` admin command).
+//! - [`json`]: a dependency-free JSON value parser, used to validate
+//!   and round-trip the traces in tests.
+
+pub mod json;
+pub mod prom;
+pub mod report;
+pub mod trace;
+
+pub use report::{ConvergenceReport, ReportColumn};
+pub use trace::{emit, enabled, TraceEvent};

@@ -1,0 +1,161 @@
+//! Prometheus text-exposition rendering (the `METRICS` admin command).
+//!
+//! Naming conventions (DESIGN.md §14): every metric is prefixed
+//! `hss_svm_`, counters end in `_total`, gauges are bare nouns,
+//! histograms use base units (`_seconds`) with cumulative `le` buckets,
+//! `+Inf`, `_sum` and `_count` — the standard client-library surface,
+//! so a stock Prometheus scraper parses it unmodified. The rendered
+//! block ends with a literal `# EOF` line (OpenMetrics terminator),
+//! which doubles as the end-of-response marker for the TCP line
+//! protocol: a client reads lines until `# EOF`.
+
+/// Escape a label *value* (the only position needing escapes).
+pub fn escape_label(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for ch in v.chars() {
+        match ch {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Format a sample value: integers render bare, floats via shortest
+/// round-trip, infinities as `+Inf`/`-Inf` (bucket bounds need it).
+pub fn fmt_value(v: f64) -> String {
+    if v.is_nan() {
+        "NaN".to_string()
+    } else if v == f64::INFINITY {
+        "+Inf".to_string()
+    } else if v == f64::NEG_INFINITY {
+        "-Inf".to_string()
+    } else if v.fract() == 0.0 && v.abs() < 9.007_199_254_740_992e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v:?}")
+    }
+}
+
+/// Incremental builder for one exposition block.
+#[derive(Default)]
+pub struct PromText {
+    buf: String,
+}
+
+impl PromText {
+    pub fn new() -> PromText {
+        PromText::default()
+    }
+
+    /// `# HELP` + `# TYPE` header. `typ` ∈ {"counter","gauge","histogram"}.
+    pub fn header(&mut self, name: &str, typ: &str, help: &str) {
+        self.buf.push_str(&format!("# HELP {name} {help}\n# TYPE {name} {typ}\n"));
+    }
+
+    /// One sample line, optionally labeled.
+    pub fn sample(&mut self, name: &str, labels: &[(&str, &str)], value: f64) {
+        self.buf.push_str(name);
+        if !labels.is_empty() {
+            self.buf.push('{');
+            for (i, (k, v)) in labels.iter().enumerate() {
+                if i > 0 {
+                    self.buf.push(',');
+                }
+                self.buf.push_str(&format!("{k}=\"{}\"", escape_label(v)));
+            }
+            self.buf.push('}');
+        }
+        self.buf.push_str(&format!(" {}\n", fmt_value(value)));
+    }
+
+    /// Header + single unlabeled sample (the common case).
+    pub fn scalar(&mut self, name: &str, typ: &str, help: &str, value: f64) {
+        self.header(name, typ, help);
+        self.sample(name, &[], value);
+    }
+
+    /// A full histogram family from cumulative buckets
+    /// `(upper_bound, cumulative_count)`. Callers pass bounds already
+    /// in base units (seconds); the `+Inf` bucket and `_sum`/`_count`
+    /// are appended from `count`/`sum`.
+    pub fn histogram(
+        &mut self,
+        name: &str,
+        help: &str,
+        buckets: &[(f64, u64)],
+        count: u64,
+        sum: f64,
+    ) {
+        self.header(name, "histogram", help);
+        let bucket_name = format!("{name}_bucket");
+        for &(le, cum) in buckets {
+            self.sample(&bucket_name, &[("le", &fmt_value(le))], cum as f64);
+        }
+        self.sample(&bucket_name, &[("le", "+Inf")], count as f64);
+        self.sample(&format!("{name}_sum"), &[], sum);
+        self.sample(&format!("{name}_count"), &[], count as f64);
+    }
+
+    /// Finish the block with the `# EOF` terminator line.
+    pub fn finish(mut self) -> String {
+        self.buf.push_str("# EOF");
+        self.buf
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_counters_gauges_and_labels() {
+        let mut p = PromText::new();
+        p.scalar("hss_svm_lines_total", "counter", "Request lines received.", 42.0);
+        p.header("hss_svm_model_generation", "gauge", "Registry generation per model.");
+        p.sample("hss_svm_model_generation", &[("model", "a\"b\\c")], 3.0);
+        let text = p.finish();
+        assert!(text.contains("# HELP hss_svm_lines_total Request lines received.\n"));
+        assert!(text.contains("# TYPE hss_svm_lines_total counter\n"));
+        assert!(text.contains("hss_svm_lines_total 42\n"));
+        assert!(
+            text.contains("hss_svm_model_generation{model=\"a\\\"b\\\\c\"} 3\n"),
+            "label escaping: {text}"
+        );
+        assert!(text.ends_with("# EOF"), "terminator: {text:?}");
+    }
+
+    #[test]
+    fn histogram_renders_cumulative_buckets_inf_sum_count() {
+        let mut p = PromText::new();
+        p.histogram(
+            "hss_svm_request_latency_seconds",
+            "Latency.",
+            &[(0.001, 3), (0.01, 7), (0.1, 7)],
+            9,
+            0.5,
+        );
+        let text = p.finish();
+        let les: Vec<f64> = text
+            .lines()
+            .filter(|l| l.starts_with("hss_svm_request_latency_seconds_bucket"))
+            .map(|l| l.rsplit(' ').next().unwrap().parse::<f64>().unwrap())
+            .collect();
+        assert_eq!(les, vec![3.0, 7.0, 7.0, 9.0], "cumulative + +Inf==count: {text}");
+        assert!(text.contains("{le=\"0.001\"}"));
+        assert!(text.contains("{le=\"+Inf\"} 9\n"));
+        assert!(text.contains("hss_svm_request_latency_seconds_sum 0.5\n"));
+        assert!(text.contains("hss_svm_request_latency_seconds_count 9\n"));
+    }
+
+    #[test]
+    fn value_formatting_covers_integers_floats_and_inf() {
+        assert_eq!(fmt_value(0.0), "0");
+        assert_eq!(fmt_value(12345.0), "12345");
+        assert_eq!(fmt_value(0.25), "0.25");
+        assert_eq!(fmt_value(f64::INFINITY), "+Inf");
+        assert_eq!(fmt_value(1e16), "1e16");
+    }
+}

@@ -1,0 +1,188 @@
+//! `report.json` — the paper-style convergence report of a train/grid
+//! run: per-phase wall-clock breakdown (Compression / Factorization /
+//! ADMM, plus SV extraction where it applies) and the per-C-column
+//! primal/dual residual curves the solver used to discard.
+//!
+//! The phase breakdown must account for the run: the CI `obs-smoke`
+//! job asserts `Σ phases.secs` lands within 10% of `wall_secs`
+//! (`wall_secs` is measured around training proper, not data loading).
+
+use crate::obs::trace::{self, TraceEvent};
+use std::io::Write;
+
+/// Residual history of one trained (h, C) column.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ReportColumn {
+    pub h: f64,
+    pub c: f64,
+    /// ADMM iterations actually run (== `primal.len()`).
+    pub iters: usize,
+    /// Primal residual ‖z − x‖∞-style curve, one entry per iteration.
+    pub primal: Vec<f64>,
+    /// Dual residual curve, one entry per iteration.
+    pub dual: Vec<f64>,
+}
+
+/// The whole report. Build with the struct literal, then [`write`].
+#[derive(Clone, Debug, Default)]
+pub struct ConvergenceReport {
+    /// Subcommand that produced the report ("train", "grid", ...).
+    pub command: String,
+    pub dataset: String,
+    /// Training rows.
+    pub n: usize,
+    pub threads: usize,
+    /// End-to-end training wall clock (excludes data loading).
+    pub wall_secs: f64,
+    /// `(name, secs, count)` rows, `PhaseTimer::report()` shape.
+    pub phases: Vec<(String, f64, u64)>,
+    pub columns: Vec<ReportColumn>,
+    /// Extra scalar facts, pre-rendered as JSON values (numbers or
+    /// quoted strings) — e.g. `("hss_max_rank", "31")`.
+    pub extra: Vec<(String, String)>,
+}
+
+fn num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:?}")
+    } else {
+        "null".to_string()
+    }
+}
+
+fn quote(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+fn num_list(vs: &[f64]) -> String {
+    let items: Vec<String> = vs.iter().map(|v| num(*v)).collect();
+    format!("[{}]", items.join(","))
+}
+
+impl ConvergenceReport {
+    /// Σ of the phase breakdown (the 10%-of-wall acceptance quantity).
+    pub fn phase_total(&self) -> f64 {
+        self.phases.iter().map(|(_, s, _)| *s).sum()
+    }
+
+    /// Serialize as human-readable JSON.
+    pub fn to_json(&self) -> String {
+        let mut j = String::from("{\n");
+        j.push_str(&format!("  \"command\": {},\n", quote(&self.command)));
+        j.push_str(&format!("  \"dataset\": {},\n", quote(&self.dataset)));
+        j.push_str(&format!("  \"n\": {},\n", self.n));
+        j.push_str(&format!("  \"threads\": {},\n", self.threads));
+        j.push_str(&format!("  \"wall_secs\": {},\n", num(self.wall_secs)));
+        j.push_str(&format!("  \"phase_total_secs\": {},\n", num(self.phase_total())));
+        j.push_str("  \"phases\": [\n");
+        for (i, (name, secs, count)) in self.phases.iter().enumerate() {
+            j.push_str(&format!(
+                "    {{\"name\": {}, \"secs\": {}, \"count\": {}}}{}\n",
+                quote(name),
+                num(*secs),
+                count,
+                if i + 1 < self.phases.len() { "," } else { "" }
+            ));
+        }
+        j.push_str("  ],\n");
+        j.push_str("  \"columns\": [\n");
+        for (i, col) in self.columns.iter().enumerate() {
+            j.push_str(&format!(
+                "    {{\"h\": {}, \"c\": {}, \"iters\": {}, \"primal\": {}, \"dual\": {}}}{}\n",
+                num(col.h),
+                num(col.c),
+                col.iters,
+                num_list(&col.primal),
+                num_list(&col.dual),
+                if i + 1 < self.columns.len() { "," } else { "" }
+            ));
+        }
+        j.push_str("  ]");
+        for (k, v) in &self.extra {
+            j.push_str(&format!(",\n  {}: {}", quote(k), v));
+        }
+        j.push_str("\n}\n");
+        j
+    }
+
+    /// Write the report and mirror the phase rows onto the trace (so a
+    /// traced run carries its own breakdown).
+    pub fn write(&self, path: &str) -> std::io::Result<()> {
+        if trace::enabled() {
+            for (name, secs, _) in &self.phases {
+                trace::emit(&TraceEvent::Phase { name: name.clone(), secs: *secs });
+            }
+        }
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        f.write_all(self.to_json().as_bytes())?;
+        f.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::json;
+
+    fn sample() -> ConvergenceReport {
+        ConvergenceReport {
+            command: "train".to_string(),
+            dataset: "blobs".to_string(),
+            n: 2000,
+            threads: 2,
+            wall_secs: 1.0,
+            phases: vec![
+                ("compression".to_string(), 0.50, 1),
+                ("factorization".to_string(), 0.25, 1),
+                ("admm".to_string(), 0.20, 1),
+            ],
+            columns: vec![ReportColumn {
+                h: 1.0,
+                c: 0.5,
+                iters: 2,
+                primal: vec![1e-1, 1e-3],
+                dual: vec![2e-1, 2e-3],
+            }],
+            extra: vec![("hss_max_rank".to_string(), "31".to_string())],
+        }
+    }
+
+    #[test]
+    fn report_serializes_to_valid_json_with_phase_total() {
+        let r = sample();
+        assert!((r.phase_total() - 0.95).abs() < 1e-12);
+        let j = json::parse(&r.to_json()).expect("report is valid JSON");
+        assert_eq!(j.get("command").unwrap().as_str(), Some("train"));
+        assert_eq!(j.get("phase_total_secs").unwrap().as_f64(), Some(0.95));
+        let phases = j.get("phases").unwrap().as_array().unwrap();
+        assert_eq!(phases.len(), 3);
+        assert_eq!(phases[0].get("name").unwrap().as_str(), Some("compression"));
+        let cols = j.get("columns").unwrap().as_array().unwrap();
+        assert_eq!(cols[0].get("iters").unwrap().as_u64(), Some(2));
+        assert_eq!(
+            cols[0].get("primal").unwrap().as_array().unwrap()[1].as_f64(),
+            Some(1e-3)
+        );
+        assert_eq!(j.get("hss_max_rank").unwrap().as_u64(), Some(31));
+    }
+
+    #[test]
+    fn empty_report_is_still_valid_json() {
+        let r = ConvergenceReport::default();
+        let j = json::parse(&r.to_json()).expect("empty report is valid JSON");
+        assert_eq!(j.get("phases").unwrap().as_array().unwrap().len(), 0);
+        assert_eq!(j.get("columns").unwrap().as_array().unwrap().len(), 0);
+    }
+}

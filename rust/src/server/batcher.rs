@@ -111,24 +111,31 @@ impl Batcher {
 
     /// Block until a tile is ready (or an idle tick passes — the caller
     /// uses those to poll model staleness). `None` means drained and
-    /// shut down.
-    fn next_batch(&self) -> Option<Vec<Request>> {
+    /// shut down. The second element names why the tile flushed
+    /// ("full" / "model-switch" / "deadline" / "drain" / "idle") —
+    /// reporting only, it feeds the `server_batch` trace event.
+    fn next_batch(&self) -> Option<(Vec<Request>, &'static str)> {
         let mut q = self.queue.lock().unwrap();
         loop {
             if !q.is_empty() {
                 let deadline = q[0].enqueued + self.batch_wait;
                 let run = Self::prefix_run(&q, self.batch_max);
                 let now = Instant::now();
-                if run >= self.batch_max
-                    || run < q.len()
-                    || now >= deadline
-                    // Acquire pairs with shutdown's Release store.
-                    || self.draining.load(Ordering::Acquire)
-                {
-                    return Some(q.drain(..run).collect());
-                }
-                let (guard, _) = self.ready.wait_timeout(q, deadline - now).unwrap();
-                q = guard;
+                // Acquire pairs with shutdown's Release store.
+                let reason = if run >= self.batch_max {
+                    "full"
+                } else if run < q.len() {
+                    "model-switch"
+                } else if now >= deadline {
+                    "deadline"
+                } else if self.draining.load(Ordering::Acquire) {
+                    "drain"
+                } else {
+                    let (guard, _) = self.ready.wait_timeout(q, deadline - now).unwrap();
+                    q = guard;
+                    continue;
+                };
+                return Some((q.drain(..run).collect(), reason));
             } else {
                 // Acquire pairs with shutdown's Release store: an empty
                 // queue plus an observed drain flag means every accepted
@@ -139,7 +146,7 @@ impl Batcher {
                 let (guard, timeout) = self.ready.wait_timeout(q, IDLE_TICK).unwrap();
                 q = guard;
                 if timeout.timed_out() && q.is_empty() {
-                    return Some(Vec::new()); // idle tick
+                    return Some((Vec::new(), "idle")); // idle tick
                 }
             }
         }
@@ -153,13 +160,25 @@ impl Batcher {
         threads: usize,
         poll_interval: Duration,
     ) {
-        while let Some(batch) = self.next_batch() {
+        while let Some((batch, reason)) = self.next_batch() {
             let swapped = registry.poll_stale(poll_interval);
             if swapped > 0 {
                 ServerStats::add(&stats.reloads, swapped as u64);
             }
             if !batch.is_empty() {
+                ServerStats::sub(&stats.queue_depth, batch.len() as u64);
+                ServerStats::add(&stats.inflight, batch.len() as u64);
                 Self::process(&batch, registry.backend(), stats, threads);
+                ServerStats::sub(&stats.inflight, batch.len() as u64);
+                if crate::obs::enabled() {
+                    crate::obs::emit(&crate::obs::TraceEvent::ServerBatch {
+                        size: batch.len(),
+                        model: batch[0].model.name.clone(),
+                        generation: batch[0].model.generation,
+                        reason: reason.to_string(),
+                        queue_depth: self.depth(),
+                    });
+                }
             }
         }
     }
@@ -299,11 +318,13 @@ mod tests {
             assert!(b.try_push(req(1, i as u64, m, &tx)).is_ok());
         }
         // deadline far away, but model switches force immediate flushes
-        let t1 = b.next_batch().unwrap();
+        let (t1, why1) = b.next_batch().unwrap();
         assert_eq!(t1.len(), 2);
+        assert_eq!(why1, "model-switch");
         assert!(t1.iter().all(|r| Arc::ptr_eq(&r.model, &m1)));
-        let t2 = b.next_batch().unwrap();
+        let (t2, why2) = b.next_batch().unwrap();
         assert_eq!(t2.len(), 3);
+        assert_eq!(why2, "model-switch");
         assert!(t2.iter().all(|r| Arc::ptr_eq(&r.model, &m2)));
         // FIFO order is preserved across flushes
         assert_eq!(t1[0].seq, 0);
@@ -323,8 +344,9 @@ mod tests {
         assert_eq!(b.depth(), 2);
         // under batch_max, flushed once the oldest request ages out
         let t = Instant::now();
-        let tile = b.next_batch().unwrap();
+        let (tile, why) = b.next_batch().unwrap();
         assert_eq!(tile.len(), 2);
+        assert!(why == "deadline" || why == "drain", "unexpected flush reason {why}");
         assert!(t.elapsed() <= Duration::from_secs(5));
         // draining: rejects new pushes, then reports done
         b.shutdown();
@@ -350,7 +372,7 @@ mod tests {
                 let b = Arc::clone(&b);
                 scope.spawn(move || {
                     let mut popped = 0u64;
-                    while let Some(tile) = b.next_batch() {
+                    while let Some((tile, _why)) = b.next_batch() {
                         popped += tile.len() as u64;
                     }
                     popped

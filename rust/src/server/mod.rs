@@ -127,7 +127,12 @@ impl ServerHandle {
 
     /// One-line counter summary (the `STATS` payload).
     pub fn stats_line(&self) -> String {
-        self.shared.stats.stats_line(self.shared.batcher.depth())
+        self.shared.stats.stats_line()
+    }
+
+    /// Prometheus text exposition (the `METRICS` payload).
+    pub fn metrics(&self) -> String {
+        self.shared.stats.render_prometheus(&self.shared.registry.names())
     }
 
     /// Human exit banner.
@@ -297,16 +302,23 @@ fn handle_conn(conn: u64, stream: TcpStream, shared: &Shared) {
                     tx: tx.clone(),
                 };
                 seq += 1;
-                if let Err(req) = shared.batcher.try_push(req) {
-                    ServerStats::bump(&shared.stats.rejected);
-                    let _ = req.tx.send((
-                        req.seq,
-                        format!(
-                            "ERR line {}: server overloaded ({} requests in flight), \
-                             line dropped",
-                            req.lineno, shared.cfg.max_inflight
-                        ),
-                    ));
+                let model_name = req.model.name.clone();
+                match shared.batcher.try_push(req) {
+                    Ok(()) => {
+                        ServerStats::bump(&shared.stats.queue_depth);
+                        shared.stats.bump_model(&model_name);
+                    }
+                    Err(req) => {
+                        ServerStats::bump(&shared.stats.rejected);
+                        let _ = req.tx.send((
+                            req.seq,
+                            format!(
+                                "ERR line {}: server overloaded ({} requests in flight), \
+                                 line dropped",
+                                req.lineno, shared.cfg.max_inflight
+                            ),
+                        ));
+                    }
                 }
             }
         }
@@ -361,7 +373,12 @@ fn run_admin(cmd: Admin, cur_model: &mut String, shared: &Shared) -> (String, bo
             }
             Err(e) => (format!("ERR reload {name}: {e:#}"), false),
         },
-        Admin::Stats => (shared.stats.stats_line(shared.batcher.depth()), false),
+        Admin::Stats => (shared.stats.stats_line(), false),
+        // Multi-line response: the writer emits it as one sequenced
+        // chunk, ending with the `# EOF` line clients read until.
+        Admin::Metrics => {
+            (shared.stats.render_prometheus(&shared.registry.names()), false)
+        }
         Admin::Shutdown => {
             trigger_shutdown(shared);
             ("OK shutting down".to_string(), true)

@@ -17,6 +17,7 @@
 //! | `MODEL <name>`       | `OK model <name> gen <g>` / `ERR ...`       |
 //! | `RELOAD [<name>]`    | `OK reloaded ...` / `ERR ...`               |
 //! | `STATS`              | `OK stats k=v ...`                          |
+//! | `METRICS`            | Prometheus text exposition, `# EOF`-ended   |
 //! | `SHUTDOWN`           | `OK shutting down` (then server drains)     |
 //! | `QUIT`               | `OK bye` (connection closes after drain)    |
 
@@ -29,6 +30,9 @@ pub enum Admin {
     Reload(Option<String>),
     /// `STATS`: one-line counters + latency percentiles.
     Stats,
+    /// `METRICS`: multi-line Prometheus text exposition, terminated by
+    /// a `# EOF` line (the client reads until it).
+    Metrics,
     /// `SHUTDOWN`: graceful server shutdown (drain, then exit).
     Shutdown,
     /// `QUIT`: close this connection (after its in-flight lines drain).
@@ -55,6 +59,7 @@ pub fn parse_admin(line: &str) -> Option<Result<Admin, String>> {
             _ => usage("RELOAD [<name>]"),
         },
         "STATS" if arg.is_none() => Some(Ok(Admin::Stats)),
+        "METRICS" if arg.is_none() => Some(Ok(Admin::Metrics)),
         "SHUTDOWN" if arg.is_none() => Some(Ok(Admin::Shutdown)),
         "QUIT" if arg.is_none() => Some(Ok(Admin::Quit)),
         _ => None,
@@ -71,6 +76,7 @@ mod tests {
         assert_eq!(parse_admin("RELOAD"), Some(Ok(Admin::Reload(None))));
         assert_eq!(parse_admin("RELOAD a"), Some(Ok(Admin::Reload(Some("a".into())))));
         assert_eq!(parse_admin("STATS"), Some(Ok(Admin::Stats)));
+        assert_eq!(parse_admin("METRICS"), Some(Ok(Admin::Metrics)));
         assert_eq!(parse_admin("SHUTDOWN"), Some(Ok(Admin::Shutdown)));
         assert_eq!(parse_admin("QUIT"), Some(Ok(Admin::Quit)));
         // requests — labeled, 0-labeled and bare feature lines
@@ -94,7 +100,8 @@ mod tests {
             parse_admin("RELOAD a b"),
             Some(Err("ERR usage: RELOAD [<name>]".into()))
         );
-        // STATS with an argument is not a recognized admin form
+        // STATS/METRICS with an argument are not recognized admin forms
         assert_eq!(parse_admin("STATS now"), None);
+        assert_eq!(parse_admin("METRICS all"), None);
     }
 }

@@ -202,6 +202,14 @@ impl ModelRegistry {
         let loaded = Arc::new(LoadedModel { name: name.to_string(), generation, model });
         *stamp_guard = pre;
         *entry.current.write().unwrap() = loaded;
+        // Both reload drivers (RELOAD admin command and the staleness
+        // poll) funnel through here — one emission point covers both.
+        if crate::obs::enabled() {
+            crate::obs::emit(&crate::obs::TraceEvent::ServerReload {
+                model: name.to_string(),
+                generation,
+            });
+        }
         Ok(generation)
     }
 

@@ -1,13 +1,21 @@
-//! Server-wide counters and latency percentiles.
+//! Server-wide counters, gauges and latency percentiles.
 //!
-//! Everything is a relaxed atomic (or the lock-free
+//! Everything hot is a relaxed atomic (or the lock-free
 //! [`Histogram`] from `util::bench`), so connection readers, the
 //! batcher and the `STATS` admin command never contend. Latency is
 //! measured enqueue → response-routed, i.e. the queueing delay the
 //! micro-batcher trades against tile efficiency, not socket time.
+//! The per-model request counters sit behind a mutex: they are touched
+//! once per enqueued line, and the map is tiny (one entry per model).
+//!
+//! `METRICS` renders all of it as Prometheus text exposition through
+//! [`crate::obs::prom`] (naming conventions in DESIGN.md §14).
 
+use crate::obs::prom::PromText;
 use crate::util::bench::Histogram;
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 
 #[derive(Default)]
 pub struct ServerStats {
@@ -34,8 +42,16 @@ pub struct ServerStats {
     pub rejected: AtomicU64,
     /// Model hot-swaps (RELOAD + mtime poll).
     pub reloads: AtomicU64,
+    /// Gauge: requests sitting in the batcher queue right now
+    /// (incremented on successful enqueue, decremented when a tile is
+    /// popped for processing).
+    pub queue_depth: AtomicU64,
+    /// Gauge: requests popped from the queue and being predicted.
+    pub inflight: AtomicU64,
     /// Enqueue → response latency of predicted lines.
     pub latency: Histogram,
+    /// Request lines enqueued per model (BTreeMap → stable render order).
+    model_lines: Mutex<BTreeMap<String, u64>>,
 }
 
 impl ServerStats {
@@ -59,16 +75,35 @@ impl ServerStats {
         counter.fetch_sub(1, Ordering::Relaxed);
     }
 
+    /// Subtract `n` from a gauge (e.g. `queue_depth` when a whole tile
+    /// is popped).
+    #[inline]
+    pub fn sub(counter: &AtomicU64, n: u64) {
+        counter.fetch_sub(n, Ordering::Relaxed);
+    }
+
     fn get(counter: &AtomicU64) -> u64 {
         counter.load(Ordering::Relaxed)
     }
 
+    /// Count one enqueued request line against `model`.
+    pub fn bump_model(&self, model: &str) {
+        let mut g = self.model_lines.lock().unwrap_or_else(|e| e.into_inner());
+        *g.entry(model.to_string()).or_insert(0) += 1;
+    }
+
+    /// Per-model request counts in name order.
+    pub fn model_lines(&self) -> Vec<(String, u64)> {
+        let g = self.model_lines.lock().unwrap_or_else(|e| e.into_inner());
+        g.iter().map(|(k, v)| (k.clone(), *v)).collect()
+    }
+
     /// The one-line `STATS` admin response.
-    pub fn stats_line(&self, queue_depth: usize) -> String {
+    pub fn stats_line(&self) -> String {
         format!(
             "OK stats connections={} active={} lines={} skipped={} admin={} \
              predicted={} batches={} failed={} dropped={} rejected={} reloads={} \
-             queue={queue_depth} p50_us={:.0} p99_us={:.0} mean_us={:.0}",
+             queue={} inflight={} p50_us={:.0} p99_us={:.0} mean_us={:.0}",
             Self::get(&self.connections),
             Self::get(&self.active),
             Self::get(&self.lines),
@@ -80,10 +115,134 @@ impl ServerStats {
             Self::get(&self.dropped_lines),
             Self::get(&self.rejected),
             Self::get(&self.reloads),
+            Self::get(&self.queue_depth),
+            Self::get(&self.inflight),
             self.latency.percentile_us(0.5),
             self.latency.percentile_us(0.99),
             self.latency.mean_us(),
         )
+    }
+
+    /// The `METRICS` admin response: the whole surface as Prometheus
+    /// text exposition. `models` is the registry's `(name, generation)`
+    /// snapshot; per-model request counters come from [`Self::model_lines`].
+    pub fn render_prometheus(&self, models: &[(String, u64)]) -> String {
+        let mut p = PromText::new();
+        p.scalar(
+            "hss_svm_connections_total",
+            "counter",
+            "Connections accepted since startup.",
+            Self::get(&self.connections) as f64,
+        );
+        p.scalar(
+            "hss_svm_connections_active",
+            "gauge",
+            "Currently open connections.",
+            Self::get(&self.active) as f64,
+        );
+        p.scalar(
+            "hss_svm_request_lines_total",
+            "counter",
+            "Request lines received (admin commands excluded).",
+            Self::get(&self.lines) as f64,
+        );
+        p.scalar(
+            "hss_svm_skipped_lines_total",
+            "counter",
+            "Blank or comment lines skipped.",
+            Self::get(&self.skipped) as f64,
+        );
+        p.scalar(
+            "hss_svm_admin_commands_total",
+            "counter",
+            "Admin commands processed.",
+            Self::get(&self.admin) as f64,
+        );
+        p.scalar(
+            "hss_svm_predictions_total",
+            "counter",
+            "Predictions emitted.",
+            Self::get(&self.predicted) as f64,
+        );
+        p.scalar(
+            "hss_svm_batches_total",
+            "counter",
+            "Prediction tiles flushed.",
+            Self::get(&self.batches) as f64,
+        );
+        p.scalar(
+            "hss_svm_failed_lines_total",
+            "counter",
+            "Malformed request lines answered with an error.",
+            Self::get(&self.failed_lines) as f64,
+        );
+        p.scalar(
+            "hss_svm_dropped_lines_total",
+            "counter",
+            "Lines dropped because a same-connection line poisoned their tile.",
+            Self::get(&self.dropped_lines) as f64,
+        );
+        p.scalar(
+            "hss_svm_rejected_lines_total",
+            "counter",
+            "Lines rejected by backpressure (queue full).",
+            Self::get(&self.rejected) as f64,
+        );
+        p.scalar(
+            "hss_svm_model_reloads_total",
+            "counter",
+            "Model hot-swaps (RELOAD + mtime poll).",
+            Self::get(&self.reloads) as f64,
+        );
+        p.scalar(
+            "hss_svm_queue_depth",
+            "gauge",
+            "Requests waiting in the batcher queue.",
+            Self::get(&self.queue_depth) as f64,
+        );
+        p.scalar(
+            "hss_svm_inflight",
+            "gauge",
+            "Requests being predicted right now.",
+            Self::get(&self.inflight) as f64,
+        );
+        if !models.is_empty() {
+            p.header(
+                "hss_svm_model_generation",
+                "gauge",
+                "Registry generation of each loaded model.",
+            );
+            for (name, generation) in models {
+                p.sample("hss_svm_model_generation", &[("model", name)], *generation as f64);
+            }
+        }
+        let per_model = self.model_lines();
+        if !per_model.is_empty() {
+            p.header(
+                "hss_svm_model_requests_total",
+                "counter",
+                "Request lines enqueued per model.",
+            );
+            for (name, count) in &per_model {
+                p.sample("hss_svm_model_requests_total", &[("model", name)], *count as f64);
+            }
+        }
+        // Histogram buckets are recorded in microseconds; Prometheus
+        // base units are seconds.
+        let buckets: Vec<(f64, u64)> = self
+            .latency
+            .cumulative_buckets()
+            .into_iter()
+            .map(|(ub_us, cum)| (ub_us / 1e6, cum))
+            .collect();
+        p.histogram(
+            "hss_svm_request_latency_seconds",
+            "Enqueue-to-response latency of predicted lines.",
+            &buckets,
+            self.latency.count(),
+            self.latency.sum_us() as f64 / 1e6,
+        );
+        p.finish()
     }
 
     /// Shutdown banner (mirrors the stdin mode's exit line).
@@ -112,13 +271,16 @@ mod tests {
         let s = ServerStats::new();
         ServerStats::bump(&s.connections);
         ServerStats::add(&s.lines, 7);
+        ServerStats::add(&s.queue_depth, 3);
+        ServerStats::bump(&s.inflight);
         s.latency.record(Duration::from_micros(500));
-        let line = s.stats_line(3);
+        let line = s.stats_line();
         assert!(line.starts_with("OK stats "), "{line}");
         for key in [
             "connections=1",
             "lines=7",
             "queue=3",
+            "inflight=1",
             "p50_us=",
             "p99_us=",
             "mean_us=",
@@ -127,5 +289,50 @@ mod tests {
         }
         assert!(!line.contains('\n'));
         assert!(s.summary().contains("7 lines"));
+    }
+
+    #[test]
+    fn prometheus_exposition_is_complete_and_cumulative() {
+        let s = ServerStats::new();
+        ServerStats::add(&s.lines, 5);
+        ServerStats::add(&s.predicted, 4);
+        ServerStats::add(&s.queue_depth, 2);
+        s.bump_model("default");
+        s.bump_model("default");
+        s.bump_model("alt");
+        s.latency.record(Duration::from_micros(10));
+        s.latency.record(Duration::from_micros(100));
+        s.latency.record(Duration::from_micros(100));
+        s.latency.record(Duration::from_millis(5));
+        let text =
+            s.render_prometheus(&[("alt".to_string(), 2), ("default".to_string(), 1)]);
+        assert!(text.ends_with("# EOF"), "terminator: {text:?}");
+        for needle in [
+            "# TYPE hss_svm_request_lines_total counter",
+            "hss_svm_request_lines_total 5",
+            "# TYPE hss_svm_queue_depth gauge",
+            "hss_svm_queue_depth 2",
+            "hss_svm_model_generation{model=\"alt\"} 2",
+            "hss_svm_model_requests_total{model=\"default\"} 2",
+            "hss_svm_model_requests_total{model=\"alt\"} 1",
+            "# TYPE hss_svm_request_latency_seconds histogram",
+            "hss_svm_request_latency_seconds_count 4",
+        ] {
+            assert!(text.contains(needle), "missing {needle:?} in:\n{text}");
+        }
+        // bucket lines must be cumulative and end at the total count
+        let cums: Vec<f64> = text
+            .lines()
+            .filter(|l| l.starts_with("hss_svm_request_latency_seconds_bucket"))
+            .map(|l| l.rsplit(' ').next().unwrap().parse::<f64>().unwrap())
+            .collect();
+        assert!(cums.len() >= 2, "expected bucket lines: {text}");
+        assert!(cums.windows(2).all(|w| w[0] <= w[1]), "non-cumulative: {cums:?}");
+        assert_eq!(*cums.last().unwrap(), 4.0, "+Inf bucket == count");
+        // every sample value parses as a float (no stray text)
+        for l in text.lines().filter(|l| !l.starts_with('#')) {
+            let v = l.rsplit(' ').next().unwrap();
+            assert!(v.parse::<f64>().is_ok(), "unparseable sample value {v:?} in {l:?}");
+        }
     }
 }

@@ -10,15 +10,16 @@
 //! The grid search over C repeats only stage 3, whose cost is negligible
 //! (Tables 4/5: ADMM Time ≪ Compression Time).
 
-use crate::admm::{AdmmOutput, AdmmParams, AdmmSolver};
+use crate::admm::{AdmmHistory, AdmmOutput, AdmmParams, AdmmSolver};
 use crate::compute::{self, ComputeBackend};
 use crate::data::Dataset;
 use crate::hss::compress::{compress, Compressed};
 use crate::hss::ulv::UlvFactor;
 use crate::hss::HssParams;
 use crate::kernel::Kernel;
+use crate::obs;
 use crate::svm::model::SvmModel;
-use crate::util::timer::Timer;
+use crate::util::timer::{PhaseTimer, Timer};
 use anyhow::Result;
 
 /// Stage-1 state: compressed kernel + tree-ordered training data.
@@ -49,6 +50,14 @@ pub struct TrainStats {
     pub hss_max_rank: usize,
     pub kernel_evals: usize,
     pub n_sv: usize,
+    /// `(phase, secs, count)` rows in pipeline order —
+    /// `PhaseTimer::report()` shape, feeds `report.json`.
+    pub phases: Vec<(String, f64, u64)>,
+    /// ADMM convergence summary of the trained column.
+    pub history: AdmmHistory,
+    /// Per-iteration residual curves of the trained column.
+    pub primal: Vec<f64>,
+    pub dual: Vec<f64>,
 }
 
 impl HssSvmTrainer {
@@ -109,7 +118,12 @@ impl HssSvmTrainer {
     /// Stage 2: ULV-factor K̃ + βI (level-parallel over the trainer's
     /// worker pool; the factor reuses the same pool for its solves).
     pub fn factor(&self, beta: f64) -> Result<UlvFactor> {
-        UlvFactor::new_threaded(&self.compressed.hss, beta, self.threads)
+        let t = Timer::start();
+        let ulv = UlvFactor::new_threaded(&self.compressed.hss, beta, self.threads)?;
+        if obs::enabled() {
+            obs::emit(&obs::TraceEvent::UlvFactor { n: self.y.len(), beta, secs: t.secs() });
+        }
+        Ok(ulv)
     }
 
     /// Stage 3: run ADMM for one C and assemble the model
@@ -234,26 +248,24 @@ pub fn train_hss_svm(
     c: f64,
     threads: usize,
 ) -> Result<(SvmModel, TrainStats)> {
-    let t = Timer::start();
-    let trainer = HssSvmTrainer::compress(ds, kernel, hss_params, threads);
-    let compress_secs = t.secs();
-
-    let t = Timer::start();
-    let ulv = trainer.factor(admm_params.beta)?;
-    let factor_secs = t.secs();
-
-    let t = Timer::start();
-    let (model, _out) = trainer.train_c(&ulv, admm_params, c);
-    let admm_secs = t.secs();
+    let pt = PhaseTimer::new();
+    let trainer =
+        pt.record_val("compression", || HssSvmTrainer::compress(ds, kernel, hss_params, threads));
+    let ulv = pt.record_val("factorization", || trainer.factor(admm_params.beta))?;
+    let (model, out) = pt.record_val("admm", || trainer.train_c(&ulv, admm_params, c));
 
     let stats = TrainStats {
-        compress_secs,
-        factor_secs,
-        admm_secs,
+        compress_secs: pt.secs("compression"),
+        factor_secs: pt.secs("factorization"),
+        admm_secs: pt.secs("admm"),
         hss_memory_bytes: trainer.compressed.stats.memory_bytes,
         hss_max_rank: trainer.compressed.stats.max_rank,
         kernel_evals: trainer.compressed.stats.kernel_evals,
         n_sv: model.n_sv(),
+        phases: pt.report(),
+        history: out.history(),
+        primal: out.primal,
+        dual: out.dual,
     };
     Ok((model, stats))
 }

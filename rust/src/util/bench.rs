@@ -102,6 +102,36 @@ impl Histogram {
         self.sum_us.load(Ordering::Relaxed) as f64 / n as f64
     }
 
+    /// Total of all recorded samples in microseconds.
+    pub fn sum_us(&self) -> u64 {
+        self.sum_us.load(Ordering::Relaxed)
+    }
+
+    /// Cumulative buckets for Prometheus exposition: `(upper_bound_us,
+    /// cumulative_count)` per bucket, trimmed after the last non-empty
+    /// bucket (the `+Inf` bucket is the caller's `count()`). Bucket `i`
+    /// spans `(2^(i/4), 2^((i+1)/4)]` µs, so the upper bound is
+    /// `2^((i+1)/4)`; empty histograms yield an empty vec.
+    ///
+    /// Reads race concurrent `record` calls benignly: each bucket is
+    /// loaded once, so a sample landing mid-scan appears in at most one
+    /// bucket and the cumulative counts stay monotone.
+    pub fn cumulative_buckets(&self) -> Vec<(f64, u64)> {
+        let counts: Vec<u64> = self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        let Some(last) = counts.iter().rposition(|&c| c > 0) else {
+            return Vec::new();
+        };
+        let mut cum = 0u64;
+        counts[..=last]
+            .iter()
+            .enumerate()
+            .map(|(i, &c)| {
+                cum += c;
+                (((i as f64 + 1.0) / 4.0).exp2(), cum)
+            })
+            .collect()
+    }
+
     /// `q`-quantile (`0 < q ≤ 1`) in microseconds, resolved to the
     /// geometric midpoint of the containing bucket; 0 when empty.
     pub fn percentile_us(&self, q: f64) -> f64 {
@@ -295,6 +325,28 @@ mod tests {
             }
         });
         assert_eq!(h.count(), 4100);
+    }
+
+    #[test]
+    fn cumulative_buckets_are_monotone_and_account_for_every_sample() {
+        let h = Histogram::new();
+        assert!(h.cumulative_buckets().is_empty(), "empty histogram, no buckets");
+        for us in [1u64, 50, 50, 1000, 100_000] {
+            h.record(Duration::from_micros(us));
+        }
+        let cum = h.cumulative_buckets();
+        assert!(!cum.is_empty());
+        assert_eq!(cum.last().unwrap().1, h.count(), "trimmed tail covers all samples");
+        for w in cum.windows(2) {
+            assert!(w[0].0 < w[1].0, "bucket bounds strictly increase");
+            assert!(w[0].1 <= w[1].1, "cumulative counts never decrease");
+        }
+        // every sample sits in a bucket whose bound is >= the sample
+        let at_least_1ms = cum.iter().find(|(ub, _)| *ub >= 1000.0).unwrap();
+        assert!(at_least_1ms.1 >= 4, "the four <=1ms samples are under the 1ms bound");
+        // the µs sum is truncated per sample; allow 1 µs of slack each
+        let sum = h.sum_us() as i64;
+        assert!((sum - 101_101).abs() <= 5, "sum_us {sum}");
     }
 
     #[test]

@@ -1,0 +1,173 @@
+//! Observability passivity contract (DESIGN.md §14): tracing must
+//! NEVER perturb computation. Models, residual histories and
+//! predictions are **bit-for-bit identical** with the JSONL trace sink
+//! on or off, at every thread count — events are emitted after the
+//! parallel joins from already-computed values, so nothing may drift,
+//! not even in the last ulp.
+//!
+//! The trace sink is process-global state, so every test that installs
+//! one serializes on [`sink_lock`] (the same pattern as the unit tests
+//! in `obs::trace`).
+
+use hss_svm::admm::{AdmmParams, AdmmSolver};
+use hss_svm::data::synth;
+use hss_svm::hss::compress::compress;
+use hss_svm::hss::ulv::UlvFactor;
+use hss_svm::hss::HssParams;
+use hss_svm::kernel::Kernel;
+use hss_svm::obs::{self, TraceEvent};
+use hss_svm::svm::train::train_hss_svm;
+use hss_svm::svm::{predict, SvmModel};
+use hss_svm::util::prng::Rng;
+use std::sync::{Arc, Mutex, OnceLock};
+
+const THREAD_COUNTS: [usize; 3] = [1, 2, 8];
+
+fn sink_lock() -> &'static Mutex<()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(()))
+}
+
+/// A writer the test can inspect after `disable()` drops the sink.
+#[derive(Clone, Default)]
+struct SharedBuf(Arc<Mutex<Vec<u8>>>);
+
+impl std::io::Write for SharedBuf {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        self.0.lock().unwrap().extend_from_slice(buf);
+        Ok(buf.len())
+    }
+    fn flush(&mut self) -> std::io::Result<()> {
+        Ok(())
+    }
+}
+
+impl SharedBuf {
+    fn text(&self) -> String {
+        String::from_utf8(self.0.lock().unwrap().clone()).unwrap()
+    }
+}
+
+fn workload() -> hss_svm::data::Dataset {
+    let mut rng = Rng::new(42_042);
+    synth::blobs(600, 3, 4, 0.4, &mut rng)
+}
+
+fn train_once(ds: &hss_svm::data::Dataset, threads: usize) -> (SvmModel, Vec<f64>, Vec<f64>) {
+    let hss = HssParams::low_accuracy();
+    let ap = AdmmParams { beta: 100.0, max_it: 8, relax: 1.0, tol: 0.0 };
+    let (model, stats) =
+        train_hss_svm(ds, Kernel::Gaussian { h: 1.0 }, &hss, &ap, 1.0, threads).unwrap();
+    (model, stats.primal, stats.dual)
+}
+
+fn assert_models_bitwise(a: &SvmModel, b: &SvmModel, label: &str) {
+    assert_eq!(a.alpha_y, b.alpha_y, "{label}: alpha_y differs");
+    assert_eq!(a.bias.to_bits(), b.bias.to_bits(), "{label}: bias differs");
+    assert_eq!(a.n_sv(), b.n_sv(), "{label}: SV count differs");
+}
+
+#[test]
+fn training_is_bitwise_invariant_under_tracing() {
+    let _guard = sink_lock().lock().unwrap_or_else(|e| e.into_inner());
+    let ds = workload();
+    let test = {
+        let mut rng = Rng::new(77);
+        synth::blobs(200, 3, 4, 0.4, &mut rng)
+    };
+    for t in THREAD_COUNTS {
+        // reference run: tracing off
+        obs::trace::disable();
+        assert!(!obs::enabled());
+        let (m_off, primal_off, dual_off) = train_once(&ds, t);
+        let f_off = predict::decision_function(&m_off, &test.x, t);
+
+        // traced run: every event goes to a real sink
+        let buf = SharedBuf::default();
+        obs::trace::init_writer(Box::new(buf.clone()));
+        assert!(obs::enabled());
+        let (m_on, primal_on, dual_on) = train_once(&ds, t);
+        let f_on = predict::decision_function(&m_on, &test.x, t);
+        obs::trace::disable();
+
+        assert_models_bitwise(&m_off, &m_on, &format!("threads={t}"));
+        assert_eq!(primal_off, primal_on, "threads={t}: primal residual curve differs");
+        assert_eq!(dual_off, dual_on, "threads={t}: dual residual curve differs");
+        assert_eq!(f_off, f_on, "threads={t}: decision values differ");
+
+        // the traced run produced a schema-valid, non-trivial stream
+        let text = buf.text();
+        let events: Vec<TraceEvent> = text
+            .lines()
+            .map(|l| TraceEvent::from_json(l).unwrap_or_else(|e| panic!("bad line {l:?}: {e}")))
+            .collect();
+        assert!(
+            events.iter().any(|e| matches!(e, TraceEvent::CompressDone { .. })),
+            "threads={t}: no compress_done event"
+        );
+        assert!(
+            events.iter().any(|e| matches!(e, TraceEvent::UlvFactor { .. })),
+            "threads={t}: no ulv_factor event"
+        );
+        let iters =
+            events.iter().filter(|e| matches!(e, TraceEvent::AdmmIter { .. })).count();
+        assert_eq!(iters, 8, "threads={t}: one admm_iter per iteration");
+        assert!(
+            events.iter().any(|e| matches!(e, TraceEvent::AdmmDone { .. })),
+            "threads={t}: no admm_done event"
+        );
+    }
+}
+
+#[test]
+fn batched_grid_is_bitwise_invariant_under_tracing() {
+    let _guard = sink_lock().lock().unwrap_or_else(|e| e.into_inner());
+    let ds = workload();
+    let compressed = compress(&ds, &Kernel::Gaussian { h: 1.0 }, &HssParams::low_accuracy(), 2);
+    let beta = 100.0;
+    let ap = AdmmParams { beta, max_it: 6, relax: 1.0, tol: 1e-4 };
+    // a C-grid wide enough to engage run_grid's early-freeze machinery
+    let cs: Vec<f64> = (0..12).map(|i| 0.05 * 2.0f64.powi(i)).collect();
+
+    for t in THREAD_COUNTS {
+        obs::trace::disable();
+        let ulv = UlvFactor::new_threaded(&compressed.hss, beta, t).unwrap();
+        let base = AdmmSolver::new(&ulv, &compressed.pds.y, ap).with_threads(t).run_grid(&cs);
+
+        let buf = SharedBuf::default();
+        obs::trace::init_writer(Box::new(buf.clone()));
+        let traced = AdmmSolver::new(&ulv, &compressed.pds.y, ap).with_threads(t).run_grid(&cs);
+        obs::trace::disable();
+
+        assert_eq!(base.len(), traced.len());
+        for (j, (a, b)) in base.iter().zip(traced.iter()).enumerate() {
+            let label = format!("threads={t} C={}", cs[j]);
+            assert_eq!(a.z, b.z, "{label}: z differs");
+            assert_eq!(a.x, b.x, "{label}: x differs");
+            assert_eq!(a.mu, b.mu, "{label}: mu differs");
+            assert_eq!(a.primal, b.primal, "{label}: primal curve differs");
+            assert_eq!(a.dual, b.dual, "{label}: dual curve differs");
+        }
+
+        // schema check + one admm_done per column
+        let text = buf.text();
+        let events: Vec<TraceEvent> = text
+            .lines()
+            .map(|l| TraceEvent::from_json(l).unwrap_or_else(|e| panic!("bad line {l:?}: {e}")))
+            .collect();
+        let done = events.iter().filter(|e| matches!(e, TraceEvent::AdmmDone { .. })).count();
+        assert_eq!(done, cs.len(), "threads={t}: one admm_done per C column");
+    }
+}
+
+#[test]
+fn every_emitted_event_round_trips_through_the_validator() {
+    // Schema round-trip over the full exemplar set — the same validator
+    // the CI obs-smoke job runs against a real traced run.
+    for ev in TraceEvent::exemplars() {
+        let line = ev.to_json();
+        let back = TraceEvent::from_json(&line)
+            .unwrap_or_else(|e| panic!("{line} failed to parse: {e}"));
+        assert_eq!(back, ev, "round-trip mismatch for {line}");
+    }
+}

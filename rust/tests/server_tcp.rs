@@ -337,6 +337,75 @@ fn overload_answers_with_backpressure_errors_not_hangs() {
 }
 
 #[test]
+fn metrics_exposition_is_parseable_under_load() {
+    let model = toy_model(85, 6, 0.0);
+    let cfg = ServerConfig {
+        threads: 2,
+        batch_wait: Duration::from_millis(1),
+        ..Default::default()
+    };
+    let (handle, server) = start(ModelRegistry::single(model.clone()), cfg);
+
+    // some traffic first, so counters and the latency histogram are
+    // non-trivial
+    let mut rng = Rng::new(450);
+    let lines: Vec<String> = (0..60).map(|_| feature_line(&mut rng)).collect();
+    let want = offline(&model, &lines);
+    let (mut r, mut w) = connect(&handle);
+    for l in &lines {
+        send_line(&mut w, l);
+    }
+    for (i, want_line) in want.iter().enumerate() {
+        assert_eq!(&read_line(&mut r), want_line, "line {i}");
+    }
+
+    // METRICS: a multi-line Prometheus exposition, read until "# EOF"
+    send_line(&mut w, "METRICS");
+    let mut body = Vec::new();
+    loop {
+        let line = read_line(&mut r);
+        let done = line == "# EOF";
+        body.push(line);
+        if done {
+            break;
+        }
+    }
+    let text = body.join("\n");
+    for needle in [
+        "# TYPE hss_svm_connections_total counter",
+        "# TYPE hss_svm_queue_depth gauge",
+        "# TYPE hss_svm_request_latency_seconds histogram",
+        "hss_svm_predictions_total 60",
+        "hss_svm_request_latency_seconds_count 60",
+    ] {
+        assert!(text.contains(needle), "missing {needle:?} in:\n{text}");
+    }
+    // every sample line is "name[{labels}] value" with a float value,
+    // and the histogram buckets are cumulative up to +Inf == count
+    let mut cums: Vec<f64> = Vec::new();
+    for line in body.iter().filter(|l| !l.starts_with('#')) {
+        let val = line.rsplit(' ').next().unwrap();
+        let v: f64 = val.parse().unwrap_or_else(|_| panic!("bad sample value in {line:?}"));
+        if line.starts_with("hss_svm_request_latency_seconds_bucket") {
+            cums.push(v);
+        }
+    }
+    assert!(cums.len() >= 2, "expected bucket lines:\n{text}");
+    assert!(cums.windows(2).all(|p| p[0] <= p[1]), "non-cumulative buckets: {cums:?}");
+    assert_eq!(*cums.last().unwrap(), 60.0, "+Inf bucket == count");
+
+    // the connection still serves predictions after the multi-line
+    // response — framing intact
+    let probe = feature_line(&mut rng);
+    let probe_want = offline(&model, std::slice::from_ref(&probe));
+    send_line(&mut w, &probe);
+    assert_eq!(read_line(&mut r), probe_want[0]);
+
+    handle.shutdown();
+    server.join().unwrap().unwrap();
+}
+
+#[test]
 fn stats_report_and_clean_shutdown_under_load() {
     let model = toy_model(90, 7, 0.0);
     let cfg = ServerConfig {
