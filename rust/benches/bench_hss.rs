@@ -15,12 +15,14 @@
 use hss_svm::admm::{AdmmParams, AdmmSolver};
 use hss_svm::cluster::SplitMethod;
 use hss_svm::config::Config;
+use hss_svm::coordinator::GridSearch;
 use hss_svm::data::{synth, CsrMat, Points};
 use hss_svm::hss::compress::compress;
 use hss_svm::hss::matvec;
 use hss_svm::hss::ulv::UlvFactor;
 use hss_svm::hss::HssParams;
 use hss_svm::kernel::Kernel;
+use hss_svm::svm::MultilevelParams;
 use hss_svm::util::bench::Bench;
 use hss_svm::util::prng::Rng;
 use hss_svm::util::threadpool;
@@ -379,6 +381,57 @@ fn main() {
         trace_bytes as f64 / 1e3
     );
 
+    // --- multilevel coarse-to-fine vs flat grid (DESIGN.md §15) ---
+    // Equal-accuracy contract checked right here: the coarse-to-fine
+    // schedule must match the flat grid's best accuracy within half a
+    // point on the fixed-center XOR-blob layout (whose separability is
+    // seed-independent, unlike `synth::blobs`), while training only SV
+    // neighborhoods past the coarse level. The wall-clock ratio gates
+    // against `multilevel_speedup` in ci/bench_baseline.toml below.
+    let (n_ml, n_ml_test) = if opts.smoke { (2000, 800) } else { (6000, 2000) };
+    println!("\n-- multilevel coarse-to-fine vs flat grid (n={n_ml}, 3 h values, 8 C values) --");
+    let mut ml_rng = Rng::new(23);
+    let ds_ml = synth::xor_blobs(n_ml + n_ml_test, 4, 0.35, &mut ml_rng);
+    let (train_ml, test_ml) = ds_ml.split_at(n_ml);
+    let mut hp_ml = HssParams::low_accuracy();
+    hp_ml.leaf_size = 48;
+    let grid_ml = GridSearch {
+        h_values: vec![0.8, 1.2, 2.0],
+        c_values: (0..8).map(|i| 0.05 * 2.0f64.powi(i)).collect(),
+        hss: hp_ml,
+        admm: AdmmParams { beta: 100.0, max_it: 10, relax: 1.0, tol: 0.0 },
+        threads,
+    };
+    let t = Timer::start();
+    let flat_res = grid_ml.run(&train_ml, &test_ml).expect("flat grid");
+    let ml_flat_secs = t.secs();
+    let t = Timer::start();
+    let (ml_res, ml_per_h) = grid_ml
+        .run_multilevel(&train_ml, &test_ml, &MultilevelParams::default())
+        .expect("multilevel grid");
+    let ml_secs = t.secs();
+    let ml_acc_delta = (flat_res.best_accuracy - ml_res.best_accuracy).abs();
+    assert!(
+        ml_acc_delta <= 0.005,
+        "multilevel best accuracy {:.4} deviates from flat {:.4} beyond 0.5 pt",
+        ml_res.best_accuracy,
+        flat_res.best_accuracy
+    );
+    let ml_points_trained: usize =
+        ml_per_h.iter().flat_map(|(_, ls)| ls.iter().map(|l| l.n_points)).sum();
+    let ml_levels: usize = ml_per_h.first().map(|(_, ls)| ls.len()).unwrap_or(0);
+    let multilevel_speedup = ml_flat_secs / ml_secs.max(1e-12);
+    b.record_once("multilevel: flat grid", Duration::from_secs_f64(ml_flat_secs));
+    b.record_once("multilevel: coarse-to-fine grid", Duration::from_secs_f64(ml_secs));
+    println!(
+        "    flat grid       {ml_flat_secs:>8.3} s   (best acc {:.4})\n    \
+         coarse-to-fine  {ml_secs:>8.3} s   ({multilevel_speedup:.2}x speedup, best acc {:.4}, \
+         {ml_levels} levels, {ml_points_trained} pts trained vs {} flat)",
+        flat_res.best_accuracy,
+        ml_res.best_accuracy,
+        grid_ml.h_values.len() * n_ml,
+    );
+
     // --- simd-f32 backend: f32 kernel block + predict tile vs the f64
     //     reference (DESIGN.md §13). Asserts the documented ≤1e-4
     //     relative tolerance on every run; the speedup is gated against
@@ -540,6 +593,15 @@ fn main() {
         json.push_str(&format!("  \"obs_traced_secs\": {obs_on_secs:.6},\n"));
         json.push_str(&format!("  \"obs_overhead_pct\": {obs_overhead_pct:.4},\n"));
         json.push_str(&format!("  \"obs_trace_bytes\": {trace_bytes},\n"));
+        json.push_str(&format!("  \"multilevel_n\": {n_ml},\n"));
+        json.push_str(&format!("  \"multilevel_flat_secs\": {ml_flat_secs:.6},\n"));
+        json.push_str(&format!("  \"multilevel_ml_secs\": {ml_secs:.6},\n"));
+        json.push_str(&format!("  \"multilevel_speedup\": {multilevel_speedup:.4},\n"));
+        json.push_str(&format!("  \"multilevel_flat_acc\": {:.6},\n", flat_res.best_accuracy));
+        json.push_str(&format!("  \"multilevel_acc\": {:.6},\n", ml_res.best_accuracy));
+        json.push_str(&format!("  \"multilevel_acc_delta\": {ml_acc_delta:.6},\n"));
+        json.push_str(&format!("  \"multilevel_levels\": {ml_levels},\n"));
+        json.push_str(&format!("  \"multilevel_points_trained\": {ml_points_trained},\n"));
         // phase breakdown of the best untraced train (PhaseTimer rows)
         for (name, secs, _count) in &phases_obs {
             json.push_str(&format!("  \"phase_{name}_secs\": {secs:.6},\n"));
@@ -567,13 +629,22 @@ fn main() {
         let floor_parallel = 0.75 * baseline_key("parallel_speedup");
         let floor_sparse = 0.75 * baseline_key("sparse_block_speedup");
         let floor_ovo = 0.75 * baseline_key("ovo_shared_sv_speedup");
+        let floor_multilevel = 0.75 * baseline_key("multilevel_speedup");
         println!(
             "\n[hss] baseline gate: batched {batched_speedup:.2}x (floor {floor_batched:.2}x), \
              parallel {parallel_speedup:.2}x (floor {floor_parallel:.2}x), \
              sparse block {sparse_block_speedup:.2}x (floor {floor_sparse:.2}x), \
-             ovo shared-SV {ovo_shared_sv_speedup:.2}x (floor {floor_ovo:.2}x)"
+             ovo shared-SV {ovo_shared_sv_speedup:.2}x (floor {floor_ovo:.2}x), \
+             multilevel {multilevel_speedup:.2}x (floor {floor_multilevel:.2}x)"
         );
         let mut failed = false;
+        if multilevel_speedup < floor_multilevel {
+            eprintln!(
+                "[hss] REGRESSION: multilevel coarse-to-fine speedup {multilevel_speedup:.2}x \
+                 fell >25% below the committed baseline"
+            );
+            failed = true;
+        }
         if ovo_shared_sv_speedup < floor_ovo {
             eprintln!(
                 "[hss] REGRESSION: OvO shared-SV predict speedup {ovo_shared_sv_speedup:.2}x \

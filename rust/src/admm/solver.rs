@@ -251,9 +251,17 @@ impl<'a, S: ShiftedSolve> AdmmSolver<'a, S> {
         self.run_warm(c, None)
     }
 
-    /// Run with an optional warm start (z, μ from a previous C value —
-    /// the natural extension of the paper's reuse story to the iterates
-    /// themselves; ablated in `bench_hss`).
+    /// Run with an optional warm start: any feasible `(z, μ)` pair of
+    /// the right dimension. The natural sources are the iterates of a
+    /// previous **C value** (the paper's reuse story extended to the
+    /// iterates themselves) and, since the multilevel trainer
+    /// ([`crate::svm::multilevel`]), a previous **refinement level** —
+    /// the coarse solution scattered onto the finer training set with
+    /// zeros at newly admitted points. `z` is re-projected into the new
+    /// box `[0, C]` element-wise, so any real vector is accepted; a warm
+    /// start at (or near) the fixed point converges in no more
+    /// iterations than the cold start (pinned by
+    /// `warm_start_from_converged_terminates_no_slower`).
     pub fn run_warm(&self, c: f64, warm: Option<(&[f64], &[f64])>) -> AdmmOutput {
         let n = self.solver.dim();
         let beta = self.params.beta;
@@ -329,16 +337,52 @@ impl<'a, S: ShiftedSolve> AdmmSolver<'a, S> {
     where
         S: Sync,
     {
+        self.run_grid_warm(cs, &[])
+    }
+
+    /// [`AdmmSolver::run_grid`] with per-column warm starts: `warms` is
+    /// either empty (every column cold) or one `Option<(z0, μ0)>` per C
+    /// value, initialized exactly as [`AdmmSolver::run_warm`] does
+    /// (z clamped into that column's `[0, C_j]`, μ copied). Column j of
+    /// the result is bit-for-bit `run_warm(cs[j], warms[j])` — the grid
+    /// contract is unchanged because only the iterate *initialization*
+    /// differs, never the per-iteration arithmetic. This is the
+    /// multilevel trainer's batched refinement step: one blocked solve
+    /// per iteration advances the whole C row from the previous level's
+    /// scattered solution.
+    pub fn run_grid_warm(
+        &self,
+        cs: &[f64],
+        warms: &[Option<(&[f64], &[f64])>],
+    ) -> Vec<AdmmOutput>
+    where
+        S: Sync,
+    {
         let k = cs.len();
         if k == 0 {
             return Vec::new();
         }
+        assert!(
+            warms.is_empty() || warms.len() == k,
+            "warm-start list must be empty or match the C grid ({} vs {k})",
+            warms.len()
+        );
         let n = self.solver.dim();
         let beta = self.params.beta;
         let relax = self.params.relax.clamp(1.0, 1.9);
         let mut xs = vec![vec![0.0; n]; k];
         let mut zs = vec![vec![0.0; n]; k];
         let mut mus = vec![vec![0.0; n]; k];
+        for (j, warm) in warms.iter().enumerate() {
+            if let Some((z0, mu0)) = warm {
+                assert_eq!(z0.len(), n, "warm z dimension mismatch (column {j})");
+                assert_eq!(mu0.len(), n, "warm mu dimension mismatch (column {j})");
+                for i in 0..n {
+                    zs[j][i] = z0[i].clamp(0.0, cs[j]);
+                }
+                mus[j].copy_from_slice(mu0);
+            }
+        }
         let mut primals: Vec<Vec<f64>> = vec![Vec::with_capacity(self.params.max_it); k];
         let mut duals: Vec<Vec<f64>> = vec![Vec::with_capacity(self.params.max_it); k];
         // with tol > 0 columns converge independently; frozen columns
@@ -689,6 +733,59 @@ mod tests {
         for (j, &c) in cs.iter().enumerate() {
             let single = admm.run(c);
             assert_outputs_bitwise(&grid[j], &single, &format!("miri C={c}"));
+        }
+    }
+
+    #[test]
+    fn warm_start_from_converged_terminates_no_slower() {
+        // the run_warm contract: restarting from the converged (z, μ)
+        // pair (any feasible warm pair — previous C value or previous
+        // level) must terminate in ≤ the cold iteration count
+        let mut rng = Rng::new(62);
+        let (k, y) = tiny_problem(70, &mut rng);
+        let solver = DenseShifted::new(&k, 10.0).unwrap();
+        let admm = AdmmSolver::new(
+            &solver,
+            &y,
+            AdmmParams { beta: 10.0, max_it: 500, relax: 1.0, tol: 1e-5 },
+        );
+        let c = 1.0;
+        let cold = admm.run(c);
+        assert!(cold.iterations() > 1, "cold run converged too fast to test warm starts");
+        let warm = admm.run_warm(c, Some((&cold.z, &cold.mu)));
+        assert!(
+            warm.iterations() <= cold.iterations(),
+            "warm start from the converged solution took {} iterations vs {} cold",
+            warm.iterations(),
+            cold.iterations()
+        );
+    }
+
+    #[test]
+    fn run_grid_warm_matches_sequential_run_warm_bitwise() {
+        // per-column warm starts through the batched path must equal
+        // the scalar run_warm column-by-column, including a mixed
+        // warm/cold grid (None columns stay bit-for-bit run(c))
+        let mut rng = Rng::new(63);
+        let (k, y) = tiny_problem(80, &mut rng);
+        let solver = DenseShifted::new(&k, 5.0).unwrap();
+        let admm = AdmmSolver::new(
+            &solver,
+            &y,
+            AdmmParams { beta: 5.0, max_it: 8, relax: 1.0, tol: 0.0 },
+        );
+        let cs = [0.2, 1.0, 4.0];
+        // a feasible warm pair from a short pre-run at a different C
+        let pre = admm.run(0.7);
+        let warms: Vec<Option<(&[f64], &[f64])>> = vec![
+            Some((pre.z.as_slice(), pre.mu.as_slice())),
+            None,
+            Some((pre.z.as_slice(), pre.mu.as_slice())),
+        ];
+        let grid = admm.run_grid_warm(&cs, &warms);
+        for (j, &c) in cs.iter().enumerate() {
+            let single = admm.run_warm(c, warms[j]);
+            assert_outputs_bitwise(&grid[j], &single, &format!("warm grid C={c}"));
         }
     }
 

@@ -1,5 +1,19 @@
 //! Cluster-tree preprocessing (the data-reordering step that makes
 //! off-diagonal kernel blocks compressible).
+//!
+//! [`ClusterTree`] recursively bisects the training points (2-means or
+//! PCA splits, see [`SplitMethod`]) and permutes the dataset so every
+//! node owns a contiguous position range `begin..end`. Two consumers
+//! rely on that geometry:
+//!
+//! * **HSS/HODLR compression** — near points share tree nodes, so
+//!   off-diagonal blocks between separated nodes are numerically
+//!   low-rank (the whole premise of `hss::compress`).
+//! * **Multilevel training** ([`crate::svm::multilevel`], DESIGN.md
+//!   §15) — the frontier of the tree at a level is a coarse partition
+//!   of the dataset, so the tree doubles as the coarsening hierarchy:
+//!   one representative per frontier node is a coarse training set,
+//!   and no separate clustering pass ever runs.
 
 // No raw-pointer tricks belong in this module tree (see DESIGN.md §11).
 #![forbid(unsafe_code)]

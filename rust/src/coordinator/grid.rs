@@ -11,6 +11,7 @@ use crate::hss::HssParams;
 use crate::kernel::Kernel;
 use crate::obs;
 use crate::svm::multiclass::{MulticlassDataset, OvoModel, OvoPairSet};
+use crate::svm::multilevel::{LevelStats, MultilevelContext, MultilevelParams};
 use crate::svm::{predict, SvmModel};
 use crate::util::timer::Timer;
 use anyhow::Result;
@@ -117,6 +118,66 @@ impl GridSearch {
             cache.timings.factor_secs,
             total_admm,
         ))
+    }
+
+    /// Multilevel grid (`grid --multilevel`): ONE
+    /// [`MultilevelContext`] — full-set cluster tree + ANN +
+    /// extreme-point screening + level schedule — is built up front and
+    /// shared across the whole h row *and* every C (the same reuse shape
+    /// as [`KernelCache`], one layer up: the context is h- and
+    /// C-independent). Each h then trains its C row coarse-to-fine
+    /// through [`MultilevelContext::train_grid`]; no full-set
+    /// compression or factorization ever runs. Returns the standard
+    /// [`GridResult`] (heatmap/report layer unchanged; `compress_secs`
+    /// carries the shared context build, `factor_secs` is folded into
+    /// the per-level timings inside the [`LevelStats`]) plus the level
+    /// schedule per h.
+    pub fn run_multilevel(
+        &self,
+        train: &Dataset,
+        test: &Dataset,
+        ml: &MultilevelParams,
+    ) -> Result<(GridResult, Vec<(f64, Vec<LevelStats>)>)> {
+        let t = Timer::start();
+        let ctx = MultilevelContext::new(train, &self.hss, ml, self.threads);
+        let prep_secs = t.secs();
+        let mut cells = Vec::new();
+        let mut total_admm = 0.0;
+        let mut per_h = Vec::new();
+        for &h in &self.h_values {
+            let t = Timer::start();
+            let run = ctx.train_grid(Kernel::Gaussian { h }, &self.admm, &self.c_values)?;
+            let row_secs = t.secs();
+            total_admm += row_secs;
+            let per_cell = row_secs / self.c_values.len().max(1) as f64;
+            for (&c, (model, out)) in self.c_values.iter().zip(run.results.iter()) {
+                let accuracy = predict::accuracy(model, test, self.threads);
+                let hist = out.history();
+                if obs::enabled() {
+                    obs::emit(&obs::TraceEvent::GridCell {
+                        h,
+                        c,
+                        accuracy,
+                        iters: hist.iterations,
+                        n_sv: model.n_sv(),
+                    });
+                }
+                cells.push(GridCell {
+                    h,
+                    c,
+                    accuracy,
+                    admm_secs: per_cell,
+                    n_sv: model.n_sv(),
+                    iters: hist.iterations,
+                    final_primal: hist.final_primal,
+                    final_dual: hist.final_dual,
+                    primal: out.primal.clone(),
+                    dual: out.dual.clone(),
+                });
+            }
+            per_h.push((h, run.levels));
+        }
+        Ok((Self::summarize(cells, prep_secs, 0.0, total_admm), per_h))
     }
 
     /// One-vs-one multiclass grid: the per-pair h-INDEPENDENT
@@ -349,6 +410,43 @@ mod tests {
         let heat = ascii_heatmap(&res, &grid.h_values, &grid.c_values);
         assert!(heat.contains("h=0.30"));
         assert!(heat.lines().count() >= 4);
+    }
+
+    #[test]
+    fn multilevel_grid_matches_flat_grid_on_separable_data() {
+        let mut rng = Rng::new(313);
+        let train = synth::xor_blobs(900, 4, 0.35, &mut rng);
+        let test = synth::xor_blobs(400, 4, 0.35, &mut rng);
+        let mut hss = crate::hss::HssParams::low_accuracy();
+        hss.leaf_size = 48;
+        let grid = GridSearch {
+            h_values: vec![1.0, 2.0],
+            c_values: vec![0.5, 2.0],
+            hss,
+            admm: AdmmParams { beta: 100.0, max_it: 10, relax: 1.0, tol: 0.0 },
+            threads: 2,
+        };
+        let flat = grid.run(&train, &test).unwrap();
+        let (ml, per_h) = grid
+            .run_multilevel(&train, &test, &MultilevelParams::default())
+            .unwrap();
+        assert_eq!(ml.cells.len(), flat.cells.len());
+        assert_eq!(per_h.len(), grid.h_values.len());
+        // every h actually went through a coarse level smaller than n
+        for (h, levels) in &per_h {
+            assert!(!levels.is_empty(), "h={h}: empty schedule");
+            assert!(
+                levels[0].n_points < train.len(),
+                "h={h}: coarse level is the full set"
+            );
+        }
+        // equal-accuracy contract on trivially separable data
+        assert!(
+            (flat.best_accuracy - ml.best_accuracy).abs() <= 0.02,
+            "multilevel best {} vs flat best {}",
+            ml.best_accuracy,
+            flat.best_accuracy
+        );
     }
 
     #[test]

@@ -39,6 +39,39 @@ pub fn blobs(n: usize, dim: usize, clusters: usize, std: f64, rng: &mut Rng) -> 
     Dataset::new("blobs", x, y)
 }
 
+/// Four wide-margin Gaussian blobs in an XOR layout: class +1 at
+/// (+2.5, +2.5) and (−2.5, −2.5) in the first two coordinates, class −1
+/// at (+2.5, −2.5) and (−2.5, +2.5); remaining coordinates are pure
+/// noise. Unlike [`blobs`] the centers are FIXED (not drawn from the
+/// RNG), so separability does not depend on the seed: nearest
+/// opposite-class centers sit 5.0 apart, which at `std ≲ 0.5` makes the
+/// Bayes accuracy ≈ 1 while still forcing a genuinely nonlinear
+/// boundary. The multilevel equal-accuracy bench and tests generate
+/// here — they assert tight accuracy agreement between two training
+/// paths, which is only meaningful on a stable plateau.
+pub fn xor_blobs(n: usize, dim: usize, std: f64, rng: &mut Rng) -> Dataset {
+    assert!(dim >= 2);
+    let mut x = Mat::zeros(n, dim);
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        let q = rng.below(4);
+        let (sx, sy) = match q {
+            0 => (1.0, 1.0),
+            1 => (-1.0, -1.0),
+            2 => (1.0, -1.0),
+            _ => (-1.0, 1.0),
+        };
+        let row = x.row_mut(i);
+        for v in row.iter_mut() {
+            *v = rng.gauss() * std;
+        }
+        row[0] += 2.5 * sx;
+        row[1] += 2.5 * sy;
+        y[i] = if q < 2 { 1.0 } else { -1.0 };
+    }
+    Dataset::new("xor_blobs", x, y)
+}
+
 /// Multiclass Gaussian blobs: `classes` well-separated centers (one per
 /// class, labels `0..classes`), points assigned round-robin so every
 /// class is populated. Centers sit on scaled coordinate axes (center c

@@ -24,6 +24,7 @@ use hss_svm::kernel::Kernel;
 use hss_svm::obs::{self, ConvergenceReport, ReportColumn};
 use hss_svm::runtime::PjrtRuntime;
 use hss_svm::svm::multiclass::{train_ovo, MulticlassDataset};
+use hss_svm::svm::multilevel::{LevelStats, MultilevelContext, MultilevelParams};
 use hss_svm::svm::{predict, train::train_hss_svm, AnyModel};
 use hss_svm::util::threadpool;
 use hss_svm::util::timer::Timer;
@@ -88,6 +89,7 @@ USAGE:
   hss-svm train      --dataset <table1-name> [--scale F] [--h F] [--c F]
                      [--beta F] [--iters N] [--hss low|high|exact]
                      [--threads N] [--pjrt]
+                     [--multilevel [--coarse-level L] [--screen-eps E]]
                      [--trace t.jsonl] [--report report.json]
   hss-svm train      --train-file f.libsvm --test-file g.libsvm [...same]
                      [--save-model m.model] [--sparse|--dense] [--binary]
@@ -139,6 +141,7 @@ USAGE:
                                          # QUIT
   hss-svm grid       --dataset <name> [--scale F] [--h 0.1,1,10]
                      [--c 0.1,1,10] [--hss low|high] [--threads N]
+                     [--multilevel [--coarse-level L] [--screen-eps E]]
                      [--trace t.jsonl] [--report report.json]
   hss-svm grid       --train-file f.libsvm --shards K --test-file g.libsvm
                      [--shard-dir D] [...same]
@@ -162,6 +165,18 @@ LIBSVM-style one-vs-one (k(k-1)/2 pairwise classifiers, trained in
 parallel, each reusing one HSS factorization across the whole C grid).
 Saved OvO models store a shared support-vector pool; predict and both
 serve modes answer the file's original integer class labels.
+
+Multilevel (--multilevel; train and grid, in-memory binary problems
+only): coarse-to-fine training over the cluster tree (DESIGN.md
+section 15). The coarse problem trains on one representative per tree
+node, then each finer level warm-starts ADMM from the previous level's
+iterates and restricts itself to the inherited support vectors plus
+their ANN neighborhoods; the final level falls back to the full set
+only if the SV set is still growing. --coarse-level L pins the
+coarsest tree level (default: auto-picked so the coarse problem is
+~n/8 points); --screen-eps E drops epsilon-covered same-class points
+per leaf before any kernel work (default 0 = screening off). Models
+are bitwise independent of --threads, like the flat trainer.
 
 Observability (see DESIGN.md section 14): --trace PATH (or the
 HSS_SVM_TRACE env var) streams structured JSONL events — compression
@@ -191,6 +206,37 @@ fn hss_params_from(args: &Args) -> Result<HssParams> {
         };
     }
     Ok(p)
+}
+
+/// `--multilevel [--coarse-level L] [--screen-eps E]` → `Some(params)`;
+/// `None` when the switch is absent. Naming a sub-flag without
+/// `--multilevel` is almost certainly a typo, so it errors instead of
+/// silently training flat.
+fn multilevel_params_from(args: &Args) -> Result<Option<MultilevelParams>> {
+    if !args.has("multilevel") {
+        if args.has("coarse-level") || args.has("screen-eps") {
+            bail!("--coarse-level/--screen-eps only apply together with --multilevel");
+        }
+        return Ok(None);
+    }
+    let mut ml = MultilevelParams::default();
+    if let Some(v) = args.str_opt("coarse-level") {
+        ml.coarse_level = Some(v.parse().context("--coarse-level expects an integer")?);
+    }
+    ml.screen_eps = args.f64_or("screen-eps", ml.screen_eps)?;
+    Ok(Some(ml))
+}
+
+/// One console row per trained level of a multilevel schedule.
+fn print_level_rows(levels: &[LevelStats]) {
+    for l in levels {
+        let tag = if l.level == usize::MAX {
+            if l.full_fallback { "final (full fallback)".to_string() } else { "final".to_string() }
+        } else {
+            format!("level {}", l.level)
+        };
+        println!("  {:<22} {:>8} pts -> {:>7} SVs   {:>9.3} s", tag, l.n_points, l.n_sv, l.secs);
+    }
 }
 
 /// --sparse / --dense override the Auto representation choice.
@@ -310,11 +356,22 @@ fn cmd_train(args: &Args) -> Result<()> {
     // the sharded route never loads the full training set — it must
     // branch BEFORE load_pair_auto touches the file
     if args.usize_or("shards", 0)? > 0 {
+        if args.has("multilevel") {
+            bail!("--multilevel needs the training set in memory (incompatible with --shards)");
+        }
         return cmd_train_sharded(args);
     }
     match load_pair_auto(args)? {
         LoadedPair::Binary(train, test) => cmd_train_binary(args, train, test),
-        LoadedPair::Multi(train, test) => cmd_train_multiclass(args, train, test),
+        LoadedPair::Multi(train, test) => {
+            if args.has("multilevel") {
+                bail!(
+                    "--multilevel supports binary problems only (the one-vs-one trainer \
+                     already decomposes into small pairwise subproblems)"
+                );
+            }
+            cmd_train_multiclass(args, train, test)
+        }
     }
 }
 
@@ -506,6 +563,9 @@ fn cmd_train_multiclass(
 }
 
 fn cmd_train_binary(args: &Args, train: Dataset, test: Dataset) -> Result<()> {
+    if let Some(ml) = multilevel_params_from(args)? {
+        return cmd_train_binary_multilevel(args, train, test, &ml);
+    }
     let threads = args.usize_or("threads", threadpool::default_threads())?;
     let beta = args.f64_or("beta", Table1Spec::beta_for(train.len()))?;
     let h = args.f64_or("h", 1.0)?;
@@ -583,6 +643,99 @@ fn cmd_train_binary(args: &Args, train: Dataset, test: Dataset) -> Result<()> {
             }],
             extra: vec![
                 ("hss_max_rank".to_string(), stats.hss_max_rank.to_string()),
+                ("n_sv".to_string(), model.n_sv().to_string()),
+                ("accuracy".to_string(), format!("{acc:?}")),
+            ],
+        },
+    )?;
+    if let Some(path) = args.str_opt("save-model") {
+        hss_svm::svm::persist::save(&model, path)?;
+        println!("  model saved to {path}");
+    }
+    Ok(())
+}
+
+/// `train --multilevel`: the coarse-to-fine schedule of DESIGN.md §15.
+/// Same console/report/save-model surface as the flat path, with the
+/// phase table replaced by one row per trained level; the saved model
+/// is an ordinary binary `.model` file (predict/serve are unchanged).
+fn cmd_train_binary_multilevel(
+    args: &Args,
+    train: Dataset,
+    test: Dataset,
+    ml: &MultilevelParams,
+) -> Result<()> {
+    let threads = args.usize_or("threads", threadpool::default_threads())?;
+    let beta = args.f64_or("beta", Table1Spec::beta_for(train.len()))?;
+    let h = args.f64_or("h", 1.0)?;
+    let c = args.f64_or("c", 1.0)?;
+    let iters = args.usize_or("iters", 10)?;
+    let hss = hss_params_from(args)?;
+    if args.has("pjrt") {
+        eprintln!("train: --pjrt ignored with --multilevel (prediction runs the native path)");
+    }
+    println!(
+        "multilevel training on {} ({} pts x {} feats, {} positive{}; test {})",
+        train.name,
+        train.len(),
+        train.dim(),
+        train.positives(),
+        if train.is_sparse() {
+            format!(", CSR {} nnz", train.x.nnz())
+        } else {
+            String::new()
+        },
+        test.len()
+    );
+    let admm = AdmmParams { beta, max_it: iters, relax: 1.0, tol: 0.0 };
+    let t_train = Timer::start();
+    let t_prep = Timer::start();
+    let ctx = MultilevelContext::new(&train, &hss, ml, threads);
+    let prep_secs = t_prep.secs();
+    let (model, out, levels) = ctx.train(Kernel::Gaussian { h }, &admm, c)?;
+    let train_wall = t_train.secs();
+    let points_trained: usize = levels.iter().map(|l| l.n_points).sum();
+    println!(
+        "  preprocessing {prep_secs:>9.3} s   (tree + ANN + screening: {} of {} pts kept, {} levels)",
+        ctx.kept(),
+        train.len(),
+        levels.len()
+    );
+    print_level_rows(&levels);
+    println!("  points trained across levels: {points_trained} (flat would train {})", train.len());
+    let t = Timer::start();
+    let acc = predict::accuracy(&model, &test, threads);
+    println!("  prediction    {:>9.3} s   (native path)", t.secs());
+    println!("  support vectors: {}", model.n_sv());
+    println!("  test accuracy:   {:.3}%", acc * 100.0);
+    let mut phases = vec![("preprocessing".to_string(), prep_secs, 1u64)];
+    phases.extend(levels.iter().map(|l| {
+        let name = if l.level == usize::MAX {
+            "level-final".to_string()
+        } else {
+            format!("level-{}", l.level)
+        };
+        (name, l.secs, l.n_points as u64)
+    }));
+    write_report(
+        args,
+        &ConvergenceReport {
+            command: "train".to_string(),
+            dataset: train.name.clone(),
+            n: train.len(),
+            threads,
+            wall_secs: train_wall,
+            phases,
+            columns: vec![ReportColumn {
+                h,
+                c,
+                iters: out.iterations(),
+                primal: out.primal.clone(),
+                dual: out.dual.clone(),
+            }],
+            extra: vec![
+                ("multilevel_levels".to_string(), levels.len().to_string()),
+                ("multilevel_points_trained".to_string(), points_trained.to_string()),
                 ("n_sv".to_string(), model.n_sv().to_string()),
                 ("accuracy".to_string(), format!("{acc:?}")),
             ],
@@ -911,8 +1064,12 @@ fn grid_report(
 fn cmd_grid(args: &Args) -> Result<()> {
     let threads = args.usize_or("threads", threadpool::default_threads())?;
     if args.usize_or("shards", 0)? > 0 {
+        if args.has("multilevel") {
+            bail!("--multilevel needs the training set in memory (incompatible with --shards)");
+        }
         return cmd_grid_sharded(args, threads);
     }
+    let ml_params = multilevel_params_from(args)?;
     let pair = load_pair_auto(args)?;
     let (name, n) = match &pair {
         LoadedPair::Binary(train, _) => (train.name.clone(), train.len()),
@@ -929,12 +1086,27 @@ fn cmd_grid(args: &Args) -> Result<()> {
         threads,
     };
     let t_grid = Timer::start();
+    let mut ml_schedules: Vec<(f64, Vec<LevelStats>)> = Vec::new();
     let res = match &pair {
-        LoadedPair::Binary(train, test) => {
-            println!("grid search on {name} ({n} pts), beta = {beta}");
-            grid.run(train, test)?
-        }
+        LoadedPair::Binary(train, test) => match &ml_params {
+            Some(ml) => {
+                println!("multilevel grid search on {name} ({n} pts), beta = {beta}");
+                let (res, per_h) = grid.run_multilevel(train, test, ml)?;
+                ml_schedules = per_h;
+                res
+            }
+            None => {
+                println!("grid search on {name} ({n} pts), beta = {beta}");
+                grid.run(train, test)?
+            }
+        },
         LoadedPair::Multi(train, test) => {
+            if ml_params.is_some() {
+                bail!(
+                    "--multilevel supports binary problems only (the one-vs-one trainer \
+                     already decomposes into small pairwise subproblems)"
+                );
+            }
             println!(
                 "OvO grid search on {name} ({n} pts, {} classes), beta = {beta}",
                 train.classes().len()
@@ -945,6 +1117,10 @@ fn cmd_grid(args: &Args) -> Result<()> {
     let grid_wall = t_grid.secs();
     println!("{}", hss_svm::coordinator::grid::ascii_heatmap(&res, &h_values, &c_values));
     print_grid_convergence(&res);
+    for (h, levels) in &ml_schedules {
+        println!("multilevel schedule for h = {h}:");
+        print_level_rows(levels);
+    }
     println!(
         "compression {:.3}s ({} h values) | factorization {:.3}s | total ADMM {:.3}s ({} cells)",
         res.compress_secs,

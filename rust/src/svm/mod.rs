@@ -10,6 +10,7 @@
 
 pub mod model;
 pub mod multiclass;
+pub mod multilevel;
 pub mod persist;
 pub mod predict;
 pub mod svr;
@@ -17,6 +18,7 @@ pub mod train;
 
 pub use model::SvmModel;
 pub use multiclass::{MulticlassDataset, OvoModel};
+pub use multilevel::{MultilevelContext, MultilevelParams};
 pub use train::{train_hss_svm, HssSvmTrainer, TrainStats};
 
 /// A loaded model of either arity: the serving stack (stdin loop, TCP

@@ -1,0 +1,707 @@
+//! Coarse-to-fine multilevel training with support-vector inheritance
+//! (ROADMAP item 1; DESIGN.md §15).
+//!
+//! Two related-work tricks composed over machinery the stack already
+//! has:
+//!
+//! * **AML-SVM-style refinement** (Sadrfaridpour et al.): train on a
+//!   coarsened dataset, then refine level by level, warm-starting ADMM
+//!   from the coarse iterates and restricting each finer level to the
+//!   neighborhoods of the inherited support vectors. Our coarsening is
+//!   the existing [`crate::cluster::ClusterTree`] — the frontier of the
+//!   tree at level `L` *is* the coarse partition, and one representative
+//!   per frontier node (the kept point nearest the node centroid) is the
+//!   coarse training set. No new clustering pass runs.
+//! * **Approximate-extreme-point screening** (Nandan & Khargonekar):
+//!   before any kernel work, drop points that are ε-covered by an
+//!   already-selected point of the same class inside their cluster-tree
+//!   leaf — a cheap convex-hull proxy that shrinks every level,
+//!   including the final one.
+//!
+//! The per-level dataflow (one `(h, β)` pair, the whole C row at once):
+//!
+//! ```text
+//! level L (coarse)    T_L = representatives(frontier(L)) ∩ kept
+//!      │ train (cold, batched run_grid)
+//!      ▼
+//! level L+1           T = SV_prev ∪ (ANN(SV_prev) ∩ reps(L+1))
+//!      │ train (warm: z, μ scattered from level L; run_grid_warm)
+//!      ▼
+//!     ...
+//! final level         T = SV_prev ∪ ANN(SV_prev) over all kept points
+//!                     (falls back to ALL kept points only if the SV
+//!                      set is still growing faster than `growth_tol`)
+//! ```
+//!
+//! Every level is a plain [`HssSvmTrainer`] run on a
+//! [`Dataset::select`]-ed subset — compression, factorization and the
+//! batched ADMM are unchanged, so each level inherits the bitwise
+//! thread-invariance contract, and therefore the whole multilevel
+//! trainer does too (pinned by `tests/multilevel_e2e.rs`).
+//!
+//! All set bookkeeping uses position-indexed `Vec<bool>` masks and
+//! ordered scans (never hash sets), so results are pure functions of
+//! `(dataset, HssParams.seed, MultilevelParams)`.
+
+use crate::admm::{AdmmOutput, AdmmParams, AdmmSolver};
+use crate::cluster::ClusterTree;
+use crate::data::Dataset;
+use crate::hss::compress::{preprocess, Preprocessed};
+use crate::hss::HssParams;
+use crate::kernel::Kernel;
+use crate::obs;
+use crate::svm::model::SvmModel;
+use crate::svm::train::HssSvmTrainer;
+use crate::util::timer::Timer;
+use anyhow::Result;
+
+/// Knobs of the coarse-to-fine schedule. Everything is deterministic:
+/// the trained models are pure functions of `(dataset, HssParams.seed,
+/// MultilevelParams)` — thread counts never change a bit.
+#[derive(Clone, Copy, Debug)]
+pub struct MultilevelParams {
+    /// Tree level of the coarsest training set (`--coarse-level`).
+    /// Clamped into `[0, depth-1]`; `None` picks the deepest level whose
+    /// frontier still has ≲ `n / 8` nodes, so the coarse problem is ~an
+    /// order of magnitude smaller than the full one. Levels whose pool
+    /// is smaller than [`MultilevelParams::min_level_points`] (L = 0 has
+    /// a single representative) are skipped, not trained.
+    pub coarse_level: Option<usize>,
+    /// Extreme-point screening radius ε (`--screen-eps`): inside each
+    /// cluster-tree leaf a point is dropped when an already-selected
+    /// point of the same class sits within distance ε. `0` disables
+    /// screening (every point kept).
+    pub screen_eps: f64,
+    /// How many ANN neighbours of each inherited support vector are
+    /// admitted into the next level's training set.
+    pub sv_neighbors: usize,
+    /// Levels whose training set would be smaller than this (or miss a
+    /// class) are skipped — they cannot carry a meaningful decision
+    /// boundary and would only add noise to the warm start.
+    pub min_level_points: usize,
+    /// Full-set fallback trigger: the final level trains on ALL kept
+    /// points (instead of the SV neighborhood) when the union-SV count
+    /// grew by more than this factor between the last two levels —
+    /// i.e. the SV set had not stabilized yet.
+    pub growth_tol: f64,
+}
+
+impl Default for MultilevelParams {
+    fn default() -> Self {
+        MultilevelParams {
+            coarse_level: None,
+            screen_eps: 0.0,
+            sv_neighbors: 8,
+            min_level_points: 32,
+            growth_tol: 1.10,
+        }
+    }
+}
+
+/// Per-level report: sizes, timing and the (position-indexed) training /
+/// support-vector sets, in pds order. `tests/multilevel_e2e.rs` checks
+/// the SV-inheritance contract on these: `sv_idx` of level ℓ is a subset
+/// of `t_idx` of level ℓ+1.
+#[derive(Clone, Debug)]
+pub struct LevelStats {
+    /// Cluster-tree level this training set was drawn from
+    /// (`usize::MAX` labels the final full-resolution level).
+    pub level: usize,
+    /// Training-set size |T_ℓ|.
+    pub n_points: usize,
+    /// Union support-vector count across the C row after this level.
+    pub n_sv: usize,
+    /// Wall-clock of the level (compress + factor + ADMM).
+    pub secs: f64,
+    /// Training-set positions (sorted, in full-set pds order).
+    pub t_idx: Vec<usize>,
+    /// Union-SV positions after the level (sorted, pds order).
+    pub sv_idx: Vec<usize>,
+    /// Whether the final level fell back to all kept points.
+    pub full_fallback: bool,
+}
+
+/// Result of a multilevel grid run for one `(h, β)` pair: the final
+/// models/outputs (one per C, same shape as
+/// [`HssSvmTrainer::train_grid_with_solver`]) plus the level schedule
+/// that produced them.
+pub struct MultilevelRun {
+    /// `(model, admm_output)` per C value, trained at full resolution.
+    pub results: Vec<(SvmModel, AdmmOutput)>,
+    /// One entry per trained level, coarse → fine.
+    pub levels: Vec<LevelStats>,
+}
+
+impl MultilevelRun {
+    /// Total points trained across all levels (Σ |T_ℓ|) — the multilevel
+    /// cost proxy reported by `--multilevel` summaries.
+    pub fn points_trained(&self) -> usize {
+        self.levels.iter().map(|l| l.n_points).sum()
+    }
+}
+
+/// Frontier of the cluster tree at `level`: the node set that partitions
+/// `0..n` using every node at exactly `level` plus the leaves that
+/// bottom out earlier (the tree is ragged — small ranges stop splitting
+/// before `level`). Returned sorted by `begin`, so iterating the
+/// frontier scans positions in order.
+pub fn frontier_nodes(tree: &ClusterTree, level: usize) -> Vec<usize> {
+    let mut out: Vec<usize> = (0..tree.nodes.len())
+        .filter(|&i| {
+            let n = &tree.nodes[i];
+            n.level == level || (n.is_leaf() && n.level < level)
+        })
+        .collect();
+    out.sort_by_key(|&i| tree.nodes[i].begin);
+    out
+}
+
+/// Select one representative per frontier node at `level`: the **kept**
+/// point of the node's range nearest the node centroid (of kept points),
+/// ties broken toward the smallest position. `pds` must be the dataset
+/// in tree order (rows `begin..end` of a node are its points) and `keep`
+/// a per-position mask, e.g. from [`screen_extreme_points`]. Nodes with
+/// no kept point contribute nothing. The result is sorted, duplicate
+/// free, and a pure function of its arguments — no RNG, no threading —
+/// which is what makes the whole schedule deterministic
+/// (`tests/multilevel_determinism.rs`).
+///
+/// ```
+/// use hss_svm::data::synth;
+/// use hss_svm::hss::{compress::preprocess, HssParams};
+/// use hss_svm::svm::multilevel::{frontier_nodes, select_representatives};
+/// use hss_svm::util::prng::Rng;
+///
+/// let mut rng = Rng::new(7);
+/// let ds = synth::blobs(200, 3, 4, 0.3, &mut rng);
+/// let mut hp = HssParams::low_accuracy();
+/// hp.leaf_size = 16;
+/// let pre = preprocess(&ds, &hp, 1);
+/// let keep = vec![true; ds.len()];
+/// let reps = select_representatives(&pre.pds, &pre.tree, 2, &keep);
+/// // one representative per frontier node, at strictly increasing positions
+/// assert_eq!(reps.len(), frontier_nodes(&pre.tree, 2).len());
+/// assert!(reps.windows(2).all(|w| w[0] < w[1]));
+/// // masking a representative out changes the selection, never panics
+/// let mut partial = keep.clone();
+/// partial[reps[0]] = false;
+/// let reps2 = select_representatives(&pre.pds, &pre.tree, 2, &partial);
+/// assert!(!reps2.contains(&reps[0]));
+/// ```
+pub fn select_representatives(
+    pds: &Dataset,
+    tree: &ClusterTree,
+    level: usize,
+    keep: &[bool],
+) -> Vec<usize> {
+    assert_eq!(keep.len(), pds.len(), "keep mask/dataset length mismatch");
+    let dim = pds.dim();
+    let mut reps = Vec::new();
+    for id in frontier_nodes(tree, level) {
+        let node = &tree.nodes[id];
+        // centroid of the kept points of the node
+        let mut centroid = vec![0.0; dim];
+        let mut count = 0usize;
+        for p in node.begin..node.end {
+            if keep[p] {
+                pds.x.add_row_scaled(p, 1.0, &mut centroid);
+                count += 1;
+            }
+        }
+        if count == 0 {
+            continue;
+        }
+        for v in &mut centroid {
+            *v /= count as f64;
+        }
+        // kept point nearest the centroid; strict < keeps the first
+        // (smallest-position) point on ties
+        let mut best = usize::MAX;
+        let mut best_d2 = f64::INFINITY;
+        for p in node.begin..node.end {
+            if keep[p] {
+                let d2 = pds.x.dist2_dense_vec(p, &centroid);
+                if d2 < best_d2 {
+                    best_d2 = d2;
+                    best = p;
+                }
+            }
+        }
+        reps.push(best);
+    }
+    reps
+}
+
+/// Approximate-extreme-point screening (Nandan & Khargonekar's DeriveRS
+/// idea, reduced to the cluster-tree geometry we already have): inside
+/// each tree leaf, scan positions in order and keep a point only if no
+/// already-kept point of the **same class** sits within distance `eps`.
+/// The kept set is a greedy ε-net per (leaf, class) — interior points of
+/// dense same-class regions are dropped, boundary geometry survives.
+/// Runs on raw coordinates only, **before** any kernel evaluation or
+/// compression, which is why it shrinks every downstream cost
+/// (DESIGN.md §15). `eps <= 0` keeps everything. Deterministic: the
+/// scan order is the tree order.
+pub fn screen_extreme_points(pds: &Dataset, tree: &ClusterTree, eps: f64) -> Vec<bool> {
+    let n = pds.len();
+    if eps <= 0.0 {
+        return vec![true; n];
+    }
+    let eps2 = eps * eps;
+    let mut keep = vec![false; n];
+    for leaf in tree.leaves() {
+        let node = &tree.nodes[leaf];
+        // kept positions of the leaf so far, scanned per candidate —
+        // leaves are small (≤ leaf_size), so this stays O(leaf²) worst
+        // case with tiny constants
+        let mut kept_here: Vec<usize> = Vec::new();
+        for p in node.begin..node.end {
+            let covered = kept_here.iter().any(|&q| {
+                pds.y[q] == pds.y[p] && pds.x.dist2_rows(p, &pds.x, q) <= eps2
+            });
+            if !covered {
+                keep[p] = true;
+                kept_here.push(p);
+            }
+        }
+    }
+    keep
+}
+
+/// Shared multilevel preprocessing state: one full-set cluster tree +
+/// ANN pass + screening + level schedule, computed **once** and reused
+/// across every h of a grid search *and* every C of the row — the same
+/// reuse shape as [`crate::coordinator::cache::KernelCache`], one layer
+/// up. The per-level subsets are re-preprocessed per call (they are
+/// small; that is the point), but the full-set work never repeats.
+pub struct MultilevelContext {
+    /// Full-set kernel-independent preprocessing (tree, pds, ANN).
+    pre: Preprocessed,
+    /// Screening mask in pds order (`true` = train on this point).
+    keep: Vec<bool>,
+    /// Candidate pool per level, coarse → fine, as sorted pds positions.
+    /// The final entry is every kept point (full resolution).
+    pools: Vec<Vec<usize>>,
+    /// Tree level of each pool (`usize::MAX` for the final full pool).
+    pool_levels: Vec<usize>,
+    hss: HssParams,
+    ml: MultilevelParams,
+    threads: usize,
+}
+
+impl MultilevelContext {
+    /// Build the shared state: preprocess the full set, screen it, and
+    /// lay out the level schedule from `coarse_level` (auto-picked when
+    /// `None`) down to full resolution. Pools smaller than
+    /// `min_level_points` or missing a class are dropped here, so edge
+    /// cases like `--coarse-level 0` (a single representative) degrade
+    /// gracefully to the deepest usable schedule.
+    pub fn new(ds: &Dataset, hss: &HssParams, ml: &MultilevelParams, threads: usize) -> Self {
+        let threads = threads.max(1);
+        let pre = preprocess(ds, hss, threads);
+        let keep = screen_extreme_points(&pre.pds, &pre.tree, ml.screen_eps);
+        let n = pre.pds.len();
+        let depth = pre.tree.depth();
+
+        let coarse = match ml.coarse_level {
+            Some(l) => l.min(depth - 1),
+            None => auto_coarse_level(&pre.tree, n),
+        };
+
+        let mut pools = Vec::new();
+        let mut pool_levels = Vec::new();
+        for level in coarse..depth {
+            let reps = select_representatives(&pre.pds, &pre.tree, level, &keep);
+            if usable(&reps, &pre.pds, ml.min_level_points) {
+                // a pool identical to the previous one adds a level of
+                // pure overhead (happens when the frontier stops
+                // growing); skip it
+                if pools.last().is_none_or(|prev: &Vec<usize>| prev != &reps) {
+                    pools.push(reps);
+                    pool_levels.push(level);
+                }
+            }
+        }
+        let full: Vec<usize> = (0..n).filter(|&p| keep[p]).collect();
+        // drop rep pools as large as the full set — no coarsening left
+        while pools.last().is_some_and(|p| p.len() >= full.len()) {
+            pools.pop();
+            pool_levels.pop();
+        }
+        pools.push(full);
+        pool_levels.push(usize::MAX);
+
+        MultilevelContext { pre, keep, pools, pool_levels, hss: *hss, ml: *ml, threads }
+    }
+
+    /// Number of points surviving screening.
+    pub fn kept(&self) -> usize {
+        self.keep.iter().filter(|&&k| k).count()
+    }
+
+    /// Training-set size per scheduled level, coarse → fine (the last
+    /// entry is the full-resolution pool ceiling, not necessarily what
+    /// the final level trains on — see [`MultilevelParams::growth_tol`]).
+    pub fn pool_sizes(&self) -> Vec<usize> {
+        self.pools.iter().map(|p| p.len()).collect()
+    }
+
+    /// The shared full-set preprocessing (tree + ANN + permuted data).
+    pub fn preprocessed(&self) -> &Preprocessed {
+        &self.pre
+    }
+
+    /// Train the whole C row coarse-to-fine for one `(kernel, β)` pair.
+    /// Per level: select the training subset, compress + factor it with
+    /// the unchanged [`HssSvmTrainer`], advance every C in lockstep via
+    /// [`AdmmSolver::run_grid_warm`] (warm-started from the previous
+    /// level's iterates scattered onto the new subset), then inherit the
+    /// union of the per-column SV sets — expanded by `sv_neighbors` ANN
+    /// neighbours — into the next level. The returned models are
+    /// assembled at full resolution on the final level.
+    pub fn train_grid(
+        &self,
+        kernel: Kernel,
+        admm: &AdmmParams,
+        cs: &[f64],
+    ) -> Result<MultilevelRun> {
+        let n = self.pre.pds.len();
+        let k = cs.len();
+        assert!(k > 0, "empty C grid");
+        // full-length iterate carriers per C column (pds order)
+        let mut z_full = vec![vec![0.0f64; n]; k];
+        let mut mu_full = vec![vec![0.0f64; n]; k];
+        let mut prev_sv: Option<Vec<bool>> = None;
+        let mut prev_sv_count = 0usize;
+        let mut levels: Vec<LevelStats> = Vec::new();
+        let mut results: Vec<(SvmModel, AdmmOutput)> = Vec::new();
+
+        let n_pools = self.pools.len();
+        for (li, pool) in self.pools.iter().enumerate() {
+            let t = Timer::start();
+            let is_final = li == n_pools - 1;
+            let (t_idx, full_fallback) = match &prev_sv {
+                None => (pool.clone(), false),
+                Some(sv_mask) => {
+                    // full-set fallback: SV count still growing too fast
+                    // entering the final level
+                    let grew = levels.len().checked_sub(2).is_some_and(|i| {
+                        prev_sv_count as f64 > self.ml.growth_tol * levels[i].n_sv as f64
+                    });
+                    if is_final && grew {
+                        (pool.clone(), true)
+                    } else {
+                        let t = self.inherit(sv_mask, pool);
+                        // a degenerate inherited set (tiny / one class)
+                        // cannot carry the final model — fall back
+                        if is_final && !usable(&t, &self.pre.pds, 2) {
+                            (pool.clone(), true)
+                        } else {
+                            (t, false)
+                        }
+                    }
+                }
+            };
+            // degenerate level (tiny or single-class): skip unless final
+            if !is_final && !usable(&t_idx, &self.pre.pds, self.ml.min_level_points) {
+                continue;
+            }
+            let sub = self.pre.pds.select(&t_idx);
+            let pre_sub = preprocess(&sub, &self.hss, self.threads);
+            let trainer =
+                HssSvmTrainer::compress_preprocessed(&pre_sub, kernel, &self.hss, self.threads);
+            let ulv = trainer.factor(admm.beta)?;
+            let solver = AdmmSolver::new(&ulv, &trainer.y, *admm).with_threads(self.threads);
+
+            // map the subset's tree-order row r back to a full-set pds
+            // position: row r is sub's point pre_sub.tree.perm[r], which
+            // is t_idx[...] in the full ordering
+            let global_of: Vec<usize> =
+                pre_sub.tree.perm.iter().map(|&p| t_idx[p]).collect();
+
+            // gather per-column warm starts from the full-length iterates
+            let m = t_idx.len();
+            let (warm_z, warm_mu): (Vec<Vec<f64>>, Vec<Vec<f64>>) = (0..k)
+                .map(|j| {
+                    let z: Vec<f64> = (0..m).map(|r| z_full[j][global_of[r]]).collect();
+                    let mu: Vec<f64> = (0..m).map(|r| mu_full[j][global_of[r]]).collect();
+                    (z, mu)
+                })
+                .unzip();
+            let warms: Vec<Option<(&[f64], &[f64])>> = if levels.is_empty() {
+                Vec::new() // coarsest level: cold start
+            } else {
+                (0..k).map(|j| Some((warm_z[j].as_slice(), warm_mu[j].as_slice()))).collect()
+            };
+
+            let outs: Vec<AdmmOutput> = solver.run_grid_warm(cs, &warms);
+
+            // scatter the iterates back and take the union-SV mask
+            let mut sv_mask = vec![false; n];
+            for (j, out) in outs.iter().enumerate() {
+                let sv_tol = 1e-8 * cs[j].max(1.0);
+                for zj in z_full[j].iter_mut() {
+                    *zj = 0.0;
+                }
+                for mj in mu_full[j].iter_mut() {
+                    *mj = 0.0;
+                }
+                for r in 0..m {
+                    let g = global_of[r];
+                    z_full[j][g] = out.z[r];
+                    mu_full[j][g] = out.mu[r];
+                    if out.z[r] > sv_tol {
+                        sv_mask[g] = true;
+                    }
+                }
+            }
+            let sv_idx: Vec<usize> = (0..n).filter(|&p| sv_mask[p]).collect();
+            prev_sv_count = sv_idx.len();
+
+            if is_final {
+                results = outs
+                    .iter()
+                    .zip(cs.iter())
+                    .map(|(out, &c)| (trainer.assemble_model(&out.z, c), out.clone()))
+                    .collect();
+            }
+
+            let secs = t.secs();
+            let level_label = self.pool_levels[li];
+            if obs::enabled() {
+                let name = if is_final {
+                    format!("multilevel-final-{}pts", t_idx.len())
+                } else {
+                    format!("multilevel-level-{level_label}")
+                };
+                obs::emit(&obs::TraceEvent::Phase { name, secs });
+            }
+            levels.push(LevelStats {
+                level: level_label,
+                n_points: t_idx.len(),
+                n_sv: prev_sv_count,
+                secs,
+                t_idx,
+                sv_idx,
+                full_fallback,
+            });
+            prev_sv = Some(sv_mask);
+        }
+
+        Ok(MultilevelRun { results, levels })
+    }
+
+    /// Single-C convenience wrapper over [`MultilevelContext::train_grid`].
+    pub fn train(
+        &self,
+        kernel: Kernel,
+        admm: &AdmmParams,
+        c: f64,
+    ) -> Result<(SvmModel, AdmmOutput, Vec<LevelStats>)> {
+        let mut run = self.train_grid(kernel, admm, &[c])?;
+        let (model, out) = run.results.remove(0);
+        Ok((model, out, run.levels))
+    }
+
+    /// Next-level training set: the inherited SVs themselves plus their
+    /// `sv_neighbors` nearest ANN neighbours, intersected with the
+    /// level's candidate pool. SVs are always included even when outside
+    /// the pool — that is the SV-inheritance monotonicity contract
+    /// (`SV_ℓ ⊆ T_{ℓ+1}`, pinned by `tests/multilevel_e2e.rs`).
+    fn inherit(&self, sv_mask: &[bool], pool: &[usize]) -> Vec<usize> {
+        let n = sv_mask.len();
+        let mut in_pool = vec![false; n];
+        for &p in pool {
+            in_pool[p] = true;
+        }
+        let mut take = vec![false; n];
+        for p in 0..n {
+            if sv_mask[p] {
+                take[p] = true;
+                for &(q, _) in self.pre.ann.neighbors[p].iter().take(self.ml.sv_neighbors) {
+                    if in_pool[q] && self.keep[q] {
+                        take[q] = true;
+                    }
+                }
+            }
+        }
+        (0..n).filter(|&p| take[p]).collect()
+    }
+}
+
+/// Deepest tree level whose frontier has at most `n / 8` nodes — the
+/// default coarse level: roughly an order of magnitude fewer training
+/// points than the full problem, while staying fine enough to see every
+/// well-separated cluster.
+fn auto_coarse_level(tree: &ClusterTree, n: usize) -> usize {
+    let depth = tree.depth();
+    let target = (n / 8).max(2);
+    let mut pick = 0;
+    for level in 0..depth {
+        if frontier_nodes(tree, level).len() <= target {
+            pick = level;
+        } else {
+            break;
+        }
+    }
+    pick
+}
+
+/// A training subset is usable when it reaches `min_points` (never below
+/// 2 — compression needs that) and carries both classes.
+fn usable(idx: &[usize], pds: &Dataset, min_points: usize) -> bool {
+    if idx.len() < min_points.max(2) {
+        return false;
+    }
+    let first = pds.y[idx[0]];
+    idx.iter().any(|&p| pds.y[p] != first)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::svm::predict;
+    use crate::util::prng::Rng;
+
+    fn fixture(n: usize) -> (Dataset, HssParams) {
+        let mut rng = Rng::new(4_242);
+        let ds = synth::blobs(n, 4, 3, 0.3, &mut rng);
+        let mut hp = HssParams::low_accuracy();
+        hp.leaf_size = 32;
+        (ds, hp)
+    }
+
+    #[test]
+    fn frontier_partitions_positions() {
+        let (ds, hp) = fixture(500);
+        let pre = preprocess(&ds, &hp, 1);
+        for level in 0..pre.tree.depth() {
+            let frontier = frontier_nodes(&pre.tree, level);
+            let mut cursor = 0;
+            for id in frontier {
+                assert_eq!(pre.tree.nodes[id].begin, cursor, "gap at level {level}");
+                cursor = pre.tree.nodes[id].end;
+            }
+            assert_eq!(cursor, ds.len(), "frontier at level {level} does not tile");
+        }
+    }
+
+    #[test]
+    fn representatives_are_kept_and_in_range() {
+        let (ds, hp) = fixture(400);
+        let pre = preprocess(&ds, &hp, 1);
+        let mut keep = vec![true; ds.len()];
+        // knock out a band of positions; reps must avoid it
+        for k in keep.iter_mut().take(120).skip(40) {
+            *k = false;
+        }
+        for level in 0..pre.tree.depth() {
+            let reps = select_representatives(&pre.pds, &pre.tree, level, &keep);
+            for &r in &reps {
+                assert!(keep[r], "representative {r} was screened out");
+            }
+            assert!(reps.windows(2).all(|w| w[0] < w[1]), "reps not strictly sorted");
+        }
+    }
+
+    #[test]
+    fn screening_keeps_boundaries_and_thins_interiors() {
+        let (ds, hp) = fixture(600);
+        let pre = preprocess(&ds, &hp, 1);
+        let keep_off = screen_extreme_points(&pre.pds, &pre.tree, 0.0);
+        assert!(keep_off.iter().all(|&k| k), "eps = 0 must keep everything");
+        let keep_on = screen_extreme_points(&pre.pds, &pre.tree, 0.4);
+        let kept = keep_on.iter().filter(|&&k| k).count();
+        assert!(kept < ds.len(), "eps = 0.4 should drop interior points");
+        assert!(kept > ds.len() / 10, "screening dropped nearly everything");
+        // monotone: larger eps keeps a subset-or-equal count
+        let keep_big = screen_extreme_points(&pre.pds, &pre.tree, 0.8);
+        let kept_big = keep_big.iter().filter(|&&k| k).count();
+        assert!(kept_big <= kept, "larger eps kept more points ({kept_big} > {kept})");
+    }
+
+    #[test]
+    fn multilevel_matches_flat_accuracy_on_blobs() {
+        let mut rng = Rng::new(91);
+        let ds = synth::xor_blobs(1400, 4, 0.35, &mut rng);
+        let (train, test) = ds.split_at(1000);
+        let kernel = Kernel::Gaussian { h: 1.2 };
+        let mut hp = HssParams::low_accuracy();
+        hp.leaf_size = 48;
+        let admm = AdmmParams { beta: 100.0, max_it: 10, relax: 1.0, tol: 0.0 };
+        let c = 1.0;
+
+        let (flat_model, _) =
+            crate::svm::train::train_hss_svm(&train, kernel, &hp, &admm, c, 2).unwrap();
+        let flat_acc = predict::accuracy(&flat_model, &test, 2);
+
+        let ctx = MultilevelContext::new(&train, &hp, &MultilevelParams::default(), 2);
+        let (ml_model, _, levels) = ctx.train(kernel, &admm, c).unwrap();
+        let ml_acc = predict::accuracy(&ml_model, &test, 2);
+
+        assert!(!levels.is_empty());
+        assert!(
+            levels[0].n_points < train.len() / 2,
+            "coarse level is not coarse: {} of {}",
+            levels[0].n_points,
+            train.len()
+        );
+        assert!(
+            (flat_acc - ml_acc).abs() <= 0.02,
+            "multilevel accuracy {ml_acc} vs flat {flat_acc}"
+        );
+    }
+
+    #[test]
+    fn grid_row_matches_single_c_runs() {
+        // the batched multilevel row must agree with per-C multilevel
+        // runs — the run_grid_warm contract lifted one layer up (the
+        // row inherits the UNION of the columns' SVs, so bitwise
+        // equality is not promised; decision signs on separable data
+        // are)
+        let mut rng = Rng::new(4_243);
+        let ds = synth::xor_blobs(700, 4, 0.35, &mut rng);
+        let mut hp = HssParams::low_accuracy();
+        hp.leaf_size = 32;
+        let kernel = Kernel::Gaussian { h: 1.0 };
+        let admm = AdmmParams { beta: 100.0, max_it: 8, relax: 1.0, tol: 0.0 };
+        let cs = [0.5, 2.0];
+        let ctx = MultilevelContext::new(&ds, &hp, &MultilevelParams::default(), 2);
+        let run = ctx.train_grid(kernel, &admm, &cs).unwrap();
+        assert_eq!(run.results.len(), cs.len());
+        assert!(run.points_trained() > 0);
+        for (j, &c) in cs.iter().enumerate() {
+            let (m_single, out_single, _) = ctx.train(kernel, &admm, c).unwrap();
+            let f_row = predict::decision_function(&run.results[j].0, &ds.x, 1);
+            let f_single = predict::decision_function(&m_single, &ds.x, 1);
+            let mut agree = 0usize;
+            for (a, b) in f_row.iter().zip(f_single.iter()) {
+                if (a > &0.0) == (b > &0.0) {
+                    agree += 1;
+                }
+            }
+            assert!(
+                agree as f64 >= 0.97 * ds.len() as f64,
+                "C={c}: batched and single-C multilevel models disagree on {} of {} signs",
+                ds.len() - agree,
+                ds.len()
+            );
+            assert!(out_single.iterations() > 0);
+        }
+    }
+
+    #[test]
+    fn coarse_level_edge_cases_train() {
+        let (ds, hp) = fixture(450);
+        let kernel = Kernel::Gaussian { h: 1.0 };
+        let admm = AdmmParams { beta: 100.0, max_it: 8, relax: 1.0, tol: 0.0 };
+        for coarse in [Some(0), Some(usize::MAX)] {
+            let ml = MultilevelParams { coarse_level: coarse, ..Default::default() };
+            let ctx = MultilevelContext::new(&ds, &hp, &ml, 1);
+            let (model, _, levels) = ctx.train(kernel, &admm, 1.0).unwrap();
+            assert!(model.n_sv() > 0, "coarse={coarse:?} produced an empty model");
+            assert!(!levels.is_empty());
+        }
+    }
+}

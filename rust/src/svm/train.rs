@@ -173,6 +173,28 @@ impl HssSvmTrainer {
             .collect()
     }
 
+    /// Stage 3, batched with per-column warm starts: the multilevel
+    /// trainer's refinement step. `warms` follows the
+    /// [`AdmmSolver::run_grid_warm`] contract (empty = all cold, else
+    /// one `Option<(z0, μ0)>` per C). Cold columns are bit-for-bit
+    /// `train_grid_with_solver`'s.
+    pub fn train_grid_warm(
+        &self,
+        solver: &AdmmSolver<'_, UlvFactor>,
+        cs: &[f64],
+        warms: &[Option<(&[f64], &[f64])>],
+    ) -> Vec<(SvmModel, AdmmOutput)> {
+        solver
+            .run_grid_warm(cs, warms)
+            .into_iter()
+            .zip(cs.iter())
+            .map(|(out, &c)| {
+                let model = self.assemble_model(&out.z, c);
+                (model, out)
+            })
+            .collect()
+    }
+
     /// Build the model from the final z (tree order): bias from margin
     /// support vectors through the HSS matvec, SVs = nonzero z.
     pub fn assemble_model(&self, z: &[f64], c: f64) -> SvmModel {

@@ -1,0 +1,91 @@
+//! Determinism of the multilevel schedule (DESIGN.md §15): every piece
+//! of the coarse-to-fine pipeline — screening, representative selection,
+//! the level schedule, and the trained models — is a pure function of
+//! `(dataset, HssParams.seed, MultilevelParams)`. Thread counts and
+//! repetition never change a bit. This mirrors
+//! `tests/thread_invariance.rs` one layer up: the helpers are serial by
+//! construction (ordered scans over `Vec<bool>` masks), and training
+//! inherits the tree engine's bitwise contract.
+
+use hss_svm::admm::AdmmParams;
+use hss_svm::data::synth;
+use hss_svm::hss::compress::preprocess;
+use hss_svm::hss::HssParams;
+use hss_svm::kernel::Kernel;
+use hss_svm::svm::multilevel::{
+    frontier_nodes, screen_extreme_points, select_representatives, MultilevelContext,
+    MultilevelParams,
+};
+use hss_svm::util::prng::Rng;
+
+const THREAD_COUNTS: [usize; 3] = [1, 2, 8];
+
+fn fixture() -> (hss_svm::data::Dataset, HssParams) {
+    let mut rng = Rng::new(60_601);
+    let ds = synth::blobs(700, 5, 4, 0.3, &mut rng);
+    let mut hp = HssParams::low_accuracy();
+    hp.leaf_size = 32;
+    (ds, hp)
+}
+
+#[test]
+fn representative_selection_is_a_pure_function_of_tree_and_seed() {
+    let (ds, hp) = fixture();
+    // the preprocessing (tree + ANN) is itself thread-invariant, so the
+    // same dataset + seed must give identical trees at every thread
+    // count — and identical reps/screening on top of them
+    let base = preprocess(&ds, &hp, 1);
+    let base_keep = screen_extreme_points(&base.pds, &base.tree, 0.2);
+    for t in THREAD_COUNTS {
+        let pre = preprocess(&ds, &hp, t);
+        assert_eq!(pre.tree.perm, base.tree.perm, "tree permutation differs at threads={t}");
+        let keep = screen_extreme_points(&pre.pds, &pre.tree, 0.2);
+        assert_eq!(keep, base_keep, "screening mask differs at threads={t}");
+        for level in 0..pre.tree.depth() {
+            assert_eq!(
+                frontier_nodes(&pre.tree, level),
+                frontier_nodes(&base.tree, level),
+                "frontier differs at threads={t} level={level}"
+            );
+            assert_eq!(
+                select_representatives(&pre.pds, &pre.tree, level, &keep),
+                select_representatives(&base.pds, &base.tree, level, &base_keep),
+                "representatives differ at threads={t} level={level}"
+            );
+        }
+    }
+    // repeated runs on the SAME preprocessing are trivially identical
+    // only if no hidden state exists — pin that too
+    let again = select_representatives(&base.pds, &base.tree, 3, &base_keep);
+    assert_eq!(again, select_representatives(&base.pds, &base.tree, 3, &base_keep));
+}
+
+#[test]
+fn full_schedule_and_models_repeat_bitwise() {
+    let (ds, hp) = fixture();
+    let kernel = Kernel::Gaussian { h: 1.0 };
+    let admm = AdmmParams { beta: 100.0, max_it: 6, relax: 1.0, tol: 0.0 };
+    let ml = MultilevelParams { screen_eps: 0.1, ..Default::default() };
+
+    let runs: Vec<_> = (0..2)
+        .map(|_| {
+            let ctx = MultilevelContext::new(&ds, &hp, &ml, 2);
+            let run = ctx.train_grid(kernel, &admm, &[0.5, 2.0]).unwrap();
+            (ctx.pool_sizes(), run)
+        })
+        .collect();
+    let (pools_a, run_a) = &runs[0];
+    let (pools_b, run_b) = &runs[1];
+    assert_eq!(pools_a, pools_b, "level schedule differs between identical runs");
+    assert_eq!(run_a.levels.len(), run_b.levels.len());
+    for (la, lb) in run_a.levels.iter().zip(run_b.levels.iter()) {
+        assert_eq!(la.t_idx, lb.t_idx, "training set differs at level {}", la.level);
+        assert_eq!(la.sv_idx, lb.sv_idx, "SV set differs at level {}", la.level);
+    }
+    for ((ma, oa), (mb, ob)) in run_a.results.iter().zip(run_b.results.iter()) {
+        assert!(ma.sv == mb.sv, "SV coordinates differ between identical runs");
+        assert_eq!(ma.alpha_y, mb.alpha_y, "alpha_y differs between identical runs");
+        assert_eq!(ma.bias.to_bits(), mb.bias.to_bits(), "bias differs between identical runs");
+        assert_eq!(oa.z, ob.z, "final z differs between identical runs");
+    }
+}

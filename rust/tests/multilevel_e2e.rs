@@ -1,0 +1,140 @@
+//! End-to-end contracts of the multilevel trainer (ISSUE 10 tentpole;
+//! DESIGN.md §15):
+//!
+//! * **Thread invariance** — context build + coarse-to-fine training are
+//!   bit-for-bit identical at 1, 2 and 8 threads (models AND the level
+//!   schedule), extending the `tests/thread_invariance.rs` contract one
+//!   layer up.
+//! * **SV inheritance** — the support vectors of level ℓ are a subset of
+//!   level ℓ+1's training set (`SV_ℓ ⊆ T_{ℓ+1}`), the monotonicity the
+//!   warm start relies on.
+//! * **Edge coarse levels** — `--coarse-level 0` (a single-node frontier)
+//!   and an out-of-range level both degrade gracefully and still train.
+//! * **Persistence** — a multilevel-trained model is an ordinary binary
+//!   model: save/load roundtrips bitwise and predicts identically.
+
+use hss_svm::admm::AdmmParams;
+use hss_svm::data::synth;
+use hss_svm::hss::HssParams;
+use hss_svm::kernel::Kernel;
+use hss_svm::svm::multilevel::{LevelStats, MultilevelContext, MultilevelParams};
+use hss_svm::svm::{persist, predict, SvmModel};
+use hss_svm::util::prng::Rng;
+
+const THREAD_COUNTS: [usize; 3] = [1, 2, 8];
+
+fn fixture() -> (hss_svm::data::Dataset, HssParams, AdmmParams) {
+    let mut rng = Rng::new(10_007);
+    let ds = synth::xor_blobs(900, 4, 0.35, &mut rng);
+    let mut hp = HssParams::low_accuracy();
+    hp.leaf_size = 48;
+    let admm = AdmmParams { beta: 100.0, max_it: 8, relax: 1.0, tol: 0.0 };
+    (ds, hp, admm)
+}
+
+fn assert_models_bitwise(a: &SvmModel, b: &SvmModel, label: &str) {
+    assert!(a.sv == b.sv, "{label}: SV coordinates differ bitwise");
+    assert_eq!(a.alpha_y, b.alpha_y, "{label}: alpha_y differs bitwise");
+    assert_eq!(a.bias.to_bits(), b.bias.to_bits(), "{label}: bias differs bitwise");
+    assert_eq!(a.labels, b.labels, "{label}: label pair differs");
+}
+
+fn assert_schedules_equal(a: &[LevelStats], b: &[LevelStats], label: &str) {
+    assert_eq!(a.len(), b.len(), "{label}: level count differs");
+    for (la, lb) in a.iter().zip(b.iter()) {
+        assert_eq!(la.level, lb.level, "{label}: level id differs");
+        assert_eq!(la.t_idx, lb.t_idx, "{label}: training set differs at level {}", la.level);
+        assert_eq!(la.sv_idx, lb.sv_idx, "{label}: SV set differs at level {}", la.level);
+        assert_eq!(la.full_fallback, lb.full_fallback, "{label}: fallback flag differs");
+    }
+}
+
+#[test]
+fn multilevel_models_bitwise_across_thread_counts() {
+    let (ds, hp, admm) = fixture();
+    let kernel = Kernel::Gaussian { h: 1.2 };
+    let ml = MultilevelParams { screen_eps: 0.15, ..Default::default() };
+    let cs = [0.5, 1.0, 4.0];
+
+    let base_ctx = MultilevelContext::new(&ds, &hp, &ml, 1);
+    let base = base_ctx.train_grid(kernel, &admm, &cs).unwrap();
+    assert_eq!(base.results.len(), cs.len());
+    for t in THREAD_COUNTS {
+        let ctx = MultilevelContext::new(&ds, &hp, &ml, t);
+        assert_eq!(ctx.pool_sizes(), base_ctx.pool_sizes(), "schedule differs at threads={t}");
+        assert_eq!(ctx.kept(), base_ctx.kept(), "screening differs at threads={t}");
+        let run = ctx.train_grid(kernel, &admm, &cs).unwrap();
+        assert_schedules_equal(&run.levels, &base.levels, &format!("threads={t}"));
+        for (j, ((m, out), (bm, bout))) in
+            run.results.iter().zip(base.results.iter()).enumerate()
+        {
+            let label = format!("threads={t} C={}", cs[j]);
+            assert_models_bitwise(m, bm, &label);
+            assert_eq!(out.z, bout.z, "{label}: final z differs bitwise");
+            assert_eq!(out.mu, bout.mu, "{label}: final mu differs bitwise");
+        }
+    }
+}
+
+#[test]
+fn sv_inheritance_is_monotone() {
+    let (ds, hp, admm) = fixture();
+    let ctx = MultilevelContext::new(&ds, &hp, &MultilevelParams::default(), 2);
+    let run = ctx.train_grid(Kernel::Gaussian { h: 1.2 }, &admm, &[0.5, 2.0]).unwrap();
+    assert!(run.levels.len() >= 2, "fixture should schedule at least two levels");
+    for w in run.levels.windows(2) {
+        let (prev, next) = (&w[0], &w[1]);
+        // both index lists are sorted pds positions — subset by merge scan
+        let mut it = next.t_idx.iter().peekable();
+        for &sv in &prev.sv_idx {
+            while it.peek().is_some_and(|&&p| p < sv) {
+                it.next();
+            }
+            assert_eq!(
+                it.peek().copied().copied(),
+                Some(sv),
+                "SV {sv} of level {} missing from level {}'s training set",
+                prev.level,
+                next.level
+            );
+        }
+        assert!(next.n_points >= prev.n_sv, "level {} lost inherited SVs", next.level);
+    }
+}
+
+#[test]
+fn edge_coarse_levels_still_train() {
+    let (ds, hp, admm) = fixture();
+    let kernel = Kernel::Gaussian { h: 1.2 };
+    let (train, test) = ds.split_at(700);
+    // L = 0: the root frontier is one node → one representative, below
+    // min_level_points, so the schedule degrades to deeper levels.
+    // L = usize::MAX: clamped to the deepest level.
+    for coarse in [Some(0), Some(usize::MAX)] {
+        let ml = MultilevelParams { coarse_level: coarse, ..Default::default() };
+        let ctx = MultilevelContext::new(&train, &hp, &ml, 2);
+        let (model, out, levels) = ctx.train(kernel, &admm, 1.0).unwrap();
+        assert!(model.n_sv() > 0, "coarse={coarse:?}: empty model");
+        assert!(out.iterations() > 0, "coarse={coarse:?}: ADMM never ran");
+        assert!(!levels.is_empty(), "coarse={coarse:?}: empty schedule");
+        let final_level = levels.last().unwrap();
+        assert_eq!(final_level.level, usize::MAX, "last level must be the full-resolution one");
+        let acc = predict::accuracy(&model, &test, 2);
+        assert!(acc > 0.9, "coarse={coarse:?}: accuracy collapsed to {acc}");
+    }
+}
+
+#[test]
+fn multilevel_model_persists_and_roundtrips() {
+    let (ds, hp, admm) = fixture();
+    let ctx = MultilevelContext::new(&ds, &hp, &MultilevelParams::default(), 2);
+    let (model, _, _) = ctx.train(Kernel::Gaussian { h: 1.2 }, &admm, 1.0).unwrap();
+    let path = std::env::temp_dir().join(format!("hss_multilevel_{}.model", std::process::id()));
+    persist::save(&model, &path).unwrap();
+    let loaded = persist::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_models_bitwise(&model, &loaded, "persist roundtrip");
+    let f0 = predict::decision_function(&model, &ds.x, 1);
+    let f1 = predict::decision_function(&loaded, &ds.x, 1);
+    assert_eq!(f0, f1, "loaded model predicts differently");
+}
